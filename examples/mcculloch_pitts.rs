@@ -1,0 +1,91 @@
+//! Figures 1–3 of the paper, regenerated.
+//!
+//! Fig. 1: AND/OR/NOT (and two-layer XOR) as McCulloch–Pitts neurons.
+//! Fig. 2: a neuron -> truth table -> minimized SoP realization.
+//! Fig. 3: common-logic extraction across the neurons of a layer.
+//!
+//! Run: cargo run --release --example mcculloch_pitts
+
+use nullanet::aig::{factor_cover, Aig};
+use nullanet::enumerate::{gates, xor_two_layer, McCullochPitts};
+use nullanet::logic::TruthTable;
+
+fn main() {
+    // ---- Fig. 1 ---------------------------------------------------------
+    println!("Fig. 1 — logic gates as McCulloch–Pitts neurons (Eq. 1):");
+    for (name, neuron) in [("AND", gates::and()), ("OR", gates::or())] {
+        let rows: Vec<String> = (0..4)
+            .map(|m| format!("{}{} -> {}", m & 1, (m >> 1) & 1, neuron.eval_minterm(m) as u8))
+            .collect();
+        println!("  {name}: w = {:?}, θ = {}   [{}]", neuron.w, neuron.theta, rows.join(", "));
+    }
+    let not = gates::not();
+    println!("  NOT: w = {:?}, θ = {}   [0 -> 1, 1 -> 0]", not.w, not.theta);
+    println!(
+        "  XOR (two layers): 00 -> {}, 01 -> {}, 10 -> {}, 11 -> {}",
+        xor_two_layer(false, false) as u8,
+        xor_two_layer(false, true) as u8,
+        xor_two_layer(true, false) as u8,
+        xor_two_layer(true, true) as u8
+    );
+
+    // ---- Fig. 2 ---------------------------------------------------------
+    // A 3-input neuron, enumerated and K-map-simplified (ISOP).
+    let neuron = McCullochPitts::new(vec![2.0, -1.0, 1.0], 1.0);
+    let tt = neuron.truth_table();
+    println!("\nFig. 2 — neuron w = {:?}, θ = {}:", neuron.w, neuron.theta);
+    println!("  truth table (minterm -> out):");
+    for m in 0..8 {
+        println!(
+            "    a={} b={} c={}  ->  {}",
+            m & 1,
+            (m >> 1) & 1,
+            (m >> 2) & 1,
+            tt.get(m) as u8
+        );
+    }
+    let sop = neuron.to_sop();
+    println!("  minimized SoP ({} cubes, {} literals):", sop.len(), sop.n_literals());
+    for c in &sop.cubes {
+        println!("    {}", c.to_pla());
+    }
+    assert_eq!(TruthTable::from_cover(&sop), tt);
+
+    // ---- Fig. 3 ---------------------------------------------------------
+    // Two neurons sharing logic: realizing them together is cheaper than
+    // the sum of individual realizations.
+    let n1 = McCullochPitts::new(vec![1.0, 1.0, 0.0], 2.0); // ab
+    let n2 = McCullochPitts::new(vec![1.0, 1.0, 2.0], 2.0); // ab + c
+    let c1 = n1.to_sop();
+    let c2 = n2.to_sop();
+
+    let mut separate = 0usize;
+    for c in [&c1, &c2] {
+        let mut g = Aig::new(3);
+        let pis: Vec<_> = (0..3).map(|i| g.pi(i)).collect();
+        let r = factor_cover(&mut g, c, &pis);
+        g.add_output(r);
+        separate += g.n_ands();
+    }
+
+    let mut shared = Aig::new(3);
+    let pis: Vec<_> = (0..3).map(|i| shared.pi(i)).collect();
+    let r1 = factor_cover(&mut shared, &c1, &pis);
+    let r2 = factor_cover(&mut shared, &c2, &pis);
+    shared.add_output(r1);
+    shared.add_output(r2);
+
+    println!("\nFig. 3 — common logic extraction across a layer:");
+    println!("  neuron 1 cover:\n{}", indent(&c1.to_pla()));
+    println!("  neuron 2 cover:\n{}", indent(&c2.to_pla()));
+    println!(
+        "  separate realizations: {} AND gates; shared layer: {} AND gates",
+        separate,
+        shared.n_ands()
+    );
+    assert!(shared.n_ands() < separate, "sharing must save gates");
+}
+
+fn indent(s: &str) -> String {
+    s.lines().map(|l| format!("    {l}")).collect::<Vec<_>>().join("\n")
+}

@@ -1,0 +1,109 @@
+//! Quickstart: the NullaNet flow on a hand-made "neuron layer", end to
+//! end, with no artifacts required.
+//!
+//!   1. Define a small binarized layer as McCulloch–Pitts neurons (Eq. 1).
+//!   2. Sample training-set-like observations -> an ISF per neuron.
+//!   3. OptimizeNeuron: Espresso two-level minimization.
+//!   4. OptimizeLayer: AIG + balance/rewrite/refactor + 6-LUT mapping.
+//!   5. "Pythonize": compile to a bit-parallel tape; run batched inference.
+//!   6. Cost the result like the paper's Table 5 and compare to MACs.
+//!
+//! Run: cargo run --release --example quickstart
+
+use nullanet::cost::{logic_mac_equivalents, FpgaModel, MAC32};
+use nullanet::isf::{extract, IsfConfig, LayerObservations};
+use nullanet::synth::{optimize_layer, verify_layer, SynthConfig};
+use nullanet::util::SplitMix64;
+
+fn main() {
+    let (n_in, n_out, n_samples) = (16, 8, 2000);
+    let mut rng = SplitMix64::new(2018);
+
+    // A random Eq. 1 layer: w ~ N(0,1), theta ~ N(0,1).
+    let w: Vec<Vec<f32>> = (0..n_out)
+        .map(|_| (0..n_in).map(|_| rng.normal() as f32).collect())
+        .collect();
+    let theta: Vec<f32> = (0..n_out).map(|_| rng.normal() as f32).collect();
+
+    // Observe it on random binary inputs (the "training activations").
+    let in_stride = (n_in + 7) / 8;
+    let out_stride = (n_out + 7) / 8;
+    let mut inputs = vec![0u8; n_samples * in_stride];
+    let mut outputs = vec![0u8; n_samples * out_stride];
+    for s in 0..n_samples {
+        let mut acc = vec![0f32; n_out];
+        for i in 0..n_in {
+            if rng.bool(0.5) {
+                inputs[s * in_stride + i / 8] |= 1 << (i % 8);
+                for (j, accj) in acc.iter_mut().enumerate() {
+                    *accj += w[j][i];
+                }
+            }
+        }
+        for j in 0..n_out {
+            if acc[j] >= theta[j] {
+                outputs[s * out_stride + j / 8] |= 1 << (j % 8);
+            }
+        }
+    }
+    let obs = LayerObservations {
+        name: "demo_layer".into(),
+        n_in,
+        n_out,
+        inputs,
+        outputs,
+        n_samples,
+    };
+
+    // 2. ISF extraction.
+    let isf = extract(&obs, &IsfConfig::default());
+    println!(
+        "ISF: {} distinct patterns over {} samples ({} conflicts)",
+        isf.n_distinct, n_samples, isf.n_conflicts
+    );
+
+    // 3–5. Algorithm 2.
+    let synth = optimize_layer("demo_layer", &isf, &SynthConfig::default());
+    assert_eq!(verify_layer(&isf, &synth), 0, "logic must realize the ISF");
+    println!(
+        "espresso: {} cubes, {} literals ({} ON minterms initially)",
+        synth.total_cubes,
+        synth.total_literals,
+        isf.patterns.len()
+    );
+    println!(
+        "multi-level: {} AND nodes (pre-opt {}), LUT depth {}",
+        synth.aig.n_ands(),
+        synth.ands_initial,
+        synth.mapping.depth
+    );
+
+    // Run batched inference through the tape.
+    let rows: Vec<Vec<bool>> = (0..4)
+        .map(|s| (0..n_in).map(|i| (s + i) % 3 == 0).collect())
+        .collect();
+    let out = synth.tape.eval_batch(&rows);
+    println!("tape outputs for 4 sample rows: {:?}", out);
+
+    // 6. Hardware cost vs MAC baseline (Table 5-style).
+    let cost = synth.hw_cost(&FpgaModel::default());
+    println!(
+        "\nsynthesized: {} ALMs | {} register bits | {:.1} MHz | {:.2} ns | {:.1} mW",
+        cost.alms, cost.registers, cost.fmax_mhz, cost.latency_ns, cost.power_mw
+    );
+    let macs = n_in * n_out;
+    println!(
+        "MAC-based:   {} fp32 MACs = {} ALMs if fully parallel; logic is {:.0}x smaller",
+        macs,
+        macs * MAC32.alms as usize,
+        (macs * MAC32.alms as usize) as f64 / cost.alms as f64
+    );
+    println!(
+        "logic block = {:.1} MAC32-equivalents (paper's Table 6 metric)",
+        logic_mac_equivalents(cost.alms)
+    );
+    println!(
+        "memory traffic per inference: {} bits of layer I/O, 0 parameter bytes",
+        n_in + n_out
+    );
+}

@@ -1,0 +1,65 @@
+//! Serving demo: start the TCP front-end over the synthesized logic
+//! engine, then act as a client — send pings, images, and a metrics
+//! probe over the JSON-lines protocol.
+//!
+//! Run: cargo run --release --example serve  [-- cap]
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use nullanet::coordinator::{engine, Coordinator, CoordinatorConfig};
+use nullanet::{data, isf, model, server, synth};
+
+fn main() -> anyhow::Result<()> {
+    let cap: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(2000);
+    let art = model::Artifacts::load(&nullanet::artifacts_dir())?;
+    let net = art.net("net11")?;
+    let ds = data::Dataset::load(&art.test_path)?.take(64);
+
+    // Synthesize the hidden layers (Algorithm 2) and build the engine.
+    println!("synthesizing net11 hidden layers (ISF cap {cap}) ...");
+    let obs = isf::load_observations(&net.dir.join("activations.bin"))?;
+    let mut tapes = Vec::new();
+    for o in &obs {
+        let layer_isf = isf::extract(o, &isf::IsfConfig { max_patterns: cap });
+        let s = synth::optimize_layer(&o.name, &layer_isf, &synth::SynthConfig::default());
+        assert_eq!(synth::verify_layer(&layer_isf, &s), 0);
+        tapes.push(s.tape);
+    }
+    let eng = Arc::new(engine::LogicEngine::new(net.clone(), tapes)?);
+    let coord = Arc::new(Coordinator::start(eng, CoordinatorConfig::default()));
+    let srv = server::Server::start("127.0.0.1:0", Arc::clone(&coord))?;
+    println!("server on {}", srv.addr);
+
+    // --- client side -----------------------------------------------------
+    let mut conn = TcpStream::connect(srv.addr)?;
+    let mut reader = BufReader::new(conn.try_clone()?);
+    let mut line = String::new();
+
+    conn.write_all(b"{\"cmd\": \"ping\"}\n")?;
+    reader.read_line(&mut line)?;
+    println!("ping -> {}", line.trim());
+
+    let mut correct = 0usize;
+    for i in 0..ds.n {
+        let img: Vec<String> = ds.image(i).iter().map(|v| format!("{v}")).collect();
+        conn.write_all(format!("{{\"image\": [{}]}}\n", img.join(",")).as_bytes())?;
+        line.clear();
+        reader.read_line(&mut line)?;
+        let j = nullanet::jsonio::Json::parse(line.trim()).unwrap();
+        let class = j.get("class").and_then(|c| c.as_usize()).unwrap_or(99);
+        if class == ds.y[i] as usize {
+            correct += 1;
+        }
+    }
+    println!("classified {} images over TCP: {} correct", ds.n, correct);
+
+    line.clear();
+    conn.write_all(b"{\"cmd\": \"metrics\"}\n")?;
+    reader.read_line(&mut line)?;
+    println!("metrics -> {}", line.trim());
+    drop(conn);
+    srv.shutdown();
+    Ok(())
+}

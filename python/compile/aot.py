@@ -1,0 +1,482 @@
+"""AOT export: train the paper's networks, dump everything Rust needs.
+
+Run once via `make artifacts`.  Produces, under artifacts/:
+
+  dataset/train.bin, dataset/test.bin      SynthDigits (data.py format)
+  <net>/model_b1.hlo.txt, model_b64.hlo.txt   full inference graph (Pallas
+                                           kernels, interpret=True) lowered
+                                           to HLO *text* (xla 0.5.1 rejects
+                                           jax>=0.5 serialized protos)
+  <net>/first_layer_b64.hlo.txt            f32 input -> {0,1} bits (hybrid)
+  <net>/last_layer_b64.hlo.txt             {0,1} bits -> logits (popcount)
+  <net>/weights.bin                        raw LE tensors
+  <net>/activations.bin                    bit-packed ISF samples (NACT)
+  <net>/logits.bin                         reference logits, first 256 test
+                                           images (runtime cross-check)
+  manifest.json                            index of all of the above +
+                                           tensor offsets + accuracies +
+                                           threshold (Eq. 1) neuron specs
+
+Bit conventions (must match rust/src/model + rust/src/isf):
+  * bits are the {0,1} domain, b = (a+1)/2
+  * packed LSB-first: bit i of a pattern lives in byte i//8, position i%8
+  * thresholds: out_j = [ sum_i bits_i * w_ij >= theta_j ] XOR flip_j
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as D
+from . import model as M
+from .kernels.popcount_dense import popcount_dense as _popcount  # noqa: F401
+from . import train as T
+
+ISF_MAGIC = b"NACT"
+
+
+# ---------------------------------------------------------------------------
+# HLO text lowering (see /opt/xla-example/gen_hlo.py for why text, not proto)
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_fn(fn, *example_args) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*example_args))
+
+
+# ---------------------------------------------------------------------------
+# Explicit-argument inference graphs.
+#
+# `as_hlo_text()` ELIDES large literals (printing `constant({...})`), and
+# the Rust side's HLO text parser (xla_extension 0.5.1) reads the elision
+# as zeros.  Weights must therefore be *arguments* of the lowered
+# computation, never embedded constants.  The argument order is recorded in
+# the manifest (`hlo_params`) and matches the folded tensors in
+# weights.bin, so the Rust runtime can feed them directly.
+# ---------------------------------------------------------------------------
+
+
+def mlp_folded_args(spec, p):
+    """[(name, array)] in argument order for the MLP graphs."""
+    out = []
+    nl = len(M.MLP_SIZES) - 1
+    for i in range(1, nl + 1):
+        s_, b_ = M.bn_fold(p[f"bn{i}"])
+        out += [(f"w{i}", p[f"w{i}"]), (f"scale{i}", s_), (f"bias{i}", b_)]
+    return out
+
+
+def cnn_folded_args(spec, p):
+    out = []
+    for name, bn in (("k1", "bn1"), ("k2", "bn2"), ("w3", "bn3")):
+        s_, b_ = M.bn_fold(p[bn])
+        out += [(name, p[name]), (f"scale_{name}", s_), (f"bias_{name}", b_)]
+    return out
+
+
+def make_mlp_infer(spec):
+    nl = len(M.MLP_SIZES) - 1
+
+    def infer(x, *args):
+        a = x
+        for i in range(nl):
+            w, s_, b_ = args[3 * i : 3 * i + 3]
+            binarize = spec.binary and i < nl - 1
+            if binarize:
+                a = M.binary_dense(a, w, s_, b_, binarize=True)
+            else:
+                y = M.binary_dense(a, w, s_, b_, binarize=False)
+                a = y if i == nl - 1 else jax.nn.relu(y)
+        return (a,)
+
+    return infer
+
+
+def make_cnn_infer(spec):
+    def infer(x, k1, s1, b1, k2, s2, b2, w3, s3, b3):
+        img = x.reshape(-1, 28, 28, 1)
+        y = M.binary_conv3x3(img, k1, s1, b1, binarize=spec.binary)
+        if not spec.binary:
+            y = jax.nn.relu(y)
+        a = M.ref.maxpool2x2_ref(y)
+        y = M.binary_conv3x3(a, k2, s2, b2, binarize=spec.binary)
+        if not spec.binary:
+            y = jax.nn.relu(y)
+        a = M.ref.maxpool2x2_ref(y)
+        y = M.binary_dense(a.reshape(a.shape[0], -1), w3, s3, b3, binarize=False)
+        return (y,)
+
+    return infer
+
+
+# ---------------------------------------------------------------------------
+# Tensor + bit-pack serialization
+# ---------------------------------------------------------------------------
+
+
+class TensorFile:
+    """Append-only raw little-endian tensor blob + manifest entries."""
+
+    def __init__(self) -> None:
+        self.blob = bytearray()
+        self.entries: dict[str, dict] = {}
+
+    def add(self, name: str, arr: np.ndarray) -> None:
+        arr = np.ascontiguousarray(arr)
+        dt = {"float32": "f32", "uint8": "u8", "int32": "i32"}[str(arr.dtype)]
+        raw = arr.astype(arr.dtype.newbyteorder("<")).tobytes()
+        self.entries[name] = {
+            "dtype": dt,
+            "shape": list(arr.shape),
+            "offset": len(self.blob),
+            "nbytes": len(raw),
+        }
+        self.blob += raw
+
+    def write(self, path: str) -> None:
+        with open(path, "wb") as f:
+            f.write(bytes(self.blob))
+
+
+def pack_bits(rows: np.ndarray) -> np.ndarray:
+    """(n, k) {0,1} -> (n, ceil(k/8)) u8, LSB-first."""
+    return np.packbits(rows.astype(np.uint8), axis=1, bitorder="little")
+
+
+def write_isf_file(path: str, layers: list[dict]) -> None:
+    """NACT format: u32 n_layers, then per layer:
+    u32 name_len + utf8 name, u32 n_in, u32 n_out, u32 n_samples,
+    packed inputs (n_samples * ceil(n_in/8) bytes),
+    packed outputs (n_samples * ceil(n_out/8) bytes).
+    """
+    with open(path, "wb") as f:
+        f.write(ISF_MAGIC)
+        f.write(np.asarray([len(layers)], "<u4").tobytes())
+        for L in layers:
+            name = L["name"].encode()
+            f.write(np.asarray([len(name)], "<u4").tobytes())
+            f.write(name)
+            n_in, n_out = L["inputs"].shape[1], L["outputs"].shape[1]
+            n_samples = L["inputs"].shape[0]
+            f.write(np.asarray([n_in, n_out, n_samples], "<u4").tobytes())
+            f.write(pack_bits(L["inputs"]).tobytes())
+            f.write(pack_bits(L["outputs"]).tobytes())
+
+
+# ---------------------------------------------------------------------------
+# Threshold (Eq. 1) neuron specs in the bit domain
+# ---------------------------------------------------------------------------
+
+
+def threshold_spec(w: np.ndarray, scale: np.ndarray, bias: np.ndarray) -> dict:
+    """Fold BN into bit-domain Eq. 1: out_j = [bits @ w_j >= theta_j] ^ flip_j.
+
+    Sign-domain: out = [ (a@w)*s + b >= 0 ], a = 2*bits - 1.
+      s > 0:  a@w >= -b/s      s < 0:  a@w <= -b/s  (strict flip handled
+      conservatively as NOT(>=); ties are measure-zero for trained floats)
+    Bit-domain: a@w = 2*(bits@w) - colsum(w).
+    """
+    s = np.where(np.abs(scale) < 1e-20, 1e-20, scale)
+    t_sign = -bias / s                       # threshold on a@w
+    colsum = w.sum(axis=0)
+    theta = (t_sign + colsum) / 2.0          # threshold on bits@w
+    flip = (s < 0).astype(np.uint8)
+    return {
+        "theta": theta.astype(np.float32),
+        "flip": flip,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Per-network export
+# ---------------------------------------------------------------------------
+
+
+def _export_mlp(outdir: str, spec: M.NetSpec, p: dict, x_isf: np.ndarray, isf_cap: int) -> dict:
+    tf = TensorFile()
+    nl = len(M.MLP_SIZES) - 1
+    thresholds = {}
+    for i in range(1, nl + 1):
+        w = np.asarray(p[f"w{i}"])
+        s, b = M.bn_fold(p[f"bn{i}"])
+        s, b = np.asarray(s), np.asarray(b)
+        tf.add(f"w{i}", w)
+        tf.add(f"scale{i}", s)
+        tf.add(f"bias{i}", b)
+        if spec.binary and i < nl:
+            th = threshold_spec(w, s, b)
+            tf.add(f"theta{i}", th["theta"])
+            tf.add(f"flip{i}", th["flip"])
+            thresholds[f"layer{i}"] = {"n_in": w.shape[0], "n_out": w.shape[1]}
+    tf.write(os.path.join(outdir, "weights.bin"))
+
+    isf_layers = []
+    if spec.binary:
+        acts = M.binary_activations(spec, p, jnp.asarray(x_isf[:isf_cap]))
+        acts = [np.asarray(a) for a in acts]
+        # Optimizable layers (binary in AND out): 2 .. L-1  (Algorithm 2)
+        for i in range(2, nl):
+            isf_layers.append(
+                {"name": f"layer{i}", "inputs": acts[i - 2], "outputs": acts[i - 1]}
+            )
+        write_isf_file(os.path.join(outdir, "activations.bin"), isf_layers)
+
+    return {
+        "arch": {"kind": "mlp", "sizes": M.MLP_SIZES},
+        "tensors": tf.entries,
+        "thresholds": thresholds,
+        "isf_layers": [
+            {"name": L["name"], "n_in": int(L["inputs"].shape[1]),
+             "n_out": int(L["outputs"].shape[1]), "n_samples": int(L["inputs"].shape[0])}
+            for L in isf_layers
+        ],
+    }
+
+
+def _export_cnn(outdir: str, spec: M.NetSpec, p: dict, x_isf: np.ndarray, isf_cap: int) -> dict:
+    tf = TensorFile()
+    thresholds = {}
+    for name, bn in (("k1", "bn1"), ("k2", "bn2"), ("w3", "bn3")):
+        w = np.asarray(p[name])
+        s, b = M.bn_fold(p[bn])
+        s, b = np.asarray(s), np.asarray(b)
+        tf.add(name, w)
+        tf.add(f"scale_{name}", s)
+        tf.add(f"bias_{name}", b)
+        if spec.binary and name == "k2":
+            # conv2 as a per-patch Boolean function: 90 bits -> 20 bits.
+            wmat = w.reshape(-1, w.shape[-1])  # (3*3*10, 20), row-major dy,dx,c
+            th = threshold_spec(wmat, s, b)
+            tf.add("theta_k2", th["theta"])
+            tf.add("flip_k2", th["flip"])
+            thresholds["conv2"] = {"n_in": wmat.shape[0], "n_out": wmat.shape[1]}
+    tf.write(os.path.join(outdir, "weights.bin"))
+
+    isf_layers = []
+    if spec.binary:
+        x = jnp.asarray(x_isf[:isf_cap])
+        img = x.reshape(-1, 28, 28, 1)
+        s1, b1 = M.bn_fold(p["bn1"])
+        a1 = M.ref.maxpool2x2_ref(
+            M.ref.binary_conv3x3_ref(img, p["k1"], s1, b1, binarize=True)
+        )  # (n, 13, 13, 10) in {-1,+1}
+        s2, b2 = M.bn_fold(p["bn2"])
+        pre = M.ref.binary_conv3x3_ref(a1, p["k2"], s2, b2, binarize=True)  # (n,11,11,20)
+        a1b = np.asarray((a1 + 1.0) * 0.5, dtype=np.uint8)
+        preb = np.asarray((pre + 1.0) * 0.5, dtype=np.uint8)
+        # Extract 3x3x10 patches; flat order (dy, dx, c) row-major matches
+        # the wmat reshape above and rust/src/isf's expectation.
+        n = a1b.shape[0]
+        patches = np.empty((n, 11, 11, 90), dtype=np.uint8)
+        for dy in range(3):
+            for dx in range(3):
+                base = (dy * 3 + dx) * 10
+                patches[..., base : base + 10] = a1b[:, dy : dy + 11, dx : dx + 11, :]
+        isf_layers.append(
+            {
+                "name": "conv2",
+                "inputs": patches.reshape(-1, 90),
+                "outputs": preb.reshape(-1, 20),
+            }
+        )
+        write_isf_file(os.path.join(outdir, "activations.bin"), isf_layers)
+
+    return {
+        "arch": {
+            "kind": "cnn",
+            "c1": M.CNN_C1,
+            "c2": M.CNN_C2,
+            "fc_in": M.CNN_FC_IN,
+        },
+        "tensors": tf.entries,
+        "thresholds": thresholds,
+        "isf_layers": [
+            {"name": L["name"], "n_in": int(L["inputs"].shape[1]),
+             "n_out": int(L["outputs"].shape[1]), "n_samples": int(L["inputs"].shape[0])}
+            for L in isf_layers
+        ],
+    }
+
+
+def export_net(
+    outroot: str,
+    spec: M.NetSpec,
+    p: dict,
+    x_train: np.ndarray,
+    x_test: np.ndarray,
+    isf_cap: int,
+) -> dict:
+    outdir = os.path.join(outroot, spec.name)
+    os.makedirs(outdir, exist_ok=True)
+
+    # --- HLO graphs (weights as explicit arguments; see lower_fn note) ----
+    folded = mlp_folded_args(spec, p) if spec.kind == "mlp" else cnn_folded_args(spec, p)
+    fold_names = [n for n, _ in folded]
+    fold_specs = [jax.ShapeDtypeStruct(a.shape, jnp.float32) for _, a in folded]
+    infer = make_mlp_infer(spec) if spec.kind == "mlp" else make_cnn_infer(spec)
+
+    hlos = {}
+    hlo_params = {}
+    for bs in (1, 64):
+        ex = jax.ShapeDtypeStruct((bs, 784), jnp.float32)
+        path = os.path.join(outdir, f"model_b{bs}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(lower_fn(infer, ex, *fold_specs))
+        hlos[f"model_b{bs}"] = os.path.relpath(path, outroot)
+        hlo_params[f"model_b{bs}"] = fold_names
+
+    if spec.binary:
+        if spec.kind == "mlp":
+            def first_layer(x, w1, s1, b1):
+                a = M.binary_dense(x, w1, s1, b1, binarize=True)
+                return ((a + 1.0) * 0.5,)
+
+            first_names = ["w1", "scale1", "bias1"]
+            n_last_in = M.MLP_SIZES[-2]
+            nl = len(M.MLP_SIZES) - 1
+            last_names = [f"w{nl}", f"scale{nl}", f"bias{nl}"]
+        else:
+            def first_layer(x, k1, s1, b1):
+                img = x.reshape(-1, 28, 28, 1)
+                a = M.binary_conv3x3(img, k1, s1, b1, binarize=True)
+                a = M.ref.maxpool2x2_ref(a)
+                return ((a + 1.0) * 0.5,)
+
+            first_names = ["k1", "scale_k1", "bias_k1"]
+            n_last_in = M.CNN_FC_IN
+            last_names = ["w3", "scale_w3", "bias_w3"]
+
+        def last_layer(bits, w, s_, b_):
+            w_eff = w.reshape(-1, w.shape[-1]) * s_
+            return (M.popcount_dense(bits, w_eff, b_),)
+
+        by_name = dict(folded)
+        first_specs = [jax.ShapeDtypeStruct(by_name[n].shape, jnp.float32) for n in first_names]
+        ex = jax.ShapeDtypeStruct((64, 784), jnp.float32)
+        path = os.path.join(outdir, "first_layer_b64.hlo.txt")
+        with open(path, "w") as f:
+            f.write(lower_fn(first_layer, ex, *first_specs))
+        hlos["first_layer_b64"] = os.path.relpath(path, outroot)
+        hlo_params["first_layer_b64"] = first_names
+
+        last_specs = [jax.ShapeDtypeStruct(by_name[n].shape, jnp.float32) for n in last_names]
+        exb = jax.ShapeDtypeStruct((64, n_last_in), jnp.float32)
+        path = os.path.join(outdir, "last_layer_b64.hlo.txt")
+        with open(path, "w") as f:
+            f.write(lower_fn(last_layer, exb, *last_specs))
+        hlos["last_layer_b64"] = os.path.relpath(path, outroot)
+        hlo_params["last_layer_b64"] = last_names
+
+    # --- weights + ISF samples -------------------------------------------
+    if spec.kind == "mlp":
+        entry = _export_mlp(outdir, spec, p, x_train, isf_cap)
+    else:
+        entry = _export_cnn(outdir, spec, p, x_train, isf_cap)
+
+    # --- reference logits for the runtime cross-check --------------------
+    ref_logits = np.asarray(M.forward_infer(spec, p, jnp.asarray(x_test[:256])))
+    ref_logits.astype("<f4").tofile(os.path.join(outdir, "logits.bin"))
+
+    entry["hlo"] = hlos
+    entry["hlo_params"] = hlo_params
+    entry["files"] = {
+        "weights": f"{spec.name}/weights.bin",
+        "activations": f"{spec.name}/activations.bin" if spec.binary else None,
+        "logits": f"{spec.name}/logits.bin",
+    }
+    return entry
+
+
+# ---------------------------------------------------------------------------
+# Main
+# ---------------------------------------------------------------------------
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="NullaNet AOT artifact builder")
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--n-train", type=int, default=int(os.environ.get("NULLANET_NTRAIN", 60_000)))
+    ap.add_argument("--n-test", type=int, default=int(os.environ.get("NULLANET_NTEST", 10_000)))
+    ap.add_argument("--mlp-epochs", type=int, default=int(os.environ.get("NULLANET_MLP_EPOCHS", 6)))
+    ap.add_argument("--cnn-epochs", type=int, default=int(os.environ.get("NULLANET_CNN_EPOCHS", 4)))
+    ap.add_argument("--isf-cap", type=int, default=int(os.environ.get("NULLANET_ISF_CAP", 20_000)))
+    ap.add_argument("--cnn-isf-cap", type=int, default=int(os.environ.get("NULLANET_CNN_ISF_CAP", 3_000)))
+    ap.add_argument("--seed", type=int, default=2018)
+    ap.add_argument("--nets", default="net11,net12,net21,net22")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    os.makedirs(os.path.join(args.out, "dataset"), exist_ok=True)
+
+    t0 = time.time()
+    print(f"[aot] generating SynthDigits {args.n_train}+{args.n_test} ...", flush=True)
+    x_train, y_train, x_test, y_test = D.synth_digits(args.n_train, args.n_test, args.seed)
+    D.save_dataset(os.path.join(args.out, "dataset", "train.bin"), x_train, y_train)
+    D.save_dataset(os.path.join(args.out, "dataset", "test.bin"), x_test, y_test)
+    # Validation = last 1/6th of train (paper: last 10k of 60k).
+    n_val = max(1000, args.n_train // 6)
+    x_tr, y_tr = x_train[: -n_val], y_train[: -n_val]
+    x_val, y_val = x_train[-n_val:], y_train[-n_val:]
+
+    manifest: dict = {
+        "format": 1,
+        "dataset": {
+            "name": "SynthDigits",
+            "seed": args.seed,
+            "n_train": args.n_train,
+            "n_test": args.n_test,
+            "train": "dataset/train.bin",
+            "test": "dataset/test.bin",
+        },
+        "train_config": {
+            "mlp_epochs": args.mlp_epochs,
+            "cnn_epochs": args.cnn_epochs,
+            "batch": T.BATCH,
+            "lr0": T.LR0,
+            "optimizer": "adamax",
+            "isf_cap": args.isf_cap,
+            "cnn_isf_cap": args.cnn_isf_cap,
+        },
+        "nets": {},
+    }
+
+    for name in args.nets.split(","):
+        spec = M.NETS[name]
+        epochs = args.mlp_epochs if spec.kind == "mlp" else args.cnn_epochs
+        print(f"[aot] training {name} ({spec.kind}, {spec.activation}) {epochs} epochs", flush=True)
+        p, hist = T.train(spec, x_tr, y_tr, x_val, y_val, epochs=epochs, seed=args.seed)
+        test_acc = T.accuracy(spec, p, x_test, y_test)
+        print(f"[aot] {name}: test_acc {test_acc:.4f}", flush=True)
+        cap = args.isf_cap if spec.kind == "mlp" else args.cnn_isf_cap
+        entry = export_net(args.out, spec, p, x_tr, x_test, cap)
+        entry["accuracy"] = {"test": test_acc, "val_best": max(h["val_acc"] for h in hist)}
+        entry["history"] = [
+            {"epoch": h["epoch"], "val_acc": h["val_acc"], "secs": round(h["secs"], 2)}
+            for h in hist
+        ]
+        manifest["nets"][name] = entry
+
+    manifest["build_secs"] = round(time.time() - t0, 1)
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] done in {manifest['build_secs']}s -> {args.out}/manifest.json", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""L1 Pallas kernel: fused binary 3x3 convolution  a' = sign(BN(conv(a, k))).
+
+Algorithm 1 for a convolutional layer (the paper's Net 2.x).  The 3x3
+VALID conv is computed as nine shifted (h*w, c_in) x (c_in, c_out) tile
+matmuls -- the MXU-friendly decomposition of a small-kernel conv -- with
+the BN + sign epilogue fused in VMEM, so activations never round-trip to
+HBM between the conv and the non-linearity.
+
+Grid is over the batch: one image per program instance.  For the paper's
+shapes (28x28x1, 13x13x10) a whole image plus both operand panels fits in
+VMEM comfortably (DESIGN.md section 8 has the footprint arithmetic).
+
+interpret=True ALWAYS -- see binary_dense.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, k_ref, scale_ref, bias_ref, o_ref, *, hout: int, wout: int, binarize: bool):
+    a = a_ref[0]                      # (h, w, c_in)
+    acc = jnp.zeros((hout * wout, k_ref.shape[3]), jnp.float32)
+    # Nine shifted matmuls: conv3x3 = sum_{dy,dx} A[dy:dy+hout, dx:dx+wout] @ K[dy,dx]
+    for dy in range(3):
+        for dx in range(3):
+            patch = a[dy : dy + hout, dx : dx + wout, :].reshape(hout * wout, -1)
+            acc += jnp.dot(patch, k_ref[dy, dx], preferred_element_type=jnp.float32)
+    y = acc * scale_ref[...] + bias_ref[...]
+    if binarize:
+        y = jnp.where(y >= 0, 1.0, -1.0)
+    o_ref[0] = y.reshape(hout, wout, -1).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("binarize",))
+def binary_conv3x3(
+    a: jnp.ndarray,       # (batch, h, w, c_in)
+    k: jnp.ndarray,       # (3, 3, c_in, c_out)
+    scale: jnp.ndarray,   # (c_out,)
+    bias: jnp.ndarray,    # (c_out,)
+    binarize: bool = True,
+) -> jnp.ndarray:
+    b, h, w, cin = a.shape
+    cout = k.shape[3]
+    hout, wout = h - 2, w - 2
+    return pl.pallas_call(
+        functools.partial(_kernel, hout=hout, wout=wout, binarize=binarize),
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, h, w, cin), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((3, 3, cin, cout), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((1, cout), lambda i: (0, 0)),
+            pl.BlockSpec((1, cout), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, hout, wout, cout), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hout, wout, cout), a.dtype),
+        interpret=True,
+    )(a, k, scale.reshape(1, -1), bias.reshape(1, -1))

@@ -1,0 +1,97 @@
+"""L1 Pallas kernel: fused binary dense layer  a' = sign(BN(a @ W)).
+
+This is Algorithm 1 lines 2-5 for a fully-connected layer, the training
+*and* inference hot-spot of the paper's MLPs.
+
+Hardware adaptation (DESIGN.md section "Hardware adaptation"): the paper
+realizes this layer as FPGA combinational logic with zero parameter-memory
+traffic.  On a TPU-shaped machine the same insight -- keep parameters out
+of slow memory on the hot path -- maps to: tile so W lives in VMEM across
+the whole grid row, run the f32 tile matmul on the MXU, and fold batch
+norm + sign into a per-tile VPU epilogue so no intermediate ever round-trips
+to HBM.  BlockSpec expresses the HBM<->VMEM schedule the paper expressed
+with per-layer pipelining.
+
+interpret=True ALWAYS: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the AOT artifact runs
+on the Rust PJRT CPU client.  Correctness vs. kernels.ref is enforced by
+python/tests/test_kernel.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Default tile sizes.  MXU-shaped: 128x128 output tiles, 128-deep K panels.
+BM, BN, BK = 128, 128, 128
+
+
+def _kernel(a_ref, w_ref, scale_ref, bias_ref, o_ref, acc_ref, *, nk: int, binarize: bool):
+    """Grid = (M/bm, N/bn, K/bk); K is the innermost (fastest) axis.
+
+    acc_ref is a VMEM f32 scratch accumulator; the BN+sign epilogue runs
+    once, on the last K step, entirely in VMEM.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # MXU tile matmul in f32.
+    acc_ref[...] += jnp.dot(
+        a_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        y = acc_ref[...] * scale_ref[...] + bias_ref[...]
+        if binarize:
+            y = jnp.where(y >= 0, 1.0, -1.0)
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("binarize", "bm", "bn", "bk"))
+def binary_dense(
+    a: jnp.ndarray,       # (batch, n_in)
+    w: jnp.ndarray,       # (n_in, n_out)
+    scale: jnp.ndarray,   # (n_out,)
+    bias: jnp.ndarray,    # (n_out,)
+    binarize: bool = True,
+    bm: int = BM,
+    bn: int = BN,
+    bk: int = BK,
+) -> jnp.ndarray:
+    m, kdim = a.shape
+    _, n = w.shape
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, kdim)
+    # Interpret-mode pallas pads out-of-range blocks with NaN; zero-pad every
+    # operand to a block multiple up front (zeros are matmul-neutral) and
+    # slice the result back at the end.
+    mp, np_, kp = -(-m // bm) * bm, -(-n // bn) * bn, -(-kdim // bk) * bk
+    a = jnp.pad(a, ((0, mp - m), (0, kp - kdim)))
+    w = jnp.pad(w, ((0, kp - kdim), (0, np_ - n)))
+    scale = jnp.pad(scale, (0, np_ - n))
+    bias = jnp.pad(bias, (0, np_ - n))
+    nk = kp // bk
+    grid = (mp // bm, np_ // bn, nk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, nk=nk, binarize=binarize),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(a, w, scale.reshape(1, -1), bias.reshape(1, -1))
+    return out[:m, :n]

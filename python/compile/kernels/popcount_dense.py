@@ -1,0 +1,57 @@
+"""L1 Pallas kernel: last-layer "popcount" dense on pseudo-Boolean inputs.
+
+Paper section 3.2 (end): when the last layer's inputs are binary, the dot
+product degenerates into additions/subtractions of selected weights -- no
+multiplies.  With bits b in {0,1} and sign-domain activations a = 2b - 1:
+
+    logits = a @ W + bias = 2*(b @ W) - colsum(W) + bias
+
+The kernel precomputes nothing: it takes the {0,1} bit matrix, computes the
+selective-accumulate as a (cheap) matmul tile in f32, and applies the
+affine correction in the epilogue.  colsum(W) is passed in so the kernel
+performs exactly one pass over W (it stays resident in VMEM).
+
+interpret=True ALWAYS -- see binary_dense.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(b_ref, w_ref, colsum_ref, bias_ref, o_ref):
+    z = jnp.dot(b_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = (2.0 * z - colsum_ref[...] + bias_ref[...]).astype(o_ref.dtype)
+
+
+@jax.jit
+def popcount_dense(
+    bits: jnp.ndarray,    # (batch, n_in) in {0,1}
+    w: jnp.ndarray,       # (n_in, n_out)
+    bias: jnp.ndarray,    # (n_out,)
+    bm: int = 128,
+) -> jnp.ndarray:
+    m, kdim = bits.shape
+    n = w.shape[1]
+    bm = min(bm, m)
+    mp = -(-m // bm) * bm
+    bits = jnp.pad(bits, ((0, mp - m), (0, 0)))
+    colsum = jnp.sum(w, axis=0).reshape(1, -1)
+    out = pl.pallas_call(
+        _kernel,
+        grid=(mp // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, kdim), lambda i: (i, 0)),
+            pl.BlockSpec((kdim, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, n), w.dtype),
+        interpret=True,
+    )(bits.astype(w.dtype), w, colsum, bias.reshape(1, -1))
+    return out[:m]

@@ -1,0 +1,97 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness references: every kernel in this package is
+checked against its oracle by pytest/hypothesis (python/tests/), and the
+L2 model can be built on either implementation (`use_pallas=` flag) so the
+AOT-exported HLO and the training path share one set of semantics.
+
+Binary convention: activations live in {-1, +1} ("sign domain") inside the
+JAX model, and in {0, 1} ("bit domain") inside the Rust logic engine.  The
+mapping is b = (a + 1) / 2; see DESIGN.md section 3.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sign_pm1(x: jnp.ndarray) -> jnp.ndarray:
+    """sign() with sign(0) := +1, returning {-1, +1} in x.dtype."""
+    return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+
+
+def binary_dense_ref(
+    a: jnp.ndarray,       # (batch, n_in) activations in {-1,+1} (or f32 inputs)
+    w: jnp.ndarray,       # (n_in, n_out) float weights
+    scale: jnp.ndarray,   # (n_out,) folded batch-norm scale (gamma / sigma)
+    bias: jnp.ndarray,    # (n_out,) folded batch-norm bias  (beta - gamma*mu/sigma)
+    binarize: bool = True,
+) -> jnp.ndarray:
+    """Fused z = a @ w; y = BN(z) = z*scale + bias; a' = sign(y).
+
+    This is Algorithm 1 lines 2-5 for one layer with inference-mode
+    (folded) batch normalization.  With binarize=False it returns the
+    pre-sign BN output (used for the last layer, line 8).
+    """
+    z = a @ w
+    y = z * scale + bias
+    return sign_pm1(y) if binarize else y
+
+
+def binary_dense_threshold_ref(
+    bits: jnp.ndarray,     # (batch, n_in) activations in {0,1}
+    w: jnp.ndarray,        # (n_in, n_out)
+    theta: jnp.ndarray,    # (n_out,) thresholds
+    flip: jnp.ndarray,     # (n_out,) bool: True flips the comparison
+) -> jnp.ndarray:
+    """Bit-domain Eq. 1: out_j = [sum_i bits_i * w_ij >= theta_j] (^ flip_j).
+
+    This is the exact function the Rust logic engine realizes; the oracle
+    is used to validate the {-1,+1} <-> {0,1} threshold folding.
+    """
+    z = bits @ w
+    ge = z >= theta
+    return jnp.where(flip, ~ge, ge)
+
+
+def popcount_dense_ref(
+    bits: jnp.ndarray,     # (batch, n_in) in {0,1}
+    w: jnp.ndarray,        # (n_in, n_out) float weights
+    bias: jnp.ndarray,     # (n_out,)
+) -> jnp.ndarray:
+    """Last layer on pseudo-Boolean inputs (paper section 3.2 end).
+
+    With a in {-1,+1} and b = (a+1)/2:  a @ w = 2*(b @ w) - sum(w), i.e.
+    the dot product degenerates to additions of selected weights -- no
+    multiplies.  The oracle computes the mathematically equal form.
+    """
+    return 2.0 * (bits @ w) - jnp.sum(w, axis=0) + bias
+
+
+def binary_conv3x3_ref(
+    a: jnp.ndarray,        # (batch, h, w, c_in) in {-1,+1} (or f32 image)
+    k: jnp.ndarray,        # (3, 3, c_in, c_out)
+    scale: jnp.ndarray,    # (c_out,)
+    bias: jnp.ndarray,     # (c_out,)
+    binarize: bool = True,
+) -> jnp.ndarray:
+    """VALID 3x3 conv + folded BN + sign, NHWC."""
+    import jax.lax as lax
+
+    z = lax.conv_general_dilated(
+        a, k,
+        window_strides=(1, 1),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    y = z * scale + bias
+    return sign_pm1(y) if binarize else y
+
+
+def maxpool2x2_ref(a: jnp.ndarray) -> jnp.ndarray:
+    """2x2 max pooling, stride 2, NHWC. Odd trailing row/col dropped."""
+    b, h, w, c = a.shape
+    h2, w2 = h // 2, w // 2
+    a = a[:, : h2 * 2, : w2 * 2, :]
+    a = a.reshape(b, h2, 2, w2, 2, c)
+    return a.max(axis=(2, 4))

@@ -1,0 +1,283 @@
+"""L2: the paper's JAX models -- Algorithm 1 forward, STE backward.
+
+Networks (Section 4.2):
+  * Net 1.1  MLP 784-100-100-100-10, sign activations (Algorithm 1)
+  * Net 1.2/1.3  same MLP, ReLU activations (fp32 / fp16 baselines)
+  * Net 2.1  CNN conv3x3x10 - pool - conv3x3x20 - pool - FC(500-10), sign
+  * Net 2.2/2.3  same CNN, ReLU (fp32 / fp16 baselines)
+
+Forward propagation is Algorithm 1 verbatim: z_i = a_{i-1} W_i,
+a_i = BatchNorm(z_i), a_i = Sign(a_i) for i < L.  The sign derivative is
+estimated with the straight-through estimator of Hubara et al. [20]
+(gradient of Htanh(x) = max(-1, min(1, x)), i.e. pass-through iff |x|<=1).
+
+Training-mode batch norm uses batch statistics and maintains EMA running
+statistics; inference folds BN into a per-neuron (scale, bias) pair, which
+is what the AOT export and the Rust threshold extraction consume.
+
+The fused inference forward can run on the Pallas kernels
+(`use_pallas=True`, the path that gets AOT-lowered) or on the pure-jnp
+oracles in kernels.ref (the training path; numerically identical --
+enforced by python/tests/).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.binary_dense import binary_dense
+from .kernels.binary_conv import binary_conv3x3
+from .kernels.popcount_dense import popcount_dense
+
+Params = dict[str, Any]
+
+# ---------------------------------------------------------------------------
+# Straight-through estimator (Section 3.1)
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def sign_ste(x: jnp.ndarray) -> jnp.ndarray:
+    return ref.sign_pm1(x)
+
+
+def _sign_fwd(x):
+    return ref.sign_pm1(x), x
+
+
+def _sign_bwd(x, g):
+    # d/dx Htanh(x) = 1 on |x| <= 1, else 0.
+    return (g * (jnp.abs(x) <= 1.0).astype(g.dtype),)
+
+
+sign_ste.defvjp(_sign_fwd, _sign_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Batch norm (per-feature, over the batch and any spatial dims)
+# ---------------------------------------------------------------------------
+
+BN_EPS = 1e-4
+BN_MOMENTUM = 0.9
+
+
+def bn_init(n: int) -> Params:
+    return {
+        "gamma": jnp.ones((n,), jnp.float32),
+        "beta": jnp.zeros((n,), jnp.float32),
+        "mean": jnp.zeros((n,), jnp.float32),
+        "var": jnp.ones((n,), jnp.float32),
+    }
+
+
+def bn_train(bn: Params, z: jnp.ndarray) -> tuple[jnp.ndarray, Params]:
+    axes = tuple(range(z.ndim - 1))
+    mu = z.mean(axis=axes)
+    var = z.var(axis=axes)
+    y = (z - mu) / jnp.sqrt(var + BN_EPS) * bn["gamma"] + bn["beta"]
+    new = dict(bn)
+    new["mean"] = BN_MOMENTUM * bn["mean"] + (1 - BN_MOMENTUM) * mu
+    new["var"] = BN_MOMENTUM * bn["var"] + (1 - BN_MOMENTUM) * var
+    return y, new
+
+
+def bn_fold(bn: Params) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Inference-mode BN as y = z*scale + bias (running statistics)."""
+    scale = bn["gamma"] / jnp.sqrt(bn["var"] + BN_EPS)
+    bias = bn["beta"] - bn["mean"] * scale
+    return scale, bias
+
+
+# ---------------------------------------------------------------------------
+# Architectures
+# ---------------------------------------------------------------------------
+
+MLP_SIZES = [784, 100, 100, 100, 10]
+CNN_C1, CNN_C2 = 10, 20
+CNN_FC_IN = 5 * 5 * CNN_C2  # 28 -conv-> 26 -pool-> 13 -conv-> 11 -pool-> 5
+
+
+@dataclasses.dataclass(frozen=True)
+class NetSpec:
+    """Which paper network this is."""
+
+    kind: str          # "mlp" | "cnn"
+    activation: str    # "sign" | "relu"
+    name: str          # e.g. "net11"
+
+    @property
+    def binary(self) -> bool:
+        return self.activation == "sign"
+
+
+NETS = {
+    "net11": NetSpec("mlp", "sign", "net11"),
+    "net12": NetSpec("mlp", "relu", "net12"),
+    "net21": NetSpec("cnn", "sign", "net21"),
+    "net22": NetSpec("cnn", "relu", "net22"),
+}
+# Net 1.3 / 2.3 are the fp16 realizations of net12 / net22 -- same trained
+# parameters, half-precision arithmetic; they exist on the Rust cost side.
+
+
+def init_params(spec: NetSpec, key: jax.Array) -> Params:
+    def glorot(key, shape):
+        fan_in, fan_out = shape[-2] * (shape[0] * shape[1] if len(shape) == 4 else 1), shape[-1]
+        lim = jnp.sqrt(6.0 / (fan_in + fan_out))
+        return jax.random.uniform(key, shape, jnp.float32, -lim, lim)
+
+    p: Params = {}
+    if spec.kind == "mlp":
+        keys = jax.random.split(key, len(MLP_SIZES) - 1)
+        for i in range(len(MLP_SIZES) - 1):
+            p[f"w{i+1}"] = glorot(keys[i], (MLP_SIZES[i], MLP_SIZES[i + 1]))
+            p[f"bn{i+1}"] = bn_init(MLP_SIZES[i + 1])
+    else:
+        k1, k2, k3 = jax.random.split(key, 3)
+        p["k1"] = glorot(k1, (3, 3, 1, CNN_C1))
+        p["bn1"] = bn_init(CNN_C1)
+        p["k2"] = glorot(k2, (3, 3, CNN_C1, CNN_C2))
+        p["bn2"] = bn_init(CNN_C2)
+        p["w3"] = glorot(k3, (CNN_FC_IN, 10))
+        p["bn3"] = bn_init(10)
+    return p
+
+
+def _act(spec: NetSpec, y: jnp.ndarray) -> jnp.ndarray:
+    return sign_ste(y) if spec.binary else jax.nn.relu(y)
+
+
+def forward_train(
+    spec: NetSpec, p: Params, x: jnp.ndarray, key: jax.Array, dropout: float = 0.2
+) -> tuple[jnp.ndarray, Params]:
+    """Algorithm 1 with training-mode BN.  Returns (logits, updated params).
+
+    Dropout is applied to the flat input only (binary hidden activations
+    make inner dropout ill-posed; documented in DESIGN.md).
+    """
+    newp = dict(p)
+    if dropout > 0:
+        keep = jax.random.bernoulli(key, 1.0 - dropout, x.shape)
+        x = jnp.where(keep, x / (1.0 - dropout), 0.0)
+
+    if spec.kind == "mlp":
+        a = x
+        nl = len(MLP_SIZES) - 1
+        for i in range(1, nl + 1):
+            z = a @ p[f"w{i}"]
+            y, newp[f"bn{i}"] = bn_train(p[f"bn{i}"], z)
+            a = _act(spec, y) if i < nl else y
+        return a, newp
+
+    img = x.reshape(-1, 28, 28, 1)
+    z = jax.lax.conv_general_dilated(
+        img, p["k1"], (1, 1), "VALID", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    y, newp["bn1"] = bn_train(p["bn1"], z)
+    a = ref.maxpool2x2_ref(_act(spec, y))
+    z = jax.lax.conv_general_dilated(
+        a, p["k2"], (1, 1), "VALID", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    y, newp["bn2"] = bn_train(p["bn2"], z)
+    a = ref.maxpool2x2_ref(_act(spec, y))
+    z = a.reshape(a.shape[0], -1) @ p["w3"]
+    y, newp["bn3"] = bn_train(p["bn3"], z)
+    return y, newp
+
+
+def forward_infer(
+    spec: NetSpec, p: Params, x: jnp.ndarray, use_pallas: bool = False
+) -> jnp.ndarray:
+    """Inference-mode forward with folded BN.
+
+    use_pallas=True routes the fused layers through the L1 Pallas kernels;
+    this is the graph aot.py lowers to HLO text for the Rust runtime.
+    """
+    dense = binary_dense if use_pallas else ref.binary_dense_ref
+    conv = binary_conv3x3 if use_pallas else ref.binary_conv3x3_ref
+
+    if spec.kind == "mlp":
+        a = x
+        nl = len(MLP_SIZES) - 1
+        for i in range(1, nl + 1):
+            s, b = bn_fold(p[f"bn{i}"])
+            binarize = spec.binary and i < nl
+            if binarize:
+                a = dense(a, p[f"w{i}"], s, b, binarize=True)
+            else:
+                y = dense(a, p[f"w{i}"], s, b, binarize=False)
+                a = y if i == nl else jax.nn.relu(y)
+        return a
+
+    img = x.reshape(-1, 28, 28, 1)
+    s1, b1 = bn_fold(p["bn1"])
+    y = conv(img, p["k1"], s1, b1, binarize=spec.binary)
+    if not spec.binary:
+        y = jax.nn.relu(y)
+    a = ref.maxpool2x2_ref(y)
+    s2, b2 = bn_fold(p["bn2"])
+    y = conv(a, p["k2"], s2, b2, binarize=spec.binary)
+    if not spec.binary:
+        y = jax.nn.relu(y)
+    a = ref.maxpool2x2_ref(y)
+    s3, b3 = bn_fold(p["bn3"])
+    return dense(a.reshape(a.shape[0], -1), p["w3"], s3, b3, binarize=False)
+
+
+def forward_infer_hybrid_last(
+    spec: NetSpec, p: Params, bits: jnp.ndarray
+) -> jnp.ndarray:
+    """Last layer only, on {0,1} inputs: the popcount path (section 3.2 end).
+
+    bits are the final hidden layer's activations in the bit domain; output
+    is the logits.  Uses the popcount kernel (add/sub only, no multiplies).
+    """
+    wkey = "w4" if spec.kind == "mlp" else "w3"
+    bnkey = "bn4" if spec.kind == "mlp" else "bn3"
+    s, b = bn_fold(p[bnkey])
+    # logits = BN(a @ w) = (a@w)*s + b with a = 2*bits - 1.
+    w_eff = p[wkey] * s
+    return popcount_dense(bits, w_eff, b)
+
+
+def binary_activations(
+    spec: NetSpec, p: Params, x: jnp.ndarray
+) -> list[jnp.ndarray]:
+    """Per-binarized-layer {0,1} activations for the ISF extraction.
+
+    Returns [a_0_bits?, a_1_bits, ...]: for the MLP, the outputs of layers
+    1..L-1 (each (n, 100) in {0,1}); for the CNN, the post-pool binary maps.
+    Inference-mode BN (folded running stats), matching what the Rust logic
+    realization will see at deployment.
+    """
+    assert spec.binary
+    outs: list[jnp.ndarray] = []
+    to_bits = lambda a: ((a + 1.0) * 0.5).astype(jnp.uint8)
+
+    if spec.kind == "mlp":
+        a = x
+        nl = len(MLP_SIZES) - 1
+        for i in range(1, nl):
+            s, b = bn_fold(p[f"bn{i}"])
+            a = ref.binary_dense_ref(a, p[f"w{i}"], s, b, binarize=True)
+            outs.append(to_bits(a))
+        return outs
+
+    img = x.reshape(-1, 28, 28, 1)
+    s1, b1 = bn_fold(p["bn1"])
+    a = ref.maxpool2x2_ref(ref.binary_conv3x3_ref(img, p["k1"], s1, b1, binarize=True))
+    outs.append(to_bits(a))         # (n, 13, 13, 10)
+    s2, b2 = bn_fold(p["bn2"])
+    a = ref.maxpool2x2_ref(ref.binary_conv3x3_ref(a, p["k2"], s2, b2, binarize=True))
+    outs.append(to_bits(a))         # (n, 5, 5, 20)
+    return outs
+
+
+def nll_loss(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32), axis=1).mean()

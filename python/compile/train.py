@@ -1,0 +1,149 @@
+"""Training driver (Section 4.1.2): Adamax, NLL loss, minibatch 64, dropout.
+
+The paper trains 100 epochs on MNIST with lr 3e-3 gradually decreased.
+On this CPU-only testbed we default to fewer epochs (configurable); the
+exact settings of every recorded run are in EXPERIMENTS.md.
+
+Python runs ONLY at build time (`make artifacts`).  Nothing here is on the
+request path.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+
+Params = dict[str, Any]
+
+LR0 = 3e-3
+BATCH = 64
+
+
+# ---------------------------------------------------------------------------
+# Adamax (Kingma & Ba [38], Algorithm 2)
+# ---------------------------------------------------------------------------
+
+ADAMAX_B1, ADAMAX_B2, ADAMAX_EPS = 0.9, 0.999, 1e-8
+
+
+def adamax_init(p: Params) -> dict[str, Any]:
+    zeros = jax.tree.map(jnp.zeros_like, p)
+    return {"m": zeros, "u": jax.tree.map(jnp.zeros_like, p), "t": jnp.zeros((), jnp.int32)}
+
+
+def adamax_update(p: Params, g: Params, st: dict, lr: jnp.ndarray) -> tuple[Params, dict]:
+    t = st["t"] + 1
+    m = jax.tree.map(lambda m_, g_: ADAMAX_B1 * m_ + (1 - ADAMAX_B1) * g_, st["m"], g)
+    u = jax.tree.map(lambda u_, g_: jnp.maximum(ADAMAX_B2 * u_, jnp.abs(g_)), st["u"], g)
+    bc = 1.0 - ADAMAX_B1 ** t.astype(jnp.float32)
+    newp = jax.tree.map(lambda p_, m_, u_: p_ - lr / bc * m_ / (u_ + ADAMAX_EPS), p, m, u)
+    return newp, {"m": m, "u": u, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+_BN_KEYS = ("mean", "var")  # running stats: updated by forward, not by grads
+
+
+def _split_trainable(p: Params) -> tuple[Params, Params]:
+    """BN running stats must not receive gradient updates."""
+    return p, p
+
+
+@functools.partial(jax.jit, static_argnames=("spec",), donate_argnums=(1, 2))
+def train_step(
+    spec: M.NetSpec, p: Params, opt: dict, x: jnp.ndarray, y: jnp.ndarray,
+    key: jax.Array, lr: jnp.ndarray,
+) -> tuple[Params, dict, jnp.ndarray]:
+    def loss_fn(p_):
+        logits, newp = M.forward_train(spec, p_, x, key)
+        return M.nll_loss(logits, y), newp
+
+    (loss, newp), grads = jax.value_and_grad(loss_fn, has_aux=True)(p)
+    # Zero the grads of BN running statistics (they are forward-updated).
+    for k in list(grads):
+        if k.startswith("bn"):
+            for s in _BN_KEYS:
+                grads[k][s] = jnp.zeros_like(grads[k][s])
+    p2, opt2 = adamax_update(p, grads, opt, lr)
+    # Restore forward-updated running stats on top of the optimizer result.
+    for k in list(p2):
+        if k.startswith("bn"):
+            for s in _BN_KEYS:
+                p2[k][s] = newp[k][s]
+    return p2, opt2, loss
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def eval_batch(spec: M.NetSpec, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.argmax(M.forward_infer(spec, p, x), axis=1)
+
+
+def accuracy(spec: M.NetSpec, p: Params, x: np.ndarray, y: np.ndarray, batch: int = 1000) -> float:
+    hits = 0
+    for lo in range(0, x.shape[0], batch):
+        pred = np.asarray(eval_batch(spec, p, jnp.asarray(x[lo : lo + batch])))
+        hits += int((pred == y[lo : lo + batch]).sum())
+    return hits / x.shape[0]
+
+
+def train(
+    spec: M.NetSpec,
+    x_train: np.ndarray,
+    y_train: np.ndarray,
+    x_val: np.ndarray,
+    y_val: np.ndarray,
+    epochs: int = 5,
+    seed: int = 0,
+    log: bool = True,
+) -> tuple[Params, list[dict]]:
+    """Train one network; returns (params, per-epoch log).
+
+    lr schedule: LR0 * 0.85^epoch ("gradually decreased", section 4.1.2).
+    Model selection: best validation accuracy over epochs (section 4.1.1).
+    """
+    key = jax.random.PRNGKey(seed)
+    key, init_key = jax.random.split(key)
+    p = M.init_params(spec, init_key)
+    opt = adamax_init(p)
+    n = x_train.shape[0]
+    steps = n // BATCH
+    history: list[dict] = []
+    best_acc, best_p = -1.0, None
+
+    for epoch in range(epochs):
+        t0 = time.time()
+        key, perm_key = jax.random.split(key)
+        order = np.asarray(jax.random.permutation(perm_key, n))
+        lr = jnp.asarray(LR0 * (0.85 ** epoch), jnp.float32)
+        losses = []
+        for s in range(steps):
+            idx = order[s * BATCH : (s + 1) * BATCH]
+            key, kstep = jax.random.split(key)
+            p, opt, loss = train_step(
+                spec, p, opt, jnp.asarray(x_train[idx]), jnp.asarray(y_train[idx]), kstep, lr
+            )
+            if s % 100 == 0:
+                losses.append(float(loss))
+        val_acc = accuracy(spec, p, x_val, y_val)
+        history.append(
+            {"epoch": epoch, "loss": losses, "val_acc": val_acc, "secs": time.time() - t0}
+        )
+        if val_acc > best_acc:
+            best_acc, best_p = val_acc, jax.tree.map(lambda a: a.copy(), p)
+        if log:
+            print(
+                f"[{spec.name}] epoch {epoch}: loss {losses[-1]:.4f} "
+                f"val_acc {val_acc:.4f} ({history[-1]['secs']:.1f}s)",
+                flush=True,
+            )
+    return best_p if best_p is not None else p, history

@@ -1,0 +1,120 @@
+"""pytest: SynthDigits determinism + artifact round-trips + bit packing."""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from compile import data as D
+from compile.aot import TensorFile, pack_bits, threshold_spec, write_isf_file
+
+
+def test_synth_digits_deterministic():
+    a = D.synth_digits(200, 50, seed=9)
+    b = D.synth_digits(200, 50, seed=9)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_synth_digits_seed_changes_data():
+    x1 = D.synth_digits(100, 10, seed=1)[0]
+    x2 = D.synth_digits(100, 10, seed=2)[0]
+    assert not np.array_equal(x1, x2)
+
+
+def test_synth_digits_ranges_and_classes():
+    x, y, xt, yt = D.synth_digits(500, 100, seed=3)
+    assert x.dtype == np.float32 and x.min() >= 0 and x.max() <= 1
+    assert set(np.unique(y)) == set(range(10))
+    assert x.shape == (500, 784) and xt.shape == (100, 784)
+
+
+def test_synth_digits_classes_distinguishable():
+    # Nearest-class-mean classifier must beat chance by a wide margin:
+    # the classes are real signal, not noise.  (The generator is tuned to
+    # be hard — heavy affine jitter, distractors, noise — so a linear
+    # prototype classifier sits in the 30-50% range while the trained
+    # nets reach 91-99%.)
+    x, y, xt, yt = D.synth_digits(2000, 400, seed=5)
+    means = np.stack([x[y == d].mean(axis=0) for d in range(10)])
+    pred = np.argmin(((xt[:, None, :] - means[None]) ** 2).sum(-1), axis=1)
+    assert (pred == yt).mean() > 0.3
+
+
+def test_dataset_file_roundtrip(tmp_path):
+    x, y, _, _ = D.synth_digits(64, 1, seed=4)
+    p = str(tmp_path / "d.bin")
+    D.save_dataset(p, x, y)
+    x2, y2 = D.load_dataset(p)
+    np.testing.assert_array_equal(x, x2)
+    np.testing.assert_array_equal(y, y2)
+
+
+def test_pack_bits_lsb_first():
+    rows = np.asarray([[1, 0, 0, 0, 0, 0, 0, 0, 1], [0] * 9])
+    packed = pack_bits(rows)
+    assert packed.shape == (2, 2)
+    assert packed[0, 0] == 1 and packed[0, 1] == 1
+    assert packed[1, 0] == 0 and packed[1, 1] == 0
+
+
+def test_tensorfile_layout(tmp_path):
+    tf = TensorFile()
+    a = np.arange(6, dtype=np.float32).reshape(2, 3)
+    b = np.arange(4, dtype=np.uint8)
+    tf.add("a", a)
+    tf.add("b", b)
+    p = str(tmp_path / "w.bin")
+    tf.write(p)
+    raw = open(p, "rb").read()
+    ea, eb = tf.entries["a"], tf.entries["b"]
+    got_a = np.frombuffer(raw[ea["offset"] : ea["offset"] + ea["nbytes"]], "<f4").reshape(2, 3)
+    np.testing.assert_array_equal(got_a, a)
+    got_b = np.frombuffer(raw[eb["offset"] : eb["offset"] + eb["nbytes"]], np.uint8)
+    np.testing.assert_array_equal(got_b, b)
+
+
+def test_isf_file_format(tmp_path):
+    rng = np.random.default_rng(0)
+    ins = rng.integers(0, 2, (10, 5)).astype(np.uint8)
+    outs = rng.integers(0, 2, (10, 3)).astype(np.uint8)
+    p = str(tmp_path / "a.bin")
+    write_isf_file(p, [{"name": "layer2", "inputs": ins, "outputs": outs}])
+    raw = open(p, "rb").read()
+    assert raw[:4] == b"NACT"
+    n_layers = int(np.frombuffer(raw[4:8], "<u4")[0])
+    assert n_layers == 1
+    off = 8
+    nlen = int(np.frombuffer(raw[off : off + 4], "<u4")[0])
+    off += 4
+    assert raw[off : off + nlen] == b"layer2"
+    off += nlen
+    n_in, n_out, n_s = np.frombuffer(raw[off : off + 12], "<u4")
+    assert (n_in, n_out, n_s) == (5, 3, 10)
+    off += 12
+    in_bytes = 10 * 1  # ceil(5/8) = 1
+    got_in = np.frombuffer(raw[off : off + in_bytes], np.uint8).reshape(10, 1)
+    np.testing.assert_array_equal(got_in, pack_bits(ins))
+
+
+def test_threshold_spec_flip_on_negative_scale():
+    w = np.asarray([[1.0], [1.0]], np.float32)   # 2 in, 1 out
+    # scale < 0: BN flips the sign of the comparison.
+    spec = threshold_spec(w, np.asarray([-1.0], np.float32), np.asarray([0.0], np.float32))
+    assert spec["flip"][0] == 1
+    spec2 = threshold_spec(w, np.asarray([2.0], np.float32), np.asarray([0.0], np.float32))
+    assert spec2["flip"][0] == 0
+
+
+def test_threshold_spec_known_value():
+    # Single neuron: w = [1, -1], s = 1, b = 0 -> sign-domain threshold 0,
+    # colsum = 0 -> theta = 0.  bits [1,0] -> 1*1 >= 0 -> True.
+    w = np.asarray([[1.0], [-1.0]], np.float32)
+    spec = threshold_spec(w, np.ones(1, np.float32), np.zeros(1, np.float32))
+    assert spec["theta"][0] == 0.0
+    assert (np.asarray([1.0, 0.0]) @ w >= spec["theta"]).item() is True

@@ -1,0 +1,198 @@
+"""pytest: Pallas kernels vs pure-jnp oracles -- the CORE correctness signal.
+
+Hypothesis sweeps shapes; fixed-seed numpy draws the values.  Sign outputs
+are compared via the pre-sign values where float reassociation could flip
+a borderline sign; the kernels and oracles use identical epilogue order so
+exact sign agreement is additionally asserted on well-separated inputs.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.binary_dense import binary_dense
+from compile.kernels.binary_conv import binary_conv3x3
+from compile.kernels.popcount_dense import popcount_dense
+
+RNG = np.random.default_rng(20180406)
+
+
+def _randn(*shape):
+    return jnp.asarray(RNG.standard_normal(shape), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# binary_dense
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [(1, 784, 100), (64, 784, 100), (64, 100, 100), (64, 100, 10), (128, 128, 128)],
+)
+@pytest.mark.parametrize("binarize", [True, False])
+def test_binary_dense_paper_shapes(m, k, n, binarize):
+    a, w = _randn(m, k), _randn(k, n)
+    s, b = _randn(n), _randn(n)
+    got = np.asarray(binary_dense(a, w, s, b, binarize=binarize))
+    want = np.asarray(ref.binary_dense_ref(a, w, s, b, binarize=binarize))
+    if binarize:
+        # Borderline pre-sign values may legally flip; require <0.1% flips.
+        frac = (got != want).mean()
+        assert frac < 1e-3, f"sign mismatch fraction {frac}"
+    else:
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 140),
+    k=st.integers(1, 300),
+    n=st.integers(1, 140),
+)
+def test_binary_dense_hypothesis_shapes(m, k, n):
+    rng = np.random.default_rng(m * 100003 + k * 1009 + n)
+    a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    s = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    b = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    got = np.asarray(binary_dense(a, w, s, b, binarize=False))
+    want = np.asarray(ref.binary_dense_ref(a, w, s, b, binarize=False))
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+def test_binary_dense_block_size_invariance():
+    a, w = _randn(70, 190), _randn(190, 30)
+    s, b = _randn(30), _randn(30)
+    base = np.asarray(binary_dense(a, w, s, b, binarize=False))
+    for bm, bn, bk in [(8, 8, 8), (32, 16, 64), (128, 128, 128), (70, 30, 190)]:
+        got = np.asarray(binary_dense(a, w, s, b, binarize=False, bm=bm, bn=bn, bk=bk))
+        np.testing.assert_allclose(got, base, rtol=2e-4, atol=2e-4)
+
+
+def test_binary_dense_sign_agreement_separated():
+    # Inputs engineered so |pre-sign| is bounded away from 0.
+    a = jnp.asarray(RNG.choice([-1.0, 1.0], (64, 100)), jnp.float32)
+    w = _randn(100, 50)
+    s = jnp.ones(50, jnp.float32)
+    pre = np.asarray(ref.binary_dense_ref(a, w, s, jnp.zeros(50), binarize=False))
+    b = jnp.asarray(np.where(np.abs(pre).min(axis=0) < 1e-3, 0.5, 0.0), jnp.float32)
+    got = np.asarray(binary_dense(a, w, s, b, binarize=True))
+    want = np.asarray(ref.binary_dense_ref(a, w, s, b, binarize=True))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_binary_dense_output_is_pm1():
+    a, w = _randn(33, 77), _randn(77, 19)
+    out = np.asarray(binary_dense(a, w, _randn(19), _randn(19), binarize=True))
+    assert set(np.unique(out)) <= {-1.0, 1.0}
+
+
+# ---------------------------------------------------------------------------
+# binary_conv3x3
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "b,h,w,ci,co",
+    [(2, 28, 28, 1, 10), (2, 13, 13, 10, 20), (1, 3, 3, 1, 1), (3, 9, 7, 4, 6)],
+)
+@pytest.mark.parametrize("binarize", [True, False])
+def test_binary_conv_shapes(b, h, w, ci, co, binarize):
+    a, k = _randn(b, h, w, ci), _randn(3, 3, ci, co)
+    s, bb = _randn(co), _randn(co)
+    got = np.asarray(binary_conv3x3(a, k, s, bb, binarize=binarize))
+    want = np.asarray(ref.binary_conv3x3_ref(a, k, s, bb, binarize=binarize))
+    assert got.shape == (b, h - 2, w - 2, co)
+    if binarize:
+        assert (got != want).mean() < 1e-3
+    else:
+        np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    h=st.integers(3, 20),
+    w=st.integers(3, 20),
+    ci=st.integers(1, 8),
+    co=st.integers(1, 8),
+)
+def test_binary_conv_hypothesis(b, h, w, ci, co):
+    rng = np.random.default_rng(b + h * 7 + w * 77 + ci * 777 + co * 7777)
+    a = jnp.asarray(rng.standard_normal((b, h, w, ci)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((3, 3, ci, co)), jnp.float32)
+    s = jnp.asarray(rng.standard_normal(co), jnp.float32)
+    bb = jnp.asarray(rng.standard_normal(co), jnp.float32)
+    got = np.asarray(binary_conv3x3(a, k, s, bb, binarize=False))
+    want = np.asarray(ref.binary_conv3x3_ref(a, k, s, bb, binarize=False))
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+# ---------------------------------------------------------------------------
+# popcount_dense
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,k,n", [(64, 100, 10), (64, 500, 10), (1, 100, 10), (130, 33, 7)])
+def test_popcount_dense(m, k, n):
+    bits = jnp.asarray(RNG.integers(0, 2, (m, k)), jnp.float32)
+    w, b = _randn(k, n), _randn(n)
+    got = np.asarray(popcount_dense(bits, w, b))
+    want = np.asarray(ref.popcount_dense_ref(bits, w, b))
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+def test_popcount_equals_pm1_matmul():
+    # 2*(b@w) - colsum + bias == a@w + bias for a = 2b-1: the paper's
+    # "additions and subtractions instead of MACs" identity.
+    bits = jnp.asarray(RNG.integers(0, 2, (32, 64)), jnp.float32)
+    w, b = _randn(64, 10), _randn(10)
+    a = 2.0 * bits - 1.0
+    want = np.asarray(a @ w + b)
+    got = np.asarray(popcount_dense(bits, w, b))
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+# ---------------------------------------------------------------------------
+# maxpool + threshold-fold oracles
+# ---------------------------------------------------------------------------
+
+
+def test_maxpool_binary_is_or():
+    a = jnp.asarray(RNG.choice([-1.0, 1.0], (4, 8, 8, 3)), jnp.float32)
+    pooled = np.asarray(ref.maxpool2x2_ref(a))
+    bits = (np.asarray(a) + 1) / 2
+    want = np.zeros_like(pooled)
+    for i in range(2):
+        for j in range(2):
+            want = np.maximum(want, bits[:, i::2, j::2, :])
+    np.testing.assert_array_equal((pooled + 1) / 2, want)
+
+
+def test_threshold_fold_matches_sign_domain():
+    # bit-domain Eq.1 (what Rust realizes) == sign-domain BN+sign (what
+    # the JAX model computes).
+    from compile.aot import threshold_spec
+
+    k, n = 60, 24
+    w = np.asarray(RNG.standard_normal((k, n)), np.float32)
+    s = np.asarray(RNG.standard_normal(n), np.float32)
+    b = np.asarray(RNG.standard_normal(n), np.float32)
+    bits = RNG.integers(0, 2, (200, k)).astype(np.float32)
+    a = 2 * bits - 1
+    want = np.asarray(
+        ref.binary_dense_ref(jnp.asarray(a), jnp.asarray(w), jnp.asarray(s), jnp.asarray(b))
+    )
+    spec = threshold_spec(w, s, b)
+    got = np.asarray(
+        ref.binary_dense_threshold_ref(
+            jnp.asarray(bits), jnp.asarray(w),
+            jnp.asarray(spec["theta"]), jnp.asarray(spec["flip"].astype(bool)),
+        )
+    )
+    np.testing.assert_array_equal(got, (want + 1) / 2)

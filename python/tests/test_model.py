@@ -1,0 +1,146 @@
+"""pytest: L2 model semantics -- Algorithm 1, STE, BN folding, shapes."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+RNG = np.random.default_rng(42)
+
+
+def _params(name):
+    return M.init_params(M.NETS[name], jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# STE
+# ---------------------------------------------------------------------------
+
+
+def test_sign_ste_forward_values():
+    x = jnp.asarray([-2.0, -0.5, 0.0, 0.5, 2.0])
+    np.testing.assert_array_equal(np.asarray(M.sign_ste(x)), [-1, -1, 1, 1, 1])
+
+
+def test_sign_ste_gradient_is_htanh_window():
+    # grad passes through iff |x| <= 1 (Htanh STE, Section 3.1).
+    g = jax.grad(lambda x: M.sign_ste(x).sum())(jnp.asarray([-2.0, -1.0, -0.3, 0.7, 1.0, 3.0]))
+    np.testing.assert_array_equal(np.asarray(g), [0, 1, 1, 1, 1, 0])
+
+
+def test_sign_ste_gradient_chains():
+    # d/dx [ sign(x) * w ] under STE = w on the pass-through window.
+    f = lambda x: (M.sign_ste(x) * 3.0).sum()
+    g = jax.grad(f)(jnp.asarray([0.5, -5.0]))
+    np.testing.assert_array_equal(np.asarray(g), [3.0, 0.0])
+
+
+# ---------------------------------------------------------------------------
+# Batch norm
+# ---------------------------------------------------------------------------
+
+
+def test_bn_train_normalizes():
+    bn = M.bn_init(5)
+    z = jnp.asarray(RNG.standard_normal((256, 5)) * 7 + 3, jnp.float32)
+    y, new = M.bn_train(bn, z)
+    np.testing.assert_allclose(np.asarray(y.mean(axis=0)), 0, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y.std(axis=0)), 1, atol=1e-2)
+    assert not np.allclose(np.asarray(new["mean"]), 0)
+
+
+def test_bn_fold_matches_running_stats():
+    bn = M.bn_init(4)
+    bn["mean"] = jnp.asarray([1.0, -2.0, 0.5, 0.0])
+    bn["var"] = jnp.asarray([4.0, 1.0, 0.25, 9.0])
+    bn["gamma"] = jnp.asarray([2.0, 1.0, -1.0, 0.5])
+    bn["beta"] = jnp.asarray([0.0, 1.0, 2.0, -1.0])
+    z = jnp.asarray(RNG.standard_normal((16, 4)), jnp.float32)
+    s, b = M.bn_fold(bn)
+    want = (z - bn["mean"]) / jnp.sqrt(bn["var"] + M.BN_EPS) * bn["gamma"] + bn["beta"]
+    np.testing.assert_allclose(np.asarray(z * s + b), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Forward shapes + binary domain invariants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["net11", "net12", "net21", "net22"])
+def test_forward_shapes(name):
+    spec, p = M.NETS[name], _params(name)
+    x = jnp.asarray(RNG.random((8, 784)), jnp.float32)
+    logits, newp = M.forward_train(spec, p, x, jax.random.PRNGKey(1))
+    assert logits.shape == (8, 10)
+    assert M.forward_infer(spec, p, x).shape == (8, 10)
+
+
+@pytest.mark.parametrize("name", ["net11", "net21"])
+def test_binary_activations_are_bits(name):
+    spec, p = M.NETS[name], _params(name)
+    x = jnp.asarray(RNG.random((6, 784)), jnp.float32)
+    for a in M.binary_activations(spec, p, x):
+        assert set(np.unique(np.asarray(a))) <= {0, 1}
+
+
+def test_binary_activations_mlp_shapes():
+    spec, p = M.NETS["net11"], _params("net11")
+    x = jnp.asarray(RNG.random((5, 784)), jnp.float32)
+    acts = M.binary_activations(spec, p, x)
+    assert [a.shape for a in acts] == [(5, 100), (5, 100), (5, 100)]
+
+
+def test_binary_activations_cnn_shapes():
+    spec, p = M.NETS["net21"], _params("net21")
+    x = jnp.asarray(RNG.random((3, 784)), jnp.float32)
+    acts = M.binary_activations(spec, p, x)
+    assert acts[0].shape == (3, 13, 13, 10)
+    assert acts[1].shape == (3, 5, 5, 20)
+
+
+def test_infer_pallas_matches_ref():
+    # The AOT-exported graph (pallas) == the training-path oracle graph.
+    for name in ["net11", "net12", "net21", "net22"]:
+        spec, p = M.NETS[name], _params(name)
+        x = jnp.asarray(RNG.random((4, 784)), jnp.float32)
+        a = np.asarray(M.forward_infer(spec, p, x, use_pallas=False))
+        b = np.asarray(M.forward_infer(spec, p, x, use_pallas=True))
+        np.testing.assert_allclose(a, b, rtol=5e-4, atol=5e-4)
+
+
+def test_hybrid_last_layer_matches_full_forward():
+    # popcount last layer on bit inputs == the full model's last dense.
+    spec, p = M.NETS["net11"], _params("net11")
+    x = jnp.asarray(RNG.random((9, 784)), jnp.float32)
+    acts = M.binary_activations(spec, p, x)
+    bits = jnp.asarray(acts[-1], jnp.float32)
+    got = np.asarray(M.forward_infer_hybrid_last(spec, p, bits))
+    want = np.asarray(M.forward_infer(spec, p, x))
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+
+
+def test_nll_loss_sane():
+    logits = jnp.asarray([[10.0, 0, 0], [0, 10.0, 0]])
+    labels = jnp.asarray([0, 1])
+    assert float(M.nll_loss(logits, labels)) < 1e-3
+    assert float(M.nll_loss(logits, jnp.asarray([1, 0]))) > 5.0
+
+
+def test_one_train_step_reduces_loss():
+    from compile import train as T
+
+    spec, p = M.NETS["net11"], _params("net11")
+    opt = T.adamax_init(p)
+    x = jnp.asarray(RNG.random((64, 784)), jnp.float32)
+    y = jnp.asarray(RNG.integers(0, 10, 64))
+    key = jax.random.PRNGKey(3)
+    lr = jnp.asarray(3e-3, jnp.float32)
+    losses = []
+    for i in range(30):
+        p, opt, loss = T.train_step(spec, p, opt, x, y, key, lr)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.7, losses[::10]

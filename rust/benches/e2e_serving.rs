@@ -1,0 +1,91 @@
+//! Bench: end-to-end serving — the paper's headline restated for the CPU
+//! engine: synthesized-logic inference vs threshold (dot-product) vs the
+//! PJRT fp32 baseline, with throughput, latency, and parameter-memory
+//! traffic per inference.
+//!
+//! Run: cargo bench --bench e2e_serving
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use nullanet::bench_util::{bench, Table};
+use nullanet::coordinator::{engine, engine::InferenceEngine, Coordinator, CoordinatorConfig};
+use nullanet::{data, isf, model, synth};
+
+fn main() {
+    let art = match model::Artifacts::load(&nullanet::artifacts_dir()) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("skipping (run `make artifacts` first): {e}");
+            return;
+        }
+    };
+    let net = art.net("net11").expect("net11").clone();
+    let ds = data::Dataset::load(&art.test_path).expect("test set").take(512);
+    let cap = std::env::var("NULLANET_BENCH_CAP")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2000);
+
+    // Build the three engines.
+    let obs = isf::load_observations(&net.dir.join("activations.bin")).unwrap();
+    let tapes: Vec<_> = obs
+        .iter()
+        .map(|o| {
+            let l = isf::extract(o, &isf::IsfConfig { max_patterns: cap });
+            synth::optimize_layer(&o.name, &l, &synth::SynthConfig::default()).tape
+        })
+        .collect();
+    let logic = Arc::new(engine::LogicEngine::new(net.clone(), tapes).unwrap());
+    let thresh = Arc::new(engine::ThresholdEngine::new(net.clone()).unwrap());
+    let xla = engine::XlaEngine::from_net(&net, "model_b64", 64, 784, 10)
+        .ok()
+        .map(Arc::new);
+
+    let images: Vec<&[f32]> = (0..64).map(|i| ds.image(i)).collect();
+    let budget = Duration::from_millis(1500);
+    let mut table = Table::new(
+        "End-to-end inference engines (batch = 64)",
+        &["Engine", "batch latency", "images/s", "param bytes/inference"],
+    );
+    let mut add_row = |name: &str, eng: &dyn InferenceEngine| {
+        let r = bench(&format!("{name} batch64"), budget, || {
+            std::hint::black_box(eng.infer_batch(std::hint::black_box(&images)));
+        });
+        table.row(&[
+            name.into(),
+            nullanet::bench_util::format_ns(r.median_ns),
+            format!("{:.0}", r.throughput(64.0)),
+            eng.param_bytes_per_inference().to_string(),
+        ]);
+    };
+    add_row("logic (synthesized tapes)", &*logic);
+    add_row("threshold (Eq.1 dot products)", &*thresh);
+    if let Some(x) = &xla {
+        add_row("xla fp32 (PJRT baseline)", &**x);
+    }
+    table.print();
+
+    // Coordinator throughput under concurrent load.
+    let coord = Arc::new(Coordinator::start(
+        logic,
+        CoordinatorConfig { workers: 1, ..Default::default() },
+    ));
+    let n_req = 4096;
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(n_req);
+    for i in 0..n_req {
+        pending.push(coord.submit(ds.image(i % ds.n).to_vec()).unwrap());
+    }
+    for rx in pending {
+        rx.recv().unwrap();
+    }
+    let dt = t0.elapsed();
+    println!(
+        "\ncoordinator (1 worker, dynamic batching): {} requests in {:.2?} = {:.0} req/s | {}",
+        n_req,
+        dt,
+        n_req as f64 / dt.as_secs_f64(),
+        coord.metrics.summary()
+    );
+}

@@ -1,0 +1,127 @@
+//! Bench: the synthesis substrates — espresso, AIG passes, LUT mapping,
+//! tape evaluation.  These are the §Perf hot paths of EXPERIMENTS.md.
+//!
+//! Run: cargo bench --bench logic_substrate
+
+use std::time::Duration;
+
+use nullanet::aig::{self, Aig};
+use nullanet::bench_util::bench;
+use nullanet::isf::{extract, IsfConfig, LayerObservations};
+use nullanet::logic::{minimize, EspressoConfig};
+use nullanet::netlist::LogicTape;
+use nullanet::synth::{optimize_layer, SynthConfig};
+use nullanet::util::SplitMix64;
+
+/// Threshold-function layer observations (consistent, conflict-free).
+fn make_obs(seed: u64, n_in: usize, n_out: usize, n_samples: usize) -> LayerObservations {
+    let mut rng = SplitMix64::new(seed);
+    let w: Vec<Vec<f32>> = (0..n_out)
+        .map(|_| (0..n_in).map(|_| rng.normal() as f32).collect())
+        .collect();
+    let theta: Vec<f32> = (0..n_out).map(|_| rng.normal() as f32 * 2.0).collect();
+    let in_stride = (n_in + 7) / 8;
+    let out_stride = (n_out + 7) / 8;
+    let mut inputs = vec![0u8; n_samples * in_stride];
+    let mut outputs = vec![0u8; n_samples * out_stride];
+    for s in 0..n_samples {
+        let mut acc = vec![0f32; n_out];
+        for i in 0..n_in {
+            if rng.bool(0.5) {
+                inputs[s * in_stride + i / 8] |= 1 << (i % 8);
+                for (j, a) in acc.iter_mut().enumerate() {
+                    *a += w[j][i];
+                }
+            }
+        }
+        for j in 0..n_out {
+            if acc[j] >= theta[j] {
+                outputs[s * out_stride + j / 8] |= 1 << (j % 8);
+            }
+        }
+    }
+    LayerObservations { name: "bench".into(), n_in, n_out, inputs, outputs, n_samples }
+}
+
+fn main() {
+    let budget = Duration::from_millis(800);
+
+    // --- espresso at paper-like neuron scale (100 inputs) ----------------
+    for n_samples in [1000usize, 4000] {
+        let obs = make_obs(1, 100, 4, n_samples);
+        let isf = extract(&obs, &IsfConfig::default());
+        let f = isf.neuron_fn(0);
+        let r = bench(
+            &format!("espresso neuron 100in {}pat", n_samples),
+            budget,
+            || {
+                std::hint::black_box(minimize(&f, &EspressoConfig::default()));
+            },
+        );
+        let _ = r;
+    }
+
+    // --- full OptimizeLayer (Algorithm 2 lines 2-6) -----------------------
+    let obs = make_obs(2, 100, 16, 2000);
+    let isf = extract(&obs, &IsfConfig::default());
+    bench("optimize_layer 100in x16 2000pat", Duration::from_millis(1500), || {
+        std::hint::black_box(optimize_layer("bench", &isf, &SynthConfig::default()));
+    });
+
+    // --- AIG passes on a layer-scale graph ---------------------------------
+    let synth = optimize_layer("bench", &isf, &SynthConfig { opt_rounds: 0, ..Default::default() });
+    let g = synth.aig.clone();
+    println!("(aig under test: {} ANDs)", g.n_ands());
+    bench("aig balance", budget, || {
+        std::hint::black_box(aig::balance(&g));
+    });
+    bench("aig rewrite", budget, || {
+        std::hint::black_box(aig::rewrite(&g, &aig::RewriteConfig::default()));
+    });
+    bench("lutmap k=6", budget, || {
+        std::hint::black_box(nullanet::lutmap::map_luts(&g, &nullanet::lutmap::LutMapConfig::default()));
+    });
+
+    // --- tape evaluation (the request-path hot loop) -----------------------
+    let tape = LogicTape::from_aig(&g);
+    let mut rng = SplitMix64::new(3);
+    let inputs: Vec<u64> = (0..tape.n_inputs).map(|_| rng.next_u64()).collect();
+    let mut out = vec![0u64; tape.outputs.len()];
+    let mut scratch = tape.make_scratch();
+    let r = bench("tape eval 64-sample plane", budget, || {
+        tape.eval_into(
+            std::hint::black_box(&inputs),
+            std::hint::black_box(&mut out),
+            &mut scratch,
+        );
+    });
+    println!(
+        "tape: {} ops -> {:.2} samples/µs ({:.2} ps/gate-eval)",
+        tape.n_ops(),
+        64.0 / (r.median_ns / 1e3),
+        r.median_ns * 1000.0 / (tape.n_ops() as f64 * 64.0)
+    );
+
+    // --- random AIG scaling -------------------------------------------------
+    let mut rng = SplitMix64::new(4);
+    for n_ands in [1_000usize, 10_000] {
+        let mut g = Aig::new(64);
+        let mut lits: Vec<aig::Lit> = (0..64).map(|i| g.pi(i)).collect();
+        for _ in 0..n_ands {
+            let a = lits[rng.range(0, lits.len())];
+            let b = lits[rng.range(0, lits.len())];
+            lits.push(g.and(if rng.bool(0.5) { a.not() } else { a }, b));
+        }
+        for k in 0..32 {
+            let l = lits[lits.len() - 1 - k];
+            g.add_output(l);
+        }
+        let tape = LogicTape::from_aig(&g);
+        let inputs: Vec<u64> = (0..64).map(|_| rng.next_u64()).collect();
+        let mut out = vec![0u64; 32];
+        let mut scratch = tape.make_scratch();
+        bench(&format!("tape eval {} ands", tape.n_ops()), budget, || {
+            tape.eval_into(&inputs, &mut out, &mut scratch);
+        });
+    }
+}

@@ -1,0 +1,104 @@
+//! Bench: Tables 1–3 — the paper's constant tables plus live timing of
+//! the behavioural FP units that anchor the MAC baseline.
+//!
+//! Run: cargo bench --bench table3_fp_ops
+
+use std::time::Duration;
+
+use nullanet::arith::{f16_mac, f32_mac, mac_dot_f16, mac_dot_f32, F16};
+use nullanet::bench_util::{bench, Table};
+use nullanet::cost::{TABLE1, TABLE2, TABLE3};
+use nullanet::util::SplitMix64;
+
+fn main() {
+    // Tables 1 and 2 are constants (latency/energy of the motivating
+    // hardware); print them in paper layout.
+    let mut t1 = Table::new("Table 1: Haswell latency (paper constants)", &["Operation", "Latency (cycles)"]);
+    for r in TABLE1 {
+        t1.row(&[r.name.into(), if r.cycles_lo == r.cycles_hi { format!("{}", r.cycles_lo) } else { format!("{} - {}", r.cycles_lo, r.cycles_hi) }]);
+    }
+    t1.print();
+    let mut t2 = Table::new("Table 2: 45nm energy (paper constants)", &["Operation", "Bits", "pJ"]);
+    for r in TABLE2 {
+        t2.row(&[r.name.into(), r.bits.to_string(), if r.pj_lo == r.pj_hi { format!("{}", r.pj_lo) } else { format!("{} - {}", r.pj_lo, r.pj_hi) }]);
+    }
+    t2.print();
+
+    let mut t3 = Table::new(
+        "Table 3: FP units — paper P&R numbers + our behavioural-unit timings",
+        &["Unit", "ALMs", "Fmax (MHz)", "Latency (ns)", "Power (mW)", "behavioural (this CPU)"],
+    );
+    let mut rng = SplitMix64::new(7);
+    let xs: Vec<f32> = (0..256).map(|_| rng.normal() as f32).collect();
+    let ws: Vec<f32> = (0..256).map(|_| rng.normal() as f32).collect();
+    let budget = Duration::from_millis(300);
+
+    for u in TABLE3 {
+        let r = match (u.name, u.bits) {
+            ("Add", 16) => bench("f16_add x256", budget, || {
+                let mut acc = F16::from_f32(0.0);
+                for &x in &xs {
+                    acc = nullanet::arith::f16_add(acc, F16::from_f32(std::hint::black_box(x)));
+                }
+                std::hint::black_box(acc);
+            }),
+            ("Multiply", 16) => bench("f16_mul x256", budget, || {
+                let mut acc = F16::from_f32(1.0);
+                for &x in &xs {
+                    acc = nullanet::arith::f16_mul(acc, F16::from_f32(std::hint::black_box(x)));
+                }
+                std::hint::black_box(acc);
+            }),
+            ("MAC", 16) => bench("f16_mac x256", budget, || {
+                let mut acc = F16::from_f32(0.0);
+                for (&x, &w) in xs.iter().zip(&ws) {
+                    acc = f16_mac(acc, F16::from_f32(x), F16::from_f32(w));
+                }
+                std::hint::black_box(acc);
+            }),
+            ("Add", 32) => bench("f32_add x256", budget, || {
+                let mut acc = 0f32;
+                for &x in &xs {
+                    acc = nullanet::arith::f32_add(acc, std::hint::black_box(x));
+                }
+                std::hint::black_box(acc);
+            }),
+            ("Multiply", 32) => bench("f32_mul x256", budget, || {
+                let mut acc = 1f32;
+                for &x in &xs {
+                    acc = nullanet::arith::f32_mul(acc, std::hint::black_box(x));
+                }
+                std::hint::black_box(acc);
+            }),
+            _ => bench("f32_mac x256", budget, || {
+                let mut acc = 0f32;
+                for (&x, &w) in xs.iter().zip(&ws) {
+                    acc = f32_mac(acc, x, w);
+                }
+                std::hint::black_box(acc);
+            }),
+        };
+        t3.row(&[
+            format!("{} ({})", u.name, u.bits),
+            u.alms.to_string(),
+            format!("{:.2}", u.fmax_mhz),
+            format!("{:.2}", u.latency_ns),
+            format!("{:.2}", u.power_mw),
+            format!("{:.1} ns/op", r.median_ns / 256.0),
+        ]);
+    }
+    t3.print();
+
+    // MAC-dot comparison (the layer inner loop both baselines use).
+    let r32 = bench("mac_dot_f32 n=256", budget, || {
+        std::hint::black_box(mac_dot_f32(&xs, &ws));
+    });
+    let r16 = bench("mac_dot_f16 n=256", budget, || {
+        std::hint::black_box(mac_dot_f16(&xs, &ws));
+    });
+    println!(
+        "\nmac_dot 256-elem: f32 {:.1} ns/MAC, f16 (software) {:.1} ns/MAC",
+        r32.median_ns / 256.0,
+        r16.median_ns / 256.0
+    );
+}

@@ -1,0 +1,64 @@
+//! Bench: Table 5 — hardware cost of the synthesized FC2+FC3 of Net
+//! 1.1.b, regenerated from artifacts at several ISF caps (ablation).
+//!
+//! Run: cargo bench --bench table5_mlp_hidden
+//! (needs `make artifacts`; set NULLANET_BENCH_CAP to override the cap)
+
+use nullanet::bench_util::Table;
+use nullanet::cost::{FpgaModel, MAC16, MAC32};
+use nullanet::{isf, model, synth};
+
+fn main() {
+    let art = match model::Artifacts::load(&nullanet::artifacts_dir()) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("skipping (run `make artifacts` first): {e}");
+            return;
+        }
+    };
+    let net = art.net("net11").expect("net11");
+    let obs = isf::load_observations(&net.dir.join("activations.bin")).expect("activations");
+    let caps: Vec<usize> = std::env::var("NULLANET_BENCH_CAP")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .map(|c| vec![c])
+        .unwrap_or_else(|| vec![1000, 2000, 4000]);
+
+    let fpga = FpgaModel::default();
+    let mut table = Table::new(
+        "Table 5: synthesized FC2+FC3 hardware cost (paper vs ours)",
+        &["Config", "ALMs", "Registers", "Fmax (MHz)", "Latency (ns)", "Power (mW)", "x MAC32", "x MAC16"],
+    );
+    table.row(&[
+        "Paper (MNIST, full train set)".into(),
+        "112,173".into(), "302".into(), "65.30".into(), "30.63".into(), "396.46".into(),
+        "207".into(), "575".into(),
+    ]);
+
+    for cap in caps {
+        let t0 = std::time::Instant::now();
+        let mut stages = Vec::new();
+        for o in &obs {
+            let layer_isf = isf::extract(o, &isf::IsfConfig { max_patterns: cap });
+            let s = synth::optimize_layer(&o.name, &layer_isf, &synth::SynthConfig::default());
+            assert_eq!(synth::verify_layer(&layer_isf, &s), 0);
+            stages.push(s.hw_cost(&fpga));
+        }
+        let c = fpga.cost_pipeline(&stages);
+        table.row(&[
+            format!("Ours (cap {cap}, {:.0?})", t0.elapsed()),
+            c.alms.to_string(),
+            c.registers.to_string(),
+            format!("{:.2}", c.fmax_mhz),
+            format!("{:.2}", c.latency_ns),
+            format!("{:.2}", c.power_mw),
+            format!("{:.0}", c.alms as f64 / MAC32.alms as f64),
+            format!("{:.0}", c.alms as f64 / MAC16.alms as f64),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nshape check (paper): logic >> one MAC but << 20,000 parallel MACs\n\
+         memory: 400 bits of layer I/O vs 312.5 KB (fp32 MACs) = 6400x fewer accesses"
+    );
+}

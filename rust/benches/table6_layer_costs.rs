@@ -1,0 +1,70 @@
+//! Bench: Table 6 — per-layer MAC + memory accounting for Net 1.1.b vs
+//! Net 1.2, using the measured ALM count of the synthesized layers.
+//!
+//! Run: cargo bench --bench table6_layer_costs
+
+use nullanet::bench_util::Table;
+use nullanet::cost::{
+    dense_layer_cost, dram_energy_pj, logic_mac_equivalents, FpgaModel, LayerRealization,
+};
+use nullanet::{isf, model, synth};
+
+fn main() {
+    // Measured ALMs when artifacts are present; paper's count otherwise.
+    let alms = match model::Artifacts::load(&nullanet::artifacts_dir()) {
+        Ok(art) => {
+            let net = art.net("net11").expect("net11");
+            let obs = isf::load_observations(&net.dir.join("activations.bin")).unwrap();
+            let fpga = FpgaModel::default();
+            let cap = std::env::var("NULLANET_BENCH_CAP")
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(2000);
+            let stages: Vec<_> = obs
+                .iter()
+                .map(|o| {
+                    let l = isf::extract(o, &isf::IsfConfig { max_patterns: cap });
+                    synth::optimize_layer(&o.name, &l, &synth::SynthConfig::default())
+                        .hw_cost(&fpga)
+                })
+                .collect();
+            fpga.cost_pipeline(&stages).alms
+        }
+        Err(_) => {
+            eprintln!("artifacts missing; using the paper's ALM count");
+            112_173
+        }
+    };
+
+    let f32mac = LayerRealization::MacFloat { bytes_per_word: 4 };
+    let fc1 = dense_layer_cost("FC1", 784, 100, f32mac);
+    let fc2 = dense_layer_cost("FC2", 100, 100, f32mac);
+    let fc4b = dense_layer_cost("FC4", 100, 10, LayerRealization::MacBinaryInput { bytes_per_word: 4 });
+    let fc4 = dense_layer_cost("FC4", 100, 10, f32mac);
+    let logic_eq = logic_mac_equivalents(alms);
+    let logic_mem = 400.0 / 8.0;
+
+    let mut t = Table::new(
+        "Table 6: cost of realizing Net 1.1.b vs Net 1.2",
+        &["Layer", "1.1.b MACs", "1.1.b Mem (B)", "1.2 MACs", "1.2 Mem (B)"],
+    );
+    t.row(&["FC1".into(), format!("{}", fc1.macs), format!("{}", fc1.memory_bytes), format!("{}", fc1.macs), format!("{}", fc1.memory_bytes)]);
+    t.row(&["FC2+FC3".into(), format!("{:.0}", logic_eq), format!("{}", logic_mem), format!("{}", 2.0 * fc2.macs), format!("{}", 2.0 * fc2.memory_bytes)]);
+    t.row(&["FC4".into(), format!("{}", fc4b.macs), format!("{}", fc4b.memory_bytes), format!("{}", fc4.macs), format!("{}", fc4.memory_bytes)]);
+    let ours = (fc1.macs + logic_eq + fc4b.macs, fc1.memory_bytes + logic_mem + fc4b.memory_bytes);
+    let base = (fc1.macs + 2.0 * fc2.macs + fc4.macs, fc1.memory_bytes + 2.0 * fc2.memory_bytes + fc4.memory_bytes);
+    t.row(&["TOTAL".into(), format!("{:.0}", ours.0), format!("{:.0}", ours.1), format!("{:.0}", base.0), format!("{:.0}", base.1)]);
+    t.print();
+    println!(
+        "paper totals: 79,607 MACs / 1,266,575 B vs 99,400 MACs / 1,590,400 B (20% / 20% savings)\n\
+         ours:        {:.0} MACs / {:.0} B vs {:.0} MACs / {:.0} B ({:.0}% / {:.0}% savings)",
+        ours.0, ours.1, base.0, base.1,
+        (1.0 - ours.0 / base.0) * 100.0,
+        (1.0 - ours.1 / base.1) * 100.0,
+    );
+    println!(
+        "DRAM energy per inference (Table 2 midpoints): ours {:.1} µJ vs baseline {:.1} µJ",
+        dram_energy_pj(ours.1) / 1e6,
+        dram_energy_pj(base.1) / 1e6
+    );
+}

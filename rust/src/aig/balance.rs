@@ -1,0 +1,152 @@
+//! Delay-driven balancing (ABC `balance`): rebuild maximal AND-trees as
+//! minimum-depth trees, combining lowest-level operands first.
+
+use super::{Aig, Lit};
+
+/// Return a balanced, swept copy of the AIG (same outputs, same functions,
+/// depth less than or equal to the original's up to strash reuse).
+pub fn balance(aig: &Aig) -> Aig {
+    let mut out = Aig::new(aig.n_pis());
+    let mut map: Vec<Option<Lit>> = vec![None; aig.n_nodes()];
+    map[0] = Some(Lit::FALSE);
+    for i in 0..aig.n_pis() {
+        map[i + 1] = Some(out.pi(i));
+    }
+    let fanouts = aig.fanouts();
+    // Incrementally tracked levels for the new graph (avoid O(n^2)).
+    let mut lv: Vec<u32> = vec![0; aig.n_pis() + 1];
+    let mut level_of = |out: &Aig, l: Lit, lv: &Vec<u32>| -> u32 {
+        let _ = out;
+        *lv.get(l.node() as usize).unwrap_or(&0)
+    };
+
+    // Topological order (nodes are already topologically indexed).
+    for n in (aig.n_pis() + 1)..aig.n_nodes() {
+        if map[n].is_some() {
+            continue;
+        }
+        // Collect the maximal AND-tree rooted here: expand non-complemented
+        // AND fanins that are not shared (fanout 1), so shared logic stays
+        // shared.
+        let mut leaves: Vec<Lit> = Vec::new();
+        let mut stack = vec![Lit::new(n as u32, false)];
+        while let Some(l) = stack.pop() {
+            let node = l.node();
+            if !l.compl()
+                && aig.is_and(node)
+                && (fanouts[node as usize] <= 1 || node as usize == n)
+            {
+                let nd = aig.node(node);
+                stack.push(nd.fan0);
+                stack.push(nd.fan1);
+            } else {
+                leaves.push(l);
+            }
+        }
+        // Map leaves into the new graph, tagged with their level.
+        let mut mapped: Vec<(u32, Lit)> = leaves
+            .iter()
+            .map(|l| {
+                let m = map[l.node() as usize].expect("topo order");
+                let lit = if l.compl() { m.not() } else { m };
+                (level_of(&out, lit, &lv), lit)
+            })
+            .collect();
+        // Huffman-style: repeatedly AND the two lowest-level operands.
+        // (simple sort-based heap; lists are small)
+        while mapped.len() > 1 {
+            mapped.sort_by_key(|&(l, lit)| (std::cmp::Reverse(l), std::cmp::Reverse(lit.0)));
+            let (la, a) = mapped.pop().unwrap();
+            let (lb, b) = mapped.pop().unwrap();
+            let r = out.and(a, b);
+            let rlv = la.max(lb) + 1;
+            if r.node() as usize >= lv.len() {
+                lv.resize(r.node() as usize + 1, 0);
+                lv[r.node() as usize] = rlv;
+            }
+            mapped.push((level_of(&out, r, &lv), r));
+        }
+        map[n] = Some(mapped.pop().map(|(_, l)| l).unwrap_or(Lit::TRUE));
+    }
+
+    for &o in &aig.outputs {
+        let m = map[o.node() as usize].expect("mapped");
+        out.add_output(if o.compl() { m.not() } else { m });
+    }
+    out.sweep()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aig::{random_signature, sim_exhaustive};
+
+    #[test]
+    fn chain_becomes_tree() {
+        // a0 & a1 & ... & a7 built as a left chain: depth 7 -> balanced 3.
+        let mut g = Aig::new(8);
+        let mut acc = g.pi(0);
+        for i in 1..8 {
+            let p = g.pi(i);
+            acc = g.and(acc, p);
+        }
+        g.add_output(acc);
+        assert_eq!(g.depth(), 7);
+        let b = balance(&g);
+        assert_eq!(b.depth(), 3);
+        assert_eq!(sim_exhaustive(&g, 0), sim_exhaustive(&b, 0));
+    }
+
+    #[test]
+    fn preserves_function_with_inverters() {
+        let mut g = Aig::new(6);
+        let mut acc = g.pi(0);
+        for i in 1..6 {
+            let p = g.pi(i);
+            let t = g.and(acc, p);
+            acc = if i % 2 == 0 { t.not() } else { t };
+        }
+        g.add_output(acc);
+        let b = balance(&g);
+        for out in 0..1 {
+            assert_eq!(sim_exhaustive(&g, out), sim_exhaustive(&b, out));
+        }
+        assert!(b.depth() <= g.depth());
+    }
+
+    #[test]
+    fn multi_output_preserved() {
+        let mut g = Aig::new(10);
+        let mut acc = g.pi(0);
+        for i in 1..10 {
+            let p = g.pi(i);
+            acc = g.and(acc, p);
+            if i % 3 == 0 {
+                g.add_output(acc.not());
+            }
+        }
+        g.add_output(acc);
+        let b = balance(&g);
+        assert_eq!(
+            random_signature(&g, 1, 8),
+            random_signature(&b, 1, 8)
+        );
+        assert!(b.depth() <= g.depth());
+    }
+
+    #[test]
+    fn shared_nodes_stay_shared() {
+        // x = a&b feeds two outputs: balancing must not duplicate it into
+        // larger trees (fanout > 1 stops tree collection).
+        let mut g = Aig::new(4);
+        let (a, b, c, d) = (g.pi(0), g.pi(1), g.pi(2), g.pi(3));
+        let x = g.and(a, b);
+        let y = g.and(x, c);
+        let z = g.and(x, d);
+        g.add_output(y);
+        g.add_output(z);
+        let bal = balance(&g);
+        assert_eq!(bal.n_ands(), 3);
+        assert_eq!(random_signature(&g, 2, 8), random_signature(&bal, 2, 8));
+    }
+}

@@ -1,0 +1,231 @@
+//! Algebraic factoring of SoP covers into AIG logic (Brayton [36]).
+//!
+//! `factor_cover` turns an Espresso cover into a factored-form AIG cone:
+//! repeatedly divide by the most frequent literal (quick-factor).  Within
+//! a layer, structural hashing shares identical subexpressions across
+//! neurons — the paper's Fig. 3 common-logic extraction.
+
+use super::{Aig, Lit};
+use crate::logic::{Cover, Cube};
+
+/// Build `cover` into `aig`, mapping cover variable `v` to literal
+/// `var_lits[v]`.  Returns the root literal.
+pub fn factor_cover(aig: &mut Aig, cover: &Cover, var_lits: &[Lit]) -> Lit {
+    assert_eq!(var_lits.len(), cover.n_vars);
+    let lits: Vec<Option<Lit>> = var_lits.iter().map(|&l| Some(l)).collect();
+    let mut b = super::rewrite::RealBuilder { aig };
+    factor_with(&mut b, cover, &lits).expect("real build")
+}
+
+/// Generic factoring over any [`super::rewrite::AndBuilder`] — used both
+/// to construct logic and to dry-run cost estimates (rewrite/refactor).
+pub fn factor_with<B: super::rewrite::AndBuilder>(
+    b: &mut B,
+    cover: &Cover,
+    var_lits: &[Option<Lit>],
+) -> Option<Lit> {
+    assert_eq!(var_lits.len(), cover.n_vars);
+    if cover.is_empty() {
+        return b.fls();
+    }
+    let cubes: Vec<Vec<(usize, bool)>> = cover.cubes.iter().map(cube_literals).collect();
+    factor_rec(b, &cubes, var_lits)
+}
+
+fn lit_of(var_lits: &[Option<Lit>], v: usize, pos: bool) -> Option<Lit> {
+    var_lits[v].map(|l| if pos { l } else { l.not() })
+}
+
+fn and_many_b<B: super::rewrite::AndBuilder>(b: &mut B, lits: &[Option<Lit>]) -> Option<Lit> {
+    reduce_many_b(b, lits, true)
+}
+
+fn or_many_b<B: super::rewrite::AndBuilder>(b: &mut B, lits: &[Option<Lit>]) -> Option<Lit> {
+    reduce_many_b(b, lits, false)
+}
+
+fn reduce_many_b<B: super::rewrite::AndBuilder>(
+    b: &mut B,
+    lits: &[Option<Lit>],
+    is_and: bool,
+) -> Option<Lit> {
+    if lits.is_empty() {
+        return if is_and { b.tru() } else { b.fls() };
+    }
+    let mut layer: Vec<Option<Lit>> = lits.to_vec();
+    while layer.len() > 1 {
+        let mut next = Vec::with_capacity((layer.len() + 1) / 2);
+        for pair in layer.chunks(2) {
+            next.push(if pair.len() == 2 {
+                if is_and {
+                    b.and2(pair[0], pair[1])
+                } else {
+                    b.and2(pair[0].map(Lit::not), pair[1].map(Lit::not))
+                        .map(Lit::not)
+                }
+            } else {
+                pair[0]
+            });
+        }
+        layer = next;
+    }
+    layer[0]
+}
+
+fn cube_literals(c: &Cube) -> Vec<(usize, bool)> {
+    let mut lits = Vec::with_capacity(c.n_literals());
+    for v in c.pos.iter_ones() {
+        lits.push((v, true));
+    }
+    for v in c.neg.iter_ones() {
+        lits.push((v, false));
+    }
+    lits
+}
+
+fn factor_rec<B: super::rewrite::AndBuilder>(
+    b: &mut B,
+    cubes: &[Vec<(usize, bool)>],
+    var_lits: &[Option<Lit>],
+) -> Option<Lit> {
+    if cubes.is_empty() {
+        return b.fls();
+    }
+    if cubes.iter().any(|c| c.is_empty()) {
+        // A universal cube makes the whole function TRUE.
+        return b.tru();
+    }
+    if cubes.len() == 1 {
+        let lits: Vec<Option<Lit>> = cubes[0]
+            .iter()
+            .map(|&(v, pos)| lit_of(var_lits, v, pos))
+            .collect();
+        return and_many_b(b, &lits);
+    }
+    // Most frequent literal across cubes.
+    let mut counts: std::collections::HashMap<(usize, bool), usize> = Default::default();
+    for c in cubes {
+        for &l in c {
+            *counts.entry(l).or_insert(0) += 1;
+        }
+    }
+    let (&best, &cnt) = counts
+        .iter()
+        .max_by_key(|(l, &c)| (c, std::cmp::Reverse(*l)))
+        .unwrap();
+    if cnt <= 1 {
+        // No sharing: straight OR of cube ANDs.
+        let terms: Vec<Option<Lit>> = cubes
+            .iter()
+            .map(|c| {
+                let lits: Vec<Option<Lit>> = c
+                    .iter()
+                    .map(|&(v, pos)| lit_of(var_lits, v, pos))
+                    .collect();
+                and_many_b(b, &lits)
+            })
+            .collect();
+        return or_many_b(b, &terms);
+    }
+    // Divide: f = L * quotient + remainder.
+    let mut quotient = Vec::new();
+    let mut remainder = Vec::new();
+    for c in cubes {
+        if c.contains(&best) {
+            quotient.push(c.iter().copied().filter(|&l| l != best).collect());
+        } else {
+            remainder.push(c.clone());
+        }
+    }
+    let l = lit_of(var_lits, best.0, best.1);
+    let q = factor_rec(b, &quotient, var_lits);
+    let lq = b.and2(l, q);
+    if remainder.is_empty() {
+        lq
+    } else {
+        let r = factor_rec(b, &remainder, var_lits);
+        b.and2(lq.map(Lit::not), r.map(Lit::not)).map(Lit::not)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aig::sim_exhaustive;
+    use crate::logic::TruthTable;
+    use crate::util::SplitMix64;
+
+    fn build(cover: &Cover) -> (Aig, Lit) {
+        let mut g = Aig::new(cover.n_vars);
+        let lits: Vec<Lit> = (0..cover.n_vars).map(|i| g.pi(i)).collect();
+        let root = factor_cover(&mut g, cover, &lits);
+        g.add_output(root);
+        (g, root)
+    }
+
+    #[test]
+    fn empty_and_universal() {
+        let (g, root) = build(&Cover::new(3));
+        assert_eq!(root, Lit::FALSE);
+        drop(g);
+        let cov = Cover::from_cubes(3, vec![Cube::universal(3)]);
+        let (_, root) = build(&cov);
+        assert_eq!(root, Lit::TRUE);
+    }
+
+    #[test]
+    fn single_cube_is_and() {
+        let cov = Cover::from_cubes(4, vec![Cube::from_pla("1-01")]);
+        let (g, _) = build(&cov);
+        let t = sim_exhaustive(&g, 0);
+        let want = TruthTable::from_cover(&cov);
+        assert_eq!(t, want);
+        assert_eq!(g.n_ands(), 2); // 3 literals -> 2 ANDs
+    }
+
+    #[test]
+    fn factoring_preserves_function_random() {
+        let mut rng = SplitMix64::new(11);
+        for _ in 0..40 {
+            let n = rng.range(2, 8);
+            let f = TruthTable::from_fn(n, |_| rng.bool(0.4));
+            let cov = f.isop(&f);
+            let (g, _) = build(&cov);
+            assert_eq!(sim_exhaustive(&g, 0), f, "n={n}\n{}", cov.to_pla());
+        }
+    }
+
+    #[test]
+    fn factoring_shares_common_literal() {
+        // ab + ac + ad should factor as a(b+c+d): 3 ANDs max, not 3 ANDs
+        // per cube + OR tree.
+        let cov = Cover::from_cubes(
+            4,
+            vec![
+                Cube::from_pla("11--"),
+                Cube::from_pla("1-1-"),
+                Cube::from_pla("1--1"),
+            ],
+        );
+        let (g, _) = build(&cov);
+        let t = sim_exhaustive(&g, 0);
+        assert_eq!(t, TruthTable::from_cover(&cov));
+        assert!(g.n_ands() <= 3, "got {} ands", g.n_ands());
+    }
+
+    #[test]
+    fn shared_structure_across_two_covers() {
+        // Fig. 3: two neurons sharing a product term reuse the same node.
+        let c1 = Cover::from_cubes(3, vec![Cube::from_pla("11-")]);
+        let c2 = Cover::from_cubes(3, vec![Cube::from_pla("11-"), Cube::from_pla("--1")]);
+        let mut g = Aig::new(3);
+        let lits: Vec<Lit> = (0..3).map(|i| g.pi(i)).collect();
+        let r1 = factor_cover(&mut g, &c1, &lits);
+        let n_after_first = g.n_ands();
+        let r2 = factor_cover(&mut g, &c2, &lits);
+        g.add_output(r1);
+        g.add_output(r2);
+        // c2 reuses the ab node: only the OR adds a node.
+        assert_eq!(g.n_ands(), n_after_first + 1);
+    }
+}

@@ -1,0 +1,438 @@
+//! And-inverter graphs: the multi-level synthesis substrate
+//! (`OptimizeLayer` in Algorithm 2, ABC-style [31]).
+//!
+//! Structure: node 0 is the constant FALSE; the next `n_pis` nodes are
+//! primary inputs; every further node is a two-input AND.  Edges are
+//! literals (`Lit`): node index × 2 + complement bit.  Structural hashing
+//! deduplicates isomorphic AND nodes at construction time, which is what
+//! gives the paper's Fig. 3 "common logic extraction" across the neurons
+//! of a layer: shared product terms hash to the same node.
+
+mod balance;
+mod factor;
+mod refactor;
+mod rewrite;
+mod sim;
+
+pub use balance::balance;
+pub use factor::{factor_cover, factor_with};
+pub use refactor::{refactor, RefactorConfig};
+pub use rewrite::{resynthesize, rewrite, AndBuilder, CostProbe, RealBuilder, RewriteConfig};
+pub use sim::{random_signature, sim_exhaustive, sim_words};
+
+use std::collections::HashMap;
+
+/// An edge: target node index ×2, LSB = complemented.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Debug)]
+pub struct Lit(pub u32);
+
+impl Lit {
+    pub const FALSE: Lit = Lit(0);
+    pub const TRUE: Lit = Lit(1);
+
+    #[inline]
+    pub fn new(node: u32, compl: bool) -> Lit {
+        Lit(node << 1 | compl as u32)
+    }
+
+    #[inline]
+    pub fn node(self) -> u32 {
+        self.0 >> 1
+    }
+
+    #[inline]
+    pub fn compl(self) -> bool {
+        self.0 & 1 == 1
+    }
+
+    #[inline]
+    pub fn not(self) -> Lit {
+        Lit(self.0 ^ 1)
+    }
+
+    pub fn is_const(self) -> bool {
+        self.node() == 0
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Node {
+    pub fan0: Lit,
+    pub fan1: Lit,
+}
+
+/// An and-inverter graph with structural hashing.
+#[derive(Clone, Debug, Default)]
+pub struct Aig {
+    /// nodes[0] is the constant; nodes[1..=n_pis] are PIs (fanins unused).
+    nodes: Vec<Node>,
+    n_pis: usize,
+    strash: HashMap<(u32, u32), u32>,
+    pub outputs: Vec<Lit>,
+}
+
+impl Aig {
+    pub fn new(n_pis: usize) -> Self {
+        let dummy = Node {
+            fan0: Lit::FALSE,
+            fan1: Lit::FALSE,
+        };
+        Aig {
+            nodes: vec![dummy; n_pis + 1],
+            n_pis,
+            strash: HashMap::new(),
+            outputs: Vec::new(),
+        }
+    }
+
+    #[inline]
+    pub fn n_pis(&self) -> usize {
+        self.n_pis
+    }
+
+    /// Total node count (const + PIs + ANDs).
+    #[inline]
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Number of AND gates (the area metric).
+    #[inline]
+    pub fn n_ands(&self) -> usize {
+        self.nodes.len() - 1 - self.n_pis
+    }
+
+    /// Literal for primary input `i`.
+    #[inline]
+    pub fn pi(&self, i: usize) -> Lit {
+        debug_assert!(i < self.n_pis);
+        Lit::new(i as u32 + 1, false)
+    }
+
+    #[inline]
+    pub fn is_pi(&self, node: u32) -> bool {
+        node >= 1 && (node as usize) <= self.n_pis
+    }
+
+    #[inline]
+    pub fn is_and(&self, node: u32) -> bool {
+        (node as usize) > self.n_pis && (node as usize) < self.nodes.len()
+    }
+
+    #[inline]
+    pub fn node(&self, n: u32) -> Node {
+        self.nodes[n as usize]
+    }
+
+    /// AND with constant folding, trivial rules, and structural hashing.
+    pub fn and(&mut self, a: Lit, b: Lit) -> Lit {
+        // Constants & trivial identities.
+        if a == Lit::FALSE || b == Lit::FALSE || a == b.not() {
+            return Lit::FALSE;
+        }
+        if a == Lit::TRUE {
+            return b;
+        }
+        if b == Lit::TRUE || a == b {
+            return a;
+        }
+        let (a, b) = if a.0 <= b.0 { (a, b) } else { (b, a) };
+        if let Some(&n) = self.strash.get(&(a.0, b.0)) {
+            return Lit::new(n, false);
+        }
+        let n = self.nodes.len() as u32;
+        self.nodes.push(Node { fan0: a, fan1: b });
+        self.strash.insert((a.0, b.0), n);
+        Lit::new(n, false)
+    }
+
+    /// Like [`Aig::and`] but read-only: returns the literal the AND would
+    /// produce if it already exists (or follows from a trivial rule),
+    /// `None` if a new node would be required.  Used for dry-run costing
+    /// in rewrite/refactor.
+    pub fn probe_and(&self, a: Lit, b: Lit) -> Option<Lit> {
+        if a == Lit::FALSE || b == Lit::FALSE || a == b.not() {
+            return Some(Lit::FALSE);
+        }
+        if a == Lit::TRUE {
+            return Some(b);
+        }
+        if b == Lit::TRUE || a == b {
+            return Some(a);
+        }
+        let (a, b) = if a.0 <= b.0 { (a, b) } else { (b, a) };
+        self.strash.get(&(a.0, b.0)).map(|&n| Lit::new(n, false))
+    }
+
+    pub fn or(&mut self, a: Lit, b: Lit) -> Lit {
+        self.and(a.not(), b.not()).not()
+    }
+
+    pub fn xor(&mut self, a: Lit, b: Lit) -> Lit {
+        let n = self.and(a, b.not());
+        let m = self.and(a.not(), b);
+        self.or(n, m)
+    }
+
+    pub fn mux(&mut self, sel: Lit, t: Lit, e: Lit) -> Lit {
+        let a = self.and(sel, t);
+        let b = self.and(sel.not(), e);
+        self.or(a, b)
+    }
+
+    /// n-ary AND (balanced reduction).
+    pub fn and_many(&mut self, lits: &[Lit]) -> Lit {
+        self.reduce_many(lits, true)
+    }
+
+    /// n-ary OR (balanced reduction).
+    pub fn or_many(&mut self, lits: &[Lit]) -> Lit {
+        self.reduce_many(lits, false)
+    }
+
+    fn reduce_many(&mut self, lits: &[Lit], is_and: bool) -> Lit {
+        if lits.is_empty() {
+            return if is_and { Lit::TRUE } else { Lit::FALSE };
+        }
+        let mut layer: Vec<Lit> = lits.to_vec();
+        while layer.len() > 1 {
+            let mut next = Vec::with_capacity((layer.len() + 1) / 2);
+            for pair in layer.chunks(2) {
+                next.push(if pair.len() == 2 {
+                    if is_and {
+                        self.and(pair[0], pair[1])
+                    } else {
+                        self.or(pair[0], pair[1])
+                    }
+                } else {
+                    pair[0]
+                });
+            }
+            layer = next;
+        }
+        layer[0]
+    }
+
+    pub fn add_output(&mut self, l: Lit) {
+        self.outputs.push(l);
+    }
+
+    /// Logic level of every node (PIs/const at level 0).
+    pub fn levels(&self) -> Vec<u32> {
+        let mut lv = vec![0u32; self.nodes.len()];
+        for n in (self.n_pis + 1)..self.nodes.len() {
+            let nd = self.nodes[n];
+            lv[n] = 1 + lv[nd.fan0.node() as usize].max(lv[nd.fan1.node() as usize]);
+        }
+        lv
+    }
+
+    /// Maximum level over the outputs (circuit depth).
+    pub fn depth(&self) -> u32 {
+        let lv = self.levels();
+        self.outputs
+            .iter()
+            .map(|o| lv[o.node() as usize])
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Fanout counts (outputs count as fanout).
+    pub fn fanouts(&self) -> Vec<u32> {
+        let mut fo = vec![0u32; self.nodes.len()];
+        for n in (self.n_pis + 1)..self.nodes.len() {
+            let nd = self.nodes[n];
+            fo[nd.fan0.node() as usize] += 1;
+            fo[nd.fan1.node() as usize] += 1;
+        }
+        for o in &self.outputs {
+            fo[o.node() as usize] += 1;
+        }
+        fo
+    }
+
+    /// Garbage-collect dead nodes; returns a structurally-hashed copy
+    /// containing only logic reachable from the outputs, preserving
+    /// output order.
+    pub fn sweep(&self) -> Aig {
+        let mut out = Aig::new(self.n_pis);
+        let mut map: Vec<Option<Lit>> = vec![None; self.nodes.len()];
+        map[0] = Some(Lit::FALSE);
+        for i in 0..self.n_pis {
+            map[i + 1] = Some(out.pi(i));
+        }
+        // Iterative DFS to avoid recursion depth issues on deep graphs.
+        for &root in &self.outputs {
+            let mut stack = vec![root.node()];
+            while let Some(n) = stack.pop() {
+                if map[n as usize].is_some() {
+                    continue;
+                }
+                let nd = self.nodes[n as usize];
+                let f0 = map[nd.fan0.node() as usize];
+                let f1 = map[nd.fan1.node() as usize];
+                match (f0, f1) {
+                    (Some(a), Some(b)) => {
+                        let a = if nd.fan0.compl() { a.not() } else { a };
+                        let b = if nd.fan1.compl() { b.not() } else { b };
+                        map[n as usize] = Some(out.and(a, b));
+                    }
+                    _ => {
+                        stack.push(n);
+                        if f0.is_none() {
+                            stack.push(nd.fan0.node());
+                        }
+                        if f1.is_none() {
+                            stack.push(nd.fan1.node());
+                        }
+                    }
+                }
+            }
+        }
+        for &root in &self.outputs {
+            let m = map[root.node() as usize].expect("reachable");
+            out.add_output(if root.compl() { m.not() } else { m });
+        }
+        out
+    }
+
+    /// Evaluate all outputs on a single input assignment (slow; tests).
+    pub fn eval(&self, inputs: &[bool]) -> Vec<bool> {
+        assert_eq!(inputs.len(), self.n_pis);
+        let mut val = vec![false; self.nodes.len()];
+        for (i, &b) in inputs.iter().enumerate() {
+            val[i + 1] = b;
+        }
+        for n in (self.n_pis + 1)..self.nodes.len() {
+            let nd = self.nodes[n];
+            let a = val[nd.fan0.node() as usize] ^ nd.fan0.compl();
+            let b = val[nd.fan1.node() as usize] ^ nd.fan1.compl();
+            val[n] = a && b;
+        }
+        self.outputs
+            .iter()
+            .map(|o| val[o.node() as usize] ^ o.compl())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn const_rules() {
+        let mut g = Aig::new(2);
+        let a = g.pi(0);
+        assert_eq!(g.and(a, Lit::FALSE), Lit::FALSE);
+        assert_eq!(g.and(Lit::TRUE, a), a);
+        assert_eq!(g.and(a, a), a);
+        assert_eq!(g.and(a, a.not()), Lit::FALSE);
+        assert_eq!(g.n_ands(), 0);
+    }
+
+    #[test]
+    fn strash_dedups() {
+        let mut g = Aig::new(2);
+        let (a, b) = (g.pi(0), g.pi(1));
+        let x = g.and(a, b);
+        let y = g.and(b, a);
+        assert_eq!(x, y);
+        assert_eq!(g.n_ands(), 1);
+    }
+
+    #[test]
+    fn eval_gates() {
+        let mut g = Aig::new(2);
+        let (a, b) = (g.pi(0), g.pi(1));
+        let and = g.and(a, b);
+        let or = g.or(a, b);
+        let xor = g.xor(a, b);
+        g.add_output(and);
+        g.add_output(or);
+        g.add_output(xor);
+        for (x, y) in [(false, false), (false, true), (true, false), (true, true)] {
+            let v = g.eval(&[x, y]);
+            assert_eq!(v, vec![x && y, x || y, x ^ y], "{x} {y}");
+        }
+    }
+
+    #[test]
+    fn mux_eval() {
+        let mut g = Aig::new(3);
+        let (s, t, e) = (g.pi(0), g.pi(1), g.pi(2));
+        let m = g.mux(s, t, e);
+        g.add_output(m);
+        for i in 0..8 {
+            let s_ = i & 1 == 1;
+            let t_ = i & 2 == 2;
+            let e_ = i & 4 == 4;
+            assert_eq!(g.eval(&[s_, t_, e_])[0], if s_ { t_ } else { e_ });
+        }
+    }
+
+    #[test]
+    fn and_many_or_many() {
+        let mut g = Aig::new(5);
+        let lits: Vec<Lit> = (0..5).map(|i| g.pi(i)).collect();
+        let all = g.and_many(&lits);
+        let any = g.or_many(&lits);
+        g.add_output(all);
+        g.add_output(any);
+        let v = g.eval(&[true; 5]);
+        assert_eq!(v, vec![true, true]);
+        let v = g.eval(&[true, true, false, true, true]);
+        assert_eq!(v, vec![false, true]);
+        let v = g.eval(&[false; 5]);
+        assert_eq!(v, vec![false, false]);
+        assert_eq!(g.and_many(&[]), Lit::TRUE);
+        assert_eq!(g.or_many(&[]), Lit::FALSE);
+    }
+
+    #[test]
+    fn levels_and_depth() {
+        let mut g = Aig::new(4);
+        let l0 = g.pi(0);
+        let l1 = g.pi(1);
+        let l2 = g.pi(2);
+        let l3 = g.pi(3);
+        let a = g.and(l0, l1);
+        let b = g.and(l2, l3);
+        let c = g.and(a, b);
+        g.add_output(c);
+        assert_eq!(g.depth(), 2);
+        let chainx = g.and(c, l0);
+        let chainy = g.and(chainx, l1);
+        g.add_output(chainy);
+        assert_eq!(g.depth(), 4);
+    }
+
+    #[test]
+    fn sweep_removes_dead() {
+        let mut g = Aig::new(3);
+        let (a, b, c) = (g.pi(0), g.pi(1), g.pi(2));
+        let used = g.and(a, b);
+        let _dead = g.and(b, c);
+        let _dead2 = g.and(a, c);
+        g.add_output(used.not());
+        let swept = g.sweep();
+        assert_eq!(swept.n_ands(), 1);
+        for i in 0..8 {
+            let ins = [(i & 1) == 1, (i & 2) == 2, (i & 4) == 4];
+            assert_eq!(g.eval(&ins), swept.eval(&ins));
+        }
+    }
+
+    #[test]
+    fn fanouts_counted() {
+        let mut g = Aig::new(2);
+        let (a, b) = (g.pi(0), g.pi(1));
+        let x = g.and(a, b);
+        let y = g.and(x, a.not());
+        g.add_output(y);
+        g.add_output(x);
+        let fo = g.fanouts();
+        assert_eq!(fo[x.node() as usize], 2); // y + output
+        assert_eq!(fo[a.node() as usize], 2);
+    }
+}

@@ -1,0 +1,394 @@
+//! DAG-aware rewriting (Mishchenko [35]) and the shared resynthesis
+//! engine.
+//!
+//! One topological pass rebuilds the graph; at each AND node a K-feasible
+//! cut is computed (bottom-up merge of fanin cuts), the cut function is
+//! simulated into a truth table, and a candidate realization
+//! (ISOP → algebraic factoring) is *cost-probed* against the new graph's
+//! structural hash table without committing.  The candidate replaces the
+//! node when its estimated added-node count is smaller than the size of
+//! the cone it frees (an MFFC-with-boundary estimate) — the DAG-aware
+//! gain criterion of [35].  `rewrite` uses 4-input cuts; `refactor`
+//! (see refactor.rs) reuses the engine with larger cuts.
+
+use super::{factor::factor_with, Aig, Lit};
+use crate::logic::TruthTable;
+use std::collections::HashMap;
+
+#[derive(Clone, Debug)]
+pub struct RewriteConfig {
+    /// Maximum cut size (rewrite: 4, refactor: 8–12).
+    pub cut_size: usize,
+    /// Cuts kept per node during enumeration.
+    pub cuts_per_node: usize,
+    /// Accept zero-gain replacements (can unlock later passes).
+    pub zero_gain: bool,
+}
+
+impl Default for RewriteConfig {
+    fn default() -> Self {
+        RewriteConfig {
+            cut_size: 4,
+            cuts_per_node: 6,
+            zero_gain: false,
+        }
+    }
+}
+
+/// One rewrite pass; returns the improved (swept) graph.
+pub fn rewrite(aig: &Aig, cfg: &RewriteConfig) -> Aig {
+    resynthesize(aig, cfg)
+}
+
+/// A cut: sorted leaf node ids.
+type Cut = Vec<u32>;
+
+fn merge_cuts(a: &Cut, b: &Cut, k: usize) -> Option<Cut> {
+    let mut out = Vec::with_capacity(k);
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() || j < b.len() {
+        let x = if i < a.len() && (j >= b.len() || a[i] <= b[j]) {
+            if j < b.len() && a[i] == b[j] {
+                j += 1;
+            }
+            let v = a[i];
+            i += 1;
+            v
+        } else {
+            let v = b[j];
+            j += 1;
+            v
+        };
+        if out.len() == k {
+            return None;
+        }
+        out.push(x);
+    }
+    Some(out)
+}
+
+/// Truth table of `root` expressed over cut leaf nodes (original graph).
+fn cut_function(aig: &Aig, root: u32, cut: &Cut) -> TruthTable {
+    let n = cut.len();
+    let mut memo: HashMap<u32, TruthTable> = HashMap::new();
+    for (i, &leaf) in cut.iter().enumerate() {
+        memo.insert(leaf, TruthTable::var(n, i));
+    }
+    fn rec(aig: &Aig, node: u32, memo: &mut HashMap<u32, TruthTable>, n: usize) -> TruthTable {
+        if let Some(t) = memo.get(&node) {
+            return t.clone();
+        }
+        if node == 0 {
+            return TruthTable::zeros(n);
+        }
+        debug_assert!(aig.is_and(node), "cut does not cover cone");
+        let nd = aig.node(node);
+        let t0 = rec(aig, nd.fan0.node(), memo, n);
+        let t0 = if nd.fan0.compl() { t0.not() } else { t0 };
+        let t1 = rec(aig, nd.fan1.node(), memo, n);
+        let t1 = if nd.fan1.compl() { t1.not() } else { t1 };
+        let t = t0.and(&t1);
+        memo.insert(node, t.clone());
+        t
+    }
+    rec(aig, root, &mut memo, n)
+}
+
+/// Size of the cone of `root` above `cut` whose nodes have no fanout
+/// escaping the cone — the nodes freed if `root` is re-expressed over the
+/// cut (MFFC-with-boundary, estimated on the original graph).
+fn cone_gain(aig: &Aig, root: u32, cut: &Cut, fanouts: &[u32]) -> usize {
+    // Collect the cone.
+    let mut cone = vec![root];
+    let mut seen: HashMap<u32, bool> = HashMap::new();
+    seen.insert(root, true);
+    for &l in cut {
+        seen.insert(l, false); // boundary
+    }
+    let mut stack = vec![root];
+    while let Some(n) = stack.pop() {
+        if !aig.is_and(n) {
+            continue;
+        }
+        let nd = aig.node(n);
+        for f in [nd.fan0.node(), nd.fan1.node()] {
+            if let std::collections::hash_map::Entry::Vacant(e) = seen.entry(f) {
+                e.insert(true);
+                if aig.is_and(f) {
+                    cone.push(f);
+                    stack.push(f);
+                }
+            }
+        }
+    }
+    // Count cone nodes all of whose fanouts lie inside the cone
+    // (root counts unconditionally: its fanouts get redirected).
+    let cone_set: std::collections::HashSet<u32> =
+        cone.iter().copied().filter(|&n| aig.is_and(n)).collect();
+    let mut freed = 0;
+    for &n in &cone_set {
+        if n == root {
+            freed += 1;
+            continue;
+        }
+        // Approximation: a node is freed if every fanout is in the cone.
+        // We only know fanout *counts*, so recompute memberships cheaply:
+        // count fanouts from inside the cone and compare.
+        let mut inside = 0;
+        for &m in &cone_set {
+            let nd = aig.node(m);
+            if nd.fan0.node() == n {
+                inside += 1;
+            }
+            if nd.fan1.node() == n {
+                inside += 1;
+            }
+        }
+        if inside == fanouts[n as usize] {
+            freed += 1;
+        }
+    }
+    freed
+}
+
+/// The engine: rebuild with per-node cut-based resynthesis.
+pub fn resynthesize(aig: &Aig, cfg: &RewriteConfig) -> Aig {
+    let mut out = Aig::new(aig.n_pis());
+    let mut map: Vec<Lit> = vec![Lit::FALSE; aig.n_nodes()];
+    for i in 0..aig.n_pis() {
+        map[i + 1] = out.pi(i);
+    }
+    let fanouts = aig.fanouts();
+
+    // Cut sets per node (on the original graph).
+    let mut cuts: Vec<Vec<Cut>> = vec![Vec::new(); aig.n_nodes()];
+    for i in 0..=aig.n_pis() {
+        cuts[i] = vec![vec![i as u32]];
+    }
+    cuts[0] = vec![vec![]]; // constant: empty cut
+
+    for n in (aig.n_pis() + 1)..aig.n_nodes() {
+        let nd = aig.node(n as u32);
+        let (f0, f1) = (nd.fan0, nd.fan1);
+
+        // --- cut enumeration ------------------------------------------
+        let mut merged: Vec<Cut> = Vec::new();
+        for c0 in &cuts[f0.node() as usize] {
+            for c1 in &cuts[f1.node() as usize] {
+                if let Some(m) = merge_cuts(c0, c1, cfg.cut_size) {
+                    if !merged.contains(&m) {
+                        merged.push(m);
+                    }
+                }
+            }
+        }
+        // Priority: prefer cuts whose leaves are primary inputs (deep
+        // cones → more resynthesis freedom), then fewer leaves.
+        merged.sort_by_key(|c| {
+            let non_pi = c.iter().filter(|&&l| aig.is_and(l)).count();
+            (non_pi, c.len())
+        });
+        merged.truncate(cfg.cuts_per_node);
+        let mut my_cuts: Vec<Cut> = vec![vec![n as u32]];
+        my_cuts.extend(merged);
+        cuts[n] = my_cuts.clone();
+
+        // --- direct mapping -------------------------------------------
+        let a = resolve(&map, f0);
+        let b = resolve(&map, f1);
+        let direct = out.and(a, b);
+        map[n] = direct;
+
+        // --- try resynthesis on the best cut ---------------------------
+        let mut best: Option<(isize, Lit)> = None;
+        for cut in my_cuts.iter().skip(1) {
+            // skip trivial {n}
+            if cut.len() < 2 {
+                continue;
+            }
+            let tt = cut_function(aig, n as u32, cut);
+            let freed = cone_gain(aig, n as u32, cut, &fanouts) as isize;
+            // Candidate cover + dry-run cost against `out`.
+            let cover = tt.isop(&tt);
+            let leaf_lits: Vec<Option<Lit>> =
+                cut.iter().map(|&l| Some(resolve_node(&map, l))).collect();
+            let mut probe = CostProbe {
+                aig: &out,
+                cost: 0,
+            };
+            let cand = factor_with(&mut probe, &cover, &leaf_lits);
+            let gain = freed - probe.cost as isize;
+            let acceptable = gain > 0 || (cfg.zero_gain && gain == 0);
+            if acceptable && best.map(|(g, _)| gain > g).unwrap_or(true) {
+                // Commit for real.
+                let leaf_real: Vec<Lit> = cut.iter().map(|&l| resolve_node(&map, l)).collect();
+                let mut builder = RealBuilder { aig: &mut out };
+                let lit = factor_with(&mut builder, &cover, &leaf_real.iter().map(|&l| Some(l)).collect::<Vec<_>>());
+                if let Some(lit) = lit {
+                    best = Some((gain, lit));
+                }
+            }
+        }
+        if let Some((_, lit)) = best {
+            map[n] = lit;
+        }
+    }
+
+    for &o in &aig.outputs {
+        out.add_output(resolve(&map, o));
+    }
+    out.sweep()
+}
+
+#[inline]
+fn resolve(map: &[Lit], l: Lit) -> Lit {
+    let m = map[l.node() as usize];
+    if l.compl() {
+        m.not()
+    } else {
+        m
+    }
+}
+
+#[inline]
+fn resolve_node(map: &[Lit], n: u32) -> Lit {
+    map[n as usize]
+}
+
+// ---------------------------------------------------------------------
+// Builders for factor_with: a real one and a costing probe.
+// ---------------------------------------------------------------------
+
+/// Abstraction over "a thing that can build AND/NOT logic", letting the
+/// same factoring routine either construct nodes or just count them.
+pub trait AndBuilder {
+    /// AND of two (possibly unknown) literals.
+    fn and2(&mut self, a: Option<Lit>, b: Option<Lit>) -> Option<Lit>;
+    fn tru(&self) -> Option<Lit> {
+        Some(Lit::TRUE)
+    }
+    fn fls(&self) -> Option<Lit> {
+        Some(Lit::FALSE)
+    }
+}
+
+pub struct RealBuilder<'a> {
+    pub aig: &'a mut Aig,
+}
+
+impl AndBuilder for RealBuilder<'_> {
+    fn and2(&mut self, a: Option<Lit>, b: Option<Lit>) -> Option<Lit> {
+        Some(self.aig.and(a.expect("real build"), b.expect("real build")))
+    }
+}
+
+/// Dry-run cost estimator: counts AND nodes that structural hashing would
+/// not already provide.
+pub struct CostProbe<'a> {
+    pub aig: &'a Aig,
+    pub cost: usize,
+}
+
+impl AndBuilder for CostProbe<'_> {
+    fn and2(&mut self, a: Option<Lit>, b: Option<Lit>) -> Option<Lit> {
+        match (a, b) {
+            (Some(a), Some(b)) => {
+                if let Some(l) = self.aig.probe_and(a, b) {
+                    Some(l)
+                } else {
+                    self.cost += 1;
+                    None
+                }
+            }
+            _ => {
+                self.cost += 1;
+                None
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aig::{random_signature, sim_exhaustive};
+    use crate::logic::{Cover, Cube};
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn rewrite_preserves_function() {
+        let mut rng = SplitMix64::new(21);
+        for _ in 0..20 {
+            let n = rng.range(3, 8);
+            let mut g = Aig::new(n);
+            // Random DAG.
+            let mut lits: Vec<Lit> = (0..n).map(|i| g.pi(i)).collect();
+            for _ in 0..rng.range(5, 40) {
+                let a = lits[rng.range(0, lits.len())];
+                let b = lits[rng.range(0, lits.len())];
+                let a = if rng.bool(0.5) { a.not() } else { a };
+                let b = if rng.bool(0.5) { b.not() } else { b };
+                let l = g.and(a, b);
+                lits.push(l);
+            }
+            for _ in 0..3 {
+                let o = lits[rng.range(n, lits.len())];
+                g.add_output(if rng.bool(0.5) { o.not() } else { o });
+            }
+            let r = rewrite(&g, &RewriteConfig::default());
+            for out in 0..g.outputs.len() {
+                assert_eq!(
+                    sim_exhaustive(&g, out),
+                    sim_exhaustive(&r, out),
+                    "output {out}"
+                );
+            }
+            assert!(r.n_ands() <= g.n_ands());
+        }
+    }
+
+    #[test]
+    fn rewrite_collapses_redundant_mux() {
+        // mux(s, a, a) should collapse toward a.
+        let mut g = Aig::new(2);
+        let (s, a) = (g.pi(0), g.pi(1));
+        let m = g.mux(s, a, a);
+        g.add_output(m);
+        let r = rewrite(&g, &RewriteConfig::default());
+        assert!(r.n_ands() < g.n_ands(), "{} vs {}", r.n_ands(), g.n_ands());
+        assert_eq!(sim_exhaustive(&g, 0), sim_exhaustive(&r, 0));
+    }
+
+    #[test]
+    fn rewrite_large_sop_stays_equivalent() {
+        // A layer-like structure: several covers over shared inputs.
+        let mut rng = SplitMix64::new(5);
+        let n = 8;
+        let mut g = Aig::new(n);
+        let pis: Vec<Lit> = (0..n).map(|i| g.pi(i)).collect();
+        for _ in 0..6 {
+            let mut cubes = vec![];
+            for _ in 0..rng.range(1, 6) {
+                let mut c = Cube::universal(n);
+                for v in 0..n {
+                    if rng.bool(0.3) {
+                        c.set_literal(v, rng.bool(0.5));
+                    }
+                }
+                cubes.push(c);
+            }
+            let cov = Cover::from_cubes(n, cubes);
+            let root = crate::aig::factor_cover(&mut g, &cov, &pis);
+            g.add_output(root);
+        }
+        let r = rewrite(&g, &RewriteConfig::default());
+        assert_eq!(random_signature(&g, 9, 16), random_signature(&r, 9, 16));
+    }
+
+    #[test]
+    fn merge_cuts_respects_k() {
+        assert_eq!(merge_cuts(&vec![1, 2], &vec![2, 3], 4), Some(vec![1, 2, 3]));
+        assert_eq!(merge_cuts(&vec![1, 2, 3], &vec![4, 5], 4), None);
+        assert_eq!(merge_cuts(&vec![], &vec![7], 4), Some(vec![7]));
+    }
+}

@@ -1,0 +1,179 @@
+//! Benchmark harness (criterion is unavailable offline): warmup +
+//! timed iterations, robust statistics, criterion-style terminal output,
+//! and machine-readable JSON accumulation for bench_output parsing.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+    /// Median absolute deviation (robust spread).
+    pub mad_ns: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.median_ns / 1e9)
+    }
+}
+
+/// Time `f` with warmup; iteration count adapts to hit ~`budget` of
+/// measurement time (min 10 iters).
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult {
+    // Warmup + calibration.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().max(Duration::from_nanos(50));
+    let iters = ((budget.as_secs_f64() / once.as_secs_f64()).ceil() as usize).clamp(3, 100_000);
+    let warmup = (iters / 10).clamp(1, 100);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<f64> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let mut devs: Vec<f64> = samples.iter().map(|s| (s - median).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mad = devs[devs.len() / 2];
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        median_ns: median,
+        mean_ns: mean,
+        min_ns: samples[0],
+        max_ns: *samples.last().unwrap(),
+        mad_ns: mad,
+    };
+    println!("{}", format_result(&r));
+    r
+}
+
+pub fn format_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+pub fn format_result(r: &BenchResult) -> String {
+    format!(
+        "bench {:<42} median {:>12}  (±{:<10} n={})",
+        r.name,
+        format_ns(r.median_ns),
+        format_ns(r.mad_ns),
+        r.iters
+    )
+}
+
+/// Simple markdown-ish table printer for paper-table reproduction.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                if i < widths.len() {
+                    widths[i] = widths[i].max(c.len());
+                }
+            }
+        }
+        println!("\n=== {} ===", self.title);
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(&widths) {
+                s.push_str(&format!(" {:<w$} |", c, w = w));
+            }
+            s
+        };
+        println!("{}", line(&self.headers));
+        println!(
+            "|{}|",
+            widths
+                .iter()
+                .map(|w| "-".repeat(w + 2))
+                .collect::<Vec<_>>()
+                .join("|")
+        );
+        for r in &self.rows {
+            println!("{}", line(r));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let r = bench("noop-spin", Duration::from_millis(20), || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(r.iters >= 3);
+        assert!(r.min_ns <= r.median_ns && r.median_ns <= r.max_ns);
+        assert!(r.median_ns > 0.0);
+    }
+
+    #[test]
+    fn format_ns_units() {
+        assert!(format_ns(500.0).contains("ns"));
+        assert!(format_ns(5_000.0).contains("µs"));
+        assert!(format_ns(5_000_000.0).contains("ms"));
+        assert!(format_ns(5e9).contains(" s"));
+    }
+
+    #[test]
+    fn table_prints_without_panic() {
+        let mut t = Table::new("Table X", &["a", "bb"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print();
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 10,
+            median_ns: 1e6, // 1 ms
+            mean_ns: 1e6,
+            min_ns: 1e6,
+            max_ns: 1e6,
+            mad_ns: 0.0,
+        };
+        assert!((r.throughput(64.0) - 64_000.0).abs() < 1.0);
+    }
+}

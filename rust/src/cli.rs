@@ -1,0 +1,204 @@
+//! Tiny declarative CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! generated `--help` text.
+
+use std::collections::BTreeMap;
+
+/// Declared option.
+#[derive(Clone, Debug)]
+struct Opt {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// A small argument parser: declare options, then parse.
+#[derive(Debug, Default)]
+pub struct Cli {
+    program: String,
+    about: String,
+    opts: Vec<Opt>,
+    values: BTreeMap<String, String>,
+    positionals: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(program: &str, about: &str) -> Cli {
+        Cli {
+            program: program.into(),
+            about: about.into(),
+            ..Default::default()
+        }
+    }
+
+    /// Declare `--name <value>` with a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.into(),
+            help: help.into(),
+            default: Some(default.into()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a boolean `--name` flag.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    /// Parse; returns Err(help_text) on `--help` or unknown options.
+    pub fn parse(mut self, args: &[String]) -> Result<Parsed, String> {
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.help());
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.help()))?
+                    .clone();
+                let val = if opt.is_flag {
+                    "true".to_string()
+                } else if let Some(v) = inline_val {
+                    v
+                } else {
+                    i += 1;
+                    args.get(i)
+                        .cloned()
+                        .ok_or_else(|| format!("--{key} needs a value"))?
+                };
+                self.values.insert(key, val);
+            } else {
+                self.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        // Fill defaults.
+        for o in &self.opts {
+            if !self.values.contains_key(&o.name) {
+                if let Some(d) = &o.default {
+                    self.values.insert(o.name.clone(), d.clone());
+                }
+            }
+        }
+        Ok(Parsed {
+            values: self.values,
+            positionals: self.positionals,
+        })
+    }
+
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for o in &self.opts {
+            let d = o
+                .default
+                .as_ref()
+                .map(|d| format!(" (default: {d})"))
+                .unwrap_or_default();
+            s.push_str(&format!("  --{:<18} {}{}\n", o.name, o.help, d));
+        }
+        s.push_str("  --help               show this help\n");
+        s
+    }
+}
+
+/// Parsed arguments.
+#[derive(Debug)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    pub positionals: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    pub fn str(&self, name: &str) -> &str {
+        self.get(name).unwrap_or("")
+    }
+
+    pub fn usize(&self, name: &str) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(0)
+    }
+
+    pub fn f64(&self, name: &str) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(0.0)
+    }
+
+    pub fn bool(&self, name: &str) -> bool {
+        matches!(self.get(name), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let p = Cli::new("t", "test")
+            .opt("net", "net11", "which net")
+            .opt("batch", "64", "batch size")
+            .parse(&argv(&["--batch", "32"]))
+            .unwrap();
+        assert_eq!(p.str("net"), "net11");
+        assert_eq!(p.usize("batch"), 32);
+    }
+
+    #[test]
+    fn equals_syntax_and_flags() {
+        let p = Cli::new("t", "test")
+            .opt("x", "0", "")
+            .flag("verbose", "")
+            .parse(&argv(&["--x=5", "--verbose", "pos1"]))
+            .unwrap();
+        assert_eq!(p.usize("x"), 5);
+        assert!(p.bool("verbose"));
+        assert_eq!(p.positionals, vec!["pos1"]);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        let r = Cli::new("t", "test").parse(&argv(&["--nope"]));
+        assert!(r.is_err());
+        assert!(r.unwrap_err().contains("unknown option"));
+    }
+
+    #[test]
+    fn help_lists_options() {
+        let e = Cli::new("prog", "about")
+            .opt("alpha", "1", "alpha help")
+            .parse(&argv(&["--help"]))
+            .unwrap_err();
+        assert!(e.contains("alpha help"));
+        assert!(e.contains("prog"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let r = Cli::new("t", "t").opt("k", "", "").parse(&argv(&["--k"]));
+        assert!(r.is_err());
+    }
+}

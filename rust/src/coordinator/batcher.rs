@@ -1,0 +1,96 @@
+//! Dynamic batching: group requests up to a size bound or deadline.
+
+use super::Request;
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Block for the first request, then drain more until `max_batch` or
+/// until `max_wait` has elapsed since the first arrival.  Returns None
+/// if the channel disconnected with nothing pending (shutdown path).
+pub fn collect_batch(
+    rx: &Receiver<Request>,
+    max_batch: usize,
+    max_wait: Duration,
+) -> Option<Vec<Request>> {
+    // First element: wait with a periodic timeout so shutdown is checked.
+    let first = match rx.recv_timeout(Duration::from_millis(50)) {
+        Ok(r) => r,
+        // Timeout: empty batch, caller re-checks shutdown and retries.
+        Err(RecvTimeoutError::Timeout) => return Some(Vec::new()),
+        // Disconnected: producer gone, caller exits.
+        Err(RecvTimeoutError::Disconnected) => return None,
+    };
+    let deadline = Instant::now() + max_wait;
+    let mut batch = vec![first];
+    while batch.len() < max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(r) => batch.push(r),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::sync_channel;
+
+    fn req(id: u64) -> Request {
+        let (tx, _rx) = sync_channel(1);
+        // keep rx alive via leak: tests only inspect ids
+        std::mem::forget(_rx);
+        Request {
+            image: vec![],
+            submitted: Instant::now(),
+            reply: tx,
+            id,
+        }
+    }
+
+    #[test]
+    fn collects_up_to_max() {
+        let (tx, rx) = sync_channel(16);
+        for i in 0..10 {
+            tx.send(req(i)).unwrap();
+        }
+        let b = collect_batch(&rx, 4, Duration::from_millis(1)).unwrap();
+        assert_eq!(b.len(), 4);
+        assert_eq!(b[0].id, 0);
+        let b2 = collect_batch(&rx, 100, Duration::from_millis(1)).unwrap();
+        assert_eq!(b2.len(), 6);
+    }
+
+    #[test]
+    fn deadline_flushes_partial() {
+        let (tx, rx) = sync_channel(16);
+        tx.send(req(0)).unwrap();
+        let t0 = Instant::now();
+        let b = collect_batch(&rx, 64, Duration::from_millis(5)).unwrap();
+        assert_eq!(b.len(), 1);
+        assert!(t0.elapsed() < Duration::from_millis(200));
+    }
+
+    #[test]
+    fn preserves_fifo_order() {
+        let (tx, rx) = sync_channel(16);
+        for i in 0..8 {
+            tx.send(req(i)).unwrap();
+        }
+        let b = collect_batch(&rx, 8, Duration::from_millis(1)).unwrap();
+        let ids: Vec<u64> = b.iter().map(|r| r.id).collect();
+        assert_eq!(ids, (0..8).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn disconnect_returns_none_when_empty() {
+        let (tx, rx) = sync_channel::<Request>(1);
+        drop(tx);
+        assert!(collect_batch(&rx, 4, Duration::from_millis(1)).is_none());
+    }
+}

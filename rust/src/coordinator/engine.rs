@@ -1,0 +1,520 @@
+//! Inference engines behind the coordinator.
+//!
+//! * [`LogicEngine`] — the paper's system: first layer in f32 (the only
+//!   layer that reads parameters, per Section 3.2's closing discussion),
+//!   hidden layers as synthesized bit-parallel tapes (zero parameter
+//!   memory), last layer as popcount add/sub.
+//! * [`ThresholdEngine`] — same topology but hidden layers computed with
+//!   Eq. 1 dot products (the "Net x.1.a" accuracy reference).
+//! * [`XlaEngine`] — the fp32 baseline served through the PJRT runtime
+//!   (the AOT-lowered JAX graph; Nets 1.2/2.2).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::model::{Arch, NetArtifacts, ThresholdLayer};
+use crate::netlist::LogicTape;
+use crate::util::BitVec;
+
+/// A batched inference engine: images in, logits out.
+pub trait InferenceEngine: Send + Sync {
+    fn infer_batch(&self, images: &[&[f32]]) -> Vec<Vec<f32>>;
+    fn name(&self) -> &str;
+    /// Bytes of model parameters the engine reads per inference (the
+    /// paper's headline metric).  Logic engines only read first/last
+    /// layer parameters.
+    fn param_bytes_per_inference(&self) -> usize {
+        0
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shared first/last layer math
+// ---------------------------------------------------------------------
+
+/// First MLP layer: bits_j = [ (x·w_j)·s_j + b_j >= 0 ].
+fn mlp_first_layer(net: &NetArtifacts, img: &[f32]) -> BitVec {
+    let w = &net.tensors["w1"];
+    let s = &net.tensors["scale1"];
+    let b = &net.tensors["bias1"];
+    let (n_in, n_out) = (w.shape[0], w.shape[1]);
+    let mut z = vec![0f32; n_out];
+    for (i, &x) in img.iter().enumerate().take(n_in) {
+        if x == 0.0 {
+            continue;
+        }
+        let row = &w.f32s[i * n_out..(i + 1) * n_out];
+        for (j, &wv) in row.iter().enumerate() {
+            z[j] += x * wv;
+        }
+    }
+    BitVec::from_bools(
+        (0..n_out).map(|j| z[j] * s.f32s[j] + b.f32s[j] >= 0.0),
+    )
+}
+
+/// Last layer on bits (popcount form): logits = 2·(bits·w_eff) − colsum +
+/// bias, with w_eff = w·scale (see python popcount_dense).
+struct PopcountLast {
+    n_in: usize,
+    n_out: usize,
+    w_eff: Vec<f32>,
+    correction: Vec<f32>, // bias - colsum
+}
+
+impl PopcountLast {
+    fn new(net: &NetArtifacts, wname: &str, sname: &str, bname: &str) -> PopcountLast {
+        let w = &net.tensors[wname];
+        let s = &net.tensors[sname];
+        let b = &net.tensors[bname];
+        let (n_in, n_out) = (w.numel() / w.shape.last().unwrap(), *w.shape.last().unwrap());
+        let mut w_eff = vec![0f32; n_in * n_out];
+        let mut colsum = vec![0f32; n_out];
+        for i in 0..n_in {
+            for j in 0..n_out {
+                let v = w.f32s[i * n_out + j] * s.f32s[j];
+                w_eff[i * n_out + j] = v;
+                colsum[j] += v;
+            }
+        }
+        let correction = (0..n_out).map(|j| b.f32s[j] - colsum[j]).collect();
+        PopcountLast { n_in, n_out, w_eff, correction }
+    }
+
+    fn logits(&self, bits: &BitVec) -> Vec<f32> {
+        debug_assert_eq!(bits.len(), self.n_in);
+        let mut acc = vec![0f32; self.n_out];
+        for i in bits.iter_ones() {
+            let row = &self.w_eff[i * self.n_out..(i + 1) * self.n_out];
+            for (j, &w) in row.iter().enumerate() {
+                acc[j] += w;
+            }
+        }
+        (0..self.n_out)
+            .map(|j| 2.0 * acc[j] + self.correction[j])
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------
+// LogicEngine
+// ---------------------------------------------------------------------
+
+/// The synthesized-network engine (MLP form).  Hidden layers (2..L-1)
+/// run as bit-parallel tapes over 64-request planes.
+pub struct LogicEngine {
+    net: NetArtifacts,
+    tapes: Vec<LogicTape>,
+    last: PopcountLast,
+    name: String,
+}
+
+impl LogicEngine {
+    /// Build from artifacts + the synthesized hidden-layer tapes
+    /// (ordered: layer2, layer3, ...).
+    pub fn new(net: NetArtifacts, tapes: Vec<LogicTape>) -> Result<LogicEngine> {
+        let Arch::Mlp { ref sizes } = net.arch else {
+            anyhow::bail!("LogicEngine::new expects an MLP; use new_cnn");
+        };
+        let nl = sizes.len() - 1;
+        let last = PopcountLast::new(&net, &format!("w{nl}"), &format!("scale{nl}"), &format!("bias{nl}"));
+        let name = format!("logic:{}", net.name);
+        Ok(LogicEngine { net, tapes, last, name })
+    }
+
+    fn infer_block(&self, images: &[&[f32]]) -> Vec<Vec<f32>> {
+        debug_assert!(images.len() <= 64);
+        let n = images.len();
+        // First layer per image -> bit planes.
+        let first: Vec<BitVec> = images.iter().map(|im| mlp_first_layer(&self.net, im)).collect();
+        let width = first[0].len();
+        let mut planes = vec![0u64; width];
+        for (s, bits) in first.iter().enumerate() {
+            for i in bits.iter_ones() {
+                planes[i] |= 1 << s;
+            }
+        }
+        // Hidden layers: tape after tape on the planes.
+        let mut cur = planes;
+        for tape in &self.tapes {
+            let mut out = vec![0u64; tape.outputs.len()];
+            let mut scratch = tape.make_scratch();
+            tape.eval_into(&cur, &mut out, &mut scratch);
+            cur = out;
+        }
+        // Last layer per sample.
+        (0..n)
+            .map(|s| {
+                let bits = BitVec::from_bools((0..cur.len()).map(|j| (cur[j] >> s) & 1 == 1));
+                self.last.logits(&bits)
+            })
+            .collect()
+    }
+}
+
+impl InferenceEngine for LogicEngine {
+    fn infer_batch(&self, images: &[&[f32]]) -> Vec<Vec<f32>> {
+        let mut out = Vec::with_capacity(images.len());
+        for chunk in images.chunks(64) {
+            out.extend(self.infer_block(chunk));
+        }
+        out
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn param_bytes_per_inference(&self) -> usize {
+        // Only first + last layers touch parameters.
+        let w1 = &self.net.tensors["w1"];
+        (w1.numel() + self.last.w_eff.len()) * 4
+    }
+}
+
+// ---------------------------------------------------------------------
+// ThresholdEngine (the x.1.a reference: binary activations, dot products)
+// ---------------------------------------------------------------------
+
+/// Binary-activation MLP evaluated with Eq. 1 dot products (reads all
+/// parameters; accuracy oracle for the logic engine).
+pub struct ThresholdEngine {
+    net: NetArtifacts,
+    hidden: Vec<ThresholdLayer>,
+    last: PopcountLast,
+    name: String,
+}
+
+impl ThresholdEngine {
+    pub fn new(net: NetArtifacts) -> Result<ThresholdEngine> {
+        let Arch::Mlp { ref sizes } = net.arch else {
+            anyhow::bail!("ThresholdEngine expects an MLP");
+        };
+        let nl = sizes.len() - 1;
+        let hidden: Result<Vec<_>> = (2..nl).map(|i| net.threshold_layer(i)).collect();
+        let last = PopcountLast::new(&net, &format!("w{nl}"), &format!("scale{nl}"), &format!("bias{nl}"));
+        let name = format!("threshold:{}", net.name);
+        Ok(ThresholdEngine { hidden: hidden?, last, net, name })
+    }
+}
+
+impl InferenceEngine for ThresholdEngine {
+    fn infer_batch(&self, images: &[&[f32]]) -> Vec<Vec<f32>> {
+        images
+            .iter()
+            .map(|img| {
+                let mut bits = mlp_first_layer(&self.net, img);
+                for layer in &self.hidden {
+                    bits = layer.eval(&bits);
+                }
+                self.last.logits(&bits)
+            })
+            .collect()
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn param_bytes_per_inference(&self) -> usize {
+        self.net.tensors.values().map(|t| t.numel() * 4).sum()
+    }
+}
+
+// ---------------------------------------------------------------------
+// XlaEngine (fp32 baseline via PJRT)
+// ---------------------------------------------------------------------
+
+/// Serves the AOT-lowered fp32 graph through PJRT.  Fixed batch shape:
+/// partial batches are padded to the compiled batch size.
+pub struct XlaEngine {
+    model: crate::runtime::CompiledModel,
+    batch: usize,
+    dim: usize,
+    n_out: usize,
+    /// Weight arguments fed after the data input, in manifest order
+    /// (weights are graph *arguments* — see python/compile/aot.py).
+    params: Vec<(Vec<f32>, Vec<usize>)>,
+    name: String,
+}
+
+impl XlaEngine {
+    /// Load the graph named `graph` from a net's artifacts.
+    pub fn from_net(net: &NetArtifacts, graph: &str, batch: usize, dim: usize, n_out: usize) -> Result<XlaEngine> {
+        let hlo = net
+            .hlo
+            .get(graph)
+            .ok_or_else(|| anyhow::anyhow!("{}: no HLO graph {graph}", net.name))?;
+        let names = net.hlo_params.get(graph).cloned().unwrap_or_default();
+        let params = names
+            .iter()
+            .map(|n| {
+                let t = &net.tensors[n];
+                (t.f32s.clone(), t.shape.clone())
+            })
+            .collect();
+        let model = crate::runtime::CompiledModel::load(hlo)?;
+        let name = format!("xla:{}", model.name);
+        Ok(XlaEngine { model, batch, dim, n_out, params, name })
+    }
+}
+
+impl InferenceEngine for XlaEngine {
+    fn infer_batch(&self, images: &[&[f32]]) -> Vec<Vec<f32>> {
+        let mut out = Vec::with_capacity(images.len());
+        for chunk in images.chunks(self.batch) {
+            let mut buf = vec![0f32; self.batch * self.dim];
+            for (s, img) in chunk.iter().enumerate() {
+                buf[s * self.dim..(s + 1) * self.dim].copy_from_slice(img);
+            }
+            let shape = [self.batch, self.dim];
+            let mut ins: Vec<(&[f32], &[usize])> = vec![(&buf, &shape)];
+            for (data, sh) in &self.params {
+                ins.push((data, sh));
+            }
+            let res = self.model.run_f32(&ins).expect("xla execute");
+            let logits = &res[0];
+            for s in 0..chunk.len() {
+                out.push(logits[s * self.n_out..(s + 1) * self.n_out].to_vec());
+            }
+        }
+        out
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn param_bytes_per_inference(&self) -> usize {
+        self.params.iter().map(|(d, _)| d.len() * 4).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Tensor;
+    use std::collections::BTreeMap;
+
+    /// Hand-built 2-2-2-2 MLP artifacts for engine unit tests.
+    fn tiny_net() -> NetArtifacts {
+        let mut tensors = BTreeMap::new();
+        let t = |shape: Vec<usize>, f32s: Vec<f32>| Tensor { shape, f32s };
+        // Layer 1: identity-ish: bit_j = [x_j >= 0.5]
+        tensors.insert("w1".into(), t(vec![2, 2], vec![1.0, 0.0, 0.0, 1.0]));
+        tensors.insert("scale1".into(), t(vec![2], vec![1.0, 1.0]));
+        tensors.insert("bias1".into(), t(vec![2], vec![-0.5, -0.5]));
+        // Layer 2 (hidden, binarized): swap bits.  In sign domain:
+        // a2_0 = a1_1, a2_1 = a1_0 with w = [[0,1],[1,0]], bn identity.
+        tensors.insert("w2".into(), t(vec![2, 2], vec![0.0, 1.0, 1.0, 0.0]));
+        tensors.insert("scale2".into(), t(vec![2], vec![1.0, 1.0]));
+        tensors.insert("bias2".into(), t(vec![2], vec![0.0, 0.0]));
+        // theta in bit domain: out = [2*(b·w) - colsum >= 0] = [b·w >= .5]
+        tensors.insert("theta2".into(), t(vec![2], vec![0.5, 0.5]));
+        tensors.insert("flip2".into(), t(vec![2], vec![0.0, 0.0]));
+        // Layer 3 (last): logits = a2 (scaled)
+        tensors.insert("w3".into(), t(vec![2, 2], vec![1.0, 0.0, 0.0, 1.0]));
+        tensors.insert("scale3".into(), t(vec![2], vec![1.0, 1.0]));
+        tensors.insert("bias3".into(), t(vec![2], vec![0.0, 0.0]));
+        NetArtifacts {
+            name: "tiny".into(),
+            arch: Arch::Mlp { sizes: vec![2, 2, 2, 2] },
+            tensors,
+            accuracy_test: f64::NAN,
+            dir: std::path::PathBuf::new(),
+            hlo: BTreeMap::new(),
+            hlo_params: BTreeMap::new(),
+            isf_layers: vec![],
+        }
+    }
+
+    /// Tape for the swap layer: out0 = in1, out1 = in0.
+    fn swap_tape() -> LogicTape {
+        let mut g = crate::aig::Aig::new(2);
+        let (a, b) = (g.pi(0), g.pi(1));
+        g.add_output(b);
+        g.add_output(a);
+        LogicTape::from_aig(&g)
+    }
+
+    #[test]
+    fn logic_engine_matches_threshold_engine() {
+        let net = tiny_net();
+        let logic = LogicEngine::new(net.clone(), vec![swap_tape()]).unwrap();
+        let thresh = ThresholdEngine::new(net).unwrap();
+        let images: Vec<Vec<f32>> = vec![
+            vec![0.9, 0.1],
+            vec![0.1, 0.9],
+            vec![0.9, 0.9],
+            vec![0.1, 0.1],
+        ];
+        let refs: Vec<&[f32]> = images.iter().map(|v| v.as_slice()).collect();
+        let a = logic.infer_batch(&refs);
+        let b = thresh.infer_batch(&refs);
+        for (x, y) in a.iter().zip(&b) {
+            for (u, v) in x.iter().zip(y) {
+                assert!((u - v).abs() < 1e-6, "{x:?} vs {y:?}");
+            }
+        }
+        // swap semantics: image (0.9, 0.1) -> bits (1,0) -> swapped (0,1)
+        // -> logits favor class 1.
+        assert_eq!(crate::model::argmax(&a[0]), 1);
+        assert_eq!(crate::model::argmax(&a[1]), 0);
+    }
+
+    #[test]
+    fn logic_engine_batches_over_64() {
+        let net = tiny_net();
+        let logic = LogicEngine::new(net, vec![swap_tape()]).unwrap();
+        let images: Vec<Vec<f32>> = (0..150)
+            .map(|i| vec![(i % 2) as f32, ((i / 2) % 2) as f32])
+            .collect();
+        let refs: Vec<&[f32]> = images.iter().map(|v| v.as_slice()).collect();
+        let out = logic.infer_batch(&refs);
+        assert_eq!(out.len(), 150);
+        // spot check sample 3 (x = (1, 1)): bits (1,1) swapped (1,1)
+        assert!(out[3][0] > 0.0 && out[3][1] > 0.0);
+    }
+
+    #[test]
+    fn param_bytes_logic_much_smaller() {
+        let net = tiny_net();
+        let logic = LogicEngine::new(net.clone(), vec![swap_tape()]).unwrap();
+        let thresh = ThresholdEngine::new(net).unwrap();
+        assert!(logic.param_bytes_per_inference() < thresh.param_bytes_per_inference());
+    }
+}
+
+// ---------------------------------------------------------------------
+// CnnLogicEngine (Net 2.1.b): conv1 in f32, conv2 as per-patch logic,
+// FC as popcount.
+// ---------------------------------------------------------------------
+
+/// The CNN variant of the logic engine.  conv2's per-patch Boolean
+/// function (90 bits -> 20 bits) runs as a tape, applied over all 11x11
+/// patch positions with 64-way bit-parallelism (positions x images are
+/// flattened into sample planes).
+pub struct CnnLogicEngine {
+    net: NetArtifacts,
+    conv2_tape: LogicTape,
+    last: PopcountLast,
+    c1: usize,
+    c2: usize,
+    name: String,
+}
+
+impl CnnLogicEngine {
+    pub fn new(net: NetArtifacts, conv2_tape: LogicTape) -> Result<CnnLogicEngine> {
+        let Arch::Cnn { c1, c2, .. } = net.arch else {
+            anyhow::bail!("CnnLogicEngine expects a CNN");
+        };
+        let last = PopcountLast::new(&net, "w3", "scale_w3", "bias_w3");
+        let name = format!("logic:{}", net.name);
+        Ok(CnnLogicEngine { net, conv2_tape, last, c1, c2, name })
+    }
+
+    /// conv1 (f32) + sign + pool for one image -> 13x13xc1 bits.
+    fn first_stage(&self, img: &[f32]) -> Vec<bool> {
+        let k1 = &self.net.tensors["k1"];
+        let s1 = &self.net.tensors["scale_k1"];
+        let b1 = &self.net.tensors["bias_k1"];
+        let c1 = self.c1;
+        // 28 -> 26 conv + sign
+        let mut conv = vec![false; 26 * 26 * c1];
+        for y in 0..26 {
+            for x in 0..26 {
+                for co in 0..c1 {
+                    let mut acc = 0f32;
+                    for dy in 0..3 {
+                        for dx in 0..3 {
+                            let v = img[(y + dy) * 28 + (x + dx)];
+                            acc += v * k1.f32s[((dy * 3 + dx) * 1 + 0) * c1 + co];
+                        }
+                    }
+                    conv[(y * 26 + x) * c1 + co] = acc * s1.f32s[co] + b1.f32s[co] >= 0.0;
+                }
+            }
+        }
+        // 2x2 max pool == OR in the bit domain: 26 -> 13
+        let mut pooled = vec![false; 13 * 13 * c1];
+        for y in 0..13 {
+            for x in 0..13 {
+                for co in 0..c1 {
+                    pooled[(y * 13 + x) * c1 + co] = conv[((2 * y) * 26 + 2 * x) * c1 + co]
+                        || conv[((2 * y) * 26 + 2 * x + 1) * c1 + co]
+                        || conv[((2 * y + 1) * 26 + 2 * x) * c1 + co]
+                        || conv[((2 * y + 1) * 26 + 2 * x + 1) * c1 + co];
+                }
+            }
+        }
+        pooled
+    }
+
+    fn infer_one(&self, img: &[f32]) -> Vec<f32> {
+        let (c1, c2) = (self.c1, self.c2);
+        let a1 = self.first_stage(img);
+        // conv2 as logic over 11x11 patch positions, 64 positions/plane.
+        let positions: Vec<(usize, usize)> = (0..11)
+            .flat_map(|y| (0..11).map(move |x| (y, x)))
+            .collect();
+        let mut out_bits = vec![false; 11 * 11 * c2];
+        let mut scratch = self.conv2_tape.make_scratch();
+        debug_assert_eq!(self.conv2_tape.n_inputs, 9 * c1);
+        let mut inputs = vec![0u64; 9 * c1];
+        let mut out_words = vec![0u64; self.conv2_tape.outputs.len()];
+        for block in positions.chunks(64) {
+            for w in inputs.iter_mut() {
+                *w = 0;
+            }
+            for (s, &(y, x)) in block.iter().enumerate() {
+                // patch bit order: (dy, dx, c) row-major — matches the
+                // python exporter and theta_k2 layout.
+                for dy in 0..3 {
+                    for dx in 0..3 {
+                        for c in 0..c1 {
+                            if a1[((y + dy) * 13 + (x + dx)) * c1 + c] {
+                                inputs[(dy * 3 + dx) * c1 + c] |= 1 << s;
+                            }
+                        }
+                    }
+                }
+            }
+            self.conv2_tape.eval_into(&inputs, &mut out_words, &mut scratch);
+            for (s, &(y, x)) in block.iter().enumerate() {
+                for j in 0..c2 {
+                    out_bits[(y * 11 + x) * c2 + j] = (out_words[j] >> s) & 1 == 1;
+                }
+            }
+        }
+        // OR-pool 11 -> 5 (last row/col dropped), then popcount FC.
+        let mut bits = BitVec::zeros(5 * 5 * c2);
+        for y in 0..5 {
+            for x in 0..5 {
+                for j in 0..c2 {
+                    let b = out_bits[((2 * y) * 11 + 2 * x) * c2 + j]
+                        || out_bits[((2 * y) * 11 + 2 * x + 1) * c2 + j]
+                        || out_bits[((2 * y + 1) * 11 + 2 * x) * c2 + j]
+                        || out_bits[((2 * y + 1) * 11 + 2 * x + 1) * c2 + j];
+                    bits.set((y * 5 + x) * c2 + j, b);
+                }
+            }
+        }
+        self.last.logits(&bits)
+    }
+}
+
+impl InferenceEngine for CnnLogicEngine {
+    fn infer_batch(&self, images: &[&[f32]]) -> Vec<Vec<f32>> {
+        images.iter().map(|img| self.infer_one(img)).collect()
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn param_bytes_per_inference(&self) -> usize {
+        let k1 = &self.net.tensors["k1"];
+        (k1.numel() + self.last.w_eff.len()) * 4
+    }
+}

@@ -1,0 +1,130 @@
+//! Serving metrics: request counts, batch sizes, latency percentiles.
+//!
+//! Latencies land in a log-scaled histogram (microseconds), so p50/p99
+//! are O(1) to read and recording is lock-free.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+const BUCKETS: usize = 64;
+
+/// Lock-free metrics registry shared by the coordinator's workers.
+pub struct Metrics {
+    requests: AtomicU64,
+    batches: AtomicU64,
+    batch_items: AtomicU64,
+    infer_us_total: AtomicU64,
+    /// log2-scaled latency histogram: bucket i counts latencies in
+    /// [2^i, 2^{i+1}) microseconds.
+    latency_hist: [AtomicU64; BUCKETS],
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            requests: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batch_items: AtomicU64::new(0),
+            infer_us_total: AtomicU64::new(0),
+            latency_hist: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    pub fn record_batch(&self, n: usize, infer_us: u64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_items.fetch_add(n as u64, Ordering::Relaxed);
+        self.infer_us_total.fetch_add(infer_us, Ordering::Relaxed);
+    }
+
+    pub fn record_latency(&self, us: u64) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        let bucket = (64 - us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
+        self.latency_hist[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches().max(1);
+        self.batch_items.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    pub fn total_infer_us(&self) -> u64 {
+        self.infer_us_total.load(Ordering::Relaxed)
+    }
+
+    /// Approximate latency percentile from the log histogram (upper bucket
+    /// bound, microseconds).
+    pub fn latency_percentile_us(&self, p: f64) -> u64 {
+        let total: u64 = self.latency_hist.iter().map(|b| b.load(Ordering::Relaxed)).sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = (total as f64 * p).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.latency_hist.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        u64::MAX
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} batches={} mean_batch={:.1} p50={}us p99={}us",
+            self.requests(),
+            self.batches(),
+            self.mean_batch_size(),
+            self.latency_percentile_us(0.50),
+            self.latency_percentile_us(0.99),
+        )
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_and_means() {
+        let m = Metrics::new();
+        m.record_batch(4, 100);
+        m.record_batch(8, 200);
+        assert_eq!(m.batches(), 2);
+        assert_eq!(m.mean_batch_size(), 6.0);
+        assert_eq!(m.total_infer_us(), 300);
+    }
+
+    #[test]
+    fn percentiles_monotone() {
+        let m = Metrics::new();
+        for us in [1u64, 2, 4, 8, 16, 1000, 1000, 1000] {
+            m.record_latency(us);
+        }
+        let p50 = m.latency_percentile_us(0.5);
+        let p99 = m.latency_percentile_us(0.99);
+        assert!(p50 <= p99);
+        assert!(p99 >= 1000);
+        assert_eq!(m.requests(), 8);
+    }
+
+    #[test]
+    fn empty_percentile_is_zero() {
+        let m = Metrics::new();
+        assert_eq!(m.latency_percentile_us(0.99), 0);
+    }
+}

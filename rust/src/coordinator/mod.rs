@@ -1,0 +1,279 @@
+//! The serving coordinator: request router, dynamic batcher, worker pool.
+//!
+//! The paper's deployment story is an inference accelerator whose hidden
+//! layers need no parameter memory.  This module is the CPU-serving
+//! equivalent: requests enter through [`Coordinator::submit`], a batcher
+//! groups up to 64 of them (one u64 bit-plane word) or flushes on a
+//! deadline, and worker threads run the [`engine::InferenceEngine`] —
+//! normally the [`engine::LogicEngine`], whose hidden layers are the
+//! synthesized tapes with weights folded into wiring.
+//!
+//! Design follows the vLLM-router shape: bounded queue (backpressure),
+//! per-request latency tracking, graceful shutdown.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+
+use anyhow::Result;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use engine::InferenceEngine;
+use metrics::Metrics;
+
+/// One inference request: a flat image and a oneshot reply channel.
+pub struct Request {
+    pub image: Vec<f32>,
+    pub submitted: Instant,
+    pub reply: SyncSender<Response>,
+    pub id: u64,
+}
+
+/// The reply: predicted class + logits + timing.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub class: usize,
+    pub logits: Vec<f32>,
+    pub queue_us: u64,
+    pub batch_size: usize,
+}
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    /// Max requests per batch (64 = one bit-plane word).
+    pub max_batch: usize,
+    /// Flush a partial batch after this long.
+    pub max_wait: Duration,
+    /// Bounded queue depth (backpressure beyond this).
+    pub queue_depth: usize,
+    /// Worker threads.
+    pub workers: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            max_batch: 64,
+            max_wait: Duration::from_millis(2),
+            queue_depth: 1024,
+            workers: 2,
+        }
+    }
+}
+
+/// A handle to a running coordinator.
+pub struct Coordinator {
+    tx: SyncSender<Request>,
+    pub metrics: Arc<Metrics>,
+    shutdown: Arc<AtomicBool>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    next_id: AtomicU64,
+    cfg: CoordinatorConfig,
+}
+
+impl Coordinator {
+    /// Start worker threads over a shared engine.
+    pub fn start(engine: Arc<dyn InferenceEngine>, cfg: CoordinatorConfig) -> Coordinator {
+        let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
+        let rx = Arc::new(Mutex::new(rx));
+        let metrics = Arc::new(Metrics::new());
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let mut workers = Vec::new();
+        for w in 0..cfg.workers.max(1) {
+            let rx = Arc::clone(&rx);
+            let engine = Arc::clone(&engine);
+            let metrics = Arc::clone(&metrics);
+            let shutdown = Arc::clone(&shutdown);
+            let cfg = cfg.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("nullanet-worker-{w}"))
+                    .spawn(move || worker_loop(rx, engine, metrics, shutdown, cfg))
+                    .expect("spawn worker"),
+            );
+        }
+        Coordinator {
+            tx,
+            metrics,
+            shutdown,
+            workers,
+            next_id: AtomicU64::new(0),
+            cfg,
+        }
+    }
+
+    /// Submit one image; returns a receiver for the response.
+    /// Blocks (backpressure) when the queue is full.
+    pub fn submit(&self, image: Vec<f32>) -> Result<Receiver<Response>> {
+        let (reply_tx, reply_rx) = sync_channel(1);
+        let req = Request {
+            image,
+            submitted: Instant::now(),
+            reply: reply_tx,
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+        };
+        self.tx.send(req).map_err(|_| anyhow::anyhow!("coordinator stopped"))?;
+        Ok(reply_rx)
+    }
+
+    /// Submit and wait (convenience).
+    pub fn infer(&self, image: Vec<f32>) -> Result<Response> {
+        let rx = self.submit(image)?;
+        Ok(rx.recv()?)
+    }
+
+    pub fn config(&self) -> &CoordinatorConfig {
+        &self.cfg
+    }
+
+    /// Stop accepting work and join the workers.
+    pub fn shutdown(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        drop(self.tx);
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    rx: Arc<Mutex<Receiver<Request>>>,
+    engine: Arc<dyn InferenceEngine>,
+    metrics: Arc<Metrics>,
+    shutdown: Arc<AtomicBool>,
+    cfg: CoordinatorConfig,
+) {
+    loop {
+        // Collect a batch: block for the first request, then drain up to
+        // max_batch or max_wait.
+        let batch = {
+            let guard = rx.lock().unwrap();
+            match batcher::collect_batch(&guard, cfg.max_batch, cfg.max_wait) {
+                Some(b) if !b.is_empty() => b,
+                Some(_) => {
+                    // idle timeout: re-check shutdown, keep polling
+                    if shutdown.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    continue;
+                }
+                None => return, // channel closed
+            }
+        };
+        let n = batch.len();
+        let t0 = Instant::now();
+        let images: Vec<&[f32]> = batch.iter().map(|r| r.image.as_slice()).collect();
+        let outputs = engine.infer_batch(&images);
+        let infer_us = t0.elapsed().as_micros() as u64;
+        metrics.record_batch(n, infer_us);
+        for (req, logits) in batch.into_iter().zip(outputs) {
+            let queue_us = req.submitted.elapsed().as_micros() as u64;
+            metrics.record_latency(queue_us);
+            let class = crate::model::argmax(&logits);
+            let _ = req.reply.send(Response {
+                id: req.id,
+                class,
+                logits,
+                queue_us,
+                batch_size: n,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// An engine that sums the image into logit 0 (deterministic echo).
+    struct EchoEngine;
+
+    impl InferenceEngine for EchoEngine {
+        fn infer_batch(&self, images: &[&[f32]]) -> Vec<Vec<f32>> {
+            images
+                .iter()
+                .map(|img| {
+                    let s: f32 = img.iter().sum();
+                    let mut l = vec![0.0; 10];
+                    l[(s as usize) % 10] = 1.0;
+                    l
+                })
+                .collect()
+        }
+        fn name(&self) -> &str {
+            "echo"
+        }
+    }
+
+    #[test]
+    fn submits_and_receives() {
+        let c = Coordinator::start(Arc::new(EchoEngine), CoordinatorConfig::default());
+        let r = c.infer(vec![3.0; 1]).unwrap();
+        assert_eq!(r.class, 3);
+        c.shutdown();
+    }
+
+    #[test]
+    fn many_concurrent_clients() {
+        let c = Arc::new(Coordinator::start(
+            Arc::new(EchoEngine),
+            CoordinatorConfig {
+                workers: 3,
+                ..Default::default()
+            },
+        ));
+        let mut handles = vec![];
+        for t in 0..8 {
+            let c = Arc::clone(&c);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..50 {
+                    let v = ((t * 50 + i) % 10) as f32;
+                    let r = c.infer(vec![v]).unwrap();
+                    assert_eq!(r.class, v as usize);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.metrics.requests(), 400);
+        let c = Arc::try_unwrap(c).ok().expect("sole owner");
+        c.shutdown();
+    }
+
+    #[test]
+    fn batching_happens_under_load() {
+        let c = Arc::new(Coordinator::start(
+            Arc::new(EchoEngine),
+            CoordinatorConfig {
+                workers: 1,
+                max_wait: Duration::from_millis(20),
+                ..Default::default()
+            },
+        ));
+        let mut rxs = vec![];
+        for i in 0..32 {
+            rxs.push(c.submit(vec![i as f32]).unwrap());
+        }
+        let mut max_batch = 0;
+        for rx in rxs {
+            let r = rx.recv().unwrap();
+            max_batch = max_batch.max(r.batch_size);
+        }
+        assert!(max_batch > 1, "expected batching, got {max_batch}");
+        let c = Arc::try_unwrap(c).ok().expect("sole owner");
+        c.shutdown();
+    }
+
+    #[test]
+    fn shutdown_joins_cleanly() {
+        let c = Coordinator::start(Arc::new(EchoEngine), CoordinatorConfig::default());
+        let _ = c.infer(vec![1.0]).unwrap();
+        c.shutdown(); // must not hang
+    }
+}

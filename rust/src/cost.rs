@@ -1,0 +1,378 @@
+//! Cost models: Tables 1–3 constants, the analytical FPGA model, and the
+//! MAC/memory accounting that regenerates Table 6 / Section 4.2.
+//!
+//! The paper measured Table 3 after Quartus place-and-route on an Intel
+//! Arria 10 GT 1150; this environment has no FPGA toolchain, so Table 3
+//! is embedded as the *calibration anchor* (see DESIGN.md §2): synthesized
+//! logic is costed by our LUT mapper and translated to ALM/latency/power
+//! through per-primitive coefficients fitted so the paper's reference
+//! designs come out right.
+
+use crate::lutmap::LutMapping;
+
+// ---------------------------------------------------------------------
+// Table 1: Haswell latencies (clock cycles)
+// ---------------------------------------------------------------------
+
+/// One row of Table 1.
+#[derive(Clone, Copy, Debug)]
+pub struct LatencyRow {
+    pub name: &'static str,
+    pub detail: &'static str,
+    pub cycles_lo: f64,
+    pub cycles_hi: f64,
+}
+
+/// Table 1: latency of 32-bit integer ops and memory accesses (Haswell).
+pub const TABLE1: &[LatencyRow] = &[
+    LatencyRow { name: "Int Add", detail: "12 ops/cycle", cycles_lo: 1.0, cycles_hi: 1.0 },
+    LatencyRow { name: "Int Multiply", detail: "4 ops/cycle", cycles_lo: 1.0, cycles_hi: 1.0 },
+    LatencyRow { name: "L1 Data Cache", detail: "32 KB", cycles_lo: 4.0, cycles_hi: 5.0 },
+    LatencyRow { name: "L2 Cache", detail: "256 KB", cycles_lo: 12.0, cycles_hi: 12.0 },
+    LatencyRow { name: "L3 Cache", detail: "8192 KB", cycles_lo: 36.0, cycles_hi: 58.0 },
+    LatencyRow { name: "DRAM", detail: "", cycles_lo: 230.0, cycles_hi: 422.0 },
+];
+
+// ---------------------------------------------------------------------
+// Table 2: 45nm energy (pJ)
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyRow {
+    pub name: &'static str,
+    pub bits: u32,
+    pub pj_lo: f64,
+    pub pj_hi: f64,
+}
+
+/// Table 2: energy of arithmetic and memory accesses in 45 nm (Horowitz).
+pub const TABLE2: &[EnergyRow] = &[
+    EnergyRow { name: "Integer Add", bits: 32, pj_lo: 0.1, pj_hi: 0.1 },
+    EnergyRow { name: "Integer Multiply", bits: 32, pj_lo: 3.1, pj_hi: 3.1 },
+    EnergyRow { name: "Float Add", bits: 16, pj_lo: 0.4, pj_hi: 0.4 },
+    EnergyRow { name: "Float Add", bits: 32, pj_lo: 0.9, pj_hi: 0.9 },
+    EnergyRow { name: "Float Multiply", bits: 16, pj_lo: 1.1, pj_hi: 1.1 },
+    EnergyRow { name: "Float Multiply", bits: 32, pj_lo: 3.7, pj_hi: 3.7 },
+    EnergyRow { name: "L1 Data Cache", bits: 64, pj_lo: 20.0, pj_hi: 20.0 },
+    EnergyRow { name: "DRAM", bits: 64, pj_lo: 1300.0, pj_hi: 2600.0 },
+];
+
+/// Energy (pJ) of moving `bytes` through DRAM, per Table 2 midpoints.
+pub fn dram_energy_pj(bytes: f64) -> f64 {
+    let per_64b = (1300.0 + 2600.0) / 2.0;
+    bytes / 8.0 * per_64b
+}
+
+/// Energy (pJ) of moving `bytes` through L1, per Table 2.
+pub fn l1_energy_pj(bytes: f64) -> f64 {
+    bytes / 8.0 * 20.0
+}
+
+// ---------------------------------------------------------------------
+// Table 3: FPGA characterization of the FP units (the calibration anchor)
+// ---------------------------------------------------------------------
+
+/// One characterized arithmetic unit (a Table 3 row).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FpUnit {
+    pub name: &'static str,
+    pub bits: u32,
+    pub alms: u32,
+    pub registers: u32,
+    pub fmax_mhz: f64,
+    pub latency_ns: f64,
+    pub power_mw: f64,
+    pub pipeline_stages: u32,
+}
+
+pub const ADD16: FpUnit = FpUnit { name: "Add", bits: 16, alms: 115, registers: 120, fmax_mhz: 393.08, latency_ns: 10.18, power_mw: 66.44, pipeline_stages: 4 };
+pub const MUL16: FpUnit = FpUnit { name: "Multiply", bits: 16, alms: 86, registers: 56, fmax_mhz: 263.85, latency_ns: 7.58, power_mw: 57.79, pipeline_stages: 2 };
+pub const MAC16: FpUnit = FpUnit { name: "MAC", bits: 16, alms: 195, registers: 191, fmax_mhz: 281.37, latency_ns: 21.32, power_mw: 68.18, pipeline_stages: 6 };
+pub const ADD32: FpUnit = FpUnit { name: "Add", bits: 32, alms: 253, registers: 247, fmax_mhz: 295.77, latency_ns: 13.52, power_mw: 81.05, pipeline_stages: 4 };
+pub const MUL32: FpUnit = FpUnit { name: "Multiply", bits: 32, alms: 302, registers: 101, fmax_mhz: 181.00, latency_ns: 11.05, power_mw: 80.77, pipeline_stages: 2 };
+pub const MAC32: FpUnit = FpUnit { name: "MAC", bits: 32, alms: 541, registers: 377, fmax_mhz: 173.01, latency_ns: 34.68, power_mw: 107.87, pipeline_stages: 6 };
+
+/// All Table 3 rows in paper order.
+pub const TABLE3: &[FpUnit] = &[ADD16, MUL16, MAC16, ADD32, MUL32, MAC32];
+
+// ---------------------------------------------------------------------
+// Analytical FPGA model for synthesized logic
+// ---------------------------------------------------------------------
+
+/// Coefficients of the analytical Arria 10 timing/power model, fitted to
+/// Table 3 (see `calibration` tests below and EXPERIMENTS.md).
+#[derive(Clone, Copy, Debug)]
+pub struct FpgaModel {
+    /// Per-level combinational delay: ALM LUT + local routing (ns).
+    pub lut_delay_ns: f64,
+    /// Fixed clock overhead per stage: global routing, setup (ns).
+    pub stage_overhead_ns: f64,
+    /// Dynamic power per ALM per MHz at default toggle rate (mW).
+    pub mw_per_alm_mhz: f64,
+    /// Static + clock-tree power floor (mW).
+    pub static_mw: f64,
+}
+
+impl Default for FpgaModel {
+    fn default() -> Self {
+        // Calibration against the paper (see EXPERIMENTS.md):
+        // * Table 5 reports the two synthesized hidden layers at
+        //   65.3 MHz (15.31 ns period) with 30.63 ns latency — i.e. two
+        //   macro stages of ~15.3 ns each.  A ~19-level 6-LUT network at
+        //   0.74 ns LUT+local-route delay plus 1.3 ns of global
+        //   routing/setup reproduces that period.
+        // * Power: 396.46 mW at 112 173 ALMs and 65.3 MHz gives
+        //   (396 - 50) / (112 173 × 65.3) ≈ 4.7e-5 mW/(ALM·MHz) over a
+        //   ~50 mW static floor, consistent with the small Table 3 units.
+        FpgaModel {
+            lut_delay_ns: 0.74,
+            stage_overhead_ns: 1.3,
+            mw_per_alm_mhz: 4.7e-5,
+            static_mw: 50.0,
+        }
+    }
+}
+
+/// Cost report for a synthesized combinational block (one macro-pipeline
+/// stage or a whole layer) — the schema of Tables 5 and 8.
+#[derive(Clone, Debug)]
+pub struct HwCost {
+    pub alms: usize,
+    pub registers: usize,
+    pub fmax_mhz: f64,
+    pub latency_ns: f64,
+    pub power_mw: f64,
+    pub lut_levels: u32,
+}
+
+impl FpgaModel {
+    /// Cost a mapped combinational block.  `io_bits` = pipeline boundary
+    /// registers (inputs + outputs of the stage), matching the paper's
+    /// register counts (Table 5: 302 bits ≈ layer I/O + control).
+    pub fn cost(&self, mapping: &LutMapping, io_bits: usize) -> HwCost {
+        let levels = mapping.depth.max(1);
+        let latency = levels as f64 * self.lut_delay_ns + self.stage_overhead_ns;
+        let fmax = 1000.0 / latency;
+        let alms = mapping.alms();
+        let power = self.static_mw + self.mw_per_alm_mhz * alms as f64 * fmax;
+        HwCost {
+            alms,
+            registers: io_bits,
+            fmax_mhz: fmax,
+            latency_ns: latency,
+            power_mw: power,
+            lut_levels: levels,
+        }
+    }
+
+    /// Combined cost of sequential macro-pipeline stages: latency adds,
+    /// fmax is the slowest stage, ALMs/registers/power add.
+    pub fn cost_pipeline(&self, stages: &[HwCost]) -> HwCost {
+        let alms = stages.iter().map(|s| s.alms).sum();
+        let registers = stages.iter().map(|s| s.registers).sum();
+        let latency_ns = stages.iter().map(|s| s.latency_ns).sum();
+        let fmax_mhz = stages
+            .iter()
+            .map(|s| s.fmax_mhz)
+            .fold(f64::INFINITY, f64::min);
+        let power_mw = self.static_mw
+            + stages
+                .iter()
+                .map(|s| s.power_mw - self.static_mw)
+                .sum::<f64>();
+        let lut_levels = stages.iter().map(|s| s.lut_levels).sum();
+        HwCost { alms, registers, fmax_mhz, latency_ns, power_mw, lut_levels }
+    }
+}
+
+// ---------------------------------------------------------------------
+// MAC & memory accounting (Table 6, Section 4.2 cost arithmetic)
+// ---------------------------------------------------------------------
+
+/// How a layer is realized, for accounting purposes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LayerRealization {
+    /// MACs with full-precision activations: 4 accesses per MAC
+    /// (activation + weight + partial in + partial out), `bytes_per_word`
+    /// each (4 for fp32, 2 for fp16).
+    MacFloat { bytes_per_word: usize },
+    /// MACs whose *input activations* are single bits (the paper's last
+    /// layer): weight + 2 partials per MAC, activations 1 bit each.
+    MacBinaryInput { bytes_per_word: usize },
+    /// Synthesized logic: no parameter memory at all; traffic = I/O bits.
+    Logic,
+}
+
+/// Accounting entry for one layer (a row of Table 6).
+#[derive(Clone, Debug)]
+pub struct LayerCost {
+    pub name: String,
+    /// MAC count, or MAC-equivalents (ALMs / MAC32-ALMs) for logic layers.
+    pub macs: f64,
+    pub memory_bytes: f64,
+}
+
+/// MACs + memory for a dense layer `n_in -> n_out`.
+pub fn dense_layer_cost(
+    name: &str,
+    n_in: usize,
+    n_out: usize,
+    real: LayerRealization,
+) -> LayerCost {
+    let macs = (n_in * n_out) as f64;
+    let memory_bytes = match real {
+        LayerRealization::MacFloat { bytes_per_word } => macs * 4.0 * bytes_per_word as f64,
+        LayerRealization::MacBinaryInput { bytes_per_word } => {
+            // weight read + partial read + partial write per MAC, plus a
+            // 1-bit activation read per MAC (the paper's FC4: 1000 MACs
+            // -> 12 000 B + 125 B = 12 125 B).
+            macs * 3.0 * bytes_per_word as f64 + macs / 8.0
+        }
+        LayerRealization::Logic => (n_in + n_out) as f64 / 8.0,
+    };
+    LayerCost { name: name.into(), macs, memory_bytes }
+}
+
+/// MACs + memory for a conv layer: `positions` patch applications of a
+/// `k_in -> c_out` dot product.
+pub fn conv_layer_cost(
+    name: &str,
+    k_in: usize,
+    c_out: usize,
+    positions: usize,
+    real: LayerRealization,
+) -> LayerCost {
+    let per_patch = (k_in * c_out) as f64;
+    let macs = per_patch * positions as f64;
+    let memory_bytes = match real {
+        LayerRealization::MacFloat { bytes_per_word } => macs * 4.0 * bytes_per_word as f64,
+        LayerRealization::MacBinaryInput { bytes_per_word } => {
+            macs * 3.0 * bytes_per_word as f64 + macs / 8.0
+        }
+        LayerRealization::Logic => positions as f64 * (k_in + c_out) as f64 / 8.0,
+    };
+    LayerCost { name: name.into(), macs, memory_bytes }
+}
+
+/// MAC-equivalents of a synthesized block: ALMs / ALMs-per-MAC32
+/// (the paper's Table 6 "FC2 + FC3 = 207 MACs" arithmetic).
+pub fn logic_mac_equivalents(alms: usize) -> f64 {
+    alms as f64 / MAC32.alms as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_table2_shapes() {
+        assert_eq!(TABLE1.len(), 6);
+        assert_eq!(TABLE2.len(), 8);
+        // DRAM is 4-400x slower than int ops (the paper's motivation).
+        assert!(TABLE1[5].cycles_hi / TABLE1[0].cycles_hi >= 400.0);
+    }
+
+    #[test]
+    fn table3_rows_match_paper() {
+        assert_eq!(MAC32.alms, 541);
+        assert_eq!(MAC16.alms, 195);
+        assert_eq!(ADD32.registers, 247);
+        assert!((MUL32.fmax_mhz - 181.0).abs() < 1e-9);
+        assert!((MAC32.latency_ns - 34.68).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fp32_mac_dominates_fp16() {
+        // Paper: "207x that of a 32-bit MAC and 575x that of a 16-bit MAC"
+        // requires MAC32/MAC16 ALM ratio ~2.77.
+        let ratio = MAC32.alms as f64 / MAC16.alms as f64;
+        assert!((ratio - 2.774).abs() < 0.01);
+    }
+
+    #[test]
+    fn table6_fc1_reproduction() {
+        // FC1 of Net 1.2: 784 x 100 = 78 400 MACs, 1 254 400 bytes.
+        let c = dense_layer_cost("FC1", 784, 100, LayerRealization::MacFloat { bytes_per_word: 4 });
+        assert_eq!(c.macs, 78_400.0);
+        assert_eq!(c.memory_bytes, 1_254_400.0);
+    }
+
+    #[test]
+    fn table6_fc4_binary_input_reproduction() {
+        // FC4 of Net 1.1.b: 100 x 10 = 1000 MACs; paper reports 12 125 B:
+        // 1000 * 12 (weight+2 partials at 4 B) + 1000 bits / 8 = 12 125.
+        let c = dense_layer_cost("FC4", 100, 10, LayerRealization::MacBinaryInput { bytes_per_word: 4 });
+        assert_eq!(c.macs, 1000.0);
+        assert!((c.memory_bytes - 12_125.0).abs() < 1.0, "{}", c.memory_bytes);
+    }
+
+    #[test]
+    fn table6_logic_layer_io_bits() {
+        // FC2 or FC3 as logic: 100 in + 100 out = 200 bits = 25 B each;
+        // the paper's "400 bits / 50 B" is the two-layer total.
+        let c = dense_layer_cost("FC2", 100, 100, LayerRealization::Logic);
+        assert_eq!(c.memory_bytes, 25.0);
+    }
+
+    #[test]
+    fn net22_totals_match_paper() {
+        // Net 2.2: conv1 60 840 + conv2 217 800 + fc 5 000 = 283 640 MACs,
+        // 4.33 MB of memory traffic.
+        let conv1 = conv_layer_cost("conv1", 9, 10, 26 * 26, LayerRealization::MacFloat { bytes_per_word: 4 });
+        let conv2 = conv_layer_cost("conv2", 90, 20, 11 * 11, LayerRealization::MacFloat { bytes_per_word: 4 });
+        let fc = dense_layer_cost("fc", 500, 10, LayerRealization::MacFloat { bytes_per_word: 4 });
+        let macs = conv1.macs + conv2.macs + fc.macs;
+        let mem = conv1.memory_bytes + conv2.memory_bytes + fc.memory_bytes;
+        assert_eq!(macs, 283_640.0);
+        let mb = mem / (1024.0 * 1024.0);
+        assert!((mb - 4.33).abs() < 0.01, "{mb}");
+    }
+
+    #[test]
+    fn mac_equivalents_arithmetic() {
+        // Paper: 112 173 ALMs / 541 = 207 MAC-equivalents.
+        assert_eq!(logic_mac_equivalents(112_173).round(), 207.0);
+    }
+
+    #[test]
+    fn fpga_model_reproduces_table5_scale() {
+        // The paper's synthesized FC2+FC3: 65.3 MHz (15.31 ns period),
+        // 30.63 ns latency (2 macro stages), 396 mW at 112 173 ALMs.
+        // Model one ~19-level stage of half the ALMs, then combine two.
+        let model = FpgaModel::default();
+        let mapping = crate::lutmap::LutMapping {
+            luts: vec![],
+            depth: 19,
+            input_histogram: {
+                let mut h = vec![0usize; 7];
+                h[6] = 56_086; // one of the two layers
+                h
+            },
+        };
+        let stage = model.cost(&mapping, 151);
+        assert!((stage.latency_ns - 15.31).abs() < 1.0, "{}", stage.latency_ns);
+        assert!(stage.fmax_mhz > 55.0 && stage.fmax_mhz < 75.0, "{}", stage.fmax_mhz);
+        let both = model.cost_pipeline(&[stage.clone(), stage]);
+        assert!((both.latency_ns - 30.63).abs() < 2.0, "{}", both.latency_ns);
+        assert_eq!(both.alms, 112_172);
+        assert!(both.power_mw > 330.0 && both.power_mw < 460.0, "{}", both.power_mw);
+    }
+
+    #[test]
+    fn pipeline_cost_combines() {
+        let model = FpgaModel::default();
+        let s = HwCost { alms: 100, registers: 50, fmax_mhz: 100.0, latency_ns: 10.0, power_mw: 60.0, lut_levels: 5 };
+        let both = model.cost_pipeline(&[s.clone(), s.clone()]);
+        assert_eq!(both.alms, 200);
+        assert_eq!(both.registers, 100);
+        assert_eq!(both.latency_ns, 20.0);
+        assert_eq!(both.fmax_mhz, 100.0);
+        assert!((both.power_mw - 70.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn energy_helpers() {
+        assert!(dram_energy_pj(8.0) >= 1300.0);
+        assert_eq!(l1_energy_pj(8.0), 20.0);
+    }
+}

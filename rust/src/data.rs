@@ -1,0 +1,101 @@
+//! SynthDigits dataset loader (the python exporter's NDIG format).
+//!
+//! Layout: magic "NDIG" | u32 n | u32 dim | f32 x[n*dim] | u8 y[n],
+//! little-endian throughout (python/compile/data.py `save_dataset`).
+
+use anyhow::{bail, Context, Result};
+use std::io::Read;
+use std::path::Path;
+
+/// An in-memory image classification dataset.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub n: usize,
+    pub dim: usize,
+    /// Row-major images, n × dim, in [0, 1].
+    pub x: Vec<f32>,
+    pub y: Vec<u8>,
+}
+
+impl Dataset {
+    pub fn load(path: &Path) -> Result<Dataset> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("open dataset {}", path.display()))?;
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != b"NDIG" {
+            bail!("bad dataset magic in {}", path.display());
+        }
+        let mut hdr = [0u8; 8];
+        f.read_exact(&mut hdr)?;
+        let n = u32::from_le_bytes(hdr[0..4].try_into().unwrap()) as usize;
+        let dim = u32::from_le_bytes(hdr[4..8].try_into().unwrap()) as usize;
+        let mut xbytes = vec![0u8; n * dim * 4];
+        f.read_exact(&mut xbytes)?;
+        let x: Vec<f32> = xbytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        let mut y = vec![0u8; n];
+        f.read_exact(&mut y)?;
+        Ok(Dataset { n, dim, x, y })
+    }
+
+    /// Image `i` as a slice.
+    pub fn image(&self, i: usize) -> &[f32] {
+        &self.x[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// First `k` samples as a shallow view dataset (for quick tests).
+    pub fn take(&self, k: usize) -> Dataset {
+        let k = k.min(self.n);
+        Dataset {
+            n: k,
+            dim: self.dim,
+            x: self.x[..k * self.dim].to_vec(),
+            y: self.y[..k].to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_tiny(path: &Path) {
+        let mut f = std::fs::File::create(path).unwrap();
+        f.write_all(b"NDIG").unwrap();
+        f.write_all(&2u32.to_le_bytes()).unwrap();
+        f.write_all(&3u32.to_le_bytes()).unwrap();
+        for v in [0.0f32, 0.5, 1.0, 0.25, 0.75, 0.125] {
+            f.write_all(&v.to_le_bytes()).unwrap();
+        }
+        f.write_all(&[7u8, 3u8]).unwrap();
+    }
+
+    #[test]
+    fn load_roundtrip() {
+        let dir = std::env::temp_dir().join("nullanet_data_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("tiny.bin");
+        write_tiny(&p);
+        let d = Dataset::load(&p).unwrap();
+        assert_eq!((d.n, d.dim), (2, 3));
+        assert_eq!(d.image(0), &[0.0, 0.5, 1.0]);
+        assert_eq!(d.image(1), &[0.25, 0.75, 0.125]);
+        assert_eq!(d.y, vec![7, 3]);
+        let t = d.take(1);
+        assert_eq!(t.n, 1);
+        assert_eq!(t.image(0), &[0.0, 0.5, 1.0]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("nullanet_data_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.bin");
+        std::fs::write(&p, b"XXXX0000").unwrap();
+        assert!(Dataset::load(&p).is_err());
+    }
+}

@@ -1,0 +1,161 @@
+//! Realization based on input enumeration (Section 3.2.1).
+//!
+//! For a neuron with few inputs, enumerate all 2^n input combinations,
+//! evaluate Eq. 1 (the McCulloch–Pitts threshold function), and minimize
+//! the resulting *completely specified* truth table.  Infeasible beyond
+//! ~20 inputs — exactly the limitation the paper notes — at which point
+//! the ISF route (isf.rs + Algorithm 2) takes over.
+
+use crate::logic::{Cover, TruthTable};
+
+/// A McCulloch–Pitts neuron: fires iff Σ bits_i · w_i ≥ θ (optionally
+/// XOR-flipped, to absorb negative batch-norm scales).
+#[derive(Clone, Debug)]
+pub struct McCullochPitts {
+    pub w: Vec<f32>,
+    pub theta: f32,
+    pub flip: bool,
+}
+
+impl McCullochPitts {
+    pub fn new(w: Vec<f32>, theta: f32) -> Self {
+        McCullochPitts { w, theta, flip: false }
+    }
+
+    pub fn n_inputs(&self) -> usize {
+        self.w.len()
+    }
+
+    pub fn eval_minterm(&self, m: usize) -> bool {
+        let s: f32 = self
+            .w
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| (m >> i) & 1 == 1)
+            .map(|(_, &w)| w)
+            .sum();
+        (s >= self.theta) ^ self.flip
+    }
+
+    /// Enumerate the full truth table (n ≤ TruthTable::MAX_VARS).
+    pub fn truth_table(&self) -> TruthTable {
+        TruthTable::from_fn(self.n_inputs(), |m| self.eval_minterm(m))
+    }
+
+    /// Enumerate + two-level minimize: the Fig. 2 flow (truth table →
+    /// K-map/espresso simplification → SoP).
+    pub fn to_sop(&self) -> Cover {
+        let tt = self.truth_table();
+        tt.isop(&tt)
+    }
+}
+
+/// Fig. 1's gate library expressed as McCulloch–Pitts neurons.
+pub mod gates {
+    use super::McCullochPitts;
+
+    /// AND(a,b): w = [1,1], θ = 2.
+    pub fn and() -> McCullochPitts {
+        McCullochPitts::new(vec![1.0, 1.0], 2.0)
+    }
+
+    /// OR(a,b): w = [1,1], θ = 1.
+    pub fn or() -> McCullochPitts {
+        McCullochPitts::new(vec![1.0, 1.0], 1.0)
+    }
+
+    /// NOT(a): w = [-1], θ = 0.
+    pub fn not() -> McCullochPitts {
+        McCullochPitts::new(vec![-1.0], 0.0)
+    }
+}
+
+/// XOR needs two McCulloch–Pitts layers (Fig. 1d): here as the standard
+/// 2-neuron hidden + 1 output composition, evaluated for reference.
+pub fn xor_two_layer(a: bool, b: bool) -> bool {
+    // h1 = a OR b ; h2 = NOT(a AND B)  => out = h1 AND h2
+    let h1 = gates::or().eval_minterm((a as usize) | ((b as usize) << 1));
+    let h2 = !gates::and().eval_minterm((a as usize) | ((b as usize) << 1));
+    h1 && h2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::TruthTable;
+
+    #[test]
+    fn fig1_gates() {
+        let and = gates::and();
+        assert_eq!(
+            (0..4).map(|m| and.eval_minterm(m)).collect::<Vec<_>>(),
+            vec![false, false, false, true]
+        );
+        let or = gates::or();
+        assert_eq!(
+            (0..4).map(|m| or.eval_minterm(m)).collect::<Vec<_>>(),
+            vec![false, true, true, true]
+        );
+        let not = gates::not();
+        assert_eq!(
+            (0..2).map(|m| not.eval_minterm(m)).collect::<Vec<_>>(),
+            vec![true, false]
+        );
+    }
+
+    #[test]
+    fn xor_composition() {
+        assert!(!xor_two_layer(false, false));
+        assert!(xor_two_layer(true, false));
+        assert!(xor_two_layer(false, true));
+        assert!(!xor_two_layer(true, true));
+    }
+
+    #[test]
+    fn sop_of_and_gate_is_single_cube() {
+        let cov = gates::and().to_sop();
+        assert_eq!(cov.len(), 1);
+        assert_eq!(cov.n_literals(), 2);
+    }
+
+    #[test]
+    fn fig2_style_neuron() {
+        // A 3-input neuron: w = [2, -1, 1], θ = 1.  Enumerate, minimize,
+        // and check the SoP matches the enumeration everywhere.
+        let n = McCullochPitts::new(vec![2.0, -1.0, 1.0], 1.0);
+        let tt = n.truth_table();
+        let sop = n.to_sop();
+        assert_eq!(TruthTable::from_cover(&sop), tt);
+        // The minimized cover must not be larger than the ON-set.
+        assert!(sop.len() <= tt.count_ones());
+    }
+
+    #[test]
+    fn majority_neuron_minimizes_to_three_cubes() {
+        let n = McCullochPitts::new(vec![1.0, 1.0, 1.0], 2.0);
+        let sop = n.to_sop();
+        assert_eq!(sop.len(), 3);
+        assert_eq!(sop.n_literals(), 6);
+    }
+
+    #[test]
+    fn flip_inverts_function() {
+        let mut n = McCullochPitts::new(vec![1.0, 1.0], 2.0);
+        n.flip = true;
+        assert_eq!(
+            (0..4).map(|m| n.eval_minterm(m)).collect::<Vec<_>>(),
+            vec![true, true, true, false] // NAND
+        );
+    }
+
+    #[test]
+    fn constant_neurons() {
+        // θ below any reachable sum -> tautology; above -> contradiction.
+        let t = McCullochPitts::new(vec![1.0, 1.0], -10.0);
+        assert!(t.truth_table().is_ones());
+        assert_eq!(t.to_sop().n_literals(), 0);
+        let f = McCullochPitts::new(vec![1.0, 1.0], 10.0);
+        assert!(f.truth_table().is_zero());
+        assert!(f.to_sop().is_empty());
+    }
+}

@@ -1,0 +1,283 @@
+//! ISF extraction from exported training activations (Section 3.2.2).
+//!
+//! Reads the NACT file the python exporter writes (bit-packed per-layer
+//! input/output patterns over the training set), deduplicates input
+//! patterns, resolves conflicts (identical input pattern observed with
+//! different outputs — possible when the sampled patterns alias) by
+//! majority vote, and produces one [`IsfFunction`] per neuron, all
+//! sharing a single [`PatternSet`].
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::io::Read;
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::logic::{IsfFunction, PatternSet};
+use crate::util::{div_ceil, BitVec};
+
+/// One binarized layer's raw observation table.
+#[derive(Clone, Debug)]
+pub struct LayerObservations {
+    pub name: String,
+    pub n_in: usize,
+    pub n_out: usize,
+    /// Packed rows (LSB-first), n_samples × ceil(n_in/8).
+    pub inputs: Vec<u8>,
+    pub outputs: Vec<u8>,
+    pub n_samples: usize,
+}
+
+/// Load every layer record from an activations.bin (NACT) file.
+pub fn load_observations(path: &Path) -> Result<Vec<LayerObservations>> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("open activations {}", path.display()))?;
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != b"NACT" {
+        bail!("bad NACT magic");
+    }
+    let mut u32buf = [0u8; 4];
+    f.read_exact(&mut u32buf)?;
+    let n_layers = u32::from_le_bytes(u32buf) as usize;
+    let mut layers = Vec::with_capacity(n_layers);
+    for _ in 0..n_layers {
+        f.read_exact(&mut u32buf)?;
+        let name_len = u32::from_le_bytes(u32buf) as usize;
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        let mut hdr = [0u8; 12];
+        f.read_exact(&mut hdr)?;
+        let n_in = u32::from_le_bytes(hdr[0..4].try_into().unwrap()) as usize;
+        let n_out = u32::from_le_bytes(hdr[4..8].try_into().unwrap()) as usize;
+        let n_samples = u32::from_le_bytes(hdr[8..12].try_into().unwrap()) as usize;
+        let in_bytes = n_samples * div_ceil(n_in, 8);
+        let out_bytes = n_samples * div_ceil(n_out, 8);
+        let mut inputs = vec![0u8; in_bytes];
+        f.read_exact(&mut inputs)?;
+        let mut outputs = vec![0u8; out_bytes];
+        f.read_exact(&mut outputs)?;
+        layers.push(LayerObservations {
+            name: String::from_utf8_lossy(&name).into_owned(),
+            n_in,
+            n_out,
+            inputs,
+            outputs,
+            n_samples,
+        });
+    }
+    Ok(layers)
+}
+
+/// The extracted, deduplicated ISF for one layer: a shared pattern set
+/// plus per-neuron ON/OFF index lists.
+#[derive(Clone, Debug)]
+pub struct LayerIsf {
+    pub name: String,
+    pub patterns: Arc<PatternSet>,
+    /// Per neuron: (on indices, off indices).
+    pub neurons: Vec<(Vec<u32>, Vec<u32>)>,
+    /// Distinct input patterns observed.
+    pub n_distinct: usize,
+    /// Input patterns observed with conflicting outputs (majority-voted).
+    pub n_conflicts: usize,
+}
+
+impl LayerIsf {
+    pub fn neuron_fn(&self, j: usize) -> IsfFunction {
+        let (on, off) = &self.neurons[j];
+        IsfFunction::new(self.patterns.clone(), on.clone(), off.clone())
+    }
+
+    pub fn n_out(&self) -> usize {
+        self.neurons.len()
+    }
+}
+
+/// Configuration for extraction.
+#[derive(Clone, Debug)]
+pub struct IsfConfig {
+    /// Cap on distinct patterns (0 = unlimited).  Patterns beyond the cap
+    /// are dropped (they would be DC for every neuron).
+    pub max_patterns: usize,
+}
+
+impl Default for IsfConfig {
+    fn default() -> Self {
+        IsfConfig { max_patterns: 0 }
+    }
+}
+
+/// Deduplicate observations into per-neuron ISFs.
+pub fn extract(obs: &LayerObservations, cfg: &IsfConfig) -> LayerIsf {
+    let in_stride = div_ceil(obs.n_in, 8);
+    let out_stride = div_ceil(obs.n_out, 8);
+
+    // Dedup input patterns; accumulate per-output-bit vote counts.
+    let mut index: HashMap<&[u8], usize> = HashMap::new();
+    let mut rows: Vec<&[u8]> = Vec::new();
+    // votes[p][j] = (ones, total)
+    let mut votes: Vec<Vec<(u32, u32)>> = Vec::new();
+    for s in 0..obs.n_samples {
+        let irow = &obs.inputs[s * in_stride..(s + 1) * in_stride];
+        let orow = &obs.outputs[s * out_stride..(s + 1) * out_stride];
+        let idx = *index.entry(irow).or_insert_with(|| {
+            rows.push(irow);
+            votes.push(vec![(0, 0); obs.n_out]);
+            rows.len() - 1
+        });
+        if cfg.max_patterns != 0 && idx >= cfg.max_patterns {
+            continue;
+        }
+        for j in 0..obs.n_out {
+            let bit = (orow[j / 8] >> (j % 8)) & 1;
+            let v = &mut votes[idx][j];
+            v.0 += bit as u32;
+            v.1 += 1;
+        }
+    }
+
+    let keep = if cfg.max_patterns == 0 {
+        rows.len()
+    } else {
+        rows.len().min(cfg.max_patterns)
+    };
+
+    let mut ps = PatternSet::new(obs.n_in);
+    for row in rows.iter().take(keep) {
+        ps.push(&BitVec::from_packed_bytes(row, obs.n_in));
+    }
+
+    let mut n_conflicts = 0usize;
+    let mut neurons = vec![(Vec::new(), Vec::new()); obs.n_out];
+    for (p, vote_row) in votes.iter().take(keep).enumerate() {
+        let mut conflicted = false;
+        for (j, &(ones, total)) in vote_row.iter().enumerate() {
+            if ones != 0 && ones != total {
+                conflicted = true;
+            }
+            // Majority vote; ties go to ON (sign(0) := +1 convention).
+            if ones * 2 >= total {
+                neurons[j].0.push(p as u32);
+            } else {
+                neurons[j].1.push(p as u32);
+            }
+        }
+        if conflicted {
+            n_conflicts += 1;
+        }
+    }
+
+    LayerIsf {
+        name: obs.name.clone(),
+        patterns: Arc::new(ps),
+        neurons,
+        n_distinct: rows.len(),
+        n_conflicts,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(n_in: usize, n_out: usize, samples: &[(&[u8], &[u8])]) -> LayerObservations {
+        LayerObservations {
+            name: "t".into(),
+            n_in,
+            n_out,
+            inputs: samples.iter().flat_map(|(i, _)| i.iter().copied()).collect(),
+            outputs: samples.iter().flat_map(|(_, o)| o.iter().copied()).collect(),
+            n_samples: samples.len(),
+        }
+    }
+
+    #[test]
+    fn dedup_and_split() {
+        // 3 inputs, 2 outputs; patterns: 0b101 -> out 0b01, 0b010 -> 0b10,
+        // with 0b101 repeated.
+        let o = obs(
+            3,
+            2,
+            &[(&[0b101], &[0b01]), (&[0b010], &[0b10]), (&[0b101], &[0b01])],
+        );
+        let isf = extract(&o, &IsfConfig::default());
+        assert_eq!(isf.n_distinct, 2);
+        assert_eq!(isf.n_conflicts, 0);
+        // neuron 0: ON at pattern 0 (0b101), OFF at pattern 1.
+        assert_eq!(isf.neurons[0].0, vec![0]);
+        assert_eq!(isf.neurons[0].1, vec![1]);
+        assert_eq!(isf.neurons[1].0, vec![1]);
+        assert_eq!(isf.neurons[1].1, vec![0]);
+    }
+
+    #[test]
+    fn conflict_majority_vote() {
+        // Same input seen 3x: out bit 1,1,0 -> majority ON.
+        let o = obs(3, 1, &[(&[0b1], &[1]), (&[0b1], &[1]), (&[0b1], &[0])]);
+        let isf = extract(&o, &IsfConfig::default());
+        assert_eq!(isf.n_distinct, 1);
+        assert_eq!(isf.n_conflicts, 1);
+        assert_eq!(isf.neurons[0].0, vec![0]);
+        assert!(isf.neurons[0].1.is_empty());
+    }
+
+    #[test]
+    fn tie_goes_on() {
+        let o = obs(3, 1, &[(&[0b1], &[1]), (&[0b1], &[0])]);
+        let isf = extract(&o, &IsfConfig::default());
+        assert_eq!(isf.neurons[0].0, vec![0]);
+    }
+
+    #[test]
+    fn max_patterns_cap() {
+        let o = obs(
+            3,
+            1,
+            &[(&[0b001], &[1]), (&[0b010], &[0]), (&[0b100], &[1])],
+        );
+        let isf = extract(&o, &IsfConfig { max_patterns: 2 });
+        assert_eq!(isf.patterns.len(), 2);
+        let total: usize = isf.neurons[0].0.len() + isf.neurons[0].1.len();
+        assert_eq!(total, 2);
+    }
+
+    #[test]
+    fn wide_patterns_roundtrip() {
+        // 100-bit patterns exercise multi-word rows.
+        let mut in_row = vec![0u8; 13];
+        in_row[0] = 1;
+        in_row[12] = 0x08; // bit 99
+        let o = obs(100, 1, &[(&in_row, &[1])]);
+        let isf = extract(&o, &IsfConfig::default());
+        let p = isf.patterns.row_bitvec(0);
+        assert!(p.get(0) && p.get(99));
+        assert_eq!(p.count_ones(), 2);
+    }
+
+    #[test]
+    fn nact_file_roundtrip() {
+        let dir = std::env::temp_dir().join("nullanet_isf_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("act.bin");
+        // hand-written NACT: 1 layer "layer2", 5 in, 3 out, 2 samples
+        let mut buf: Vec<u8> = b"NACT".to_vec();
+        buf.extend(1u32.to_le_bytes());
+        buf.extend(6u32.to_le_bytes());
+        buf.extend(b"layer2");
+        buf.extend(5u32.to_le_bytes());
+        buf.extend(3u32.to_le_bytes());
+        buf.extend(2u32.to_le_bytes());
+        buf.extend([0b10101, 0b00010]); // inputs
+        buf.extend([0b011, 0b100]); // outputs
+        std::fs::write(&p, &buf).unwrap();
+        let layers = load_observations(&p).unwrap();
+        assert_eq!(layers.len(), 1);
+        let l = &layers[0];
+        assert_eq!((l.n_in, l.n_out, l.n_samples), (5, 3, 2));
+        let isf = extract(l, &IsfConfig::default());
+        assert_eq!(isf.n_distinct, 2);
+        assert_eq!(isf.neurons[0].0, vec![0]); // out bit0 of sample0 = 1
+        assert_eq!(isf.neurons[2].0, vec![1]);
+    }
+}

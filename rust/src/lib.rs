@@ -1,0 +1,64 @@
+//! # NullaNet
+//!
+//! A reproduction of *NullaNet: Training Deep Neural Networks for
+//! Reduced-Memory-Access Inference* (Nazemi, Pasandi, Pedram, 2018) as a
+//! three-layer Rust + JAX + Pallas system.
+//!
+//! The Python side (build-time only, `python/`) trains networks with binary
+//! activations (Algorithm 1, straight-through estimator) and AOT-exports
+//! HLO text plus raw weight/activation artifacts.  This crate is everything
+//! after that: the Boolean realization flow of Section 3.2 (ISF extraction,
+//! Espresso-style two-level minimization, ABC-style multi-level synthesis,
+//! 6-LUT mapping, FPGA cost modeling) and the zero-parameter-memory
+//! inference engine that serves the synthesized logic (bit-parallel netlist
+//! evaluation behind a dynamic batcher), with the first/last layers running
+//! through PJRT-compiled XLA artifacts.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! * [`logic`] — cube/cover algebra + the Espresso-style minimizer
+//! * [`enumerate`] — Section 3.2.1 input-enumeration realization
+//! * [`aig`] — and-inverter graph with rewrite/balance/refactor
+//! * [`lutmap`] — priority-cut 6-LUT technology mapping
+//! * [`netlist`] — linear AIG "tape" + 64-way bit-parallel simulator
+//! * [`isf`] — ON/OFF/DC-set extraction from training activations
+//! * [`synth`] — Algorithm 2 (OptimizeNeuron / OptimizeLayer / OptimizeNetwork)
+//! * [`pipeline`] — macro/micro pipelining (Section 3.2.2, OptimizeNetwork)
+//! * [`arith`] — behavioural IEEE-754 FP16/FP32 add/mul/MAC (the baselines)
+//! * [`cost`] — Tables 1–3 models + MAC/memory accounting (Table 6)
+//! * [`model`] — artifact loading + reference forward passes (the oracle)
+//! * [`data`] — SynthDigits dataset loader
+//! * [`coordinator`] — request router + dynamic batcher + worker pool
+//! * [`runtime`] — PJRT client wrapper (HLO text → compiled executable)
+//! * [`server`] — TCP JSON-lines front-end
+//! * [`cli`], [`jsonio`], [`logging`], [`bench_util`], [`prop`] — offline
+//!   substrates (no crates.io access in this environment)
+
+pub mod aig;
+pub mod arith;
+pub mod bench_util;
+pub mod cli;
+pub mod coordinator;
+pub mod cost;
+pub mod data;
+pub mod enumerate;
+pub mod isf;
+pub mod jsonio;
+pub mod logging;
+pub mod logic;
+pub mod lutmap;
+pub mod model;
+pub mod netlist;
+pub mod pipeline;
+pub mod prop;
+pub mod runtime;
+pub mod server;
+pub mod synth;
+pub mod util;
+
+/// Default location of the AOT artifacts, overridable with `NULLANET_ARTIFACTS`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("NULLANET_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

@@ -1,0 +1,69 @@
+//! Minimal leveled logger to stderr (the `log` crate facade without the
+//! external ecosystem).  Level from NULLANET_LOG (error|warn|info|debug).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[derive(Clone, Copy, PartialEq, PartialOrd, Debug)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(2); // Info
+
+pub fn init_from_env() {
+    let lvl = match std::env::var("NULLANET_LOG").as_deref() {
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        _ => Level::Info,
+    };
+    set_level(lvl);
+}
+
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(l: Level) -> bool {
+    (l as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(l: Level, args: std::fmt::Arguments<'_>) {
+    if enabled(l) {
+        eprintln!("[{:5}] {}", format!("{l:?}").to_lowercase(), args);
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($t:tt)*) => { $crate::logging::log($crate::logging::Level::Info, format_args!($($t)*)) };
+}
+
+#[macro_export]
+macro_rules! warnlog {
+    ($($t:tt)*) => { $crate::logging::log($crate::logging::Level::Warn, format_args!($($t)*)) };
+}
+
+#[macro_export]
+macro_rules! debuglog {
+    ($($t:tt)*) => { $crate::logging::log($crate::logging::Level::Debug, format_args!($($t)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+    }
+}

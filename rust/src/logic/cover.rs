@@ -1,0 +1,239 @@
+//! A cover: a disjunction (set) of cubes — one neuron's SoP realization.
+
+use super::Cube;
+use crate::util::BitVec;
+
+/// A sum-of-products cover over a fixed variable universe.
+#[derive(Clone, Debug, Default)]
+pub struct Cover {
+    pub cubes: Vec<Cube>,
+    pub n_vars: usize,
+}
+
+impl Cover {
+    pub fn new(n_vars: usize) -> Self {
+        Cover {
+            cubes: Vec::new(),
+            n_vars,
+        }
+    }
+
+    pub fn from_cubes(n_vars: usize, cubes: Vec<Cube>) -> Self {
+        debug_assert!(cubes.iter().all(|c| c.n_vars() == n_vars));
+        Cover { cubes, n_vars }
+    }
+
+    pub fn len(&self) -> usize {
+        self.cubes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cubes.is_empty()
+    }
+
+    /// Total literal count (the paper's secondary minimization objective).
+    pub fn n_literals(&self) -> usize {
+        self.cubes.iter().map(|c| c.n_literals()).sum()
+    }
+
+    /// Does any cube cover the assignment `p`?
+    pub fn covers(&self, p: &BitVec) -> bool {
+        self.cubes.iter().any(|c| c.covers(p))
+    }
+
+    /// Remove cubes contained in another cube of the cover (single-cube
+    /// containment; cheap and always sound).
+    pub fn remove_contained(&mut self) {
+        let mut keep = vec![true; self.cubes.len()];
+        for i in 0..self.cubes.len() {
+            if !keep[i] {
+                continue;
+            }
+            for j in 0..self.cubes.len() {
+                if i == j || !keep[j] {
+                    continue;
+                }
+                if self.cubes[i].contains(&self.cubes[j]) {
+                    keep[j] = false;
+                }
+            }
+        }
+        let mut it = keep.iter();
+        self.cubes.retain(|_| *it.next().unwrap());
+    }
+
+    /// Evaluate the cover on a full assignment (same as `covers`).
+    pub fn eval(&self, p: &BitVec) -> bool {
+        self.covers(p)
+    }
+
+    /// PLA-style dump (one line per cube), for debugging and tests.
+    pub fn to_pla(&self) -> String {
+        let mut s = String::new();
+        for c in &self.cubes {
+            s.push_str(&c.to_pla());
+            s.push('\n');
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bv(s: &str) -> BitVec {
+        BitVec::from_bools(s.chars().map(|c| c == '1'))
+    }
+
+    #[test]
+    fn covers_any_cube() {
+        let cov = Cover::from_cubes(
+            3,
+            vec![Cube::from_pla("1--"), Cube::from_pla("-01")],
+        );
+        assert!(cov.covers(&bv("100")));
+        assert!(cov.covers(&bv("001")));
+        assert!(!cov.covers(&bv("010")));
+        assert_eq!(cov.n_literals(), 3);
+    }
+
+    #[test]
+    fn remove_contained_drops_subsumed() {
+        let mut cov = Cover::from_cubes(
+            3,
+            vec![
+                Cube::from_pla("1--"),
+                Cube::from_pla("10-"), // contained in 1--
+                Cube::from_pla("0-1"),
+            ],
+        );
+        cov.remove_contained();
+        assert_eq!(cov.len(), 2);
+        assert!(cov.cubes.iter().any(|c| c.to_pla() == "1--"));
+        assert!(cov.cubes.iter().any(|c| c.to_pla() == "0-1"));
+    }
+
+    #[test]
+    fn remove_contained_keeps_duplicates_once() {
+        let mut cov = Cover::from_cubes(
+            2,
+            vec![Cube::from_pla("1-"), Cube::from_pla("1-")],
+        );
+        cov.remove_contained();
+        assert_eq!(cov.len(), 1);
+    }
+
+    #[test]
+    fn empty_cover_covers_nothing() {
+        let cov = Cover::new(4);
+        assert!(!cov.covers(&bv("0000")));
+        assert!(cov.is_empty());
+    }
+}
+
+// --- cover-level operations ----------------------------------------------
+
+impl Cover {
+    /// Is this cover a tautology?  Unate-reduction + Shannon expansion
+    /// (the classic recursive check; used by tests and OptimizeNetwork
+    /// sanity passes — covers here are small after minimization).
+    pub fn is_tautology(&self) -> bool {
+        // Any universal cube -> tautology.
+        if self.cubes.iter().any(|c| c.n_literals() == 0) {
+            return true;
+        }
+        if self.cubes.is_empty() {
+            return self.n_vars == 0;
+        }
+        // Pick the most binate variable.
+        let mut best: Option<(usize, usize)> = None; // (count, var)
+        for v in 0..self.n_vars {
+            let pos = self.cubes.iter().filter(|c| c.literal(v) == Some(true)).count();
+            let neg = self.cubes.iter().filter(|c| c.literal(v) == Some(false)).count();
+            if pos > 0 && neg > 0 {
+                let cnt = pos + neg;
+                if best.map(|(bc, _)| cnt > bc).unwrap_or(true) {
+                    best = Some((cnt, v));
+                }
+            } else if pos + neg > 0 && best.is_none() {
+                best = Some((0, v));
+            }
+        }
+        let Some((_, v)) = best else {
+            // No bound variables left in any cube and no universal cube:
+            // impossible (cubes with literals exist) — not a tautology.
+            return false;
+        };
+        self.cofactor(v, false).is_tautology() && self.cofactor(v, true).is_tautology()
+    }
+
+    /// Cofactor of the cover w.r.t. `var = value`.
+    pub fn cofactor(&self, var: usize, value: bool) -> Cover {
+        let mut cubes = Vec::new();
+        for c in &self.cubes {
+            match c.literal(var) {
+                Some(l) if l != value => {} // cube vanishes
+                _ => {
+                    let mut c2 = c.clone();
+                    c2.raise(var);
+                    cubes.push(c2);
+                }
+            }
+        }
+        Cover::from_cubes(self.n_vars, cubes)
+    }
+}
+
+#[cfg(test)]
+mod taut_tests {
+    use super::*;
+
+    #[test]
+    fn tautology_positive_cases() {
+        // x + !x
+        let c = Cover::from_cubes(2, vec![Cube::from_pla("1-"), Cube::from_pla("0-")]);
+        assert!(c.is_tautology());
+        // universal cube
+        let u = Cover::from_cubes(3, vec![Cube::universal(3)]);
+        assert!(u.is_tautology());
+        // all four minterms of 2 vars
+        let all = Cover::from_cubes(
+            2,
+            vec!["00", "01", "10", "11"].into_iter().map(Cube::from_pla).collect(),
+        );
+        assert!(all.is_tautology());
+    }
+
+    #[test]
+    fn tautology_negative_cases() {
+        let c = Cover::from_cubes(2, vec![Cube::from_pla("1-")]);
+        assert!(!c.is_tautology());
+        let c2 = Cover::from_cubes(
+            3,
+            vec![Cube::from_pla("1--"), Cube::from_pla("-1-"), Cube::from_pla("--1")],
+        );
+        assert!(!c2.is_tautology()); // misses 000
+        assert!(!Cover::new(4).is_tautology());
+    }
+
+    #[test]
+    fn cofactor_shrinks() {
+        let c = Cover::from_cubes(3, vec![Cube::from_pla("11-"), Cube::from_pla("0-1")]);
+        let c1 = c.cofactor(0, true);
+        assert_eq!(c1.len(), 1);
+        assert_eq!(c1.cubes[0].to_pla(), "-1-");
+        let c0 = c.cofactor(0, false);
+        assert_eq!(c0.cubes[0].to_pla(), "--1");
+    }
+
+    #[test]
+    fn tautology_via_consensus_chain() {
+        // xy + x!y + !x  == 1
+        let c = Cover::from_cubes(
+            2,
+            vec![Cube::from_pla("11"), Cube::from_pla("10"), Cube::from_pla("0-")],
+        );
+        assert!(c.is_tautology());
+    }
+}

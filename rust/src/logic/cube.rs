@@ -1,0 +1,389 @@
+//! The cube: a conjunction of literals over a fixed variable universe.
+
+use crate::util::BitVec;
+
+/// A product term (cube) over `n` variables: `pos` holds variables that
+/// must be 1, `neg` variables that must be 0; a variable in neither mask
+/// is don't-care.  Invariant: `pos & neg == 0` (otherwise the cube is the
+/// empty/contradictory cube, which we never materialize).
+#[derive(Clone, PartialEq, Eq, Hash, Debug)]
+pub struct Cube {
+    pub pos: BitVec,
+    pub neg: BitVec,
+}
+
+impl Cube {
+    /// The universal cube (tautology: no literals) over `n` vars.
+    pub fn universal(n: usize) -> Self {
+        Cube {
+            pos: BitVec::zeros(n),
+            neg: BitVec::zeros(n),
+        }
+    }
+
+    /// The minterm cube equal to a full assignment `pattern`.
+    pub fn from_minterm(pattern: &BitVec) -> Self {
+        let n = pattern.len();
+        let mut neg = BitVec::ones(n);
+        for (nw, pw) in neg.words_mut().iter_mut().zip(pattern.words()) {
+            *nw &= !pw;
+        }
+        Cube {
+            pos: pattern.clone(),
+            neg,
+        }
+    }
+
+    /// Number of variables in the universe.
+    pub fn n_vars(&self) -> usize {
+        self.pos.len()
+    }
+
+    /// Number of literals in the cube.
+    pub fn n_literals(&self) -> usize {
+        self.pos.count_ones() + self.neg.count_ones()
+    }
+
+    /// Does this cube cover the full assignment `p`?
+    /// pos ⊆ p  and  neg ∩ p = ∅.
+    #[inline]
+    pub fn covers(&self, p: &BitVec) -> bool {
+        for ((pw, nw), xw) in self
+            .pos
+            .words()
+            .iter()
+            .zip(self.neg.words())
+            .zip(p.words())
+        {
+            if (pw & xw) != *pw || (nw & xw) != 0 {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Does this cube contain (cover every minterm of) `other`?
+    /// Literals of `self` must be a subset of literals of `other`.
+    pub fn contains(&self, other: &Cube) -> bool {
+        for (a, b) in self.pos.words().iter().zip(other.pos.words()) {
+            if a & b != *a {
+                return false;
+            }
+        }
+        for (a, b) in self.neg.words().iter().zip(other.neg.words()) {
+            if a & b != *a {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Do the two cubes intersect (share at least one minterm)?
+    /// They don't iff some variable is pos in one and neg in the other.
+    pub fn intersects(&self, other: &Cube) -> bool {
+        for (a, b) in self.pos.words().iter().zip(other.neg.words()) {
+            if a & b != 0 {
+                return false;
+            }
+        }
+        for (a, b) in self.neg.words().iter().zip(other.pos.words()) {
+            if a & b != 0 {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Drop variable `v` from the cube (raise it to don't-care).
+    pub fn raise(&mut self, v: usize) {
+        self.pos.set(v, false);
+        self.neg.set(v, false);
+    }
+
+    /// Add literal `v = value` to the cube.
+    pub fn set_literal(&mut self, v: usize, value: bool) {
+        self.pos.set(v, value);
+        self.neg.set(v, !value);
+    }
+
+    /// The literal on variable `v`: Some(true)=positive, Some(false)=negative.
+    pub fn literal(&self, v: usize) -> Option<bool> {
+        if self.pos.get(v) {
+            Some(true)
+        } else if self.neg.get(v) {
+            Some(false)
+        } else {
+            None
+        }
+    }
+
+    /// Variables bound by this cube (pos | neg).
+    pub fn care_mask(&self) -> BitVec {
+        let mut m = self.pos.clone();
+        m.or_assign(&self.neg);
+        m
+    }
+
+    /// Mismatch mask against a full assignment: variables where the cube's
+    /// literal disagrees with `p`.  Empty iff the cube covers `p`.
+    pub fn mismatch_mask(&self, p: &BitVec) -> BitVec {
+        let n = self.n_vars();
+        let mut out = BitVec::zeros(n);
+        for (((ow, pw), nw), xw) in out
+            .words_mut()
+            .iter_mut()
+            .zip(self.pos.words())
+            .zip(self.neg.words())
+            .zip(p.words())
+        {
+            // pos literal mismatch where pos & !x; neg mismatch where neg & x
+            *ow = (pw & !xw) | (nw & xw);
+        }
+        out
+    }
+
+    /// Render as a PLA-style string, e.g. "1-0" (1=pos, 0=neg, -=don't care).
+    pub fn to_pla(&self) -> String {
+        (0..self.n_vars())
+            .map(|v| match self.literal(v) {
+                Some(true) => '1',
+                Some(false) => '0',
+                None => '-',
+            })
+            .collect()
+    }
+
+    /// Parse a PLA-style string.
+    pub fn from_pla(s: &str) -> Self {
+        let n = s.len();
+        let mut c = Cube::universal(n);
+        for (i, ch) in s.chars().enumerate() {
+            match ch {
+                '1' => c.set_literal(i, true),
+                '0' => c.set_literal(i, false),
+                '-' => {}
+                _ => panic!("bad PLA char {ch}"),
+            }
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bv(s: &str) -> BitVec {
+        BitVec::from_bools(s.chars().map(|c| c == '1'))
+    }
+
+    #[test]
+    fn minterm_roundtrip() {
+        let p = bv("1010");
+        let c = Cube::from_minterm(&p);
+        assert_eq!(c.to_pla(), "1010");
+        assert!(c.covers(&p));
+        assert!(!c.covers(&bv("1011")));
+        assert_eq!(c.n_literals(), 4);
+    }
+
+    #[test]
+    fn pla_roundtrip() {
+        for s in ["1-0", "----", "0101", "-1-0"] {
+            assert_eq!(Cube::from_pla(s).to_pla(), s);
+        }
+    }
+
+    #[test]
+    fn covers_with_dc() {
+        let c = Cube::from_pla("1-0");
+        assert!(c.covers(&bv("100")));
+        assert!(c.covers(&bv("110")));
+        assert!(!c.covers(&bv("101")));
+        assert!(!c.covers(&bv("000")));
+    }
+
+    #[test]
+    fn universal_covers_everything() {
+        let c = Cube::universal(5);
+        assert!(c.covers(&bv("00000")));
+        assert!(c.covers(&bv("11111")));
+        assert_eq!(c.n_literals(), 0);
+    }
+
+    #[test]
+    fn contains_and_intersects() {
+        let big = Cube::from_pla("1--");
+        let small = Cube::from_pla("1-0");
+        assert!(big.contains(&small));
+        assert!(!small.contains(&big));
+        assert!(big.intersects(&small));
+        let disjoint = Cube::from_pla("0--");
+        assert!(!big.intersects(&disjoint));
+        assert!(disjoint.intersects(&Cube::universal(3)));
+    }
+
+    #[test]
+    fn raise_and_literal() {
+        let mut c = Cube::from_pla("10-");
+        assert_eq!(c.literal(0), Some(true));
+        assert_eq!(c.literal(1), Some(false));
+        assert_eq!(c.literal(2), None);
+        c.raise(0);
+        assert_eq!(c.to_pla(), "-0-");
+        assert!(c.covers(&bv("000")));
+    }
+
+    #[test]
+    fn mismatch_mask_identifies_blockers() {
+        let c = Cube::from_pla("10-1");
+        let m = c.mismatch_mask(&bv("0011"));
+        // var0: pos literal but x=0 -> mismatch; var1: neg literal, x=0 ok;
+        // var3: pos, x=1 ok.
+        let ones: Vec<_> = m.iter_ones().collect();
+        assert_eq!(ones, vec![0]);
+        assert!(c.mismatch_mask(&bv("1001")).is_zero());
+    }
+
+    #[test]
+    fn mismatch_zero_iff_covers() {
+        let c = Cube::from_pla("-01-");
+        for x in 0..16u32 {
+            let p = BitVec::from_bools((0..4).map(|i| (x >> i) & 1 == 1));
+            assert_eq!(c.covers(&p), c.mismatch_mask(&p).is_zero());
+        }
+    }
+}
+
+// --- extended cube calculus (consensus / sharp / distance) ---------------
+
+impl Cube {
+    /// Number of variables where the two cubes have opposing literals.
+    pub fn distance(&self, other: &Cube) -> usize {
+        let mut d = 0;
+        for (a, b) in self.pos.words().iter().zip(other.neg.words()) {
+            d += (a & b).count_ones() as usize;
+        }
+        for (a, b) in self.neg.words().iter().zip(other.pos.words()) {
+            d += (a & b).count_ones() as usize;
+        }
+        d
+    }
+
+    /// Consensus: if the cubes conflict in exactly one variable, the cube
+    /// covering the "bridge" minterms between them; None otherwise.
+    pub fn consensus(&self, other: &Cube) -> Option<Cube> {
+        if self.distance(other) != 1 {
+            return None;
+        }
+        // Union of literals, with the single conflicting variable freed.
+        let mut pos = self.pos.clone();
+        pos.or_assign(&other.pos);
+        let mut neg = self.neg.clone();
+        neg.or_assign(&other.neg);
+        // The conflict var has both pos and neg set: clear it.
+        let n = self.n_vars();
+        let mut out = Cube { pos, neg };
+        for v in 0..n {
+            if out.pos.get(v) && out.neg.get(v) {
+                out.raise(v);
+            }
+        }
+        Some(out)
+    }
+
+    /// Sharp: minterms of `self` not covered by `other`, as a disjoint
+    /// cube list (the basic #-operation of the cube calculus).
+    pub fn sharp(&self, other: &Cube) -> Vec<Cube> {
+        if !self.intersects(other) {
+            return vec![self.clone()];
+        }
+        if other.contains(self) {
+            return vec![];
+        }
+        let mut out = Vec::new();
+        let mut base = self.clone();
+        for v in 0..self.n_vars() {
+            if let Some(val) = other.literal(v) {
+                if self.literal(v).is_none() {
+                    // Split base on v: the !val half escapes `other`.
+                    let mut escaped = base.clone();
+                    escaped.set_literal(v, !val);
+                    out.push(escaped);
+                    base.set_literal(v, val);
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod calculus_tests {
+    use super::*;
+    use crate::util::BitVec;
+
+    fn bv(s: &str) -> BitVec {
+        BitVec::from_bools(s.chars().map(|c| c == '1'))
+    }
+
+    #[test]
+    fn distance_counts_conflicts() {
+        assert_eq!(Cube::from_pla("10-").distance(&Cube::from_pla("01-")), 2);
+        assert_eq!(Cube::from_pla("1--").distance(&Cube::from_pla("0--")), 1);
+        assert_eq!(Cube::from_pla("1--").distance(&Cube::from_pla("-1-")), 0);
+    }
+
+    #[test]
+    fn consensus_classic() {
+        // ab + !a c  ->  consensus bc
+        let a = Cube::from_pla("11-");
+        let b = Cube::from_pla("0-1");
+        let c = a.consensus(&b).unwrap();
+        assert_eq!(c.to_pla(), "-11");
+        // distance 0 or 2: no consensus
+        assert!(Cube::from_pla("11-").consensus(&Cube::from_pla("00-")).is_none());
+        assert!(Cube::from_pla("1--").consensus(&Cube::from_pla("11-")).is_none());
+    }
+
+    #[test]
+    fn consensus_covers_bridge_minterms() {
+        let a = Cube::from_pla("1-0");
+        let b = Cube::from_pla("0-0");
+        let c = a.consensus(&b).unwrap();
+        // every minterm of c must be in a OR b
+        for m in 0..8u32 {
+            let p = bv(&format!("{}{}{}", m & 1, (m >> 1) & 1, (m >> 2) & 1));
+            if c.covers(&p) {
+                assert!(a.covers(&p) || b.covers(&p));
+            }
+        }
+    }
+
+    #[test]
+    fn sharp_partitions_minterms() {
+        let a = Cube::from_pla("1--");
+        let b = Cube::from_pla("11-");
+        let rest = a.sharp(&b);
+        // a # b should cover exactly a's minterms not in b.
+        for m in 0..8u32 {
+            let p = bv(&format!("{}{}{}", m & 1, (m >> 1) & 1, (m >> 2) & 1));
+            let want = a.covers(&p) && !b.covers(&p);
+            let got = rest.iter().any(|c| c.covers(&p));
+            assert_eq!(got, want, "minterm {m}");
+        }
+        // pieces are pairwise disjoint
+        for i in 0..rest.len() {
+            for j in (i + 1)..rest.len() {
+                assert!(!rest[i].intersects(&rest[j]));
+            }
+        }
+    }
+
+    #[test]
+    fn sharp_disjoint_and_contained() {
+        let a = Cube::from_pla("1--");
+        assert_eq!(a.sharp(&Cube::from_pla("0--")), vec![a.clone()]);
+        assert!(a.sharp(&Cube::universal(3)).is_empty());
+    }
+}

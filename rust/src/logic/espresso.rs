@@ -1,0 +1,604 @@
+//! Espresso-style two-level minimization of minterm-list ISFs.
+//!
+//! `OptimizeNeuron` from Algorithm 2: find a small prime, irredundant SoP
+//! cover of the ON-set that avoids the OFF-set, exploiting the DC-set
+//! (everything not in either list).  The classic loop:
+//!
+//!   EXPAND  — grow each cube to a prime against the OFF-set, absorbing
+//!             other ON cubes (this is where DC minterms "close to the
+//!             ON-set" get pulled in, exactly the paper's section 3.2.2)
+//!   IRREDUNDANT — keep a minimal subset that still covers the ON-set
+//!             (essential cubes + greedy set cover)
+//!   REDUCE  — shrink each cube to the supercube of the ON minterms only
+//!             it covers, giving the next EXPAND room to move
+//!
+//! iterated until the (cubes, literals) cost stops improving.
+//!
+//! All inner loops run on flat u64 rows (`PatternSet`) with incremental
+//! mismatch-mask maintenance: expanding one cube is O(raises · patterns ·
+//! stride) words, not O(vars² · patterns).
+
+use super::{Cover, Cube, IsfFunction, PatternSet};
+use crate::util::BitVec;
+
+/// Tuning knobs for the minimizer.
+#[derive(Clone, Debug)]
+pub struct EspressoConfig {
+    /// Maximum EXPAND/IRREDUNDANT/REDUCE iterations.
+    pub max_iters: usize,
+    /// Stop early if a pass improves cost by less than this fraction.
+    pub min_gain: f64,
+    /// EXPAND's raise-selection heuristic maximizes newly-absorbed ON
+    /// patterns; tracking that exactly is O(|ON|) per raise.  Tracking a
+    /// sample keeps the heuristic while capping the cost (0 = exact).
+    pub gain_sample: usize,
+}
+
+impl Default for EspressoConfig {
+    fn default() -> Self {
+        EspressoConfig {
+            max_iters: 3,
+            min_gain: 0.01,
+            gain_sample: 0,
+        }
+    }
+}
+
+/// Result statistics (reported by benches and EXPERIMENTS.md).
+#[derive(Clone, Debug, Default)]
+pub struct EspressoStats {
+    pub iters: usize,
+    pub initial_cubes: usize,
+    pub final_cubes: usize,
+    pub final_literals: usize,
+}
+
+/// Minimize an ISF into a prime, irredundant cover of its ON-set.
+///
+/// Guarantees (enforced by tests in this module and `rust/tests/props.rs`):
+/// * every ON pattern is covered;
+/// * no OFF pattern is covered;
+/// * no cube can be expanded further without covering an OFF pattern;
+/// * removing any cube uncovers at least one ON pattern.
+pub fn minimize(f: &IsfFunction, cfg: &EspressoConfig) -> (Cover, EspressoStats) {
+    let ps = &*f.patterns;
+    let n = ps.n_vars;
+    let mut stats = EspressoStats {
+        initial_cubes: f.on.len(),
+        ..Default::default()
+    };
+
+    if f.on.is_empty() {
+        return (Cover::new(n), stats);
+    }
+
+    // Initial cover: one minterm cube per ON pattern (deduplicated).
+    let mut cover = initial_cover(ps, &f.on);
+    let mut cost = (usize::MAX, usize::MAX);
+
+    for it in 0..cfg.max_iters {
+        stats.iters = it + 1;
+        expand(&mut cover, ps, &f.on, &f.off, cfg.gain_sample);
+        irredundant(&mut cover, ps, &f.on);
+        let new_cost = (cover.len(), cover.n_literals());
+        let first = cost.0 == usize::MAX;
+        let gain = if first {
+            f64::INFINITY
+        } else {
+            (cost.0.saturating_sub(new_cost.0) + cost.1.saturating_sub(new_cost.1)) as f64
+        };
+        if new_cost >= cost || (!first && gain < cfg.min_gain * cost.0 as f64) {
+            cost = cost.min(new_cost);
+            break;
+        }
+        cost = new_cost;
+        if it + 1 < cfg.max_iters {
+            reduce(&mut cover, ps, &f.on);
+        }
+    }
+
+    stats.final_cubes = cover.len();
+    stats.final_literals = cover.n_literals();
+    (cover, stats)
+}
+
+fn initial_cover(ps: &PatternSet, on: &[u32]) -> Cover {
+    let n = ps.n_vars;
+    let mut seen = std::collections::HashSet::with_capacity(on.len());
+    let mut cubes = Vec::new();
+    for &i in on {
+        let row = ps.row(i as usize);
+        if seen.insert(row.to_vec()) {
+            cubes.push(Cube::from_minterm(&ps.row_bitvec(i as usize)));
+        }
+    }
+    Cover::from_cubes(n, cubes)
+}
+
+/// EXPAND: make every cube prime against the OFF patterns; drop ON cubes
+/// absorbed by earlier primes.
+///
+/// Implementation: transposed incremental counting.  For the current cube
+/// with literal values `lit`, pattern p mismatches on var v iff v is a
+/// care var and p[v] != lit[v]; the per-pattern mismatch *count* is
+/// maintained in a flat u16 array and decremented via the precomputed
+/// transposed pattern columns, so every (pattern, var) mismatch pair is
+/// touched exactly once per cube — O(patterns · avg_mismatch + raises ·
+/// words) instead of O(raises · patterns).
+fn expand(cover: &mut Cover, ps: &PatternSet, on: &[u32], off: &[u32], gain_sample: usize) {
+    let n = ps.n_vars;
+    let mut result: Vec<Cube> = Vec::new();
+
+    let on_tracked = if gain_sample == 0 { on.len() } else { on.len().min(gain_sample) };
+
+    // Transposed columns: for var v, a bitset over the neuron's OFF (and
+    // tracked ON) patterns holding the pattern's value of v.
+    let off_cols = Columns::build(ps, off);
+    let on_cols = Columns::build(ps, &on[..on_tracked]);
+
+    // Process large cubes first: they absorb more.
+    let mut order: Vec<usize> = (0..cover.cubes.len()).collect();
+    order.sort_by_key(|&i| cover.cubes[i].n_literals());
+
+    let mut st_off = CubeState::new(off.len());
+    let mut st_on = CubeState::new(on_tracked);
+
+    'next_cube: for idx in order {
+        let cube = &cover.cubes[idx];
+        // Absorbed by an existing prime?
+        for p in &result {
+            if p.contains(cube) {
+                continue 'next_cube;
+            }
+        }
+        let mut c = cube.clone();
+        let mut blocked = vec![0u32; n];
+        let mut gain = vec![0u32; n];
+        st_off.init(&off_cols, ps, off, &c, &mut blocked);
+        st_on.init(&on_cols, ps, &on[..on_tracked], &c, &mut gain);
+
+        let mut care = c.care_mask();
+        loop {
+            // Candidate raise: care var, not blocked, max ON gain.
+            let mut best: Option<(u32, usize)> = None;
+            for v in care.iter_ones() {
+                if blocked[v] == 0 {
+                    let g = gain[v];
+                    if best
+                        .map(|(bg, bv)| (g, std::cmp::Reverse(v)) > (bg, std::cmp::Reverse(bv)))
+                        .unwrap_or(true)
+                    {
+                        best = Some((g, v));
+                    }
+                }
+            }
+            let Some((_, v)) = best else { break };
+            let lit_pos = c.pos.get(v);
+            c.raise(v);
+            care.set(v, false);
+            st_off.raise(&off_cols, ps, off, &c, v, lit_pos, &mut blocked);
+            st_on.raise(&on_cols, ps, &on[..on_tracked], &c, v, lit_pos, &mut gain);
+        }
+
+        debug_assert!(off.iter().all(|&i| !c.covers(&ps.row_bitvec(i as usize))));
+        result.push(c);
+    }
+    cover.cubes = result;
+}
+
+/// Transposed pattern matrix restricted to an index list: `word(v)` is a
+/// bitset over the list where bit k = value of var v in pattern list[k].
+struct Columns {
+    words_per_col: usize,
+    data: Vec<u64>,
+}
+
+impl Columns {
+    fn build(ps: &PatternSet, idxs: &[u32]) -> Columns {
+        let wpc = (idxs.len() + 63) / 64;
+        let mut data = vec![0u64; ps.n_vars * wpc.max(1)];
+        for (k, &pi) in idxs.iter().enumerate() {
+            let row = ps.row(pi as usize);
+            for v in 0..ps.n_vars {
+                if (row[v / 64] >> (v % 64)) & 1 == 1 {
+                    data[v * wpc + k / 64] |= 1 << (k % 64);
+                }
+            }
+        }
+        Columns { words_per_col: wpc, data }
+    }
+
+    #[inline]
+    fn col(&self, v: usize) -> &[u64] {
+        &self.data[v * self.words_per_col..(v + 1) * self.words_per_col]
+    }
+}
+
+/// Per-cube expansion state over one pattern list.
+struct CubeState {
+    /// Mismatch count per pattern.
+    cnt: Vec<u16>,
+    len: usize,
+}
+
+impl CubeState {
+    fn new(len: usize) -> CubeState {
+        CubeState { cnt: vec![0; len], len }
+    }
+
+    /// Initialize counts for a fresh cube and record single-mismatch
+    /// blockers/gains into `counts`.
+    fn init(
+        &mut self,
+        _cols: &Columns,
+        ps: &PatternSet,
+        idxs: &[u32],
+        c: &Cube,
+        counts: &mut [u32],
+    ) {
+        for (k, &pi) in idxs.iter().enumerate().take(self.len) {
+            let row = ps.row(pi as usize);
+            let mut cnt = 0u32;
+            let mut single = 0usize;
+            for (w, (pw, nw)) in c.pos.words().iter().zip(c.neg.words()).enumerate() {
+                let mm = (pw & !row[w]) | (nw & row[w]);
+                if mm != 0 {
+                    cnt += mm.count_ones();
+                    single = w * 64 + mm.trailing_zeros() as usize;
+                }
+            }
+            self.cnt[k] = cnt as u16;
+            if cnt == 1 {
+                counts[single] += 1;
+            }
+        }
+    }
+
+    /// Var v was raised (its previous literal value was `lit_pos`):
+    /// decrement counts of patterns that mismatched on v; patterns
+    /// reaching count 1 contribute their remaining var to `counts`.
+    fn raise(
+        &mut self,
+        cols: &Columns,
+        ps: &PatternSet,
+        idxs: &[u32],
+        c: &Cube,
+        v: usize,
+        lit_pos: bool,
+        counts: &mut [u32],
+    ) {
+        if self.len == 0 {
+            return;
+        }
+        let col = cols.col(v);
+        // Patterns mismatching on v: value != literal.
+        let flip = if lit_pos { !0u64 } else { 0u64 };
+        for (wi, &cw) in col.iter().enumerate() {
+            let mut m = cw ^ flip;
+            if wi == col.len() - 1 {
+                let rem = self.len - wi * 64;
+                if rem < 64 {
+                    m &= (1u64 << rem) - 1;
+                }
+            }
+            while m != 0 {
+                let k = wi * 64 + m.trailing_zeros() as usize;
+                m &= m - 1;
+                let cnt = &mut self.cnt[k];
+                *cnt -= 1;
+                if *cnt == 1 {
+                    // Find the remaining mismatching var via the cube's
+                    // current masks (2 words for 100-var layers).
+                    let row = ps.row(idxs[k] as usize);
+                    for (w, (pw, nw)) in
+                        c.pos.words().iter().zip(c.neg.words()).enumerate()
+                    {
+                        let mm = (pw & !row[w]) | (nw & row[w]);
+                        if mm != 0 {
+                            counts[w * 64 + mm.trailing_zeros() as usize] += 1;
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// IRREDUNDANT: minimal (greedy) subset of cubes covering all ON patterns.
+fn irredundant(cover: &mut Cover, ps: &PatternSet, on: &[u32]) {
+    let n_cubes = cover.cubes.len();
+    if n_cubes <= 1 {
+        return;
+    }
+    // covered_by[k] = list of cube indices covering ON pattern k.
+    let mut covering: Vec<Vec<u32>> = vec![Vec::new(); on.len()];
+    for (ci, c) in cover.cubes.iter().enumerate() {
+        for (k, &pi) in on.iter().enumerate() {
+            if covers_row(c, ps.row(pi as usize)) {
+                covering[k].push(ci as u32);
+            }
+        }
+    }
+    let mut selected = vec![false; n_cubes];
+    let mut covered = vec![false; on.len()];
+    // Essentials first.
+    for (k, cubes) in covering.iter().enumerate() {
+        debug_assert!(!cubes.is_empty(), "ON pattern uncovered after expand");
+        if cubes.len() == 1 {
+            selected[cubes[0] as usize] = true;
+        }
+    }
+    for (k, cubes) in covering.iter().enumerate() {
+        if cubes.iter().any(|&c| selected[c as usize]) {
+            covered[k] = true;
+        }
+    }
+    // Greedy set cover for the rest.
+    loop {
+        let mut best: Option<(usize, usize)> = None; // (count, cube)
+        for ci in 0..n_cubes {
+            if selected[ci] {
+                continue;
+            }
+            let cnt = covering
+                .iter()
+                .enumerate()
+                .filter(|(k, cubes)| !covered[*k] && cubes.contains(&(ci as u32)))
+                .count();
+            if cnt > 0 && best.map(|(bc, _)| cnt > bc).unwrap_or(true) {
+                best = Some((cnt, ci));
+            }
+        }
+        let Some((_, ci)) = best else { break };
+        selected[ci] = true;
+        for (k, cubes) in covering.iter().enumerate() {
+            if cubes.contains(&(ci as u32)) {
+                covered[k] = true;
+            }
+        }
+        if covered.iter().all(|&c| c) {
+            break;
+        }
+    }
+    let mut it = selected.iter();
+    cover.cubes.retain(|_| *it.next().unwrap());
+}
+
+/// REDUCE: sequentially shrink each cube to the supercube of the ON
+/// patterns not covered by the *rest of the current cover*, creating slack
+/// for the next EXPAND.  Sequential processing is essential: two cubes
+/// sharing a pattern must not both drop it.
+fn reduce(cover: &mut Cover, ps: &PatternSet, on: &[u32]) {
+    let n_cubes = cover.cubes.len();
+    if n_cubes <= 1 {
+        return;
+    }
+    // cover_count[k] = how many cubes currently cover ON pattern k.
+    let mut count = vec![0u32; on.len()];
+    for c in &cover.cubes {
+        for (k, &pi) in on.iter().enumerate() {
+            if covers_row(c, ps.row(pi as usize)) {
+                count[k] += 1;
+            }
+        }
+    }
+    // Shrink the largest cubes first (standard Espresso ordering).
+    let mut order: Vec<usize> = (0..n_cubes).collect();
+    order.sort_by_key(|&i| std::cmp::Reverse(cover.cubes[i].n_literals()));
+
+    for ci in order {
+        let cube = cover.cubes[ci].clone();
+        // Supercube of patterns this cube covers that nothing else does.
+        let mut sup: Option<(BitVec, BitVec)> = None;
+        for (k, &pi) in on.iter().enumerate() {
+            if count[k] == 1 && covers_row(&cube, ps.row(pi as usize)) {
+                let row = ps.row_bitvec(pi as usize);
+                match &mut sup {
+                    None => {
+                        let c = Cube::from_minterm(&row);
+                        sup = Some((c.pos, c.neg));
+                    }
+                    Some((pos, neg)) => {
+                        pos.and_assign(&row);
+                        for (nw, rw) in neg.words_mut().iter_mut().zip(row.words()) {
+                            *nw &= !rw;
+                        }
+                    }
+                }
+            }
+        }
+        let Some((pos, neg)) = sup else { continue };
+        let reduced = Cube { pos, neg };
+        debug_assert!(cube.contains(&reduced));
+        if reduced == cube {
+            continue;
+        }
+        // Decrement counts for patterns the shrink uncovers.
+        for (k, &pi) in on.iter().enumerate() {
+            if covers_row(&cube, ps.row(pi as usize))
+                && !covers_row(&reduced, ps.row(pi as usize))
+            {
+                count[k] -= 1;
+            }
+        }
+        cover.cubes[ci] = reduced;
+    }
+}
+
+#[inline]
+fn covers_row(c: &Cube, row: &[u64]) -> bool {
+    for ((pw, nw), xw) in c.pos.words().iter().zip(c.neg.words()).zip(row) {
+        if (pw & xw) != *pw || (nw & xw) != 0 {
+            return false;
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    fn bv(s: &str) -> BitVec {
+        BitVec::from_bools(s.chars().map(|c| c == '1'))
+    }
+
+    fn check_invariants(f: &IsfFunction, cover: &Cover) {
+        for &i in &f.on {
+            assert!(
+                cover.covers(&f.patterns.row_bitvec(i as usize)),
+                "ON pattern {i} uncovered"
+            );
+        }
+        for &i in &f.off {
+            assert!(
+                !cover.covers(&f.patterns.row_bitvec(i as usize)),
+                "OFF pattern {i} covered"
+            );
+        }
+        // Primality: no single raise may avoid all OFF patterns.
+        for c in &cover.cubes {
+            for v in c.care_mask().iter_ones() {
+                let mut raised = c.clone();
+                raised.raise(v);
+                let hits_off = f
+                    .off
+                    .iter()
+                    .any(|&i| raised.covers(&f.patterns.row_bitvec(i as usize)));
+                assert!(hits_off, "cube {} not prime (var {v})", c.to_pla());
+            }
+        }
+    }
+
+    #[test]
+    fn single_minterm() {
+        let f = IsfFunction::from_minterms(3, &[bv("101")], &[bv("000")]);
+        let (cover, _) = minimize(&f, &EspressoConfig::default());
+        check_invariants(&f, &cover);
+        // With only one OFF minterm the cube should expand a lot.
+        assert_eq!(cover.len(), 1);
+        assert!(cover.cubes[0].n_literals() <= 1);
+    }
+
+    #[test]
+    fn xor_needs_two_cubes() {
+        // Fully specified XOR: on = {01, 10}, off = {00, 11}.
+        let f = IsfFunction::from_minterms(2, &[bv("01"), bv("10")], &[bv("00"), bv("11")]);
+        let (cover, _) = minimize(&f, &EspressoConfig::default());
+        check_invariants(&f, &cover);
+        assert_eq!(cover.len(), 2);
+        assert_eq!(cover.n_literals(), 4);
+    }
+
+    #[test]
+    fn fig2_neuron_truth_table() {
+        // Fig. 2 style: 3-input neuron, full truth table as ON/OFF.
+        // f = majority-ish: on where at least two of (a, b, c) given the
+        // K-map example; use actual majority for determinism.
+        let mut on = vec![];
+        let mut off = vec![];
+        for x in 0..8u32 {
+            let bits: Vec<bool> = (0..3).map(|i| (x >> i) & 1 == 1).collect();
+            let p = BitVec::from_bools(bits.iter().copied());
+            if bits.iter().filter(|&&b| b).count() >= 2 {
+                on.push(p);
+            } else {
+                off.push(p);
+            }
+        }
+        let f = IsfFunction::from_minterms(3, &on, &off);
+        let (cover, stats) = minimize(&f, &EspressoConfig::default());
+        check_invariants(&f, &cover);
+        // Majority of 3 = ab + ac + bc: 3 cubes, 6 literals.
+        assert_eq!(cover.len(), 3);
+        assert_eq!(cover.n_literals(), 6);
+        assert_eq!(stats.initial_cubes, 4);
+    }
+
+    #[test]
+    fn dc_set_enables_collapse() {
+        // ON = {111}, OFF = {000}; everything else DC -> a single cube
+        // with one literal should suffice.
+        let f = IsfFunction::from_minterms(3, &[bv("111")], &[bv("000")]);
+        let (cover, _) = minimize(&f, &EspressoConfig::default());
+        check_invariants(&f, &cover);
+        assert_eq!(cover.len(), 1);
+        assert_eq!(cover.n_literals(), 1);
+    }
+
+    #[test]
+    fn empty_on_set() {
+        let f = IsfFunction::from_minterms(4, &[], &[bv("0000")]);
+        let (cover, _) = minimize(&f, &EspressoConfig::default());
+        assert!(cover.is_empty());
+    }
+
+    #[test]
+    fn tautology_when_no_off() {
+        let f = IsfFunction::from_minterms(4, &[bv("0101"), bv("1010")], &[]);
+        let (cover, _) = minimize(&f, &EspressoConfig::default());
+        check_invariants(&f, &cover);
+        assert_eq!(cover.len(), 1);
+        assert_eq!(cover.n_literals(), 0); // universal cube
+    }
+
+    #[test]
+    fn duplicate_on_patterns_dedup() {
+        let f = IsfFunction::from_minterms(3, &[bv("110"), bv("110"), bv("110")], &[bv("000")]);
+        let (cover, stats) = minimize(&f, &EspressoConfig::default());
+        check_invariants(&f, &cover);
+        assert_eq!(cover.len(), 1);
+        assert_eq!(stats.initial_cubes, 3);
+    }
+
+    #[test]
+    fn random_isfs_respect_invariants() {
+        let mut rng = SplitMix64::new(99);
+        for trial in 0..30 {
+            let n = rng.range(3, 12);
+            let n_pat = rng.range(2, 60);
+            let mut seen = std::collections::HashSet::new();
+            let mut on = vec![];
+            let mut off = vec![];
+            for _ in 0..n_pat {
+                let p = BitVec::from_bools((0..n).map(|_| rng.bool(0.5)));
+                if seen.insert(p.clone()) {
+                    if rng.bool(0.5) {
+                        on.push(p);
+                    } else {
+                        off.push(p);
+                    }
+                }
+            }
+            let f = IsfFunction::from_minterms(n, &on, &off);
+            let (cover, _) = minimize(&f, &EspressoConfig::default());
+            check_invariants(&f, &cover);
+            let _ = trial;
+        }
+    }
+
+    #[test]
+    fn cover_not_larger_than_on_set() {
+        let mut rng = SplitMix64::new(7);
+        let n = 16;
+        let mut on = vec![];
+        let mut off = vec![];
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..200 {
+            let p = BitVec::from_bools((0..n).map(|_| rng.bool(0.5)));
+            if seen.insert(p.clone()) {
+                if rng.bool(0.6) {
+                    on.push(p);
+                } else {
+                    off.push(p);
+                }
+            }
+        }
+        let f = IsfFunction::from_minterms(n, &on, &off);
+        let (cover, stats) = minimize(&f, &EspressoConfig::default());
+        assert!(cover.len() <= on.len());
+        assert!(stats.final_cubes < stats.initial_cubes, "{stats:?}");
+    }
+}

@@ -1,0 +1,172 @@
+//! Incompletely specified functions over explicit minterm lists.
+//!
+//! NullaNet's ISFs (Section 3.2.2) come from network activations: the
+//! input patterns observed at a layer over the training set.  All neurons
+//! of a layer share one pattern list and differ only in which patterns are
+//! ON vs OFF — [`PatternSet`] is that shared list (flat u64 matrix, one
+//! row per pattern), [`IsfFunction`] is one neuron's view of it.
+
+use std::sync::Arc;
+
+use crate::util::{words_for, BitVec};
+
+/// A deduplicated list of full input assignments, packed row-major:
+/// row i occupies `stride` u64 words.
+#[derive(Clone, Debug)]
+pub struct PatternSet {
+    pub n_vars: usize,
+    pub stride: usize,
+    words: Vec<u64>,
+    n: usize,
+}
+
+impl PatternSet {
+    pub fn new(n_vars: usize) -> Self {
+        PatternSet {
+            n_vars,
+            stride: words_for(n_vars).max(1),
+            words: Vec::new(),
+            n: 0,
+        }
+    }
+
+    pub fn from_bitvecs(n_vars: usize, rows: &[BitVec]) -> Self {
+        let mut s = PatternSet::new(n_vars);
+        for r in rows {
+            s.push(r);
+        }
+        s
+    }
+
+    pub fn push(&mut self, p: &BitVec) {
+        debug_assert_eq!(p.len(), self.n_vars);
+        let mut row = [0u64; 64];
+        let w = p.words();
+        row[..w.len()].copy_from_slice(w);
+        self.words.extend_from_slice(&row[..self.stride]);
+        self.n += 1;
+    }
+
+    /// Push from raw words (must already be tail-masked).
+    pub fn push_words(&mut self, row: &[u64]) {
+        debug_assert_eq!(row.len(), self.stride);
+        self.words.extend_from_slice(row);
+        self.n += 1;
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[u64] {
+        &self.words[i * self.stride..(i + 1) * self.stride]
+    }
+
+    pub fn row_bitvec(&self, i: usize) -> BitVec {
+        let mut v = BitVec::zeros(self.n_vars);
+        v.words_mut().copy_from_slice(self.row(i));
+        v
+    }
+
+    /// Bit `v` of row `i`.
+    #[inline]
+    pub fn bit(&self, i: usize, v: usize) -> bool {
+        (self.row(i)[v / 64] >> (v % 64)) & 1 == 1
+    }
+}
+
+/// One neuron's incompletely specified function: indices into a shared
+/// [`PatternSet`] that form the ON-set and OFF-set; every assignment not
+/// listed is DON'T-CARE.
+#[derive(Clone, Debug)]
+pub struct IsfFunction {
+    pub patterns: Arc<PatternSet>,
+    pub on: Vec<u32>,
+    pub off: Vec<u32>,
+}
+
+impl IsfFunction {
+    pub fn new(patterns: Arc<PatternSet>, on: Vec<u32>, off: Vec<u32>) -> Self {
+        IsfFunction { patterns, on, off }
+    }
+
+    /// Build from explicit ON/OFF minterm lists (tests, enumeration route).
+    pub fn from_minterms(n_vars: usize, on: &[BitVec], off: &[BitVec]) -> Self {
+        let mut ps = PatternSet::new(n_vars);
+        let mut on_idx = Vec::new();
+        let mut off_idx = Vec::new();
+        for p in on {
+            on_idx.push(ps.len() as u32);
+            ps.push(p);
+        }
+        for p in off {
+            off_idx.push(ps.len() as u32);
+            ps.push(p);
+        }
+        IsfFunction::new(Arc::new(ps), on_idx, off_idx)
+    }
+
+    pub fn n_vars(&self) -> usize {
+        self.patterns.n_vars
+    }
+
+    /// The specified value at `p`, if any (linear scan; test helper).
+    pub fn value_at(&self, p: &BitVec) -> Option<bool> {
+        let find = |idxs: &[u32]| {
+            idxs.iter()
+                .any(|&i| self.patterns.row(i as usize) == p.words())
+        };
+        if find(&self.on) {
+            Some(true)
+        } else if find(&self.off) {
+            Some(false)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bv(s: &str) -> BitVec {
+        BitVec::from_bools(s.chars().map(|c| c == '1'))
+    }
+
+    #[test]
+    fn pattern_set_roundtrip() {
+        let rows = vec![bv("101"), bv("010"), bv("111")];
+        let ps = PatternSet::from_bitvecs(3, &rows);
+        assert_eq!(ps.len(), 3);
+        for (i, r) in rows.iter().enumerate() {
+            assert_eq!(&ps.row_bitvec(i), r);
+        }
+        assert!(ps.bit(0, 0) && !ps.bit(0, 1) && ps.bit(0, 2));
+    }
+
+    #[test]
+    fn pattern_set_wide_rows() {
+        let mut p = BitVec::zeros(100);
+        p.set(0, true);
+        p.set(99, true);
+        let ps = PatternSet::from_bitvecs(100, &[p.clone()]);
+        assert_eq!(ps.stride, 2);
+        assert_eq!(ps.row_bitvec(0), p);
+        assert!(ps.bit(0, 99));
+    }
+
+    #[test]
+    fn isf_value_lookup() {
+        let f = IsfFunction::from_minterms(3, &[bv("101")], &[bv("000")]);
+        assert_eq!(f.value_at(&bv("101")), Some(true));
+        assert_eq!(f.value_at(&bv("000")), Some(false));
+        assert_eq!(f.value_at(&bv("111")), None); // DC
+    }
+}

@@ -1,0 +1,23 @@
+//! Two-level Boolean logic: cubes, covers, truth tables, ISFs, and the
+//! Espresso-style minimizer (Section 3.2.2's `OptimizeNeuron`).
+//!
+//! Representation: a [`Cube`] over `n` variables is a pair of bit masks
+//! `(pos, neg)` — variable `i` appears as a positive literal iff
+//! `pos[i]`, negative iff `neg[i]`, and is absent (don't-care) otherwise.
+//! A cube *covers* a full assignment (a minterm, stored as a
+//! [`BitVec`] pattern) iff all its literals agree with the assignment.
+//! This is the classic positional-cube calculus specialized to the
+//! minterm-list ISFs NullaNet produces (ON/OFF sets are training-sample
+//! activation patterns; everything unseen is DC — Section 3.2.2).
+
+mod cover;
+mod cube;
+mod espresso;
+mod isf_fn;
+mod truth;
+
+pub use cover::Cover;
+pub use cube::Cube;
+pub use espresso::{minimize, EspressoConfig, EspressoStats};
+pub use isf_fn::{IsfFunction, PatternSet};
+pub use truth::TruthTable;

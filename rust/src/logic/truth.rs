@@ -1,0 +1,332 @@
+//! Explicit truth tables (≤ 16 variables) + the Minato–Morreale ISOP.
+//!
+//! Used by the input-enumeration route (Section 3.2.1), by AIG
+//! refactoring (cone resynthesis), and as the brute-force oracle in tests.
+
+use super::{Cover, Cube};
+use crate::util::BitVec;
+
+/// A complete Boolean function on `n_vars` ≤ 16 variables, one bit per
+/// minterm, packed LSB-first into u64 words (minterm index = input
+/// assignment with var 0 as bit 0).
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct TruthTable {
+    pub n_vars: usize,
+    pub words: Vec<u64>,
+}
+
+impl TruthTable {
+    pub const MAX_VARS: usize = 16;
+
+    pub fn zeros(n_vars: usize) -> Self {
+        assert!(n_vars <= Self::MAX_VARS);
+        TruthTable {
+            n_vars,
+            words: vec![0; Self::words_for(n_vars)],
+        }
+    }
+
+    pub fn ones(n_vars: usize) -> Self {
+        let mut t = Self::zeros(n_vars);
+        for w in &mut t.words {
+            *w = !0;
+        }
+        t.mask_tail();
+        t
+    }
+
+    fn words_for(n_vars: usize) -> usize {
+        ((1usize << n_vars) + 63) / 64
+    }
+
+    fn mask_tail(&mut self) {
+        let bits = 1usize << self.n_vars;
+        if bits < 64 {
+            self.words[0] &= (1u64 << bits) - 1;
+        }
+    }
+
+    /// Truth table of input variable `v`.
+    pub fn var(n_vars: usize, v: usize) -> Self {
+        let mut t = Self::zeros(n_vars);
+        for m in 0..(1usize << n_vars) {
+            if (m >> v) & 1 == 1 {
+                t.set(m, true);
+            }
+        }
+        t
+    }
+
+    pub fn from_fn(n_vars: usize, mut f: impl FnMut(usize) -> bool) -> Self {
+        let mut t = Self::zeros(n_vars);
+        for m in 0..(1usize << n_vars) {
+            if f(m) {
+                t.set(m, true);
+            }
+        }
+        t
+    }
+
+    #[inline]
+    pub fn get(&self, minterm: usize) -> bool {
+        (self.words[minterm / 64] >> (minterm % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, minterm: usize, v: bool) {
+        if v {
+            self.words[minterm / 64] |= 1 << (minterm % 64);
+        } else {
+            self.words[minterm / 64] &= !(1 << (minterm % 64));
+        }
+    }
+
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    pub fn is_ones(&self) -> bool {
+        let total = 1usize << self.n_vars;
+        self.count_ones() == total
+    }
+
+    pub fn not(&self) -> Self {
+        let mut t = self.clone();
+        for w in &mut t.words {
+            *w = !*w;
+        }
+        t.mask_tail();
+        t
+    }
+
+    pub fn and(&self, o: &Self) -> Self {
+        let mut t = self.clone();
+        for (a, b) in t.words.iter_mut().zip(&o.words) {
+            *a &= b;
+        }
+        t
+    }
+
+    pub fn or(&self, o: &Self) -> Self {
+        let mut t = self.clone();
+        for (a, b) in t.words.iter_mut().zip(&o.words) {
+            *a |= b;
+        }
+        t
+    }
+
+    pub fn xor(&self, o: &Self) -> Self {
+        let mut t = self.clone();
+        for (a, b) in t.words.iter_mut().zip(&o.words) {
+            *a ^= b;
+        }
+        t
+    }
+
+    /// Positive/negative cofactor w.r.t. variable `v` (result keeps the
+    /// same variable count; the cofactored variable becomes vacuous).
+    pub fn cofactor(&self, v: usize, value: bool) -> Self {
+        let mut t = Self::zeros(self.n_vars);
+        let bit = 1usize << v;
+        for m in 0..(1usize << self.n_vars) {
+            let src = if value { m | bit } else { m & !bit };
+            if self.get(src) {
+                t.set(m, true);
+            }
+        }
+        t
+    }
+
+    /// Does the function depend on variable `v`?
+    pub fn depends_on(&self, v: usize) -> bool {
+        self.cofactor(v, false) != self.cofactor(v, true)
+    }
+
+    /// Evaluate a cube as a truth table.
+    pub fn from_cube(n_vars: usize, c: &Cube) -> Self {
+        Self::from_fn(n_vars, |m| {
+            let p = BitVec::from_bools((0..n_vars).map(|i| (m >> i) & 1 == 1));
+            c.covers(&p)
+        })
+    }
+
+    /// Evaluate a cover as a truth table.
+    pub fn from_cover(cov: &Cover) -> Self {
+        let mut t = Self::zeros(cov.n_vars);
+        for c in &cov.cubes {
+            t = t.or(&Self::from_cube(cov.n_vars, c));
+        }
+        t
+    }
+
+    /// Minato–Morreale irredundant SoP: a cover `F` with `L ⊆ F ⊆ U`.
+    /// `self` is L (must-cover), `upper` is U (may-cover); the DC set is
+    /// `U \ L`.  Classic recursion on the topmost dependent variable.
+    pub fn isop(&self, upper: &TruthTable) -> Cover {
+        assert_eq!(self.n_vars, upper.n_vars);
+        debug_assert!(self.and(&upper.not()).is_zero(), "L not within U");
+        let n = self.n_vars;
+        let mut cover = Cover::new(n);
+        isop_rec(self, upper, n, &mut cover);
+        cover
+    }
+}
+
+fn isop_rec(l: &TruthTable, u: &TruthTable, n: usize, out: &mut Cover) -> TruthTable {
+    if l.is_zero() {
+        return TruthTable::zeros(l.n_vars);
+    }
+    if u.is_ones() {
+        out.cubes.push(Cube::universal(l.n_vars));
+        return TruthTable::ones(l.n_vars);
+    }
+    // Pick the highest variable either function depends on.
+    let mut var = None;
+    for v in (0..n).rev() {
+        if l.depends_on(v) || u.depends_on(v) {
+            var = Some(v);
+            break;
+        }
+    }
+    let v = var.expect("non-constant function must depend on a variable");
+
+    let l0 = l.cofactor(v, false);
+    let l1 = l.cofactor(v, true);
+    let u0 = u.cofactor(v, false);
+    let u1 = u.cofactor(v, true);
+
+    // Cubes that must contain literal !v / v.
+    let mut c0 = Cover::new(l.n_vars);
+    let f0 = isop_rec(&l0.and(&u1.not()), &u0, v, &mut c0);
+    let mut c1 = Cover::new(l.n_vars);
+    let f1 = isop_rec(&l1.and(&u0.not()), &u1, v, &mut c1);
+
+    // Remainder must be covered by cubes independent of v.
+    let lnew = l0.and(&f0.not()).or(&l1.and(&f1.not()));
+    let mut cd = Cover::new(l.n_vars);
+    let fd = isop_rec(&lnew, &u0.and(&u1), v, &mut cd);
+
+    for mut c in c0.cubes {
+        c.set_literal(v, false);
+        out.cubes.push(c);
+    }
+    for mut c in c1.cubes {
+        c.set_literal(v, true);
+        out.cubes.push(c);
+    }
+    out.cubes.extend(cd.cubes);
+
+    let tv = TruthTable::var(l.n_vars, v);
+    fd.or(&tv.not().and(&f0)).or(&tv.and(&f1))
+}
+
+impl std::fmt::Debug for TruthTable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "TT{}[", self.n_vars)?;
+        for m in 0..(1usize << self.n_vars).min(64) {
+            write!(f, "{}", self.get(m) as u8)?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn var_tables() {
+        let t = TruthTable::var(3, 1);
+        for m in 0..8 {
+            assert_eq!(t.get(m), (m >> 1) & 1 == 1);
+        }
+    }
+
+    #[test]
+    fn boolean_algebra() {
+        let a = TruthTable::var(2, 0);
+        let b = TruthTable::var(2, 1);
+        let and = a.and(&b);
+        assert_eq!(and.count_ones(), 1);
+        assert!(and.get(3));
+        let or = a.or(&b);
+        assert_eq!(or.count_ones(), 3);
+        let xor = a.xor(&b);
+        assert!(xor.get(1) && xor.get(2) && !xor.get(0) && !xor.get(3));
+        assert!(a.not().get(0));
+    }
+
+    #[test]
+    fn cofactor_and_depends() {
+        let a = TruthTable::var(3, 0);
+        let f = a.and(&TruthTable::var(3, 2));
+        assert!(f.depends_on(0) && f.depends_on(2) && !f.depends_on(1));
+        let f1 = f.cofactor(0, true);
+        assert_eq!(f1, TruthTable::var(3, 2));
+        assert!(f.cofactor(0, false).is_zero());
+    }
+
+    #[test]
+    fn from_cover_matches_eval() {
+        let cov = Cover::from_cubes(
+            3,
+            vec![Cube::from_pla("1-0"), Cube::from_pla("-11")],
+        );
+        let t = TruthTable::from_cover(&cov);
+        for m in 0..8usize {
+            let p = BitVec::from_bools((0..3).map(|i| (m >> i) & 1 == 1));
+            assert_eq!(t.get(m), cov.covers(&p), "minterm {m}");
+        }
+    }
+
+    #[test]
+    fn isop_exact_functions() {
+        let mut rng = SplitMix64::new(5);
+        for _ in 0..50 {
+            let n = rng.range(1, 7);
+            let f = TruthTable::from_fn(n, |_| rng.bool(0.5));
+            let cover = f.isop(&f); // no DC: exact cover required
+            let g = TruthTable::from_cover(&cover);
+            assert_eq!(g, f, "n={n}");
+        }
+    }
+
+    #[test]
+    fn isop_with_dc_between_bounds() {
+        let mut rng = SplitMix64::new(17);
+        for _ in 0..50 {
+            let n = rng.range(2, 7);
+            let l = TruthTable::from_fn(n, |_| rng.bool(0.3));
+            let dc = TruthTable::from_fn(n, |_| rng.bool(0.3));
+            let u = l.or(&dc);
+            let cover = l.isop(&u);
+            let g = TruthTable::from_cover(&cover);
+            // L ⊆ G ⊆ U
+            assert!(l.and(&g.not()).is_zero(), "missed required minterm");
+            assert!(g.and(&u.not()).is_zero(), "covered forbidden minterm");
+        }
+    }
+
+    #[test]
+    fn isop_uses_dc_to_shrink() {
+        // L = {11}, U = everything: single universal cube.
+        let l = TruthTable::from_fn(2, |m| m == 3);
+        let u = TruthTable::ones(2);
+        let cover = l.isop(&u);
+        assert_eq!(cover.len(), 1);
+        assert_eq!(cover.n_literals(), 0);
+    }
+
+    #[test]
+    fn constants() {
+        assert!(TruthTable::zeros(4).is_zero());
+        assert!(TruthTable::ones(4).is_ones());
+        assert_eq!(TruthTable::ones(6).count_ones(), 64);
+        assert_eq!(TruthTable::ones(0).count_ones(), 1);
+    }
+}

@@ -1,0 +1,372 @@
+//! Priority-cut K-LUT technology mapping (area-flow + depth), targeting
+//! the Arria 10's fracturable 6-input ALMs (Section 4.1.3's device).
+//!
+//! Input: an optimized [`Aig`]; output: a [`LutMapping`] — one K-feasible
+//! cut per visible node, chosen to minimize (depth, area-flow), plus the
+//! derived LUT network statistics the FPGA cost model consumes (LUT
+//! count by input size, logic depth).  The simulation/request path does
+//! NOT use the LUT network (it runs the AIG tape, see `netlist`); mapping
+//! exists to cost the design the way the paper's Tables 5 and 8 do.
+
+use crate::aig::Aig;
+use crate::logic::TruthTable;
+
+#[derive(Clone, Debug)]
+pub struct LutMapConfig {
+    /// LUT input budget (Arria 10 ALM in 6-LUT mode).
+    pub k: usize,
+    /// Cuts kept per node.
+    pub cuts_per_node: usize,
+}
+
+impl Default for LutMapConfig {
+    fn default() -> Self {
+        LutMapConfig {
+            k: 6,
+            cuts_per_node: 8,
+        }
+    }
+}
+
+/// One mapped LUT.
+#[derive(Clone, Debug)]
+pub struct Lut {
+    /// AIG node this LUT implements.
+    pub root: u32,
+    /// Leaf AIG nodes (LUT inputs).
+    pub leaves: Vec<u32>,
+    /// The LUT function over the leaves.
+    pub tt: TruthTable,
+    /// Logic level of this LUT (1 = fed only by PIs).
+    pub level: u32,
+}
+
+/// The result of technology mapping.
+#[derive(Clone, Debug)]
+pub struct LutMapping {
+    pub luts: Vec<Lut>,
+    /// Depth in LUT levels.
+    pub depth: u32,
+    /// Histogram of LUT input counts (index = #inputs, 0..=k).
+    pub input_histogram: Vec<usize>,
+}
+
+impl LutMapping {
+    pub fn n_luts(&self) -> usize {
+        self.luts.len()
+    }
+
+    /// Estimated ALM count: an Arria 10 ALM implements one 6-LUT or one
+    /// 5-LUT, or (fractured) two independent LUTs of ≤ 4 inputs.
+    pub fn alms(&self) -> usize {
+        let h = &self.input_histogram;
+        let big: usize = h.get(5).copied().unwrap_or(0) + h.get(6).copied().unwrap_or(0);
+        let small: usize = h.iter().take(5).sum();
+        big + small.div_ceil(2)
+    }
+}
+
+struct CutInfo {
+    leaves: Vec<u32>,
+    depth: u32,
+    area_flow: f32,
+}
+
+/// Map an AIG to K-LUTs.
+pub fn map_luts(aig: &Aig, cfg: &LutMapConfig) -> LutMapping {
+    let n = aig.n_nodes();
+    let fanouts = aig.fanouts();
+    // Best cut per node (PIs get the trivial cut).
+    let mut best: Vec<CutInfo> = Vec::with_capacity(n);
+    for i in 0..=aig.n_pis() {
+        best.push(CutInfo {
+            leaves: vec![i as u32],
+            depth: 0,
+            area_flow: 0.0,
+        });
+    }
+    // Priority cuts per node, bounded.
+    let mut all_cuts: Vec<Vec<Vec<u32>>> = vec![Vec::new(); n];
+    for i in 0..=aig.n_pis() {
+        all_cuts[i] = vec![vec![i as u32]];
+    }
+
+    for node in (aig.n_pis() + 1)..n {
+        let nd = aig.node(node as u32);
+        let mut cands: Vec<Vec<u32>> = Vec::new();
+        {
+            let c0s = &all_cuts[nd.fan0.node() as usize];
+            let c1s = &all_cuts[nd.fan1.node() as usize];
+            for a in c0s {
+                for b in c1s {
+                    if let Some(m) = merge(a, b, cfg.k) {
+                        if !cands.contains(&m) {
+                            cands.push(m);
+                        }
+                    }
+                }
+            }
+        }
+        if cands.is_empty() {
+            cands.push(vec![node as u32]); // degenerate; shouldn't happen
+        }
+        // Score candidates.
+        let mut scored: Vec<(u32, f32, Vec<u32>)> = cands
+            .into_iter()
+            .map(|c| {
+                let depth = 1 + c.iter().map(|&l| best[l as usize].depth).max().unwrap_or(0);
+                let af: f32 = 1.0
+                    + c.iter()
+                        .map(|&l| {
+                            best[l as usize].area_flow / fanouts[l as usize].max(1) as f32
+                        })
+                        .sum::<f32>();
+                (depth, af, c)
+            })
+            .collect();
+        scored.sort_by(|a, b| {
+            a.0.cmp(&b.0)
+                .then(a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal))
+        });
+        let (d, af, leaves) = scored[0].clone();
+        best.push(CutInfo {
+            leaves,
+            depth: d,
+            area_flow: af,
+        });
+        scored.truncate(cfg.cuts_per_node);
+        all_cuts[node] = scored.into_iter().map(|(_, _, c)| c).collect();
+        // keep the trivial cut available for parents
+        if !all_cuts[node].iter().any(|c| c == &vec![node as u32]) {
+            all_cuts[node].push(vec![node as u32]);
+        }
+    }
+
+    // Derive the mapping: required nodes = outputs' cones through chosen cuts.
+    let mut required = vec![false; n];
+    let mut stack: Vec<u32> = aig
+        .outputs
+        .iter()
+        .map(|o| o.node())
+        .filter(|&nd| aig.is_and(nd))
+        .collect();
+    while let Some(node) = stack.pop() {
+        if required[node as usize] {
+            continue;
+        }
+        required[node as usize] = true;
+        for &leaf in &best[node as usize].leaves {
+            if aig.is_and(leaf) {
+                stack.push(leaf);
+            }
+        }
+    }
+
+    // Build LUTs in topological order with levels.
+    let mut level = vec![0u32; n];
+    let mut luts = Vec::new();
+    let mut hist = vec![0usize; cfg.k + 1];
+    for node in (aig.n_pis() + 1)..n {
+        if !required[node] {
+            continue;
+        }
+        let info = &best[node];
+        let lv = 1 + info
+            .leaves
+            .iter()
+            .map(|&l| level[l as usize])
+            .max()
+            .unwrap_or(0);
+        level[node] = lv;
+        let tt = cut_tt(aig, node as u32, &info.leaves);
+        hist[info.leaves.len().min(cfg.k)] += 1;
+        luts.push(Lut {
+            root: node as u32,
+            leaves: info.leaves.clone(),
+            tt,
+            level: lv,
+        });
+    }
+    let depth = aig
+        .outputs
+        .iter()
+        .map(|o| level[o.node() as usize])
+        .max()
+        .unwrap_or(0);
+    LutMapping {
+        luts,
+        depth,
+        input_histogram: hist,
+    }
+}
+
+fn merge(a: &[u32], b: &[u32], k: usize) -> Option<Vec<u32>> {
+    let mut out = Vec::with_capacity(k);
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() || j < b.len() {
+        let x = if i < a.len() && (j >= b.len() || a[i] <= b[j]) {
+            if j < b.len() && a[i] == b[j] {
+                j += 1;
+            }
+            let v = a[i];
+            i += 1;
+            v
+        } else {
+            let v = b[j];
+            j += 1;
+            v
+        };
+        if out.len() == k {
+            return None;
+        }
+        out.push(x);
+    }
+    Some(out)
+}
+
+fn cut_tt(aig: &Aig, root: u32, leaves: &[u32]) -> TruthTable {
+    let nv = leaves.len();
+    let mut memo: std::collections::HashMap<u32, TruthTable> = Default::default();
+    for (i, &l) in leaves.iter().enumerate() {
+        memo.insert(l, TruthTable::var(nv, i));
+    }
+    fn rec(
+        aig: &Aig,
+        node: u32,
+        memo: &mut std::collections::HashMap<u32, TruthTable>,
+        nv: usize,
+    ) -> TruthTable {
+        if let Some(t) = memo.get(&node) {
+            return t.clone();
+        }
+        if node == 0 {
+            return TruthTable::zeros(nv);
+        }
+        let nd = aig.node(node);
+        let t0 = rec(aig, nd.fan0.node(), memo, nv);
+        let t0 = if nd.fan0.compl() { t0.not() } else { t0 };
+        let t1 = rec(aig, nd.fan1.node(), memo, nv);
+        let t1 = if nd.fan1.compl() { t1.not() } else { t1 };
+        let t = t0.and(&t1);
+        memo.insert(node, t.clone());
+        t
+    }
+    rec(aig, root, &mut memo, nv)
+}
+
+/// Evaluate a mapping on one input assignment (slow; used by tests to
+/// verify the mapping preserves the AIG's functions).
+pub fn eval_mapping(aig: &Aig, m: &LutMapping, inputs: &[bool]) -> Vec<bool> {
+    let mut val = vec![false; aig.n_nodes()];
+    for (i, &b) in inputs.iter().enumerate() {
+        val[i + 1] = b;
+    }
+    for lut in &m.luts {
+        let mut idx = 0usize;
+        for (i, &leaf) in lut.leaves.iter().enumerate() {
+            if val[leaf as usize] {
+                idx |= 1 << i;
+            }
+        }
+        val[lut.root as usize] = lut.tt.get(idx);
+    }
+    aig.outputs
+        .iter()
+        .map(|o| val[o.node() as usize] ^ o.compl())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aig::Lit;
+    use crate::util::SplitMix64;
+
+    fn random_aig(rng: &mut SplitMix64, n_pis: usize, n_ands: usize, n_outs: usize) -> Aig {
+        let mut g = Aig::new(n_pis);
+        let mut lits: Vec<Lit> = (0..n_pis).map(|i| g.pi(i)).collect();
+        for _ in 0..n_ands {
+            let a = lits[rng.range(0, lits.len())];
+            let b = lits[rng.range(0, lits.len())];
+            let a = if rng.bool(0.5) { a.not() } else { a };
+            let b = if rng.bool(0.5) { b.not() } else { b };
+            lits.push(g.and(a, b));
+        }
+        for _ in 0..n_outs {
+            let o = lits[rng.range(0, lits.len())];
+            g.add_output(if rng.bool(0.5) { o.not() } else { o });
+        }
+        g
+    }
+
+    #[test]
+    fn mapping_preserves_function() {
+        let mut rng = SplitMix64::new(44);
+        for _ in 0..10 {
+            let n = rng.range(3, 9);
+            let na = rng.range(5, 60);
+            let g = random_aig(&mut rng, n, na, 3);
+            let m = map_luts(&g, &LutMapConfig::default());
+            for t in 0..50usize {
+                let ins: Vec<bool> = (0..n).map(|i| (t >> i) & 1 == 1 || rng.bool(0.5)).collect();
+                assert_eq!(eval_mapping(&g, &m, &ins), g.eval(&ins));
+            }
+        }
+    }
+
+    #[test]
+    fn single_and_is_one_lut() {
+        let mut g = Aig::new(2);
+        let (a, b) = (g.pi(0), g.pi(1));
+        let x = g.and(a, b);
+        g.add_output(x);
+        let m = map_luts(&g, &LutMapConfig::default());
+        assert_eq!(m.n_luts(), 1);
+        assert_eq!(m.depth, 1);
+        assert_eq!(m.alms(), 1);
+    }
+
+    #[test]
+    fn six_input_and_maps_into_one_lut() {
+        let mut g = Aig::new(6);
+        let lits: Vec<Lit> = (0..6).map(|i| g.pi(i)).collect();
+        let x = g.and_many(&lits);
+        g.add_output(x);
+        let m = map_luts(&g, &LutMapConfig::default());
+        assert_eq!(m.n_luts(), 1, "6-AND should collapse to one 6-LUT");
+        assert_eq!(m.depth, 1);
+    }
+
+    #[test]
+    fn wide_and_needs_two_levels() {
+        let mut g = Aig::new(12);
+        let lits: Vec<Lit> = (0..12).map(|i| g.pi(i)).collect();
+        let x = g.and_many(&lits);
+        g.add_output(x);
+        let m = map_luts(&g, &LutMapConfig::default());
+        assert!(m.depth >= 2);
+        assert!(m.n_luts() >= 3);
+        for ins in [[true; 12], [false; 12]] {
+            assert_eq!(eval_mapping(&g, &m, &ins), g.eval(&ins));
+        }
+    }
+
+    #[test]
+    fn alm_packing_counts_pairs() {
+        let m = LutMapping {
+            luts: vec![],
+            depth: 0,
+            input_histogram: vec![0, 0, 4, 2, 0, 1, 3], // 6 small, 4 big
+        };
+        assert_eq!(m.alms(), 4 + 3);
+    }
+
+    #[test]
+    fn depth_not_much_worse_than_aig_bound() {
+        // LUT depth must be <= AIG depth (K>=2 merges levels).
+        let mut rng = SplitMix64::new(9);
+        let g = random_aig(&mut rng, 8, 80, 4);
+        let m = map_luts(&g, &LutMapConfig::default());
+        assert!(m.depth <= g.depth());
+    }
+}

@@ -1,0 +1,299 @@
+//! nullanet — CLI for the NullaNet reproduction.
+//!
+//! Subcommands:
+//!   tables               print the paper's constant tables (1, 2, 3)
+//!   synth                run Algorithm 2 on a trained net, report costs
+//!   eval                 accuracy of an engine on the test set
+//!   serve                run the TCP serving front-end
+//!
+//! Python is never invoked here: everything reads `artifacts/` produced
+//! once by `make artifacts`.
+
+use anyhow::{anyhow, Result};
+use std::sync::Arc;
+
+use nullanet::cli::Cli;
+use nullanet::coordinator::{engine, Coordinator, CoordinatorConfig};
+use nullanet::cost::FpgaModel;
+use nullanet::{bench_util, data, isf, model, synth};
+
+fn main() {
+    nullanet::logging::init_from_env();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().cloned().unwrap_or_else(|| "help".into());
+    let rest = if args.is_empty() { vec![] } else { args[1..].to_vec() };
+    let code = match cmd.as_str() {
+        "tables" => run_tables(),
+        "synth" => run_synth(&rest),
+        "eval" => run_eval(&rest),
+        "serve" => run_serve(&rest),
+        "codegen" => run_codegen(&rest),
+        _ => {
+            eprintln!(
+                "nullanet — reduced-memory-access inference via Boolean logic\n\n\
+                 usage: nullanet <tables|synth|eval|serve|codegen> [--help]"
+            );
+            Ok(())
+        }
+    }
+    .map(|_| 0)
+    .unwrap_or_else(|e| {
+        eprintln!("error: {e:#}");
+        1
+    });
+    std::process::exit(code);
+}
+
+fn run_tables() -> Result<()> {
+    let mut t1 = bench_util::Table::new(
+        "Table 1: Haswell latencies (paper constants)",
+        &["Operation", "Detail", "Latency (cycles)"],
+    );
+    for r in nullanet::cost::TABLE1 {
+        let cycles = if r.cycles_lo == r.cycles_hi {
+            format!("{}", r.cycles_lo)
+        } else {
+            format!("{} - {}", r.cycles_lo, r.cycles_hi)
+        };
+        t1.row(&[r.name.into(), r.detail.into(), cycles]);
+    }
+    t1.print();
+    let mut t2 = bench_util::Table::new(
+        "Table 2: 45nm energy (paper constants)",
+        &["Operation", "Bits", "Energy (pJ)"],
+    );
+    for r in nullanet::cost::TABLE2 {
+        let pj = if r.pj_lo == r.pj_hi {
+            format!("{}", r.pj_lo)
+        } else {
+            format!("{} - {}", r.pj_lo, r.pj_hi)
+        };
+        t2.row(&[r.name.into(), r.bits.to_string(), pj]);
+    }
+    t2.print();
+    let mut t3 = bench_util::Table::new(
+        "Table 3: FP units on Arria 10 (calibration anchor)",
+        &["Unit", "ALMs", "Registers", "Fmax (MHz)", "Latency (ns)", "Power (mW)"],
+    );
+    for u in nullanet::cost::TABLE3 {
+        t3.row(&[
+            format!("{} ({})", u.name, u.bits),
+            u.alms.to_string(),
+            u.registers.to_string(),
+            format!("{:.2}", u.fmax_mhz),
+            format!("{:.2}", u.latency_ns),
+            format!("{:.2}", u.power_mw),
+        ]);
+    }
+    t3.print();
+    Ok(())
+}
+
+fn synth_net(
+    net: &model::NetArtifacts,
+    cap: usize,
+    threads: usize,
+) -> Result<Vec<synth::LayerSynthesis>> {
+    let obs = isf::load_observations(&net.dir.join("activations.bin"))?;
+    let cfg = synth::SynthConfig {
+        threads,
+        ..Default::default()
+    };
+    let mut out = Vec::new();
+    for o in &obs {
+        let t0 = std::time::Instant::now();
+        let layer_isf = isf::extract(o, &isf::IsfConfig { max_patterns: cap });
+        let s = synth::optimize_layer(&o.name, &layer_isf, &cfg);
+        let violations = synth::verify_layer(&layer_isf, &s);
+        nullanet::info!(
+            "synth {}: {} distinct patterns, {} cubes, {} ANDs ({} pre-opt), {} LUTs, {} ALMs, depth {}, {} violations, {:.1?}",
+            o.name,
+            layer_isf.n_distinct,
+            s.total_cubes,
+            s.aig.n_ands(),
+            s.ands_initial,
+            s.mapping.n_luts(),
+            s.mapping.alms(),
+            s.mapping.depth,
+            violations,
+            t0.elapsed()
+        );
+        if violations > 0 {
+            return Err(anyhow!("{}: {} ISF violations", o.name, violations));
+        }
+        out.push(s);
+    }
+    Ok(out)
+}
+
+fn run_synth(args: &[String]) -> Result<()> {
+    let p = Cli::new("nullanet synth", "run Algorithm 2 on a trained net")
+        .opt("net", "net11", "network (net11|net21)")
+        .opt("cap", "4000", "max distinct ISF patterns per layer (0 = all)")
+        .opt("threads", "0", "worker threads (0 = auto)")
+        .parse(args)
+        .map_err(|h| anyhow!("{h}"))?;
+    let art = model::Artifacts::load(&nullanet::artifacts_dir())?;
+    let net = art.net(p.str("net"))?;
+    let threads = if p.usize("threads") == 0 {
+        nullanet::util::default_threads()
+    } else {
+        p.usize("threads")
+    };
+    let layers = synth_net(net, p.usize("cap"), threads)?;
+    // Table 5 / 8 style report.
+    let fpga = FpgaModel::default();
+    let mut table = bench_util::Table::new(
+        &format!("Synthesized layer costs ({})", net.name),
+        &["Layer", "ALMs", "Registers (bits)", "Fmax (MHz)", "Latency (ns)", "Power (mW)"],
+    );
+    let mut stages = Vec::new();
+    for l in &layers {
+        let c = l.hw_cost(&fpga);
+        table.row(&[
+            l.name.clone(),
+            c.alms.to_string(),
+            c.registers.to_string(),
+            format!("{:.2}", c.fmax_mhz),
+            format!("{:.2}", c.latency_ns),
+            format!("{:.2}", c.power_mw),
+        ]);
+        stages.push(c);
+    }
+    let total = fpga.cost_pipeline(&stages);
+    table.row(&[
+        "TOTAL (macro-pipelined)".into(),
+        total.alms.to_string(),
+        total.registers.to_string(),
+        format!("{:.2}", total.fmax_mhz),
+        format!("{:.2}", total.latency_ns),
+        format!("{:.2}", total.power_mw),
+    ]);
+    table.print();
+    Ok(())
+}
+
+fn build_engine(
+    art: &model::Artifacts,
+    net_name: &str,
+    engine_name: &str,
+    cap: usize,
+) -> Result<Arc<dyn engine::InferenceEngine>> {
+    let net = art.net(net_name)?;
+    Ok(match engine_name {
+        "logic" => {
+            let layers = synth_net(net, cap, nullanet::util::default_threads())?;
+            let tapes = layers.into_iter().map(|l| l.tape).collect();
+            Arc::new(engine::LogicEngine::new(net.clone(), tapes)?)
+        }
+        "threshold" => Arc::new(engine::ThresholdEngine::new(net.clone())?),
+        "xla" => Arc::new(engine::XlaEngine::from_net(net, "model_b64", 64, 784, 10)?),
+        other => return Err(anyhow!("unknown engine {other} (logic|threshold|xla)")),
+    })
+}
+
+fn run_eval(args: &[String]) -> Result<()> {
+    let p = Cli::new("nullanet eval", "accuracy of an engine on the test set")
+        .opt("net", "net11", "network")
+        .opt("engine", "logic", "logic|threshold|xla|f32")
+        .opt("cap", "4000", "ISF pattern cap for logic synthesis")
+        .opt("limit", "0", "evaluate only the first N test samples (0 = all)")
+        .parse(args)
+        .map_err(|h| anyhow!("{h}"))?;
+    let art = model::Artifacts::load(&nullanet::artifacts_dir())?;
+    let net = art.net(p.str("net"))?;
+    let mut ds = data::Dataset::load(&art.test_path)?;
+    if p.usize("limit") > 0 {
+        ds = ds.take(p.usize("limit"));
+    }
+    let acc = if p.str("engine") == "f32" {
+        let binary = net.name.contains("net11") || net.name.contains("net21");
+        net.accuracy_f32(&ds, binary)?
+    } else {
+        let eng = build_engine(&art, p.str("net"), p.str("engine"), p.usize("cap"))?;
+        let mut hits = 0usize;
+        for chunk_start in (0..ds.n).step_by(256) {
+            let end = (chunk_start + 256).min(ds.n);
+            let images: Vec<&[f32]> = (chunk_start..end).map(|i| ds.image(i)).collect();
+            let out = eng.infer_batch(&images);
+            for (k, logits) in out.iter().enumerate() {
+                if model::argmax(logits) == ds.y[chunk_start + k] as usize {
+                    hits += 1;
+                }
+            }
+        }
+        hits as f64 / ds.n as f64
+    };
+    println!(
+        "{} / {}: accuracy {:.4} over {} samples (python-side reference: {:.4})",
+        p.str("net"),
+        p.str("engine"),
+        acc,
+        ds.n,
+        net.accuracy_test
+    );
+    Ok(())
+}
+
+fn run_codegen(args: &[String]) -> Result<()> {
+    // Pythonize() (Algorithm 2 line 6): emit the optimized layers as
+    // standalone Rust source with the parameters baked into the wiring.
+    let p = Cli::new("nullanet codegen", "emit synthesized layers as Rust source")
+        .opt("net", "net11", "network")
+        .opt("cap", "2000", "ISF pattern cap")
+        .opt("out", "generated_layers.rs", "output file")
+        .parse(args)
+        .map_err(|h| anyhow!("{h}"))?;
+    let art = model::Artifacts::load(&nullanet::artifacts_dir())?;
+    let net = art.net(p.str("net"))?;
+    let layers = synth_net(net, p.usize("cap"), nullanet::util::default_threads())?;
+    let mut src = String::from(concat!(
+        "//! Generated by `nullanet codegen` — the Pythonize() step of\n",
+        "//! Algorithm 2.  Each function evaluates one synthesized layer on\n",
+        "//! 64 samples at once (bit-planes); model parameters are folded\n",
+        "//! into the instruction stream (zero parameter loads).\n\n",
+    ));
+    for l in &layers {
+        src.push_str(&nullanet::netlist::tape_to_rust_source(
+            &l.tape,
+            &format!("{}_{}", net.name, l.name),
+        ));
+        src.push('\n');
+    }
+    std::fs::write(p.str("out"), &src)?;
+    println!(
+        "wrote {} ({} layers, {} total ops)",
+        p.str("out"),
+        layers.len(),
+        layers.iter().map(|l| l.tape.n_ops()).sum::<usize>()
+    );
+    Ok(())
+}
+
+fn run_serve(args: &[String]) -> Result<()> {
+    let p = Cli::new("nullanet serve", "TCP JSON-lines inference server")
+        .opt("net", "net11", "network")
+        .opt("engine", "logic", "logic|threshold|xla")
+        .opt("cap", "4000", "ISF pattern cap for logic synthesis")
+        .opt("addr", "127.0.0.1:7878", "bind address")
+        .opt("workers", "2", "coordinator worker threads")
+        .parse(args)
+        .map_err(|h| anyhow!("{h}"))?;
+    let art = model::Artifacts::load(&nullanet::artifacts_dir())?;
+    let eng = build_engine(&art, p.str("net"), p.str("engine"), p.usize("cap"))?;
+    nullanet::info!("engine {} ready", eng.name());
+    let coord = Arc::new(Coordinator::start(
+        eng,
+        CoordinatorConfig {
+            workers: p.usize("workers").max(1),
+            ..Default::default()
+        },
+    ));
+    let server = nullanet::server::Server::start(p.str("addr"), Arc::clone(&coord))?;
+    println!("listening on {} — protocol: one JSON object per line", server.addr);
+    println!("  {{\"image\": [f32; 784]}} | {{\"cmd\": \"metrics\"}} | {{\"cmd\": \"ping\"}}");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(5));
+        nullanet::info!("{}", coord.metrics.summary());
+    }
+}

@@ -1,0 +1,512 @@
+//! Artifact loading + reference forward passes (the accuracy oracle).
+//!
+//! Loads `artifacts/manifest.json` + per-net `weights.bin` (raw LE
+//! tensors) and provides:
+//!   * the folded-BN f32 forward pass (matches the JAX oracle bit-close);
+//!   * the bit-domain threshold forward pass (Eq. 1), which is the exact
+//!     function the synthesized logic must reproduce;
+//!   * accuracy evaluation over a [`crate::data::Dataset`].
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::jsonio::Json;
+use crate::util::BitVec;
+
+/// A raw tensor from weights.bin.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub f32s: Vec<f32>, // u8 tensors are widened on load
+}
+
+impl Tensor {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Which architecture a net entry is.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Arch {
+    Mlp { sizes: Vec<usize> },
+    Cnn { c1: usize, c2: usize, fc_in: usize },
+}
+
+/// One trained network's artifacts.
+#[derive(Clone, Debug)]
+pub struct NetArtifacts {
+    pub name: String,
+    pub arch: Arch,
+    pub tensors: BTreeMap<String, Tensor>,
+    pub accuracy_test: f64,
+    pub dir: PathBuf,
+    pub hlo: BTreeMap<String, PathBuf>,
+    /// Per-HLO-graph weight-argument order (after the data input).
+    pub hlo_params: BTreeMap<String, Vec<String>>,
+    pub isf_layers: Vec<(String, usize, usize, usize)>, // name, n_in, n_out, n_samples
+}
+
+/// The whole artifacts directory.
+#[derive(Clone, Debug)]
+pub struct Artifacts {
+    pub root: PathBuf,
+    pub nets: BTreeMap<String, NetArtifacts>,
+    pub train_path: PathBuf,
+    pub test_path: PathBuf,
+    pub manifest: Json,
+}
+
+impl Artifacts {
+    pub fn load(root: &Path) -> Result<Artifacts> {
+        let mpath = root.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("read {}", mpath.display()))?;
+        let manifest = Json::parse(&text).map_err(|e| anyhow!("parse manifest: {e}"))?;
+        let mut nets = BTreeMap::new();
+        let nets_json = manifest
+            .get("nets")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing nets"))?;
+        for (name, entry) in nets_json {
+            nets.insert(name.clone(), load_net(root, name, entry)?);
+        }
+        let ds = manifest.get("dataset").ok_or_else(|| anyhow!("no dataset"))?;
+        let train_path = root.join(ds.get("train").and_then(Json::as_str).unwrap_or("dataset/train.bin"));
+        let test_path = root.join(ds.get("test").and_then(Json::as_str).unwrap_or("dataset/test.bin"));
+        Ok(Artifacts { root: root.to_path_buf(), nets, train_path, test_path, manifest })
+    }
+
+    pub fn net(&self, name: &str) -> Result<&NetArtifacts> {
+        self.nets
+            .get(name)
+            .ok_or_else(|| anyhow!("net {name} not in artifacts"))
+    }
+}
+
+fn load_net(root: &Path, name: &str, entry: &Json) -> Result<NetArtifacts> {
+    let dir = root.join(name);
+    let arch_json = entry.get("arch").ok_or_else(|| anyhow!("{name}: no arch"))?;
+    let arch = match arch_json.get("kind").and_then(Json::as_str) {
+        Some("mlp") => Arch::Mlp {
+            sizes: arch_json
+                .get("sizes")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("mlp sizes"))?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect(),
+        },
+        Some("cnn") => Arch::Cnn {
+            c1: arch_json.get("c1").and_then(Json::as_usize).unwrap_or(10),
+            c2: arch_json.get("c2").and_then(Json::as_usize).unwrap_or(20),
+            fc_in: arch_json.get("fc_in").and_then(Json::as_usize).unwrap_or(500),
+        },
+        k => bail!("{name}: unknown arch kind {k:?}"),
+    };
+
+    // Tensors.
+    let blob = std::fs::read(dir.join("weights.bin"))
+        .with_context(|| format!("{name}: weights.bin"))?;
+    let mut tensors = BTreeMap::new();
+    let tj = entry.get("tensors").and_then(Json::as_obj).ok_or_else(|| anyhow!("tensors"))?;
+    for (tname, t) in tj {
+        let off = t.get("offset").and_then(Json::as_usize).unwrap_or(0);
+        let nbytes = t.get("nbytes").and_then(Json::as_usize).unwrap_or(0);
+        let shape: Vec<usize> = t
+            .get("shape")
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().filter_map(Json::as_usize).collect())
+            .unwrap_or_default();
+        let dtype = t.get("dtype").and_then(Json::as_str).unwrap_or("f32");
+        let raw = blob
+            .get(off..off + nbytes)
+            .ok_or_else(|| anyhow!("{name}/{tname}: blob range"))?;
+        let f32s: Vec<f32> = match dtype {
+            "f32" => raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect(),
+            "u8" => raw.iter().map(|&b| b as f32).collect(),
+            "i32" => raw
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes(c.try_into().unwrap()) as f32)
+                .collect(),
+            other => bail!("{name}/{tname}: dtype {other}"),
+        };
+        tensors.insert(tname.clone(), Tensor { shape, f32s });
+    }
+
+    let mut hlo = BTreeMap::new();
+    if let Some(h) = entry.get("hlo").and_then(Json::as_obj) {
+        for (k, v) in h {
+            if let Some(rel) = v.as_str() {
+                hlo.insert(k.clone(), root.join(rel));
+            }
+        }
+    }
+    let mut hlo_params = BTreeMap::new();
+    if let Some(h) = entry.get("hlo_params").and_then(Json::as_obj) {
+        for (k, v) in h {
+            let names: Vec<String> = v
+                .as_arr()
+                .map(|a| a.iter().filter_map(|x| x.as_str().map(String::from)).collect())
+                .unwrap_or_default();
+            hlo_params.insert(k.clone(), names);
+        }
+    }
+
+    let isf_layers = entry
+        .get("isf_layers")
+        .and_then(Json::as_arr)
+        .map(|a| {
+            a.iter()
+                .filter_map(|l| {
+                    Some((
+                        l.get("name")?.as_str()?.to_string(),
+                        l.get("n_in")?.as_usize()?,
+                        l.get("n_out")?.as_usize()?,
+                        l.get("n_samples")?.as_usize()?,
+                    ))
+                })
+                .collect()
+        })
+        .unwrap_or_default();
+
+    Ok(NetArtifacts {
+        name: name.to_string(),
+        arch,
+        tensors,
+        accuracy_test: entry
+            .at(&["accuracy", "test"])
+            .and_then(Json::as_f64)
+            .unwrap_or(f64::NAN),
+        dir,
+        hlo,
+        hlo_params,
+        isf_layers,
+    })
+}
+
+// ---------------------------------------------------------------------
+// Reference forward passes
+// ---------------------------------------------------------------------
+
+impl NetArtifacts {
+    fn t(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow!("{}: tensor {name} missing", self.name))
+    }
+
+    /// Folded-BN f32 forward for one image (784 floats) → 10 logits.
+    /// Matches the python `forward_infer` oracle.
+    pub fn forward_f32(&self, img: &[f32], binary: bool) -> Result<Vec<f32>> {
+        match &self.arch {
+            Arch::Mlp { sizes } => {
+                let mut a = img.to_vec();
+                let nl = sizes.len() - 1;
+                for i in 1..=nl {
+                    let w = self.t(&format!("w{i}"))?;
+                    let s = self.t(&format!("scale{i}"))?;
+                    let b = self.t(&format!("bias{i}"))?;
+                    let (n_in, n_out) = (w.shape[0], w.shape[1]);
+                    let mut z = vec![0f32; n_out];
+                    for (k, &x) in a.iter().enumerate().take(n_in) {
+                        if x == 0.0 {
+                            continue;
+                        }
+                        let row = &w.f32s[k * n_out..(k + 1) * n_out];
+                        for (j, &wv) in row.iter().enumerate() {
+                            z[j] += x * wv;
+                        }
+                    }
+                    for j in 0..n_out {
+                        z[j] = z[j] * s.f32s[j] + b.f32s[j];
+                    }
+                    if i < nl {
+                        if binary {
+                            for v in &mut z {
+                                *v = if *v >= 0.0 { 1.0 } else { -1.0 };
+                            }
+                        } else {
+                            for v in &mut z {
+                                *v = v.max(0.0);
+                            }
+                        }
+                    }
+                    a = z;
+                }
+                Ok(a)
+            }
+            Arch::Cnn { c1, c2, fc_in } => {
+                // conv1 (28->26) + act + pool (26->13)
+                let k1 = self.t("k1")?;
+                let s1 = self.t("scale_k1")?;
+                let b1 = self.t("bias_k1")?;
+                let m1 = conv3x3(img, 28, 28, 1, &k1.f32s, *c1, &s1.f32s, &b1.f32s, binary);
+                let p1 = maxpool2(&m1, 26, 26, *c1);
+                // conv2 (13->11) + act + pool (11->5)
+                let k2 = self.t("k2")?;
+                let s2 = self.t("scale_k2")?;
+                let b2 = self.t("bias_k2")?;
+                let m2 = conv3x3(&p1, 13, 13, *c1, &k2.f32s, *c2, &s2.f32s, &b2.f32s, binary);
+                let p2 = maxpool2(&m2, 11, 11, *c2);
+                // fc
+                let w3 = self.t("w3")?;
+                let s3 = self.t("scale_w3")?;
+                let b3 = self.t("bias_w3")?;
+                debug_assert_eq!(p2.len(), *fc_in);
+                let n_out = w3.shape[1];
+                let mut z = vec![0f32; n_out];
+                for (k, &x) in p2.iter().enumerate() {
+                    let row = &w3.f32s[k * n_out..(k + 1) * n_out];
+                    for (j, &wv) in row.iter().enumerate() {
+                        z[j] += x * wv;
+                    }
+                }
+                for j in 0..n_out {
+                    z[j] = z[j] * s3.f32s[j] + b3.f32s[j];
+                }
+                Ok(z)
+            }
+        }
+    }
+
+    /// Classify one image: argmax of the forward pass.
+    pub fn classify_f32(&self, img: &[f32], binary: bool) -> Result<usize> {
+        Ok(argmax(&self.forward_f32(img, binary)?))
+    }
+
+    /// Accuracy over a dataset with the f32 reference path.
+    pub fn accuracy_f32(&self, ds: &crate::data::Dataset, binary: bool) -> Result<f64> {
+        let mut hits = 0usize;
+        for i in 0..ds.n {
+            if self.classify_f32(ds.image(i), binary)? == ds.y[i] as usize {
+                hits += 1;
+            }
+        }
+        Ok(hits as f64 / ds.n as f64)
+    }
+
+    /// Bit-domain threshold spec of a binarized MLP layer `i` (1-based):
+    /// (weights n_in×n_out, theta, flip) with out = [bits·w >= θ] ^ flip.
+    pub fn threshold_layer(&self, i: usize) -> Result<ThresholdLayer> {
+        let w = self.t(&format!("w{i}"))?;
+        let theta = self.t(&format!("theta{i}"))?;
+        let flip = self.t(&format!("flip{i}"))?;
+        Ok(ThresholdLayer {
+            n_in: w.shape[0],
+            n_out: w.shape[1],
+            w: w.f32s.clone(),
+            theta: theta.f32s.clone(),
+            flip: flip.f32s.iter().map(|&f| f != 0.0).collect(),
+        })
+    }
+
+    /// Threshold spec of the CNN's conv2 per-patch function.
+    pub fn threshold_conv2(&self) -> Result<ThresholdLayer> {
+        let w = self.t("k2")?; // (3,3,c1,c2) row-major == (90, 20) flat
+        let theta = self.t("theta_k2")?;
+        let flip = self.t("flip_k2")?;
+        let c2 = *w.shape.last().unwrap();
+        Ok(ThresholdLayer {
+            n_in: w.numel() / c2,
+            n_out: c2,
+            w: w.f32s.clone(),
+            theta: theta.f32s.clone(),
+            flip: flip.f32s.iter().map(|&f| f != 0.0).collect(),
+        })
+    }
+}
+
+/// A McCulloch–Pitts (Eq. 1) layer in the bit domain.
+#[derive(Clone, Debug)]
+pub struct ThresholdLayer {
+    pub n_in: usize,
+    pub n_out: usize,
+    /// Row-major n_in × n_out.
+    pub w: Vec<f32>,
+    pub theta: Vec<f32>,
+    pub flip: Vec<bool>,
+}
+
+impl ThresholdLayer {
+    /// Evaluate on a bit pattern: the exact Boolean function the
+    /// synthesized logic must implement.
+    pub fn eval(&self, bits: &BitVec) -> BitVec {
+        debug_assert_eq!(bits.len(), self.n_in);
+        let mut acc = vec![0f32; self.n_out];
+        for i in bits.iter_ones() {
+            let row = &self.w[i * self.n_out..(i + 1) * self.n_out];
+            for (j, &w) in row.iter().enumerate() {
+                acc[j] += w;
+            }
+        }
+        BitVec::from_bools(
+            (0..self.n_out).map(|j| (acc[j] >= self.theta[j]) ^ self.flip[j]),
+        )
+    }
+
+    /// The single-neuron view (for OptimizeNeuron / enumeration).
+    pub fn neuron(&self, j: usize) -> (Vec<f32>, f32, bool) {
+        let w: Vec<f32> = (0..self.n_in).map(|i| self.w[i * self.n_out + j]).collect();
+        (w, self.theta[j], self.flip[j])
+    }
+}
+
+fn conv3x3(
+    img: &[f32],
+    h: usize,
+    w: usize,
+    cin: usize,
+    k: &[f32], // (3,3,cin,cout) row-major
+    cout: usize,
+    scale: &[f32],
+    bias: &[f32],
+    binary: bool,
+) -> Vec<f32> {
+    let (ho, wo) = (h - 2, w - 2);
+    let mut out = vec![0f32; ho * wo * cout];
+    for y in 0..ho {
+        for x in 0..wo {
+            for dy in 0..3 {
+                for dx in 0..3 {
+                    let base_in = ((y + dy) * w + (x + dx)) * cin;
+                    let base_k = (dy * 3 + dx) * cin * cout;
+                    for ci in 0..cin {
+                        let v = img[base_in + ci];
+                        if v == 0.0 {
+                            continue;
+                        }
+                        let krow = &k[base_k + ci * cout..base_k + (ci + 1) * cout];
+                        let orow = &mut out[(y * wo + x) * cout..(y * wo + x + 1) * cout];
+                        for (o, &kk) in orow.iter_mut().zip(krow) {
+                            *o += v * kk;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    for y in 0..ho * wo {
+        for c in 0..cout {
+            let v = out[y * cout + c] * scale[c] + bias[c];
+            out[y * cout + c] = if binary {
+                if v >= 0.0 {
+                    1.0
+                } else {
+                    -1.0
+                }
+            } else {
+                v.max(0.0)
+            };
+        }
+    }
+    out
+}
+
+fn maxpool2(x: &[f32], h: usize, w: usize, c: usize) -> Vec<f32> {
+    let (ho, wo) = (h / 2, w / 2);
+    let mut out = vec![f32::NEG_INFINITY; ho * wo * c];
+    for y in 0..ho * 2 {
+        for xx in 0..wo * 2 {
+            let (oy, ox) = (y / 2, xx / 2);
+            for cc in 0..c {
+                let v = x[(y * w + xx) * c + cc];
+                let o = &mut out[(oy * wo + ox) * c + cc];
+                if v > *o {
+                    *o = v;
+                }
+            }
+        }
+    }
+    out
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// Read the python-side reference logits (logits.bin: 256×10 f32 LE).
+pub fn load_reference_logits(path: &Path) -> Result<Vec<Vec<f32>>> {
+    let raw = std::fs::read(path)?;
+    let vals: Vec<f32> = raw
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok(vals.chunks(10).map(|c| c.to_vec()).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 3.0, -1.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+    }
+
+    #[test]
+    fn maxpool_semantics() {
+        // 4x4 single channel
+        let x: Vec<f32> = (0..16).map(|v| v as f32).collect();
+        let p = maxpool2(&x, 4, 4, 1);
+        assert_eq!(p, vec![5.0, 7.0, 13.0, 15.0]);
+    }
+
+    #[test]
+    fn conv3x3_identity_kernel() {
+        // Kernel that copies the center pixel.
+        let mut k = vec![0f32; 9];
+        k[4] = 1.0; // dy=1,dx=1
+        let img: Vec<f32> = (0..25).map(|v| v as f32).collect();
+        let out = conv3x3(&img, 5, 5, 1, &k, 1, &[1.0], &[0.0], false);
+        // center pixels of each 3x3 patch = img[1+y][1+x]
+        assert_eq!(out.len(), 9);
+        assert_eq!(out[0], 6.0);
+        assert_eq!(out[8], 18.0);
+    }
+
+    #[test]
+    fn threshold_layer_eval_majority() {
+        // 3-in, 1-out neuron: all weights 1, theta 2 => majority.
+        let l = ThresholdLayer {
+            n_in: 3,
+            n_out: 1,
+            w: vec![1.0, 1.0, 1.0],
+            theta: vec![2.0],
+            flip: vec![false],
+        };
+        let bv = |s: &str| BitVec::from_bools(s.chars().map(|c| c == '1'));
+        assert!(l.eval(&bv("110")).get(0));
+        assert!(l.eval(&bv("111")).get(0));
+        assert!(!l.eval(&bv("100")).get(0));
+        // flip inverts
+        let mut l2 = l.clone();
+        l2.flip[0] = true;
+        assert!(!l2.eval(&bv("110")).get(0));
+        assert!(l2.eval(&bv("100")).get(0));
+    }
+
+    #[test]
+    fn neuron_extraction() {
+        let l = ThresholdLayer {
+            n_in: 2,
+            n_out: 2,
+            w: vec![1.0, 2.0, 3.0, 4.0], // row-major: in0->(1,2), in1->(3,4)
+            theta: vec![0.5, 0.6],
+            flip: vec![false, true],
+        };
+        let (w, t, f) = l.neuron(1);
+        assert_eq!(w, vec![2.0, 4.0]);
+        assert_eq!(t, 0.6);
+        assert!(f);
+    }
+}

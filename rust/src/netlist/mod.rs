@@ -1,0 +1,16 @@
+//! The request-path execution engine: a linear "tape" compiled from an
+//! AIG, evaluated 64 samples at a time with pure bitwise ops.
+//!
+//! This is the `Pythonize()` step of Algorithm 2 re-imagined for the Rust
+//! serving stack: the optimized Boolean network is flattened into a flat
+//! instruction array (no pointers, no hash maps, cache-linear) and each
+//! instruction is `dst = (a ^ ca) & (b ^ cb)` on u64 sample planes.
+//! Model parameters do not exist at this point — they are folded into the
+//! wiring, which is the paper's "no memory accesses for weights" claim in
+//! CPU form: the only memory traffic is the activation planes themselves.
+
+mod codegen;
+mod tape;
+
+pub use codegen::tape_to_rust_source;
+pub use tape::{LogicTape, TapeOp};

@@ -1,0 +1,211 @@
+//! Flat AIG instruction tape + 64-way bit-parallel evaluation.
+
+use crate::aig::Aig;
+
+/// One AND instruction: dst = (buf[a] ^ ca) & (buf[b] ^ cb).
+/// Complement flags are stored as full-width masks (0 or !0) so the hot
+/// loop is branch-free.
+#[derive(Clone, Copy, Debug)]
+pub struct TapeOp {
+    pub a: u32,
+    pub b: u32,
+    pub ca: u64,
+    pub cb: u64,
+}
+
+/// A compiled logic network: `n_inputs` input planes, then `ops.len()`
+/// computed planes; outputs pick (plane, complement) pairs.
+#[derive(Clone, Debug)]
+pub struct LogicTape {
+    pub n_inputs: usize,
+    pub ops: Vec<TapeOp>,
+    /// (plane index, complement mask) per output.
+    pub outputs: Vec<(u32, u64)>,
+    /// Scratch plane count = n_inputs + 1 (const) + ops.
+    n_planes: usize,
+}
+
+impl LogicTape {
+    /// Compile an AIG into a tape.  Plane layout: plane 0 = constant
+    /// FALSE, planes 1..=n_pis = inputs, then one plane per AND op.
+    pub fn from_aig(aig: &Aig) -> LogicTape {
+        let n_pis = aig.n_pis();
+        let mut ops = Vec::with_capacity(aig.n_ands());
+        for n in (n_pis + 1)..aig.n_nodes() {
+            let nd = aig.node(n as u32);
+            ops.push(TapeOp {
+                a: nd.fan0.node(),
+                b: nd.fan1.node(),
+                ca: if nd.fan0.compl() { !0 } else { 0 },
+                cb: if nd.fan1.compl() { !0 } else { 0 },
+            });
+        }
+        let outputs = aig
+            .outputs
+            .iter()
+            .map(|o| (o.node(), if o.compl() { !0u64 } else { 0 }))
+            .collect();
+        LogicTape {
+            n_inputs: n_pis,
+            ops,
+            outputs,
+            n_planes: aig.n_nodes(),
+        }
+    }
+
+    pub fn n_ops(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn n_planes(&self) -> usize {
+        self.n_planes
+    }
+
+    /// Allocate a scratch buffer for [`LogicTape::eval_into`].
+    pub fn make_scratch(&self) -> Vec<u64> {
+        vec![0; self.n_planes]
+    }
+
+    /// Evaluate one 64-sample word-plane batch.
+    ///
+    /// `inputs[i]` = plane for input i (bit s = sample s); `outputs` is
+    /// filled with one word per output.  `scratch` must come from
+    /// [`LogicTape::make_scratch`] (contents are overwritten).
+    pub fn eval_into(&self, inputs: &[u64], outputs: &mut [u64], scratch: &mut [u64]) {
+        debug_assert_eq!(inputs.len(), self.n_inputs);
+        debug_assert_eq!(outputs.len(), self.outputs.len());
+        debug_assert_eq!(scratch.len(), self.n_planes);
+        scratch[0] = 0;
+        scratch[1..=self.n_inputs].copy_from_slice(inputs);
+        let base = self.n_inputs + 1;
+        for (i, op) in self.ops.iter().enumerate() {
+            // SAFETY-free fast path: indices are in-bounds by construction
+            // (fanins always precede the op's own plane).
+            let a = scratch[op.a as usize] ^ op.ca;
+            let b = scratch[op.b as usize] ^ op.cb;
+            scratch[base + i] = a & b;
+        }
+        for (o, (plane, compl)) in outputs.iter_mut().zip(&self.outputs) {
+            *o = scratch[*plane as usize] ^ compl;
+        }
+    }
+
+    /// Convenience: evaluate a batch of ≤64 boolean input rows; returns
+    /// one boolean row per sample.
+    pub fn eval_batch(&self, rows: &[Vec<bool>]) -> Vec<Vec<bool>> {
+        assert!(rows.len() <= 64);
+        let mut inputs = vec![0u64; self.n_inputs];
+        for (s, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), self.n_inputs);
+            for (i, &b) in row.iter().enumerate() {
+                if b {
+                    inputs[i] |= 1 << s;
+                }
+            }
+        }
+        let mut out_words = vec![0u64; self.outputs.len()];
+        let mut scratch = self.make_scratch();
+        self.eval_into(&inputs, &mut out_words, &mut scratch);
+        rows.iter()
+            .enumerate()
+            .map(|(s, _)| {
+                out_words
+                    .iter()
+                    .map(|w| (w >> s) & 1 == 1)
+                    .collect::<Vec<bool>>()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aig::{sim_words, Lit};
+    use crate::util::SplitMix64;
+
+    fn random_aig(rng: &mut SplitMix64, n_pis: usize, n_ands: usize, n_outs: usize) -> Aig {
+        let mut g = Aig::new(n_pis);
+        let mut lits: Vec<Lit> = (0..n_pis).map(|i| g.pi(i)).collect();
+        for _ in 0..n_ands {
+            let a = lits[rng.range(0, lits.len())];
+            let b = lits[rng.range(0, lits.len())];
+            let a = if rng.bool(0.5) { a.not() } else { a };
+            let b = if rng.bool(0.5) { b.not() } else { b };
+            lits.push(g.and(a, b));
+        }
+        for _ in 0..n_outs {
+            let o = lits[rng.range(0, lits.len())];
+            g.add_output(if rng.bool(0.5) { o.not() } else { o });
+        }
+        g
+    }
+
+    #[test]
+    fn tape_matches_aig_sim() {
+        let mut rng = SplitMix64::new(3);
+        for _ in 0..20 {
+            let n = rng.range(2, 12);
+            let (na, no) = (rng.range(1, 100), rng.range(1, 6));
+            let g = random_aig(&mut rng, n, na, no);
+            let tape = LogicTape::from_aig(&g);
+            let inputs: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            let want = sim_words(&g, &inputs);
+            let mut got = vec![0u64; g.outputs.len()];
+            let mut scratch = tape.make_scratch();
+            tape.eval_into(&inputs, &mut got, &mut scratch);
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn eval_batch_row_semantics() {
+        let mut g = Aig::new(2);
+        let (a, b) = (g.pi(0), g.pi(1));
+        let x = g.xor(a, b);
+        let y = g.and(a, b);
+        g.add_output(x);
+        g.add_output(y.not());
+        let tape = LogicTape::from_aig(&g);
+        let rows = vec![
+            vec![false, false],
+            vec![false, true],
+            vec![true, false],
+            vec![true, true],
+        ];
+        let out = tape.eval_batch(&rows);
+        assert_eq!(out[0], vec![false, true]);
+        assert_eq!(out[1], vec![true, true]);
+        assert_eq!(out[2], vec![true, true]);
+        assert_eq!(out[3], vec![false, false]);
+    }
+
+    #[test]
+    fn constant_output() {
+        let mut g = Aig::new(1);
+        g.add_output(Lit::TRUE);
+        g.add_output(Lit::FALSE);
+        let tape = LogicTape::from_aig(&g);
+        let out = tape.eval_batch(&[vec![true], vec![false]]);
+        assert_eq!(out[0], vec![true, false]);
+        assert_eq!(out[1], vec![true, false]);
+    }
+
+    #[test]
+    fn scratch_reuse_is_safe() {
+        let mut rng = SplitMix64::new(8);
+        let g = random_aig(&mut rng, 5, 30, 2);
+        let tape = LogicTape::from_aig(&g);
+        let mut scratch = tape.make_scratch();
+        let mut out1 = vec![0u64; 2];
+        let mut out2 = vec![0u64; 2];
+        let in1: Vec<u64> = (0..5).map(|_| rng.next_u64()).collect();
+        let in2: Vec<u64> = (0..5).map(|_| rng.next_u64()).collect();
+        tape.eval_into(&in1, &mut out1, &mut scratch);
+        tape.eval_into(&in2, &mut out2, &mut scratch);
+        // re-evaluating in1 gives identical results
+        let mut out1b = vec![0u64; 2];
+        tape.eval_into(&in1, &mut out1b, &mut scratch);
+        assert_eq!(out1, out1b);
+    }
+}

@@ -1,0 +1,203 @@
+//! OptimizeNetwork (Algorithm 2, line 8): macro/micro pipelining.
+//!
+//! Each optimized layer is combinational; realizing the whole network
+//! flat would give one huge combinational delay.  Macro-pipelining groups
+//! consecutive layers into stages separated by register planes;
+//! micro-pipelining subdivides a stage's LUT levels further.  Throughput
+//! is set by the slowest stage, latency by the sum of stage delays.
+
+use crate::cost::{FpgaModel, HwCost};
+
+/// A pipelined realization plan.
+#[derive(Clone, Debug)]
+pub struct PipelinePlan {
+    /// Layer index ranges per macro stage (consecutive, covering all).
+    pub stages: Vec<std::ops::Range<usize>>,
+    /// Per-stage combinational delay (ns).
+    pub stage_delay_ns: Vec<f64>,
+    /// Clock period = max stage delay (ns).
+    pub period_ns: f64,
+    /// End-to-end latency = stages × period (classic synchronous pipe).
+    pub latency_ns: f64,
+    /// Throughput at initiation interval 1 (results per second).
+    pub throughput_hz: f64,
+    /// Register bits added at stage boundaries.
+    pub boundary_bits: usize,
+}
+
+/// Partition `layer_delays` into at most `max_stages` consecutive groups
+/// minimizing the maximum group sum (classic linear-partition DP), then
+/// compute the timing summary.  `boundary_widths[i]` = bits crossing the
+/// boundary after layer i (used for register accounting).
+pub fn plan_macro_pipeline(
+    layer_delays_ns: &[f64],
+    boundary_widths: &[usize],
+    max_stages: usize,
+) -> PipelinePlan {
+    let n = layer_delays_ns.len();
+    assert!(n > 0);
+    assert_eq!(boundary_widths.len(), n + 1, "widths include input & output");
+    let k = max_stages.max(1).min(n);
+
+    // DP: cost[i][j] = minimal max-stage-sum partitioning first i layers
+    // into j stages.
+    let prefix: Vec<f64> = std::iter::once(0.0)
+        .chain(layer_delays_ns.iter().scan(0.0, |acc, &d| {
+            *acc += d;
+            Some(*acc)
+        }))
+        .collect();
+    let sum = |a: usize, b: usize| prefix[b] - prefix[a]; // layers a..b
+    let mut cost = vec![vec![f64::INFINITY; k + 1]; n + 1];
+    let mut cut = vec![vec![0usize; k + 1]; n + 1];
+    cost[0][0] = 0.0;
+    for i in 1..=n {
+        for j in 1..=k.min(i) {
+            for p in (j - 1)..i {
+                let c = cost[p][j - 1].max(sum(p, i));
+                if c < cost[i][j] {
+                    cost[i][j] = c;
+                    cut[i][j] = p;
+                }
+            }
+        }
+    }
+    // Pick the stage count minimizing period (more stages never hurt the
+    // period, but don't create empty stages); then reconstruct.
+    let mut best_j = 1;
+    for j in 1..=k {
+        if cost[n][j] < cost[n][best_j] - 1e-12 {
+            best_j = j;
+        }
+    }
+    let mut bounds = vec![n];
+    let mut i = n;
+    let mut j = best_j;
+    while j > 0 {
+        i = cut[i][j];
+        j -= 1;
+        bounds.push(i);
+    }
+    bounds.reverse();
+    let stages: Vec<std::ops::Range<usize>> = bounds
+        .windows(2)
+        .map(|w| w[0]..w[1])
+        .filter(|r| !r.is_empty())
+        .collect();
+
+    let stage_delay_ns: Vec<f64> = stages.iter().map(|r| sum(r.start, r.end)).collect();
+    let period_ns = stage_delay_ns.iter().cloned().fold(0.0, f64::max);
+    let latency_ns = period_ns * stages.len() as f64;
+    // Boundary registers: input plane + every inter-stage boundary +
+    // output plane.
+    let mut boundary_bits = boundary_widths[0] + boundary_widths[n];
+    for r in stages.iter().take(stages.len().saturating_sub(1)) {
+        boundary_bits += boundary_widths[r.end];
+    }
+    PipelinePlan {
+        stages,
+        stage_delay_ns,
+        period_ns,
+        latency_ns,
+        throughput_hz: if period_ns > 0.0 { 1e9 / period_ns } else { f64::INFINITY },
+        boundary_bits,
+    }
+}
+
+/// Micro-pipeline a single stage: split `lut_levels` into `cuts + 1`
+/// sub-stages by inserting register planes of `width` bits, shortening
+/// the critical path.  Returns (new period ns, extra register bits).
+pub fn micro_pipeline(
+    model: &FpgaModel,
+    lut_levels: u32,
+    width: usize,
+    cuts: u32,
+) -> (f64, usize) {
+    let levels_per = (lut_levels + cuts) / (cuts + 1);
+    let period = levels_per as f64 * model.lut_delay_ns + model.stage_overhead_ns;
+    (period, width * cuts as usize)
+}
+
+/// Summarize a set of per-layer hardware costs as a pipelined design
+/// (one layer per macro stage — the paper's Net 1.1.b arrangement).
+pub fn one_stage_per_layer(model: &FpgaModel, stages: &[HwCost]) -> PipelinePlan {
+    let delays: Vec<f64> = stages.iter().map(|s| s.latency_ns).collect();
+    let mut widths = vec![0usize; stages.len() + 1];
+    for (i, s) in stages.iter().enumerate() {
+        // registers field counts the stage's I/O bits; attribute inputs
+        // to the leading boundary and outputs to the trailing one.
+        widths[i] = s.registers / 2;
+        widths[i + 1] = s.registers - s.registers / 2;
+    }
+    let _ = model;
+    plan_macro_pipeline(&delays, &widths, stages.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_layer_single_stage() {
+        let p = plan_macro_pipeline(&[10.0], &[100, 50], 4);
+        assert_eq!(p.stages.len(), 1);
+        assert_eq!(p.period_ns, 10.0);
+        assert_eq!(p.latency_ns, 10.0);
+        assert_eq!(p.boundary_bits, 150);
+    }
+
+    #[test]
+    fn balanced_partition() {
+        // Delays 5,5,10: best 2-stage split is [5,5][10] -> period 10.
+        let p = plan_macro_pipeline(&[5.0, 5.0, 10.0], &[10, 10, 10, 10], 2);
+        assert_eq!(p.period_ns, 10.0);
+        assert_eq!(p.stages.len(), 2);
+        assert_eq!(p.stages[0], 0..2);
+    }
+
+    #[test]
+    fn more_stages_reduce_period() {
+        let d = [4.0, 6.0, 3.0, 7.0];
+        let w = [8, 8, 8, 8, 8];
+        let p1 = plan_macro_pipeline(&d, &w, 1);
+        let p4 = plan_macro_pipeline(&d, &w, 4);
+        assert_eq!(p1.period_ns, 20.0);
+        assert_eq!(p4.period_ns, 7.0);
+        assert!(p4.throughput_hz > p1.throughput_hz);
+        // Latency = stages * period for a synchronous pipe.
+        assert_eq!(p4.latency_ns, 4.0 * 7.0);
+    }
+
+    #[test]
+    fn boundary_bits_count_interfaces() {
+        let p = plan_macro_pipeline(&[1.0, 1.0], &[100, 60, 20], 2);
+        // input 100 + inter-stage 60 + output 20
+        assert_eq!(p.boundary_bits, 180);
+    }
+
+    #[test]
+    fn micro_pipeline_shortens_period() {
+        let m = FpgaModel::default();
+        let (p0, r0) = micro_pipeline(&m, 20, 100, 0);
+        let (p1, r1) = micro_pipeline(&m, 20, 100, 1);
+        assert!(p1 < p0);
+        assert_eq!(r0, 0);
+        assert_eq!(r1, 100);
+    }
+
+    #[test]
+    fn one_stage_per_layer_uses_all_layers() {
+        let m = FpgaModel::default();
+        let s = HwCost {
+            alms: 10,
+            registers: 20,
+            fmax_mhz: 100.0,
+            latency_ns: 10.0,
+            power_mw: 60.0,
+            lut_levels: 5,
+        };
+        let p = one_stage_per_layer(&m, &[s.clone(), s.clone(), s]);
+        assert_eq!(p.stages.len(), 3);
+        assert_eq!(p.period_ns, 10.0);
+    }
+}

@@ -1,0 +1,83 @@
+//! Property-testing mini-framework (proptest is unavailable offline).
+//!
+//! `check(name, n_cases, |rng| ...)` runs a closure over seeded RNGs; on
+//! failure it reports the failing seed so the case can be replayed with
+//! `replay(seed, f)`.  No shrinking — seeds are deterministic and cases
+//! are written to be small.
+
+use crate::util::SplitMix64;
+
+/// Run `f` over `n` deterministic seeds; panic with the failing seed on
+/// the first failure.  `f` should itself assert.
+pub fn check(name: &str, n: u64, mut f: impl FnMut(&mut SplitMix64)) {
+    let base = fnv1a(name.as_bytes());
+    for case in 0..n {
+        let seed = base ^ (case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = SplitMix64::new(seed);
+            f(&mut rng);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}\n  replay: nullanet::prop::replay({seed:#x}, f)");
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn replay(seed: u64, mut f: impl FnMut(&mut SplitMix64)) {
+    let mut rng = SplitMix64::new(seed);
+    f(&mut rng);
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", 50, |rng| {
+            let a = rng.below(1000);
+            let b = rng.below(1000);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            check("always-fails", 3, |_rng| {
+                assert!(false, "intentional");
+            });
+        });
+        let err = r.unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("seed"), "{msg}");
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut v1 = vec![];
+        let mut v2 = vec![];
+        check("det", 5, |rng| v1.push(rng.next_u64()));
+        check("det", 5, |rng| v2.push(rng.next_u64()));
+        // same name -> same seeds -> same draws (order preserved)
+        assert_eq!(v1, v2);
+    }
+}

@@ -1,0 +1,198 @@
+//! TCP JSON-lines front-end over the coordinator.
+//!
+//! Protocol: one JSON object per line.
+//!   request:  {"image": [f32; 784]}            -> inference
+//!             {"cmd": "metrics"}               -> metrics snapshot
+//!             {"cmd": "ping"}                  -> {"ok": true}
+//!   response: {"class": c, "logits": [...], "queue_us": q, "batch": b}
+//!
+//! std::net + a thread per connection (tokio is unavailable offline; the
+//! engine is CPU-bound anyway, so the coordinator's worker pool is the
+//! real concurrency limit).
+
+use anyhow::Result;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::coordinator::Coordinator;
+use crate::jsonio::{num, obj, Json};
+
+/// A running TCP server handle.
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. "127.0.0.1:0") and serve the coordinator.
+    pub fn start(addr: &str, coordinator: Arc<Coordinator>) -> Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let accept_thread = std::thread::Builder::new()
+            .name("nullanet-accept".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let coord = Arc::clone(&coordinator);
+                            std::thread::spawn(move || {
+                                let _ = handle_conn(stream, coord);
+                            });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(Server {
+            addr: local,
+            stop,
+            accept_thread: Some(accept_thread),
+        })
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, coord: Arc<Coordinator>) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match handle_line(&line, &coord) {
+            Ok(j) => j,
+            Err(e) => obj(vec![("error", Json::Str(e.to_string()))]),
+        };
+        writer.write_all(reply.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+    Ok(())
+}
+
+fn handle_line(line: &str, coord: &Coordinator) -> Result<Json> {
+    let j = Json::parse(line).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
+    if let Some(cmd) = j.get("cmd").and_then(Json::as_str) {
+        return Ok(match cmd {
+            "ping" => obj(vec![("ok", Json::Bool(true))]),
+            "metrics" => obj(vec![
+                ("requests", num(coord.metrics.requests() as f64)),
+                ("batches", num(coord.metrics.batches() as f64)),
+                ("mean_batch", num(coord.metrics.mean_batch_size())),
+                ("p50_us", num(coord.metrics.latency_percentile_us(0.5) as f64)),
+                ("p99_us", num(coord.metrics.latency_percentile_us(0.99) as f64)),
+            ]),
+            other => obj(vec![("error", Json::Str(format!("unknown cmd {other}")))]),
+        });
+    }
+    let img = j
+        .get("image")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("missing image"))?;
+    let image: Vec<f32> = img.iter().filter_map(|v| v.as_f64()).map(|f| f as f32).collect();
+    let resp = coord.infer(image)?;
+    Ok(obj(vec![
+        ("class", num(resp.class as f64)),
+        (
+            "logits",
+            Json::Arr(resp.logits.iter().map(|&l| num(l as f64)).collect()),
+        ),
+        ("queue_us", num(resp.queue_us as f64)),
+        ("batch", num(resp.batch_size as f64)),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{engine::InferenceEngine, CoordinatorConfig};
+
+    struct Echo;
+    impl InferenceEngine for Echo {
+        fn infer_batch(&self, images: &[&[f32]]) -> Vec<Vec<f32>> {
+            images
+                .iter()
+                .map(|img| {
+                    let mut l = vec![0.0; 10];
+                    l[img.iter().sum::<f32>() as usize % 10] = 1.0;
+                    l
+                })
+                .collect()
+        }
+        fn name(&self) -> &str {
+            "echo"
+        }
+    }
+
+    #[test]
+    fn tcp_roundtrip() {
+        let coord = Arc::new(Coordinator::start(
+            Arc::new(Echo),
+            CoordinatorConfig::default(),
+        ));
+        let server = Server::start("127.0.0.1:0", Arc::clone(&coord)).unwrap();
+        let mut conn = TcpStream::connect(server.addr).unwrap();
+        conn.write_all(b"{\"cmd\": \"ping\"}\n{\"image\": [2.0, 3.0]}\n")
+            .unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"ok\":true"), "{line}");
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"class\":5"), "{line}");
+        drop(conn);
+        server.shutdown();
+    }
+
+    #[test]
+    fn malformed_json_reports_error() {
+        let coord = Arc::new(Coordinator::start(
+            Arc::new(Echo),
+            CoordinatorConfig::default(),
+        ));
+        let server = Server::start("127.0.0.1:0", Arc::clone(&coord)).unwrap();
+        let mut conn = TcpStream::connect(server.addr).unwrap();
+        conn.write_all(b"not json\n").unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("error"), "{line}");
+        drop(conn);
+        server.shutdown();
+    }
+
+    #[test]
+    fn metrics_endpoint() {
+        let coord = Arc::new(Coordinator::start(
+            Arc::new(Echo),
+            CoordinatorConfig::default(),
+        ));
+        coord.infer(vec![1.0]).unwrap();
+        let server = Server::start("127.0.0.1:0", Arc::clone(&coord)).unwrap();
+        let mut conn = TcpStream::connect(server.addr).unwrap();
+        conn.write_all(b"{\"cmd\": \"metrics\"}\n").unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"requests\":1"), "{line}");
+        drop(conn);
+        server.shutdown();
+    }
+}

@@ -1,0 +1,259 @@
+//! A packed, fixed-width bit vector over u64 words.
+//!
+//! Used for ISF input/output patterns (one pattern = one `BitVec` slice),
+//! cube masks, and the 64-sample-parallel simulation planes.  LSB-first
+//! within words, matching the python exporter's `np.packbits(...,
+//! bitorder="little")`.
+
+/// A growable bit vector packed into u64 words, LSB-first.
+#[derive(Clone, PartialEq, Eq, Hash, Default)]
+pub struct BitVec {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl BitVec {
+    /// All-zeros vector of `len` bits.
+    pub fn zeros(len: usize) -> Self {
+        BitVec {
+            words: vec![0; super::words_for(len)],
+            len,
+        }
+    }
+
+    /// All-ones vector of `len` bits (trailing bits of the last word zero).
+    pub fn ones(len: usize) -> Self {
+        let mut v = BitVec {
+            words: vec![!0u64; super::words_for(len)],
+            len,
+        };
+        v.mask_tail();
+        v
+    }
+
+    /// Build from an iterator of bools.
+    pub fn from_bools(bits: impl IntoIterator<Item = bool>) -> Self {
+        let mut v = BitVec::zeros(0);
+        for b in bits {
+            v.push(b);
+        }
+        v
+    }
+
+    /// Build from packed little-endian bytes (LSB-first), `len` bits.
+    pub fn from_packed_bytes(bytes: &[u8], len: usize) -> Self {
+        let mut v = BitVec::zeros(len);
+        for (i, &b) in bytes.iter().enumerate() {
+            if b == 0 {
+                continue;
+            }
+            let word = (i * 8) / 64;
+            let shift = (i * 8) % 64;
+            if word < v.words.len() {
+                v.words[word] |= (b as u64) << shift;
+            }
+        }
+        v.mask_tail();
+        v
+    }
+
+    fn mask_tail(&mut self) {
+        let rem = self.len % 64;
+        if rem != 0 {
+            if let Some(last) = self.words.last_mut() {
+                *last &= (1u64 << rem) - 1;
+            }
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, v: bool) {
+        debug_assert!(i < self.len);
+        let w = &mut self.words[i / 64];
+        if v {
+            *w |= 1 << (i % 64);
+        } else {
+            *w &= !(1 << (i % 64));
+        }
+    }
+
+    pub fn push(&mut self, v: bool) {
+        if self.len % 64 == 0 {
+            self.words.push(0);
+        }
+        self.len += 1;
+        let i = self.len - 1;
+        if v {
+            self.words[i / 64] |= 1 << (i % 64);
+        }
+    }
+
+    /// Number of set bits.
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Raw word access (for the hot simulation loops).
+    #[inline]
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    #[inline]
+    pub fn words_mut(&mut self) -> &mut [u64] {
+        &mut self.words
+    }
+
+    /// Index of the first set bit, if any.
+    pub fn first_one(&self) -> Option<usize> {
+        for (wi, &w) in self.words.iter().enumerate() {
+            if w != 0 {
+                return Some(wi * 64 + w.trailing_zeros() as usize);
+            }
+        }
+        None
+    }
+
+    /// Iterator over indices of set bits.
+    pub fn iter_ones(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            let mut w = w;
+            std::iter::from_fn(move || {
+                if w == 0 {
+                    None
+                } else {
+                    let b = w.trailing_zeros() as usize;
+                    w &= w - 1;
+                    Some(wi * 64 + b)
+                }
+            })
+        })
+    }
+
+    /// self |= other (lengths must match).
+    pub fn or_assign(&mut self, other: &BitVec) {
+        debug_assert_eq!(self.len, other.len);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a |= b;
+        }
+    }
+
+    /// self &= other.
+    pub fn and_assign(&mut self, other: &BitVec) {
+        debug_assert_eq!(self.len, other.len);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a &= b;
+        }
+    }
+
+    /// true iff no bits set.
+    pub fn is_zero(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    /// Hamming distance.
+    pub fn hamming(&self, other: &BitVec) -> usize {
+        debug_assert_eq!(self.len, other.len);
+        self.words
+            .iter()
+            .zip(&other.words)
+            .map(|(a, b)| (a ^ b).count_ones() as usize)
+            .sum()
+    }
+}
+
+impl std::fmt::Debug for BitVec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "BitVec[")?;
+        for i in 0..self.len.min(128) {
+            write!(f, "{}", self.get(i) as u8)?;
+        }
+        if self.len > 128 {
+            write!(f, "…")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_ones() {
+        let z = BitVec::zeros(70);
+        assert_eq!(z.count_ones(), 0);
+        let o = BitVec::ones(70);
+        assert_eq!(o.count_ones(), 70);
+        assert_eq!(o.words().len(), 2);
+        // tail masked
+        assert_eq!(o.words()[1] >> 6, 0);
+    }
+
+    #[test]
+    fn set_get_push() {
+        let mut v = BitVec::zeros(10);
+        v.set(3, true);
+        v.set(9, true);
+        assert!(v.get(3) && v.get(9) && !v.get(0));
+        v.set(3, false);
+        assert!(!v.get(3));
+        let mut w = BitVec::default();
+        for i in 0..130 {
+            w.push(i % 3 == 0);
+        }
+        assert_eq!(w.len(), 130);
+        assert_eq!(w.count_ones(), (0..130).filter(|i| i % 3 == 0).count());
+    }
+
+    #[test]
+    fn packed_bytes_lsb_first() {
+        // byte 0 = 0b0000_0101 -> bits 0 and 2 set
+        let v = BitVec::from_packed_bytes(&[0b101, 0x80], 16);
+        assert!(v.get(0) && v.get(2) && !v.get(1));
+        assert!(v.get(15));
+        assert_eq!(v.count_ones(), 3);
+    }
+
+    #[test]
+    fn iter_ones_matches_get() {
+        let mut v = BitVec::zeros(200);
+        for i in [0, 63, 64, 100, 199] {
+            v.set(i, true);
+        }
+        let ones: Vec<_> = v.iter_ones().collect();
+        assert_eq!(ones, vec![0, 63, 64, 100, 199]);
+        assert_eq!(v.first_one(), Some(0));
+    }
+
+    #[test]
+    fn boolean_ops() {
+        let a = BitVec::from_bools([true, true, false, false]);
+        let b = BitVec::from_bools([true, false, true, false]);
+        let mut o = a.clone();
+        o.or_assign(&b);
+        assert_eq!(o, BitVec::from_bools([true, true, true, false]));
+        let mut n = a.clone();
+        n.and_assign(&b);
+        assert_eq!(n, BitVec::from_bools([true, false, false, false]));
+        assert_eq!(a.hamming(&b), 2);
+        assert!(!a.is_zero());
+        assert!(BitVec::zeros(5).is_zero());
+    }
+}

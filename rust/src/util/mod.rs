@@ -1,0 +1,91 @@
+//! Small shared utilities: packed bit vectors and a deterministic PRNG.
+
+mod bitvec;
+mod rng;
+
+pub use bitvec::BitVec;
+pub use rng::SplitMix64;
+
+/// Ceil division for usizes.
+#[inline]
+pub fn div_ceil(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// Number of u64 words needed to hold `bits` bits.
+#[inline]
+pub fn words_for(bits: usize) -> usize {
+    div_ceil(bits, 64)
+}
+
+/// Spawn `n` scoped workers over the index range `0..total`, chunked.
+/// A tiny substitute for rayon's par_iter in this offline environment.
+pub fn par_for_each_chunk<F>(total: usize, threads: usize, f: F)
+where
+    F: Fn(std::ops::Range<usize>) + Sync,
+{
+    let threads = threads.max(1).min(total.max(1));
+    if threads <= 1 || total <= 1 {
+        f(0..total);
+        return;
+    }
+    let chunk = div_ceil(total, threads);
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(total);
+            if lo >= hi {
+                break;
+            }
+            let f = &f;
+            s.spawn(move || f(lo..hi));
+        }
+    });
+}
+
+/// Default worker-thread count: the machine's parallelism, capped.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn div_ceil_basic() {
+        assert_eq!(div_ceil(0, 8), 0);
+        assert_eq!(div_ceil(1, 8), 1);
+        assert_eq!(div_ceil(8, 8), 1);
+        assert_eq!(div_ceil(9, 8), 2);
+    }
+
+    #[test]
+    fn words() {
+        assert_eq!(words_for(0), 0);
+        assert_eq!(words_for(64), 1);
+        assert_eq!(words_for(65), 2);
+    }
+
+    #[test]
+    fn par_for_each_covers_all() {
+        let hits = AtomicUsize::new(0);
+        par_for_each_chunk(1000, 4, |r| {
+            hits.fetch_add(r.len(), Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn par_for_each_single_thread() {
+        let hits = AtomicUsize::new(0);
+        par_for_each_chunk(5, 1, |r| {
+            hits.fetch_add(r.len(), Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 5);
+    }
+}

@@ -1,0 +1,133 @@
+//! Integration: coordinator + server over a real synthesized engine.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use nullanet::coordinator::{engine::InferenceEngine, Coordinator, CoordinatorConfig};
+use nullanet::server::Server;
+
+/// Deterministic stand-in engine: class = round(sum) % 10.
+struct SumEngine;
+
+impl InferenceEngine for SumEngine {
+    fn infer_batch(&self, images: &[&[f32]]) -> Vec<Vec<f32>> {
+        images
+            .iter()
+            .map(|img| {
+                let mut l = vec![0f32; 10];
+                l[(img.iter().sum::<f32>().round() as usize) % 10] = 1.0;
+                l
+            })
+            .collect()
+    }
+    fn name(&self) -> &str {
+        "sum"
+    }
+}
+
+#[test]
+fn no_request_lost_under_concurrency() {
+    let coord = Arc::new(Coordinator::start(
+        Arc::new(SumEngine),
+        CoordinatorConfig {
+            workers: 2,
+            max_wait: Duration::from_millis(1),
+            ..Default::default()
+        },
+    ));
+    let mut handles = vec![];
+    for t in 0..6 {
+        let c = Arc::clone(&coord);
+        handles.push(std::thread::spawn(move || {
+            let mut ok = 0;
+            for i in 0..200 {
+                let v = ((t + i) % 10) as f32;
+                let r = c.infer(vec![v]).unwrap();
+                assert_eq!(r.class, v as usize);
+                ok += 1;
+            }
+            ok
+        }));
+    }
+    let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(total, 1200);
+    assert_eq!(coord.metrics.requests(), 1200);
+    // Batching must have occurred under this load.
+    assert!(coord.metrics.mean_batch_size() >= 1.0);
+}
+
+#[test]
+fn responses_match_requests_not_reordered_within_stream() {
+    let coord = Coordinator::start(Arc::new(SumEngine), CoordinatorConfig::default());
+    let mut rxs = vec![];
+    for i in 0..100 {
+        rxs.push((i, coord.submit(vec![(i % 10) as f32]).unwrap()));
+    }
+    for (i, rx) in rxs {
+        let r = rx.recv().unwrap();
+        assert_eq!(r.class, i % 10, "response for request {i} wrong");
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn server_concurrent_clients() {
+    let coord = Arc::new(Coordinator::start(
+        Arc::new(SumEngine),
+        CoordinatorConfig::default(),
+    ));
+    let srv = Server::start("127.0.0.1:0", Arc::clone(&coord)).unwrap();
+    let addr = srv.addr;
+    let mut handles = vec![];
+    for t in 0..4 {
+        handles.push(std::thread::spawn(move || {
+            let mut conn = TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            for i in 0..50 {
+                let v = (t * 50 + i) % 10;
+                conn.write_all(format!("{{\"image\": [{v}]}}\n").as_bytes())
+                    .unwrap();
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                assert!(
+                    line.contains(&format!("\"class\":{v}")),
+                    "client {t} req {i}: {line}"
+                );
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(coord.metrics.requests(), 200);
+    srv.shutdown();
+}
+
+#[test]
+fn queue_backpressure_does_not_deadlock() {
+    let coord = Arc::new(Coordinator::start(
+        Arc::new(SumEngine),
+        CoordinatorConfig {
+            queue_depth: 4,
+            workers: 1,
+            max_wait: Duration::from_micros(100),
+            ..Default::default()
+        },
+    ));
+    // Many more submissions than queue depth from several threads.
+    let mut handles = vec![];
+    for _ in 0..4 {
+        let c = Arc::clone(&coord);
+        handles.push(std::thread::spawn(move || {
+            for i in 0..100 {
+                let _ = c.infer(vec![(i % 10) as f32]).unwrap();
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(coord.metrics.requests(), 400);
+}

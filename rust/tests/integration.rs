@@ -1,0 +1,120 @@
+//! Whole-system integration against real artifacts: Algorithm 2 over the
+//! trained net, engine agreement, accuracy within tolerance of the
+//! python-reported reference.  Skips politely if `make artifacts` hasn't
+//! run.
+
+use nullanet::coordinator::engine::{self, InferenceEngine};
+use nullanet::{data, isf, model, synth};
+
+fn artifacts() -> Option<model::Artifacts> {
+    model::Artifacts::load(&nullanet::artifacts_dir()).ok()
+}
+
+#[test]
+fn manifest_has_all_nets() {
+    let Some(art) = artifacts() else {
+        eprintln!("skipping: artifacts missing");
+        return;
+    };
+    for n in ["net11", "net12", "net21", "net22"] {
+        let net = art.net(n).unwrap();
+        assert!(net.accuracy_test > 0.5, "{n}: {}", net.accuracy_test);
+    }
+    // Paper's ordering: ReLU nets beat sign nets of the same arch.
+    assert!(art.net("net12").unwrap().accuracy_test > art.net("net11").unwrap().accuracy_test);
+    assert!(art.net("net22").unwrap().accuracy_test > art.net("net21").unwrap().accuracy_test);
+}
+
+#[test]
+fn threshold_engine_matches_python_accuracy() {
+    // Net 1.1.a evaluated in rust (Eq. 1 bit domain) must reproduce the
+    // python-reported accuracy almost exactly — this validates the whole
+    // BN-folding + bit-domain-threshold interchange.
+    let Some(art) = artifacts() else {
+        eprintln!("skipping: artifacts missing");
+        return;
+    };
+    let net = art.net("net11").unwrap().clone();
+    let python_acc = net.accuracy_test;
+    let ds = data::Dataset::load(&art.test_path).unwrap().take(2000);
+    let eng = engine::ThresholdEngine::new(net).unwrap();
+    let mut hits = 0;
+    for start in (0..ds.n).step_by(256) {
+        let end = (start + 256).min(ds.n);
+        let images: Vec<&[f32]> = (start..end).map(|i| ds.image(i)).collect();
+        for (k, l) in eng.infer_batch(&images).iter().enumerate() {
+            if model::argmax(l) == ds.y[start + k] as usize {
+                hits += 1;
+            }
+        }
+    }
+    let acc = hits as f64 / ds.n as f64;
+    assert!(
+        (acc - python_acc).abs() < 0.02,
+        "rust {acc} vs python {python_acc}"
+    );
+}
+
+#[test]
+fn logic_engine_agrees_with_isf_on_training_patterns() {
+    let Some(art) = artifacts() else {
+        eprintln!("skipping: artifacts missing");
+        return;
+    };
+    let net = art.net("net11").unwrap();
+    let obs = isf::load_observations(&net.dir.join("activations.bin")).unwrap();
+    let layer_isf = isf::extract(&obs[0], &isf::IsfConfig { max_patterns: 800 });
+    let s = synth::optimize_layer("layer2", &layer_isf, &synth::SynthConfig::default());
+    assert_eq!(synth::verify_layer(&layer_isf, &s), 0);
+}
+
+#[test]
+fn logic_engine_close_to_threshold_engine_on_test_set() {
+    let Some(art) = artifacts() else {
+        eprintln!("skipping: artifacts missing");
+        return;
+    };
+    let net = art.net("net11").unwrap().clone();
+    let ds = data::Dataset::load(&art.test_path).unwrap().take(512);
+    let obs = isf::load_observations(&net.dir.join("activations.bin")).unwrap();
+    let tapes: Vec<_> = obs
+        .iter()
+        .map(|o| {
+            let l = isf::extract(o, &isf::IsfConfig { max_patterns: 1500 });
+            let s = synth::optimize_layer(&o.name, &l, &synth::SynthConfig::default());
+            s.tape
+        })
+        .collect();
+    let logic = engine::LogicEngine::new(net.clone(), tapes).unwrap();
+    let thresh = engine::ThresholdEngine::new(net).unwrap();
+    let images: Vec<&[f32]> = (0..ds.n).map(|i| ds.image(i)).collect();
+    let (a, b) = (logic.infer_batch(&images), thresh.infer_batch(&images));
+    let agree = a
+        .iter()
+        .zip(&b)
+        .filter(|(x, y)| model::argmax(x) == model::argmax(y))
+        .count();
+    // With a small ISF cap the logic net is an approximation of the
+    // threshold net; most predictions must still agree.
+    assert!(
+        agree as f64 / ds.n as f64 > 0.7,
+        "only {agree}/{} predictions agree",
+        ds.n
+    );
+}
+
+#[test]
+fn cnn_threshold_spec_matches_f32_forward() {
+    let Some(art) = artifacts() else {
+        eprintln!("skipping: artifacts missing");
+        return;
+    };
+    let net = art.net("net21").unwrap();
+    // conv2 threshold layer exists and has the right shape.
+    let t = net.threshold_conv2().unwrap();
+    assert_eq!((t.n_in, t.n_out), (90, 20));
+    // f32 forward runs and is sane on a few images.
+    let ds = data::Dataset::load(&art.test_path).unwrap().take(32);
+    let acc = net.accuracy_f32(&ds, true).unwrap();
+    assert!(acc > 0.5, "{acc}");
+}

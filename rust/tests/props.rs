@@ -1,0 +1,207 @@
+//! Property tests over the core invariants (prop mini-framework).
+
+use nullanet::aig::{self, Aig, Lit};
+use nullanet::logic::{minimize, Cover, Cube, EspressoConfig, IsfFunction, TruthTable};
+use nullanet::netlist::LogicTape;
+use nullanet::prop::check;
+use nullanet::util::{BitVec, SplitMix64};
+
+fn random_isf(rng: &mut SplitMix64, max_vars: usize, max_pats: usize) -> IsfFunction {
+    let n = rng.range(2, max_vars);
+    let mut seen = std::collections::HashSet::new();
+    let mut on = vec![];
+    let mut off = vec![];
+    for _ in 0..rng.range(1, max_pats) {
+        let p = BitVec::from_bools((0..n).map(|_| rng.bool(0.5)));
+        if seen.insert(p.clone()) {
+            if rng.bool(0.5) {
+                on.push(p);
+            } else {
+                off.push(p);
+            }
+        }
+    }
+    IsfFunction::from_minterms(n, &on, &off)
+}
+
+#[test]
+fn espresso_covers_on_avoids_off() {
+    check("espresso-on-off", 60, |rng| {
+        let f = random_isf(rng, 14, 120);
+        let (cover, _) = minimize(&f, &EspressoConfig::default());
+        for &i in &f.on {
+            assert!(cover.covers(&f.patterns.row_bitvec(i as usize)), "ON uncovered");
+        }
+        for &i in &f.off {
+            assert!(!cover.covers(&f.patterns.row_bitvec(i as usize)), "OFF covered");
+        }
+    });
+}
+
+#[test]
+fn espresso_cubes_are_prime_and_irredundant() {
+    check("espresso-prime-irredundant", 30, |rng| {
+        let f = random_isf(rng, 10, 60);
+        let (cover, _) = minimize(&f, &EspressoConfig::default());
+        // Primality.
+        for c in &cover.cubes {
+            for v in c.care_mask().iter_ones() {
+                let mut raised = c.clone();
+                raised.raise(v);
+                assert!(
+                    f.off.iter().any(|&i| raised.covers(&f.patterns.row_bitvec(i as usize))),
+                    "cube not prime"
+                );
+            }
+        }
+        // Irredundancy: dropping any cube must uncover some ON pattern.
+        for drop in 0..cover.len() {
+            let rest: Vec<Cube> = cover
+                .cubes
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| *i != drop)
+                .map(|(_, c)| c.clone())
+                .collect();
+            let rest = Cover::from_cubes(cover.n_vars, rest);
+            let uncovered = f
+                .on
+                .iter()
+                .any(|&i| !rest.covers(&f.patterns.row_bitvec(i as usize)));
+            assert!(uncovered, "cube {drop} redundant");
+        }
+    });
+}
+
+#[test]
+fn synth_pipeline_preserves_function_end_to_end() {
+    // espresso -> factor -> balance -> rewrite -> refactor -> tape must
+    // still realize the ISF.
+    check("synth-preserves", 25, |rng| {
+        let f = random_isf(rng, 10, 80);
+        let (cover, _) = minimize(&f, &EspressoConfig::default());
+        let n = f.n_vars();
+        let mut g = Aig::new(n);
+        let pis: Vec<Lit> = (0..n).map(|i| g.pi(i)).collect();
+        let root = aig::factor_cover(&mut g, &cover, &pis);
+        g.add_output(root);
+        let opt = aig::balance(&aig::refactor(
+            &aig::rewrite(&g, &aig::RewriteConfig::default()),
+            &aig::RefactorConfig::default(),
+        ));
+        let tape = LogicTape::from_aig(&opt);
+        for &i in f.on.iter().chain(&f.off) {
+            let p = f.patterns.row_bitvec(i as usize);
+            let row: Vec<bool> = (0..n).map(|v| p.get(v)).collect();
+            let out = tape.eval_batch(&[row])[0][0];
+            let want = f.on.contains(&i);
+            assert_eq!(out, want, "pattern {i}");
+        }
+    });
+}
+
+#[test]
+fn bitsim_equals_scalar_eval() {
+    check("bitsim-equals-scalar", 30, |rng| {
+        let n = rng.range(2, 10);
+        let mut g = Aig::new(n);
+        let mut lits: Vec<Lit> = (0..n).map(|i| g.pi(i)).collect();
+        for _ in 0..rng.range(1, 80) {
+            let a = lits[rng.range(0, lits.len())];
+            let b = lits[rng.range(0, lits.len())];
+            lits.push(g.and(
+                if rng.bool(0.5) { a.not() } else { a },
+                if rng.bool(0.5) { b.not() } else { b },
+            ));
+        }
+        for _ in 0..rng.range(1, 4) {
+            let o = lits[rng.range(0, lits.len())];
+            g.add_output(if rng.bool(0.5) { o.not() } else { o });
+        }
+        let tape = LogicTape::from_aig(&g);
+        let rows: Vec<Vec<bool>> = (0..rng.range(1, 64))
+            .map(|_| (0..n).map(|_| rng.bool(0.5)).collect())
+            .collect();
+        let fast = tape.eval_batch(&rows);
+        for (row, out) in rows.iter().zip(fast) {
+            assert_eq!(out, g.eval(row));
+        }
+    });
+}
+
+#[test]
+fn aig_passes_preserve_signatures() {
+    check("aig-passes-preserve", 20, |rng| {
+        let n = rng.range(3, 9);
+        let mut g = Aig::new(n);
+        let mut lits: Vec<Lit> = (0..n).map(|i| g.pi(i)).collect();
+        for _ in 0..rng.range(5, 120) {
+            let a = lits[rng.range(0, lits.len())];
+            let b = lits[rng.range(0, lits.len())];
+            lits.push(g.and(
+                if rng.bool(0.5) { a.not() } else { a },
+                if rng.bool(0.5) { b.not() } else { b },
+            ));
+        }
+        for _ in 0..3 {
+            let o = lits[rng.range(0, lits.len())];
+            g.add_output(if rng.bool(0.5) { o.not() } else { o });
+        }
+        let sig = aig::random_signature(&g, 11, 8);
+        let b = aig::balance(&g);
+        assert_eq!(aig::random_signature(&b, 11, 8), sig, "balance changed function");
+        let r = aig::rewrite(&g, &aig::RewriteConfig::default());
+        assert_eq!(aig::random_signature(&r, 11, 8), sig, "rewrite changed function");
+        let rf = aig::refactor(&g, &aig::RefactorConfig::default());
+        assert_eq!(aig::random_signature(&rf, 11, 8), sig, "refactor changed function");
+    });
+}
+
+#[test]
+fn isop_within_bounds_random() {
+    check("isop-bounds", 40, |rng| {
+        let n = rng.range(1, 8);
+        let l = TruthTable::from_fn(n, |_| rng.bool(0.3));
+        let dc = TruthTable::from_fn(n, |_| rng.bool(0.4));
+        let u = l.or(&dc);
+        let cover = l.isop(&u);
+        let g = TruthTable::from_cover(&cover);
+        assert!(l.and(&g.not()).is_zero());
+        assert!(g.and(&u.not()).is_zero());
+    });
+}
+
+#[test]
+fn f16_conversion_roundtrip_prop() {
+    check("f16-roundtrip", 100, |rng| {
+        let bits = (rng.next_u64() & 0xffff) as u16;
+        let h = nullanet::arith::F16(bits);
+        let f = h.to_f32();
+        if !f.is_nan() {
+            assert_eq!(nullanet::arith::F16::from_f32(f).0, h.0);
+        }
+    });
+}
+
+#[test]
+fn lutmap_preserves_function_prop() {
+    check("lutmap-preserves", 20, |rng| {
+        let n = rng.range(2, 9);
+        let mut g = Aig::new(n);
+        let mut lits: Vec<Lit> = (0..n).map(|i| g.pi(i)).collect();
+        for _ in 0..rng.range(2, 100) {
+            let a = lits[rng.range(0, lits.len())];
+            let b = lits[rng.range(0, lits.len())];
+            lits.push(g.and(
+                if rng.bool(0.5) { a.not() } else { a },
+                if rng.bool(0.5) { b.not() } else { b },
+            ));
+        }
+        g.add_output(*lits.last().unwrap());
+        let m = nullanet::lutmap::map_luts(&g, &nullanet::lutmap::LutMapConfig::default());
+        for _ in 0..20 {
+            let ins: Vec<bool> = (0..n).map(|_| rng.bool(0.5)).collect();
+            assert_eq!(nullanet::lutmap::eval_mapping(&g, &m, &ins), g.eval(&ins));
+        }
+    });
+}

@@ -1,0 +1,123 @@
+//! Integration: PJRT runtime against the AOT artifacts (skips politely
+//! when `make artifacts` hasn't been run).
+
+use nullanet::coordinator::engine::{InferenceEngine, XlaEngine};
+use nullanet::{data, model, runtime};
+
+fn artifacts() -> Option<model::Artifacts> {
+    model::Artifacts::load(&nullanet::artifacts_dir()).ok()
+}
+
+#[test]
+fn pjrt_client_is_available() {
+    assert!(runtime::pjrt_available());
+}
+
+#[test]
+fn fp32_baseline_graph_matches_python_logits() {
+    // net12 (ReLU fp32) has no sign discontinuities: the PJRT-executed
+    // pallas graph must match python's reference logits tightly.
+    let Some(art) = artifacts() else {
+        eprintln!("skipping: artifacts missing");
+        return;
+    };
+    let net = art.net("net12").unwrap();
+    let eng = XlaEngine::from_net(net, "model_b64", 64, 784, 10).unwrap();
+    let ds = data::Dataset::load(&art.test_path).unwrap();
+    let images: Vec<&[f32]> = (0..64).map(|i| ds.image(i)).collect();
+    let out = eng.infer_batch(&images);
+    let refl = model::load_reference_logits(&net.dir.join("logits.bin")).unwrap();
+    for s in 0..64 {
+        for j in 0..10 {
+            let (a, b) = (out[s][j], refl[s][j]);
+            assert!(
+                (a - b).abs() < 1e-3 + 1e-3 * b.abs(),
+                "sample {s} logit {j}: {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn binary_graph_agrees_on_argmax() {
+    // net11's pallas graph may flip borderline sign bits (different f32
+    // reduction order), so compare top-1 agreement, not raw logits.
+    let Some(art) = artifacts() else {
+        eprintln!("skipping: artifacts missing");
+        return;
+    };
+    let net = art.net("net11").unwrap();
+    let eng = XlaEngine::from_net(net, "model_b64", 64, 784, 10).unwrap();
+    let ds = data::Dataset::load(&art.test_path).unwrap();
+    let images: Vec<&[f32]> = (0..64).map(|i| ds.image(i)).collect();
+    let out = eng.infer_batch(&images);
+    let refl = model::load_reference_logits(&net.dir.join("logits.bin")).unwrap();
+    let mut agree = 0;
+    for s in 0..64 {
+        if model::argmax(&out[s]) == model::argmax(&refl[s]) {
+            agree += 1;
+        }
+    }
+    assert!(agree >= 58, "argmax agreement too low: {agree}/64");
+}
+
+#[test]
+fn rust_f32_forward_matches_python_logits() {
+    let Some(art) = artifacts() else {
+        eprintln!("skipping: artifacts missing");
+        return;
+    };
+    for name in ["net11", "net12"] {
+        let net = art.net(name).unwrap();
+        let ds = data::Dataset::load(&art.test_path).unwrap();
+        let refl = model::load_reference_logits(&net.dir.join("logits.bin")).unwrap();
+        let binary = name == "net11";
+        for s in 0..16 {
+            let l = net.forward_f32(ds.image(s), binary).unwrap();
+            for j in 0..10 {
+                assert!(
+                    (l[j] - refl[s][j]).abs() < 1e-3 + 1e-3 * refl[s][j].abs(),
+                    "{name} sample {s} logit {j}: {} vs {}",
+                    l[j],
+                    refl[s][j]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn first_layer_artifact_produces_bits() {
+    let Some(art) = artifacts() else {
+        eprintln!("skipping: artifacts missing");
+        return;
+    };
+    let net = art.net("net11").unwrap();
+    let eng = XlaEngine::from_net(net, "first_layer_b64", 64, 784, 100).unwrap();
+    let ds = data::Dataset::load(&art.test_path).unwrap();
+    let images: Vec<&[f32]> = (0..64).map(|i| ds.image(i)).collect();
+    let out = eng.infer_batch(&images);
+    assert!(out
+        .iter()
+        .flatten()
+        .all(|&v| v == 0.0 || v == 1.0), "outputs must be bits");
+    // Cross-check against the rust-computed first layer (exact function).
+    let w = &net.tensors["w1"];
+    let sc = &net.tensors["scale1"];
+    let bi = &net.tensors["bias1"];
+    let mut agree = 0usize;
+    for s in 0..8 {
+        let img = ds.image(s);
+        for j in 0..100 {
+            let mut z = 0f32;
+            for i in 0..784 {
+                z += img[i] * w.f32s[i * 100 + j];
+            }
+            let bit = (z * sc.f32s[j] + bi.f32s[j] >= 0.0) as u8 as f32;
+            if bit == out[s][j] {
+                agree += 1;
+            }
+        }
+    }
+    assert!(agree >= 8 * 100 - 8, "first-layer bit agreement {agree}/800");
+}
