@@ -10,6 +10,7 @@ use std::time::{Duration, Instant};
 
 use nullanet::bench_util::{bench, Table};
 use nullanet::coordinator::{engine, engine::InferenceEngine, Coordinator, CoordinatorConfig};
+use nullanet::util::{W256, W512};
 use nullanet::{data, isf, model, synth};
 
 fn main() {
@@ -36,56 +37,71 @@ fn main() {
             synth::optimize_layer(&o.name, &l, &synth::SynthConfig::default()).tape
         })
         .collect();
-    let logic = Arc::new(engine::LogicEngine::new(net.clone(), tapes).unwrap());
+    let logic = Arc::new(engine::LogicEngine::<u64>::new(net.clone(), tapes.clone()).unwrap());
+    let logic256 =
+        Arc::new(engine::LogicEngine::<W256>::new(net.clone(), tapes.clone()).unwrap());
+    let logic512 = Arc::new(engine::LogicEngine::<W512>::new(net.clone(), tapes).unwrap());
     let thresh = Arc::new(engine::ThresholdEngine::new(net.clone()).unwrap());
     let xla = engine::XlaEngine::from_net(&net, "model_b64", 64, 784, 10)
         .ok()
         .map(Arc::new);
 
-    let images: Vec<&[f32]> = (0..64).map(|i| ds.image(i)).collect();
+    // Batch = 512 so the wider planes get full blocks (the 64-lane
+    // engine chews through it in 8 passes).
+    let n_bench = 512.min(ds.n);
+    let images: Vec<&[f32]> = (0..n_bench).map(|i| ds.image(i)).collect();
     let budget = Duration::from_millis(1500);
     let mut table = Table::new(
-        "End-to-end inference engines (batch = 64)",
+        &format!("End-to-end inference engines (batch = {n_bench})"),
         &["Engine", "batch latency", "images/s", "param bytes/inference"],
     );
     let mut add_row = |name: &str, eng: &dyn InferenceEngine| {
-        let r = bench(&format!("{name} batch64"), budget, || {
+        let r = bench(&format!("{name} batch{n_bench}"), budget, || {
             std::hint::black_box(eng.infer_batch(std::hint::black_box(&images)));
         });
         table.row(&[
             name.into(),
             nullanet::bench_util::format_ns(r.median_ns),
-            format!("{:.0}", r.throughput(64.0)),
+            format!("{:.0}", r.throughput(n_bench as f64)),
             eng.param_bytes_per_inference().to_string(),
         ]);
     };
-    add_row("logic (synthesized tapes)", &*logic);
+    add_row("logic w64 (synthesized tapes)", &*logic);
+    add_row("logic w256 (synthesized tapes)", &*logic256);
+    add_row("logic w512 (synthesized tapes)", &*logic512);
     add_row("threshold (Eq.1 dot products)", &*thresh);
     if let Some(x) = &xla {
         add_row("xla fp32 (PJRT baseline)", &**x);
     }
     table.print();
 
-    // Coordinator throughput under concurrent load.
-    let coord = Arc::new(Coordinator::start(
-        logic,
-        CoordinatorConfig { workers: 1, ..Default::default() },
-    ));
-    let n_req = 4096;
-    let t0 = Instant::now();
-    let mut pending = Vec::with_capacity(n_req);
-    for i in 0..n_req {
-        pending.push(coord.submit(ds.image(i % ds.n).to_vec()).unwrap());
+    // Coordinator throughput under concurrent load: big batches are
+    // sharded into plane-width blocks over the worker pool.
+    for (label, eng, workers) in [
+        ("w64, 1 worker", Arc::clone(&logic) as Arc<dyn InferenceEngine>, 1),
+        ("w64, 4 workers", Arc::clone(&logic) as Arc<dyn InferenceEngine>, 4),
+        ("w512, 4 workers", Arc::clone(&logic512) as Arc<dyn InferenceEngine>, 4),
+    ] {
+        let coord = Arc::new(Coordinator::start(
+            eng,
+            CoordinatorConfig { workers, ..Default::default() },
+        ));
+        let n_req = 4096;
+        let t0 = Instant::now();
+        let mut pending = Vec::with_capacity(n_req);
+        for i in 0..n_req {
+            pending.push(coord.submit(ds.image(i % ds.n).to_vec()).unwrap());
+        }
+        for rx in pending {
+            rx.recv().unwrap();
+        }
+        let dt = t0.elapsed();
+        println!(
+            "\ncoordinator ({label}, sharded batching): {} requests in {:.2?} = {:.0} req/s | {}",
+            n_req,
+            dt,
+            n_req as f64 / dt.as_secs_f64(),
+            coord.metrics.summary()
+        );
     }
-    for rx in pending {
-        rx.recv().unwrap();
-    }
-    let dt = t0.elapsed();
-    println!(
-        "\ncoordinator (1 worker, dynamic batching): {} requests in {:.2?} = {:.0} req/s | {}",
-        n_req,
-        dt,
-        n_req as f64 / dt.as_secs_f64(),
-        coord.metrics.summary()
-    );
 }

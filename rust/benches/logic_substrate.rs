@@ -6,12 +6,12 @@
 use std::time::Duration;
 
 use nullanet::aig::{self, Aig};
-use nullanet::bench_util::bench;
+use nullanet::bench_util::{bench, bench_tape_width};
 use nullanet::isf::{extract, IsfConfig, LayerObservations};
 use nullanet::logic::{minimize, EspressoConfig};
 use nullanet::netlist::LogicTape;
 use nullanet::synth::{optimize_layer, SynthConfig};
-use nullanet::util::SplitMix64;
+use nullanet::util::{SplitMix64, W256, W512};
 
 /// Threshold-function layer observations (consistent, conflict-free).
 fn make_obs(seed: u64, n_in: usize, n_out: usize, n_samples: usize) -> LayerObservations {
@@ -102,7 +102,27 @@ fn main() {
         r.median_ns * 1000.0 / (tape.n_ops() as f64 * 64.0)
     );
 
-    // --- random AIG scaling -------------------------------------------------
+    // --- width sweep: 64/256/512 lanes on a batch of 512 samples ----------
+    // The serving-path question: given a batch of >= 512 queued requests,
+    // how much faster is one 512-lane pass than eight 64-lane passes?
+    println!("\n=== width sweep: synthesized layer tape, batch = 512 ===");
+    let mut rng = SplitMix64::new(5);
+    let batch = 512usize;
+    let b64 = bench_tape_width::<u64>(&tape, batch, budget, &mut rng);
+    let b256 = bench_tape_width::<W256>(&tape, batch, budget, &mut rng);
+    let b512 = bench_tape_width::<W512>(&tape, batch, budget, &mut rng);
+    println!(
+        "width sweep (layer tape, {} ops): {:.0} / {:.0} / {:.0} blocks64/s \
+         | speedup vs 64-lane: x{:.2} (256), x{:.2} (512)",
+        tape.n_ops(),
+        b64,
+        b256,
+        b512,
+        b256 / b64,
+        b512 / b64
+    );
+
+    // --- random AIG scaling + width sweep at each size ---------------------
     let mut rng = SplitMix64::new(4);
     for n_ands in [1_000usize, 10_000] {
         let mut g = Aig::new(64);
@@ -117,11 +137,19 @@ fn main() {
             g.add_output(l);
         }
         let tape = LogicTape::from_aig(&g);
-        let inputs: Vec<u64> = (0..64).map(|_| rng.next_u64()).collect();
-        let mut out = vec![0u64; 32];
-        let mut scratch = tape.make_scratch();
-        bench(&format!("tape eval {} ands", tape.n_ops()), budget, || {
-            tape.eval_into(&inputs, &mut out, &mut scratch);
-        });
+        println!("\n=== width sweep: random AIG {} ands, batch = 512 ===", tape.n_ops());
+        let b64 = bench_tape_width::<u64>(&tape, batch, budget, &mut rng);
+        let b256 = bench_tape_width::<W256>(&tape, batch, budget, &mut rng);
+        let b512 = bench_tape_width::<W512>(&tape, batch, budget, &mut rng);
+        println!(
+            "width sweep ({} ands): {:.0} / {:.0} / {:.0} blocks64/s \
+             | speedup vs 64-lane: x{:.2} (256), x{:.2} (512)",
+            tape.n_ops(),
+            b64,
+            b256,
+            b512,
+            b256 / b64,
+            b512 / b64
+        );
     }
 }

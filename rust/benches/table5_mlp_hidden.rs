@@ -4,9 +4,11 @@
 //! Run: cargo bench --bench table5_mlp_hidden
 //! (needs `make artifacts`; set NULLANET_BENCH_CAP to override the cap)
 
-use nullanet::bench_util::Table;
+use nullanet::bench_util::{bench_tape_width, Table};
 use nullanet::cost::{FpgaModel, MAC16, MAC32};
+use nullanet::util::{SplitMix64, W256, W512};
 use nullanet::{isf, model, synth};
+use std::time::Duration;
 
 fn main() {
     let art = match model::Artifacts::load(&nullanet::artifacts_dir()) {
@@ -35,14 +37,30 @@ fn main() {
         "207".into(), "575".into(),
     ]);
 
+    let mut rng = SplitMix64::new(55);
     for cap in caps {
         let t0 = std::time::Instant::now();
         let mut stages = Vec::new();
+        let mut tapes = Vec::new();
         for o in &obs {
             let layer_isf = isf::extract(o, &isf::IsfConfig { max_patterns: cap });
             let s = synth::optimize_layer(&o.name, &layer_isf, &synth::SynthConfig::default());
             assert_eq!(synth::verify_layer(&layer_isf, &s), 0);
             stages.push(s.hw_cost(&fpga));
+            tapes.push(s.tape);
+        }
+        // CPU serving throughput of the synthesized hidden stack at each
+        // plane width (batch = 512; the width sweep of the tentpole).
+        if let Some(big) = tapes.iter().max_by_key(|t| t.n_ops()) {
+            let budget = Duration::from_millis(300);
+            let b64 = bench_tape_width::<u64>(big, 512, budget, &mut rng);
+            let b256 = bench_tape_width::<W256>(big, 512, budget, &mut rng);
+            let b512 = bench_tape_width::<W512>(big, 512, budget, &mut rng);
+            println!(
+                "cap {cap}: widest layer ({} ops) width sweep: \
+                 {b64:.0} / {b256:.0} / {b512:.0} blocks64/s (w64/w256/w512)",
+                big.n_ops()
+            );
         }
         let c = fpga.cost_pipeline(&stages);
         table.row(&[

@@ -18,7 +18,7 @@ pub use balance::balance;
 pub use factor::{factor_cover, factor_with};
 pub use refactor::{refactor, RefactorConfig};
 pub use rewrite::{resynthesize, rewrite, AndBuilder, CostProbe, RealBuilder, RewriteConfig};
-pub use sim::{random_signature, sim_exhaustive, sim_words};
+pub use sim::{random_signature, sim_exhaustive, sim_words, sim_words_wide};
 
 use std::collections::HashMap;
 

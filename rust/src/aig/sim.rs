@@ -1,28 +1,35 @@
-//! AIG simulation: 64-way bit-parallel words and exhaustive truth tables.
+//! AIG simulation: multi-word bit-parallel planes and exhaustive truth
+//! tables.  The word simulator is the semantic reference for
+//! [`crate::netlist::LogicTape`] at every plane width.
 
 use super::{Aig, Lit};
 use crate::logic::TruthTable;
-use crate::util::SplitMix64;
+use crate::util::{BitWord, SplitMix64};
 
-/// Simulate the whole AIG on 64 parallel input samples.
-/// `inputs[i]` is the word for PI i (bit s = sample s); returns one word
-/// per output.
-pub fn sim_words(aig: &Aig, inputs: &[u64]) -> Vec<u64> {
+/// Simulate the whole AIG on `W::LANES` parallel input samples.
+/// `inputs[i]` is the plane for PI i (lane s = sample s); returns one
+/// plane per output.
+pub fn sim_words_wide<W: BitWord>(aig: &Aig, inputs: &[W]) -> Vec<W> {
     assert_eq!(inputs.len(), aig.n_pis());
-    let mut val = vec![0u64; aig.n_nodes()];
+    let mut val = vec![W::ZERO; aig.n_nodes()];
     for (i, &w) in inputs.iter().enumerate() {
         val[i + 1] = w;
     }
     for n in (aig.n_pis() + 1)..aig.n_nodes() {
         let nd = aig.node(n as u32);
-        let a = val[nd.fan0.node() as usize] ^ if nd.fan0.compl() { !0 } else { 0 };
-        let b = val[nd.fan1.node() as usize] ^ if nd.fan1.compl() { !0 } else { 0 };
-        val[n] = a & b;
+        let a = val[nd.fan0.node() as usize].xor_mask(if nd.fan0.compl() { !0 } else { 0 });
+        let b = val[nd.fan1.node() as usize].xor_mask(if nd.fan1.compl() { !0 } else { 0 });
+        val[n] = a.and(b);
     }
     aig.outputs
         .iter()
-        .map(|o| val[o.node() as usize] ^ if o.compl() { !0 } else { 0 })
+        .map(|o| val[o.node() as usize].xor_mask(if o.compl() { !0 } else { 0 }))
         .collect()
+}
+
+/// [`sim_words_wide`] at the original 64-lane width.
+pub fn sim_words(aig: &Aig, inputs: &[u64]) -> Vec<u64> {
+    sim_words_wide(aig, inputs)
 }
 
 /// Exhaustive simulation of output `out_idx` as a truth table
@@ -108,6 +115,20 @@ mod tests {
             let ea = (a >> s) & 1 == 1;
             let eb = (b >> s) & 1 == 1;
             assert_eq!((out >> s) & 1 == 1, ea ^ eb);
+        }
+    }
+
+    #[test]
+    fn wide_sim_matches_u64_sim() {
+        use crate::util::W512;
+        let g = xor_aig();
+        let mut rng = SplitMix64::new(5);
+        let limbs_a: [u64; 8] = std::array::from_fn(|_| rng.next_u64());
+        let limbs_b: [u64; 8] = std::array::from_fn(|_| rng.next_u64());
+        let wide = sim_words_wide::<W512>(&g, &[limbs_a, limbs_b]);
+        for limb in 0..8 {
+            let narrow = sim_words(&g, &[limbs_a[limb], limbs_b[limb]]);
+            assert_eq!(wide[0][limb], narrow[0], "limb {limb}");
         }
     }
 

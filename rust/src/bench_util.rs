@@ -1,8 +1,13 @@
 //! Benchmark harness (criterion is unavailable offline): warmup +
 //! timed iterations, robust statistics, criterion-style terminal output,
 //! and machine-readable JSON accumulation for bench_output parsing.
+//! Also hosts the shared tape width-sweep probe used by the
+//! `logic_substrate` / `table5_mlp_hidden` benches.
 
 use std::time::{Duration, Instant};
+
+use crate::netlist::LogicTape;
+use crate::util::{BitWord, SplitMix64};
 
 /// Result of one benchmark.
 #[derive(Clone, Debug)]
@@ -80,6 +85,43 @@ pub fn format_result(r: &BenchResult) -> String {
         format_ns(r.mad_ns),
         r.iters
     )
+}
+
+/// Measure tape evaluation throughput at plane width `W` over a
+/// `batch`-sample workload (processed in `batch / W::LANES` passes with
+/// pre-packed random inputs).  Returns blocks-of-64 per second, so
+/// results are directly comparable across widths.
+pub fn bench_tape_width<W: BitWord>(
+    tape: &LogicTape,
+    batch: usize,
+    budget: Duration,
+    rng: &mut SplitMix64,
+) -> f64 {
+    assert_eq!(batch % W::LANES, 0, "batch must be a multiple of the lane count");
+    let passes = batch / W::LANES;
+    let inputs: Vec<Vec<W>> = (0..passes)
+        .map(|_| {
+            (0..tape.n_inputs)
+                .map(|_| W::from_lanes(|_| rng.bool(0.5)))
+                .collect()
+        })
+        .collect();
+    let mut out = vec![W::ZERO; tape.outputs.len()];
+    let mut scratch = tape.make_scratch::<W>();
+    let r = bench(
+        &format!("tape eval {} ops, batch {batch} @ {:>3} lanes", tape.n_ops(), W::LANES),
+        budget,
+        || {
+            for ins in &inputs {
+                tape.eval_into(
+                    std::hint::black_box(ins.as_slice()),
+                    std::hint::black_box(&mut out),
+                    &mut scratch,
+                );
+            }
+        },
+    );
+    r.throughput(batch as f64 / 64.0)
 }
 
 /// Simple markdown-ish table printer for paper-table reproduction.
@@ -161,6 +203,23 @@ mod tests {
         let mut t = Table::new("Table X", &["a", "bb"]);
         t.row(&["1".into(), "2".into()]);
         t.print();
+    }
+
+    #[test]
+    fn tape_width_probe_runs_at_all_widths() {
+        use crate::aig::Aig;
+        use crate::util::W512;
+
+        let mut g = Aig::new(4);
+        let (a, b) = (g.pi(0), g.pi(1));
+        let x = g.xor(a, b);
+        g.add_output(x);
+        let tape = LogicTape::from_aig(&g);
+        let mut rng = SplitMix64::new(1);
+        let budget = Duration::from_millis(5);
+        let t64 = bench_tape_width::<u64>(&tape, 512, budget, &mut rng);
+        let t512 = bench_tape_width::<W512>(&tape, 512, budget, &mut rng);
+        assert!(t64 > 0.0 && t512 > 0.0);
     }
 
     #[test]

@@ -39,25 +39,32 @@ pub fn collect_batch(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::mpsc::sync_channel;
+    use crate::coordinator::Response;
+    use std::sync::mpsc::{sync_channel, Receiver};
 
-    fn req(id: u64) -> Request {
-        let (tx, _rx) = sync_channel(1);
-        // keep rx alive via leak: tests only inspect ids
-        std::mem::forget(_rx);
-        Request {
-            image: vec![],
-            submitted: Instant::now(),
-            reply: tx,
-            id,
-        }
+    /// Build a request and hand back its reply receiver so the caller
+    /// keeps it alive for the test's duration (no leaking).
+    fn req(id: u64) -> (Request, Receiver<Response>) {
+        let (tx, rx) = sync_channel(1);
+        (
+            Request {
+                image: vec![],
+                submitted: Instant::now(),
+                reply: tx,
+                id,
+            },
+            rx,
+        )
     }
 
     #[test]
     fn collects_up_to_max() {
         let (tx, rx) = sync_channel(16);
+        let mut replies = vec![];
         for i in 0..10 {
-            tx.send(req(i)).unwrap();
+            let (r, reply_rx) = req(i);
+            replies.push(reply_rx);
+            tx.send(r).unwrap();
         }
         let b = collect_batch(&rx, 4, Duration::from_millis(1)).unwrap();
         assert_eq!(b.len(), 4);
@@ -69,7 +76,8 @@ mod tests {
     #[test]
     fn deadline_flushes_partial() {
         let (tx, rx) = sync_channel(16);
-        tx.send(req(0)).unwrap();
+        let (r, _reply_rx) = req(0);
+        tx.send(r).unwrap();
         let t0 = Instant::now();
         let b = collect_batch(&rx, 64, Duration::from_millis(5)).unwrap();
         assert_eq!(b.len(), 1);
@@ -79,8 +87,11 @@ mod tests {
     #[test]
     fn preserves_fifo_order() {
         let (tx, rx) = sync_channel(16);
+        let mut replies = vec![];
         for i in 0..8 {
-            tx.send(req(i)).unwrap();
+            let (r, reply_rx) = req(i);
+            replies.push(reply_rx);
+            tx.send(r).unwrap();
         }
         let b = collect_batch(&rx, 8, Duration::from_millis(1)).unwrap();
         let ids: Vec<u64> = b.iter().map(|r| r.id).collect();

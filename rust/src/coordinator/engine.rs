@@ -3,19 +3,21 @@
 //! * [`LogicEngine`] — the paper's system: first layer in f32 (the only
 //!   layer that reads parameters, per Section 3.2's closing discussion),
 //!   hidden layers as synthesized bit-parallel tapes (zero parameter
-//!   memory), last layer as popcount add/sub.
+//!   memory), last layer as popcount add/sub.  Generic over the plane
+//!   word `W` ([`BitWord`]): `LogicEngine<u64>` packs 64 requests per
+//!   block, `LogicEngine<[u64; 8]>` packs 512.
 //! * [`ThresholdEngine`] — same topology but hidden layers computed with
 //!   Eq. 1 dot products (the "Net x.1.a" accuracy reference).
 //! * [`XlaEngine`] — the fp32 baseline served through the PJRT runtime
 //!   (the AOT-lowered JAX graph; Nets 1.2/2.2).
 
-use std::path::Path;
+use std::marker::PhantomData;
 
-use anyhow::Result;
-
+use crate::format_err;
 use crate::model::{Arch, NetArtifacts, ThresholdLayer};
 use crate::netlist::LogicTape;
-use crate::util::BitVec;
+use crate::util::error::Result;
+use crate::util::{transpose_to_planes, BitVec, BitWord};
 
 /// A batched inference engine: images in, logits out.
 pub trait InferenceEngine: Send + Sync {
@@ -26,6 +28,12 @@ pub trait InferenceEngine: Send + Sync {
     /// layer parameters.
     fn param_bytes_per_inference(&self) -> usize {
         0
+    }
+    /// Natural block size for this engine: the coordinator shards big
+    /// batches into blocks of this many requests (one plane word for
+    /// logic engines) and spreads them over the worker pool.
+    fn preferred_block(&self) -> usize {
+        64
     }
 }
 
@@ -49,9 +57,7 @@ fn mlp_first_layer(net: &NetArtifacts, img: &[f32]) -> BitVec {
             z[j] += x * wv;
         }
     }
-    BitVec::from_bools(
-        (0..n_out).map(|j| z[j] * s.f32s[j] + b.f32s[j] >= 0.0),
-    )
+    BitVec::from_bools((0..n_out).map(|j| z[j] * s.f32s[j] + b.f32s[j] >= 0.0))
 }
 
 /// Last layer on bits (popcount form): logits = 2·(bits·w_eff) − colsum +
@@ -102,61 +108,63 @@ impl PopcountLast {
 // ---------------------------------------------------------------------
 
 /// The synthesized-network engine (MLP form).  Hidden layers (2..L-1)
-/// run as bit-parallel tapes over 64-request planes.
-pub struct LogicEngine {
+/// run as bit-parallel tapes over `W::LANES`-request planes.
+pub struct LogicEngine<W: BitWord = u64> {
     net: NetArtifacts,
     tapes: Vec<LogicTape>,
     last: PopcountLast,
     name: String,
+    _width: PhantomData<fn() -> W>,
 }
 
-impl LogicEngine {
+impl<W: BitWord> LogicEngine<W> {
     /// Build from artifacts + the synthesized hidden-layer tapes
     /// (ordered: layer2, layer3, ...).
-    pub fn new(net: NetArtifacts, tapes: Vec<LogicTape>) -> Result<LogicEngine> {
+    pub fn new(net: NetArtifacts, tapes: Vec<LogicTape>) -> Result<LogicEngine<W>> {
         let Arch::Mlp { ref sizes } = net.arch else {
-            anyhow::bail!("LogicEngine::new expects an MLP; use new_cnn");
+            crate::bail!("LogicEngine::new expects an MLP; use new_cnn");
         };
         let nl = sizes.len() - 1;
-        let last = PopcountLast::new(&net, &format!("w{nl}"), &format!("scale{nl}"), &format!("bias{nl}"));
-        let name = format!("logic:{}", net.name);
-        Ok(LogicEngine { net, tapes, last, name })
+        let last =
+            PopcountLast::new(&net, &format!("w{nl}"), &format!("scale{nl}"), &format!("bias{nl}"));
+        let name = format!("logic[w{}]:{}", W::LANES, net.name);
+        Ok(LogicEngine { net, tapes, last, name, _width: PhantomData })
     }
 
     fn infer_block(&self, images: &[&[f32]]) -> Vec<Vec<f32>> {
-        debug_assert!(images.len() <= 64);
-        let n = images.len();
-        // First layer per image -> bit planes.
-        let first: Vec<BitVec> = images.iter().map(|im| mlp_first_layer(&self.net, im)).collect();
-        let width = first[0].len();
-        let mut planes = vec![0u64; width];
-        for (s, bits) in first.iter().enumerate() {
-            for i in bits.iter_ones() {
-                planes[i] |= 1 << s;
-            }
+        if images.is_empty() {
+            // Reachable through a timed-out empty batch upstream; must
+            // not index into images.
+            return Vec::new();
         }
+        debug_assert!(images.len() <= W::LANES);
+        let n = images.len();
+        // First layer per image -> bit planes (sample s in lane s).
+        let first: Vec<BitVec> =
+            images.iter().map(|im| mlp_first_layer(&self.net, im)).collect();
+        let width = first[0].len();
+        let mut cur: Vec<W> = transpose_to_planes(&first, width);
         // Hidden layers: tape after tape on the planes.
-        let mut cur = planes;
         for tape in &self.tapes {
-            let mut out = vec![0u64; tape.outputs.len()];
-            let mut scratch = tape.make_scratch();
+            let mut out = vec![W::ZERO; tape.outputs.len()];
+            let mut scratch = tape.make_scratch::<W>();
             tape.eval_into(&cur, &mut out, &mut scratch);
             cur = out;
         }
         // Last layer per sample.
         (0..n)
             .map(|s| {
-                let bits = BitVec::from_bools((0..cur.len()).map(|j| (cur[j] >> s) & 1 == 1));
+                let bits = BitVec::from_bools((0..cur.len()).map(|j| cur[j].get_lane(s)));
                 self.last.logits(&bits)
             })
             .collect()
     }
 }
 
-impl InferenceEngine for LogicEngine {
+impl<W: BitWord> InferenceEngine for LogicEngine<W> {
     fn infer_batch(&self, images: &[&[f32]]) -> Vec<Vec<f32>> {
         let mut out = Vec::with_capacity(images.len());
-        for chunk in images.chunks(64) {
+        for chunk in images.chunks(W::LANES) {
             out.extend(self.infer_block(chunk));
         }
         out
@@ -170,6 +178,10 @@ impl InferenceEngine for LogicEngine {
         // Only first + last layers touch parameters.
         let w1 = &self.net.tensors["w1"];
         (w1.numel() + self.last.w_eff.len()) * 4
+    }
+
+    fn preferred_block(&self) -> usize {
+        W::LANES
     }
 }
 
@@ -189,11 +201,12 @@ pub struct ThresholdEngine {
 impl ThresholdEngine {
     pub fn new(net: NetArtifacts) -> Result<ThresholdEngine> {
         let Arch::Mlp { ref sizes } = net.arch else {
-            anyhow::bail!("ThresholdEngine expects an MLP");
+            crate::bail!("ThresholdEngine expects an MLP");
         };
         let nl = sizes.len() - 1;
         let hidden: Result<Vec<_>> = (2..nl).map(|i| net.threshold_layer(i)).collect();
-        let last = PopcountLast::new(&net, &format!("w{nl}"), &format!("scale{nl}"), &format!("bias{nl}"));
+        let last =
+            PopcountLast::new(&net, &format!("w{nl}"), &format!("scale{nl}"), &format!("bias{nl}"));
         let name = format!("threshold:{}", net.name);
         Ok(ThresholdEngine { hidden: hidden?, last, net, name })
     }
@@ -241,11 +254,17 @@ pub struct XlaEngine {
 
 impl XlaEngine {
     /// Load the graph named `graph` from a net's artifacts.
-    pub fn from_net(net: &NetArtifacts, graph: &str, batch: usize, dim: usize, n_out: usize) -> Result<XlaEngine> {
+    pub fn from_net(
+        net: &NetArtifacts,
+        graph: &str,
+        batch: usize,
+        dim: usize,
+        n_out: usize,
+    ) -> Result<XlaEngine> {
         let hlo = net
             .hlo
             .get(graph)
-            .ok_or_else(|| anyhow::anyhow!("{}: no HLO graph {graph}", net.name))?;
+            .ok_or_else(|| format_err!("{}: no HLO graph {graph}", net.name))?;
         let names = net.hlo_params.get(graph).cloned().unwrap_or_default();
         let params = names
             .iter()
@@ -289,12 +308,17 @@ impl InferenceEngine for XlaEngine {
     fn param_bytes_per_inference(&self) -> usize {
         self.params.iter().map(|(d, _)| d.len() * 4).sum()
     }
+
+    fn preferred_block(&self) -> usize {
+        self.batch
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::model::Tensor;
+    use crate::util::{W256, W512};
     use std::collections::BTreeMap;
 
     /// Hand-built 2-2-2-2 MLP artifacts for engine unit tests.
@@ -341,7 +365,7 @@ mod tests {
     #[test]
     fn logic_engine_matches_threshold_engine() {
         let net = tiny_net();
-        let logic = LogicEngine::new(net.clone(), vec![swap_tape()]).unwrap();
+        let logic = LogicEngine::<u64>::new(net.clone(), vec![swap_tape()]).unwrap();
         let thresh = ThresholdEngine::new(net).unwrap();
         let images: Vec<Vec<f32>> = vec![
             vec![0.9, 0.1],
@@ -366,7 +390,7 @@ mod tests {
     #[test]
     fn logic_engine_batches_over_64() {
         let net = tiny_net();
-        let logic = LogicEngine::new(net, vec![swap_tape()]).unwrap();
+        let logic = LogicEngine::<u64>::new(net, vec![swap_tape()]).unwrap();
         let images: Vec<Vec<f32>> = (0..150)
             .map(|i| vec![(i % 2) as f32, ((i / 2) % 2) as f32])
             .collect();
@@ -378,9 +402,37 @@ mod tests {
     }
 
     #[test]
+    fn logic_engine_empty_batch_is_empty() {
+        let net = tiny_net();
+        let logic = LogicEngine::<u64>::new(net, vec![swap_tape()]).unwrap();
+        assert!(logic.infer_batch(&[]).is_empty());
+        assert!(logic.infer_block(&[]).is_empty());
+    }
+
+    #[test]
+    fn logic_engine_all_widths_agree() {
+        let net = tiny_net();
+        let w64 = LogicEngine::<u64>::new(net.clone(), vec![swap_tape()]).unwrap();
+        let w256 = LogicEngine::<W256>::new(net.clone(), vec![swap_tape()]).unwrap();
+        let w512 = LogicEngine::<W512>::new(net, vec![swap_tape()]).unwrap();
+        assert_eq!(w64.preferred_block(), 64);
+        assert_eq!(w256.preferred_block(), 256);
+        assert_eq!(w512.preferred_block(), 512);
+        let images: Vec<Vec<f32>> = (0..600)
+            .map(|i| vec![(i % 2) as f32, ((i / 3) % 2) as f32])
+            .collect();
+        let refs: Vec<&[f32]> = images.iter().map(|v| v.as_slice()).collect();
+        let a = w64.infer_batch(&refs);
+        let b = w256.infer_batch(&refs);
+        let c = w512.infer_batch(&refs);
+        assert_eq!(a, b);
+        assert_eq!(a, c);
+    }
+
+    #[test]
     fn param_bytes_logic_much_smaller() {
         let net = tiny_net();
-        let logic = LogicEngine::new(net.clone(), vec![swap_tape()]).unwrap();
+        let logic = LogicEngine::<u64>::new(net.clone(), vec![swap_tape()]).unwrap();
         let thresh = ThresholdEngine::new(net).unwrap();
         assert!(logic.param_bytes_per_inference() < thresh.param_bytes_per_inference());
     }
@@ -393,25 +445,26 @@ mod tests {
 
 /// The CNN variant of the logic engine.  conv2's per-patch Boolean
 /// function (90 bits -> 20 bits) runs as a tape, applied over all 11x11
-/// patch positions with 64-way bit-parallelism (positions x images are
-/// flattened into sample planes).
-pub struct CnnLogicEngine {
+/// patch positions with `W::LANES`-way bit-parallelism (positions x
+/// images are flattened into sample planes).
+pub struct CnnLogicEngine<W: BitWord = u64> {
     net: NetArtifacts,
     conv2_tape: LogicTape,
     last: PopcountLast,
     c1: usize,
     c2: usize,
     name: String,
+    _width: PhantomData<fn() -> W>,
 }
 
-impl CnnLogicEngine {
-    pub fn new(net: NetArtifacts, conv2_tape: LogicTape) -> Result<CnnLogicEngine> {
+impl<W: BitWord> CnnLogicEngine<W> {
+    pub fn new(net: NetArtifacts, conv2_tape: LogicTape) -> Result<CnnLogicEngine<W>> {
         let Arch::Cnn { c1, c2, .. } = net.arch else {
-            anyhow::bail!("CnnLogicEngine expects a CNN");
+            crate::bail!("CnnLogicEngine expects a CNN");
         };
         let last = PopcountLast::new(&net, "w3", "scale_w3", "bias_w3");
-        let name = format!("logic:{}", net.name);
-        Ok(CnnLogicEngine { net, conv2_tape, last, c1, c2, name })
+        let name = format!("logic[w{}]:{}", W::LANES, net.name);
+        Ok(CnnLogicEngine { net, conv2_tape, last, c1, c2, name, _width: PhantomData })
     }
 
     /// conv1 (f32) + sign + pool for one image -> 13x13xc1 bits.
@@ -454,18 +507,19 @@ impl CnnLogicEngine {
     fn infer_one(&self, img: &[f32]) -> Vec<f32> {
         let (c1, c2) = (self.c1, self.c2);
         let a1 = self.first_stage(img);
-        // conv2 as logic over 11x11 patch positions, 64 positions/plane.
+        // conv2 as logic over 11x11 patch positions, W::LANES
+        // positions/plane.
         let positions: Vec<(usize, usize)> = (0..11)
             .flat_map(|y| (0..11).map(move |x| (y, x)))
             .collect();
         let mut out_bits = vec![false; 11 * 11 * c2];
-        let mut scratch = self.conv2_tape.make_scratch();
+        let mut scratch = self.conv2_tape.make_scratch::<W>();
         debug_assert_eq!(self.conv2_tape.n_inputs, 9 * c1);
-        let mut inputs = vec![0u64; 9 * c1];
-        let mut out_words = vec![0u64; self.conv2_tape.outputs.len()];
-        for block in positions.chunks(64) {
+        let mut inputs = vec![W::ZERO; 9 * c1];
+        let mut out_words = vec![W::ZERO; self.conv2_tape.outputs.len()];
+        for block in positions.chunks(W::LANES) {
             for w in inputs.iter_mut() {
-                *w = 0;
+                *w = W::ZERO;
             }
             for (s, &(y, x)) in block.iter().enumerate() {
                 // patch bit order: (dy, dx, c) row-major — matches the
@@ -474,7 +528,7 @@ impl CnnLogicEngine {
                     for dx in 0..3 {
                         for c in 0..c1 {
                             if a1[((y + dy) * 13 + (x + dx)) * c1 + c] {
-                                inputs[(dy * 3 + dx) * c1 + c] |= 1 << s;
+                                inputs[(dy * 3 + dx) * c1 + c].set_lane(s, true);
                             }
                         }
                     }
@@ -483,7 +537,7 @@ impl CnnLogicEngine {
             self.conv2_tape.eval_into(&inputs, &mut out_words, &mut scratch);
             for (s, &(y, x)) in block.iter().enumerate() {
                 for j in 0..c2 {
-                    out_bits[(y * 11 + x) * c2 + j] = (out_words[j] >> s) & 1 == 1;
+                    out_bits[(y * 11 + x) * c2 + j] = out_words[j].get_lane(s);
                 }
             }
         }
@@ -504,7 +558,7 @@ impl CnnLogicEngine {
     }
 }
 
-impl InferenceEngine for CnnLogicEngine {
+impl<W: BitWord> InferenceEngine for CnnLogicEngine<W> {
     fn infer_batch(&self, images: &[&[f32]]) -> Vec<Vec<f32>> {
         images.iter().map(|img| self.infer_one(img)).collect()
     }
@@ -516,5 +570,9 @@ impl InferenceEngine for CnnLogicEngine {
     fn param_bytes_per_inference(&self) -> usize {
         let k1 = &self.net.tensors["k1"];
         (k1.numel() + self.last.w_eff.len()) * 4
+    }
+
+    fn preferred_block(&self) -> usize {
+        W::LANES
     }
 }

@@ -1,4 +1,11 @@
-//! Serving metrics: request counts, batch sizes, latency percentiles.
+//! Serving metrics: request counts, executed-block sizes, latency
+//! percentiles.
+//!
+//! Since the batcher shards each dynamic batch into engine-width blocks,
+//! `record_batch` is called once per *executed block*: `batches()` /
+//! `mean_batch_size()` describe the units of work the pool ran, while
+//! `Response::batch_size` reports the dynamic batch a request was
+//! collected into.
 //!
 //! Latencies land in a log-scaled histogram (microseconds), so p50/p99
 //! are O(1) to read and recording is lock-free.
@@ -76,10 +83,10 @@ impl Metrics {
         u64::MAX
     }
 
-    /// One-line human summary.
+    /// One-line human summary (blocks = engine-width execution units).
     pub fn summary(&self) -> String {
         format!(
-            "requests={} batches={} mean_batch={:.1} p50={}us p99={}us",
+            "requests={} blocks={} mean_block={:.1} p50={}us p99={}us",
             self.requests(),
             self.batches(),
             self.mean_batch_size(),

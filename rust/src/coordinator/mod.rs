@@ -3,24 +3,29 @@
 //! The paper's deployment story is an inference accelerator whose hidden
 //! layers need no parameter memory.  This module is the CPU-serving
 //! equivalent: requests enter through [`Coordinator::submit`], a batcher
-//! groups up to 64 of them (one u64 bit-plane word) or flushes on a
-//! deadline, and worker threads run the [`engine::InferenceEngine`] —
-//! normally the [`engine::LogicEngine`], whose hidden layers are the
-//! synthesized tapes with weights folded into wiring.
+//! thread groups up to `max_batch` of them (or flushes on a deadline),
+//! shards the batch into blocks of the engine's preferred width (one
+//! plane word — 64 requests for `LogicEngine<u64>`, 512 for
+//! `LogicEngine<[u64; 8]>`), and dispatches the blocks across the worker
+//! pool so one large batch fans out over every worker instead of being
+//! chewed through 64 samples at a time on a single thread.  Each request
+//! carries its own reply channel, so results reassemble in submission
+//! order no matter which worker finishes first.
 //!
-//! Design follows the vLLM-router shape: bounded queue (backpressure),
+//! Design follows the vLLM-router shape: bounded queues (backpressure),
 //! per-request latency tracking, graceful shutdown.
 
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
 
-use anyhow::Result;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::format_err;
+use crate::util::error::Result;
 use engine::InferenceEngine;
 use metrics::Metrics;
 
@@ -39,13 +44,17 @@ pub struct Response {
     pub class: usize,
     pub logits: Vec<f32>,
     pub queue_us: u64,
+    /// Size of the dynamic batch this request was collected into (the
+    /// batch may have been sharded into several blocks for execution).
     pub batch_size: usize,
 }
 
 /// Coordinator configuration.
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
-    /// Max requests per batch (64 = one bit-plane word).
+    /// Max requests collected per dynamic batch.  The batch is then
+    /// sharded into engine-width blocks, so this can (and should) be
+    /// much larger than one plane word.
     pub max_batch: usize,
     /// Flush a partial batch after this long.
     pub max_wait: Duration,
@@ -58,7 +67,7 @@ pub struct CoordinatorConfig {
 impl Default for CoordinatorConfig {
     fn default() -> Self {
         CoordinatorConfig {
-            max_batch: 64,
+            max_batch: 512,
             max_wait: Duration::from_millis(2),
             queue_depth: 1024,
             workers: 2,
@@ -66,34 +75,56 @@ impl Default for CoordinatorConfig {
     }
 }
 
+/// One execution unit: a slice of a dynamic batch, at most the engine's
+/// preferred block width.
+struct Block {
+    reqs: Vec<Request>,
+    batch_size: usize,
+}
+
 /// A handle to a running coordinator.
 pub struct Coordinator {
     tx: SyncSender<Request>,
     pub metrics: Arc<Metrics>,
     shutdown: Arc<AtomicBool>,
+    batcher: Option<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
     next_id: AtomicU64,
     cfg: CoordinatorConfig,
 }
 
 impl Coordinator {
-    /// Start worker threads over a shared engine.
+    /// Start the batcher thread + worker pool over a shared engine.
     pub fn start(engine: Arc<dyn InferenceEngine>, cfg: CoordinatorConfig) -> Coordinator {
         let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
-        let rx = Arc::new(Mutex::new(rx));
+        let n_workers = cfg.workers.max(1);
+        // Block queue: deep enough that sharding one full batch never
+        // deadlocks against busy workers, bounded for backpressure.
+        let block_depth = (cfg.max_batch / engine.preferred_block().max(1) + 2 * n_workers).max(4);
+        let (block_tx, block_rx) = sync_channel::<Block>(block_depth);
+        let block_rx = Arc::new(Mutex::new(block_rx));
         let metrics = Arc::new(Metrics::new());
         let shutdown = Arc::new(AtomicBool::new(false));
-        let mut workers = Vec::new();
-        for w in 0..cfg.workers.max(1) {
-            let rx = Arc::clone(&rx);
-            let engine = Arc::clone(&engine);
-            let metrics = Arc::clone(&metrics);
+
+        let batcher = {
             let shutdown = Arc::clone(&shutdown);
             let cfg = cfg.clone();
+            let block_width = engine.preferred_block().max(1);
+            std::thread::Builder::new()
+                .name("nullanet-batcher".into())
+                .spawn(move || batcher_loop(rx, block_tx, block_width, shutdown, cfg))
+                .expect("spawn batcher")
+        };
+
+        let mut workers = Vec::new();
+        for w in 0..n_workers {
+            let block_rx = Arc::clone(&block_rx);
+            let engine = Arc::clone(&engine);
+            let metrics = Arc::clone(&metrics);
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("nullanet-worker-{w}"))
-                    .spawn(move || worker_loop(rx, engine, metrics, shutdown, cfg))
+                    .spawn(move || worker_loop(block_rx, engine, metrics))
                     .expect("spawn worker"),
             );
         }
@@ -101,6 +132,7 @@ impl Coordinator {
             tx,
             metrics,
             shutdown,
+            batcher: Some(batcher),
             workers,
             next_id: AtomicU64::new(0),
             cfg,
@@ -117,7 +149,9 @@ impl Coordinator {
             reply: reply_tx,
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
         };
-        self.tx.send(req).map_err(|_| anyhow::anyhow!("coordinator stopped"))?;
+        self.tx
+            .send(req)
+            .map_err(|_| format_err!("coordinator stopped"))?;
         Ok(reply_rx)
     }
 
@@ -131,47 +165,73 @@ impl Coordinator {
         &self.cfg
     }
 
-    /// Stop accepting work and join the workers.
+    /// Stop accepting work and join the batcher + workers.
     pub fn shutdown(mut self) {
         self.shutdown.store(true, Ordering::SeqCst);
         drop(self.tx);
+        if let Some(b) = self.batcher.take() {
+            let _ = b.join();
+        }
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
 }
 
-fn worker_loop(
-    rx: Arc<Mutex<Receiver<Request>>>,
-    engine: Arc<dyn InferenceEngine>,
-    metrics: Arc<Metrics>,
+/// Collect dynamic batches from the request queue, shard each into
+/// engine-width blocks, and fan the blocks out to the worker pool.
+fn batcher_loop(
+    rx: Receiver<Request>,
+    block_tx: SyncSender<Block>,
+    block_width: usize,
     shutdown: Arc<AtomicBool>,
     cfg: CoordinatorConfig,
 ) {
     loop {
-        // Collect a batch: block for the first request, then drain up to
-        // max_batch or max_wait.
-        let batch = {
-            let guard = rx.lock().unwrap();
-            match batcher::collect_batch(&guard, cfg.max_batch, cfg.max_wait) {
-                Some(b) if !b.is_empty() => b,
-                Some(_) => {
-                    // idle timeout: re-check shutdown, keep polling
-                    if shutdown.load(Ordering::SeqCst) {
-                        return;
+        match batcher::collect_batch(&rx, cfg.max_batch, cfg.max_wait) {
+            Some(batch) if !batch.is_empty() => {
+                let batch_size = batch.len();
+                let mut head = batch;
+                while !head.is_empty() {
+                    let tail = head.split_off(block_width.min(head.len()));
+                    let block = Block { reqs: head, batch_size };
+                    head = tail;
+                    if block_tx.send(block).is_err() {
+                        return; // workers gone
                     }
-                    continue;
                 }
-                None => return, // channel closed
             }
+            Some(_) => {
+                // Idle timeout: re-check shutdown, keep polling.
+                if shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+            }
+            None => return, // channel closed
+        }
+    }
+}
+
+fn worker_loop(
+    rx: Arc<Mutex<Receiver<Block>>>,
+    engine: Arc<dyn InferenceEngine>,
+    metrics: Arc<Metrics>,
+) {
+    loop {
+        // Hold the lock only while waiting for one block; the batcher
+        // dropping its sender is the shutdown signal.
+        let block = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
         };
-        let n = batch.len();
+        let Ok(block) = block else { return };
+        let n = block.reqs.len();
         let t0 = Instant::now();
-        let images: Vec<&[f32]> = batch.iter().map(|r| r.image.as_slice()).collect();
+        let images: Vec<&[f32]> = block.reqs.iter().map(|r| r.image.as_slice()).collect();
         let outputs = engine.infer_batch(&images);
         let infer_us = t0.elapsed().as_micros() as u64;
         metrics.record_batch(n, infer_us);
-        for (req, logits) in batch.into_iter().zip(outputs) {
+        for (req, logits) in block.reqs.into_iter().zip(outputs) {
             let queue_us = req.submitted.elapsed().as_micros() as u64;
             metrics.record_latency(queue_us);
             let class = crate::model::argmax(&logits);
@@ -180,7 +240,7 @@ fn worker_loop(
                 class,
                 logits,
                 queue_us,
-                batch_size: n,
+                batch_size: block.batch_size,
             });
         }
     }
@@ -266,6 +326,48 @@ mod tests {
             max_batch = max_batch.max(r.batch_size);
         }
         assert!(max_batch > 1, "expected batching, got {max_batch}");
+        let c = Arc::try_unwrap(c).ok().expect("sole owner");
+        c.shutdown();
+    }
+
+    #[test]
+    fn big_batches_are_sharded_into_engine_blocks() {
+        /// Engine with a tiny preferred block so sharding is observable.
+        struct TinyBlockEngine;
+        impl InferenceEngine for TinyBlockEngine {
+            fn infer_batch(&self, images: &[&[f32]]) -> Vec<Vec<f32>> {
+                // The coordinator must never hand a worker more than one
+                // block of preferred width.
+                assert!(images.len() <= 8, "block too big: {}", images.len());
+                EchoEngine.infer_batch(images)
+            }
+            fn name(&self) -> &str {
+                "tiny-block"
+            }
+            fn preferred_block(&self) -> usize {
+                8
+            }
+        }
+
+        let c = Arc::new(Coordinator::start(
+            Arc::new(TinyBlockEngine),
+            CoordinatorConfig {
+                workers: 2,
+                max_wait: Duration::from_millis(20),
+                ..Default::default()
+            },
+        ));
+        let mut rxs = vec![];
+        for i in 0..40 {
+            rxs.push(c.submit(vec![(i % 10) as f32]).unwrap());
+        }
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let r = rx.recv().unwrap();
+            assert_eq!(r.class, i % 10);
+        }
+        // 40 requests with a block width of 8 cannot fit in fewer than 5
+        // blocks, however they were batched.
+        assert!(c.metrics.batches() >= 5, "blocks: {}", c.metrics.batches());
         let c = Arc::try_unwrap(c).ok().expect("sole owner");
         c.shutdown();
     }

@@ -3,7 +3,8 @@
 //! Layout: magic "NDIG" | u32 n | u32 dim | f32 x[n*dim] | u8 y[n],
 //! little-endian throughout (python/compile/data.py `save_dataset`).
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Result};
 use std::io::Read;
 use std::path::Path;
 

@@ -7,7 +7,8 @@
 //! majority vote, and produces one [`IsfFunction`] per neuron, all
 //! sharing a single [`PatternSet`].
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Result};
 use std::collections::HashMap;
 use std::io::Read;
 use std::path::Path;

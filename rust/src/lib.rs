@@ -20,7 +20,8 @@
 //! * [`enumerate`] — Section 3.2.1 input-enumeration realization
 //! * [`aig`] — and-inverter graph with rewrite/balance/refactor
 //! * [`lutmap`] — priority-cut 6-LUT technology mapping
-//! * [`netlist`] — linear AIG "tape" + 64-way bit-parallel simulator
+//! * [`netlist`] — linear AIG "tape" + multi-word bit-parallel simulator
+//!   (generic over [`util::BitWord`]: 64/128/256/512 samples per pass)
 //! * [`isf`] — ON/OFF/DC-set extraction from training activations
 //! * [`synth`] — Algorithm 2 (OptimizeNeuron / OptimizeLayer / OptimizeNetwork)
 //! * [`pipeline`] — macro/micro pipelining (Section 3.2.2, OptimizeNetwork)
@@ -28,11 +29,14 @@
 //! * [`cost`] — Tables 1–3 models + MAC/memory accounting (Table 6)
 //! * [`model`] — artifact loading + reference forward passes (the oracle)
 //! * [`data`] — SynthDigits dataset loader
-//! * [`coordinator`] — request router + dynamic batcher + worker pool
-//! * [`runtime`] — PJRT client wrapper (HLO text → compiled executable)
+//! * [`coordinator`] — request router + dynamic batcher that shards big
+//!   batches into plane-width blocks across the worker pool
+//! * [`runtime`] — PJRT client wrapper (HLO text → compiled executable;
+//!   real backend behind the `pjrt` feature, honest stub otherwise)
 //! * [`server`] — TCP JSON-lines front-end
-//! * [`cli`], [`jsonio`], [`logging`], [`bench_util`], [`prop`] — offline
-//!   substrates (no crates.io access in this environment)
+//! * [`cli`], [`jsonio`], [`logging`], [`bench_util`], [`prop`],
+//!   [`util::error`] — offline substrates (no crates.io access in this
+//!   environment, so there are zero external dependencies)
 
 pub mod aig;
 pub mod arith;

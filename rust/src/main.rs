@@ -9,12 +9,14 @@
 //! Python is never invoked here: everything reads `artifacts/` produced
 //! once by `make artifacts`.
 
-use anyhow::{anyhow, Result};
 use std::sync::Arc;
 
 use nullanet::cli::Cli;
 use nullanet::coordinator::{engine, Coordinator, CoordinatorConfig};
 use nullanet::cost::FpgaModel;
+use nullanet::format_err;
+use nullanet::util::error::Result;
+use nullanet::util::{W256, W512};
 use nullanet::{bench_util, data, isf, model, synth};
 
 fn main() {
@@ -119,7 +121,7 @@ fn synth_net(
             t0.elapsed()
         );
         if violations > 0 {
-            return Err(anyhow!("{}: {} ISF violations", o.name, violations));
+            return Err(format_err!("{}: {} ISF violations", o.name, violations));
         }
         out.push(s);
     }
@@ -132,7 +134,7 @@ fn run_synth(args: &[String]) -> Result<()> {
         .opt("cap", "4000", "max distinct ISF patterns per layer (0 = all)")
         .opt("threads", "0", "worker threads (0 = auto)")
         .parse(args)
-        .map_err(|h| anyhow!("{h}"))?;
+        .map_err(|h| format_err!("{h}"))?;
     let art = model::Artifacts::load(&nullanet::artifacts_dir())?;
     let net = art.net(p.str("net"))?;
     let threads = if p.usize("threads") == 0 {
@@ -178,17 +180,24 @@ fn build_engine(
     net_name: &str,
     engine_name: &str,
     cap: usize,
+    width: usize,
 ) -> Result<Arc<dyn engine::InferenceEngine>> {
     let net = art.net(net_name)?;
     Ok(match engine_name {
         "logic" => {
             let layers = synth_net(net, cap, nullanet::util::default_threads())?;
-            let tapes = layers.into_iter().map(|l| l.tape).collect();
-            Arc::new(engine::LogicEngine::new(net.clone(), tapes)?)
+            let tapes: Vec<_> = layers.into_iter().map(|l| l.tape).collect();
+            // Plane width = samples per bit-parallel block.
+            match width {
+                64 => Arc::new(engine::LogicEngine::<u64>::new(net.clone(), tapes)?),
+                256 => Arc::new(engine::LogicEngine::<W256>::new(net.clone(), tapes)?),
+                512 => Arc::new(engine::LogicEngine::<W512>::new(net.clone(), tapes)?),
+                other => return Err(format_err!("unsupported width {other} (64|256|512)")),
+            }
         }
         "threshold" => Arc::new(engine::ThresholdEngine::new(net.clone())?),
         "xla" => Arc::new(engine::XlaEngine::from_net(net, "model_b64", 64, 784, 10)?),
-        other => return Err(anyhow!("unknown engine {other} (logic|threshold|xla)")),
+        other => return Err(format_err!("unknown engine {other} (logic|threshold|xla)")),
     })
 }
 
@@ -198,8 +207,9 @@ fn run_eval(args: &[String]) -> Result<()> {
         .opt("engine", "logic", "logic|threshold|xla|f32")
         .opt("cap", "4000", "ISF pattern cap for logic synthesis")
         .opt("limit", "0", "evaluate only the first N test samples (0 = all)")
+        .opt("width", "64", "bit-parallel plane width for the logic engine (64|256|512)")
         .parse(args)
-        .map_err(|h| anyhow!("{h}"))?;
+        .map_err(|h| format_err!("{h}"))?;
     let art = model::Artifacts::load(&nullanet::artifacts_dir())?;
     let net = art.net(p.str("net"))?;
     let mut ds = data::Dataset::load(&art.test_path)?;
@@ -210,10 +220,14 @@ fn run_eval(args: &[String]) -> Result<()> {
         let binary = net.name.contains("net11") || net.name.contains("net21");
         net.accuracy_f32(&ds, binary)?
     } else {
-        let eng = build_engine(&art, p.str("net"), p.str("engine"), p.usize("cap"))?;
+        let eng =
+            build_engine(&art, p.str("net"), p.str("engine"), p.usize("cap"), p.usize("width"))?;
+        // Feed the engine full plane-width blocks (a fixed 256 would
+        // leave --width 512 blocks half empty).
+        let step = eng.preferred_block().max(256);
         let mut hits = 0usize;
-        for chunk_start in (0..ds.n).step_by(256) {
-            let end = (chunk_start + 256).min(ds.n);
+        for chunk_start in (0..ds.n).step_by(step) {
+            let end = (chunk_start + step).min(ds.n);
             let images: Vec<&[f32]> = (chunk_start..end).map(|i| ds.image(i)).collect();
             let out = eng.infer_batch(&images);
             for (k, logits) in out.iter().enumerate() {
@@ -243,7 +257,7 @@ fn run_codegen(args: &[String]) -> Result<()> {
         .opt("cap", "2000", "ISF pattern cap")
         .opt("out", "generated_layers.rs", "output file")
         .parse(args)
-        .map_err(|h| anyhow!("{h}"))?;
+        .map_err(|h| format_err!("{h}"))?;
     let art = model::Artifacts::load(&nullanet::artifacts_dir())?;
     let net = art.net(p.str("net"))?;
     let layers = synth_net(net, p.usize("cap"), nullanet::util::default_threads())?;
@@ -277,10 +291,11 @@ fn run_serve(args: &[String]) -> Result<()> {
         .opt("cap", "4000", "ISF pattern cap for logic synthesis")
         .opt("addr", "127.0.0.1:7878", "bind address")
         .opt("workers", "2", "coordinator worker threads")
+        .opt("width", "64", "bit-parallel plane width for the logic engine (64|256|512)")
         .parse(args)
-        .map_err(|h| anyhow!("{h}"))?;
+        .map_err(|h| format_err!("{h}"))?;
     let art = model::Artifacts::load(&nullanet::artifacts_dir())?;
-    let eng = build_engine(&art, p.str("net"), p.str("engine"), p.usize("cap"))?;
+    let eng = build_engine(&art, p.str("net"), p.str("engine"), p.usize("cap"), p.usize("width"))?;
     nullanet::info!("engine {} ready", eng.name());
     let coord = Arc::new(Coordinator::start(
         eng,

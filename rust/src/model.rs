@@ -7,7 +7,8 @@
 //!     function the synthesized logic must reproduce;
 //!   * accuracy evaluation over a [`crate::data::Dataset`].
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::error::{Context, Result};
+use crate::{bail, format_err};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
@@ -63,16 +64,16 @@ impl Artifacts {
         let mpath = root.join("manifest.json");
         let text = std::fs::read_to_string(&mpath)
             .with_context(|| format!("read {}", mpath.display()))?;
-        let manifest = Json::parse(&text).map_err(|e| anyhow!("parse manifest: {e}"))?;
+        let manifest = Json::parse(&text).map_err(|e| format_err!("parse manifest: {e}"))?;
         let mut nets = BTreeMap::new();
         let nets_json = manifest
             .get("nets")
             .and_then(Json::as_obj)
-            .ok_or_else(|| anyhow!("manifest missing nets"))?;
+            .ok_or_else(|| format_err!("manifest missing nets"))?;
         for (name, entry) in nets_json {
             nets.insert(name.clone(), load_net(root, name, entry)?);
         }
-        let ds = manifest.get("dataset").ok_or_else(|| anyhow!("no dataset"))?;
+        let ds = manifest.get("dataset").ok_or_else(|| format_err!("no dataset"))?;
         let train_path = root.join(ds.get("train").and_then(Json::as_str).unwrap_or("dataset/train.bin"));
         let test_path = root.join(ds.get("test").and_then(Json::as_str).unwrap_or("dataset/test.bin"));
         Ok(Artifacts { root: root.to_path_buf(), nets, train_path, test_path, manifest })
@@ -81,19 +82,19 @@ impl Artifacts {
     pub fn net(&self, name: &str) -> Result<&NetArtifacts> {
         self.nets
             .get(name)
-            .ok_or_else(|| anyhow!("net {name} not in artifacts"))
+            .ok_or_else(|| format_err!("net {name} not in artifacts"))
     }
 }
 
 fn load_net(root: &Path, name: &str, entry: &Json) -> Result<NetArtifacts> {
     let dir = root.join(name);
-    let arch_json = entry.get("arch").ok_or_else(|| anyhow!("{name}: no arch"))?;
+    let arch_json = entry.get("arch").ok_or_else(|| format_err!("{name}: no arch"))?;
     let arch = match arch_json.get("kind").and_then(Json::as_str) {
         Some("mlp") => Arch::Mlp {
             sizes: arch_json
                 .get("sizes")
                 .and_then(Json::as_arr)
-                .ok_or_else(|| anyhow!("mlp sizes"))?
+                .ok_or_else(|| format_err!("mlp sizes"))?
                 .iter()
                 .filter_map(Json::as_usize)
                 .collect(),
@@ -110,7 +111,7 @@ fn load_net(root: &Path, name: &str, entry: &Json) -> Result<NetArtifacts> {
     let blob = std::fs::read(dir.join("weights.bin"))
         .with_context(|| format!("{name}: weights.bin"))?;
     let mut tensors = BTreeMap::new();
-    let tj = entry.get("tensors").and_then(Json::as_obj).ok_or_else(|| anyhow!("tensors"))?;
+    let tj = entry.get("tensors").and_then(Json::as_obj).ok_or_else(|| format_err!("tensors"))?;
     for (tname, t) in tj {
         let off = t.get("offset").and_then(Json::as_usize).unwrap_or(0);
         let nbytes = t.get("nbytes").and_then(Json::as_usize).unwrap_or(0);
@@ -122,7 +123,7 @@ fn load_net(root: &Path, name: &str, entry: &Json) -> Result<NetArtifacts> {
         let dtype = t.get("dtype").and_then(Json::as_str).unwrap_or("f32");
         let raw = blob
             .get(off..off + nbytes)
-            .ok_or_else(|| anyhow!("{name}/{tname}: blob range"))?;
+            .ok_or_else(|| format_err!("{name}/{tname}: blob range"))?;
         let f32s: Vec<f32> = match dtype {
             "f32" => raw
                 .chunks_exact(4)
@@ -197,7 +198,7 @@ impl NetArtifacts {
     fn t(&self, name: &str) -> Result<&Tensor> {
         self.tensors
             .get(name)
-            .ok_or_else(|| anyhow!("{}: tensor {name} missing", self.name))
+            .ok_or_else(|| format_err!("{}: tensor {name} missing", self.name))
     }
 
     /// Folded-BN f32 forward for one image (784 floats) → 10 logits.

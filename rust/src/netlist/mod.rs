@@ -1,13 +1,15 @@
 //! The request-path execution engine: a linear "tape" compiled from an
-//! AIG, evaluated 64 samples at a time with pure bitwise ops.
+//! AIG, evaluated `W::LANES` samples at a time with pure bitwise ops.
 //!
 //! This is the `Pythonize()` step of Algorithm 2 re-imagined for the Rust
 //! serving stack: the optimized Boolean network is flattened into a flat
 //! instruction array (no pointers, no hash maps, cache-linear) and each
-//! instruction is `dst = (a ^ ca) & (b ^ cb)` on u64 sample planes.
-//! Model parameters do not exist at this point — they are folded into the
-//! wiring, which is the paper's "no memory accesses for weights" claim in
-//! CPU form: the only memory traffic is the activation planes themselves.
+//! instruction is `dst = (a ^ ca) & (b ^ cb)` on sample planes of any
+//! [`crate::util::BitWord`] width — `u64` for 64 samples per pass, up to
+//! `[u64; 8]` for 512 (SIMD-sized).  Model parameters do not exist at
+//! this point — they are folded into the wiring, which is the paper's
+//! "no memory accesses for weights" claim in CPU form: the only memory
+//! traffic is the activation planes themselves.
 
 mod codegen;
 mod tape;

@@ -1,10 +1,18 @@
-//! Flat AIG instruction tape + 64-way bit-parallel evaluation.
+//! Flat AIG instruction tape + generic multi-word bit-parallel evaluation.
+//!
+//! One compiled tape serves every plane width: instructions store their
+//! complement flags as broadcast `u64` masks (`0` or `!0`), and
+//! [`LogicTape::eval_into`] is generic over [`BitWord`], so the same
+//! `Vec<TapeOp>` evaluates 64 samples per pass (`u64`) or 128/256/512
+//! (`[u64; N]` — LLVM vectorizes the limb loops to SIMD).
 
 use crate::aig::Aig;
+use crate::util::BitWord;
 
 /// One AND instruction: dst = (buf[a] ^ ca) & (buf[b] ^ cb).
-/// Complement flags are stored as full-width masks (0 or !0) so the hot
-/// loop is branch-free.
+/// Complement flags are stored as broadcast `u64` masks (0 or !0) so the
+/// hot loop is branch-free at every plane width (see
+/// [`BitWord::xor_mask`]).
 #[derive(Clone, Copy, Debug)]
 pub struct TapeOp {
     pub a: u32,
@@ -14,7 +22,7 @@ pub struct TapeOp {
 }
 
 /// A compiled logic network: `n_inputs` input planes, then `ops.len()`
-/// computed planes; outputs pick (plane, complement) pairs.
+/// computed planes; outputs pick (plane, complement-mask) pairs.
 #[derive(Clone, Debug)]
 pub struct LogicTape {
     pub n_inputs: usize,
@@ -61,60 +69,66 @@ impl LogicTape {
         self.n_planes
     }
 
-    /// Allocate a scratch buffer for [`LogicTape::eval_into`].
-    pub fn make_scratch(&self) -> Vec<u64> {
-        vec![0; self.n_planes]
+    /// Allocate a scratch buffer for [`LogicTape::eval_into`] at plane
+    /// width `W` (one `W` per plane — `W::LANES` samples per pass).
+    pub fn make_scratch<W: BitWord>(&self) -> Vec<W> {
+        vec![W::ZERO; self.n_planes]
     }
 
-    /// Evaluate one 64-sample word-plane batch.
+    /// Evaluate one `W::LANES`-sample plane batch.
     ///
-    /// `inputs[i]` = plane for input i (bit s = sample s); `outputs` is
+    /// `inputs[i]` = plane for input i (lane s = sample s); `outputs` is
     /// filled with one word per output.  `scratch` must come from
     /// [`LogicTape::make_scratch`] (contents are overwritten).
-    pub fn eval_into(&self, inputs: &[u64], outputs: &mut [u64], scratch: &mut [u64]) {
+    pub fn eval_into<W: BitWord>(&self, inputs: &[W], outputs: &mut [W], scratch: &mut [W]) {
         debug_assert_eq!(inputs.len(), self.n_inputs);
         debug_assert_eq!(outputs.len(), self.outputs.len());
         debug_assert_eq!(scratch.len(), self.n_planes);
-        scratch[0] = 0;
+        scratch[0] = W::ZERO;
         scratch[1..=self.n_inputs].copy_from_slice(inputs);
         let base = self.n_inputs + 1;
         for (i, op) in self.ops.iter().enumerate() {
-            // SAFETY-free fast path: indices are in-bounds by construction
-            // (fanins always precede the op's own plane).
-            let a = scratch[op.a as usize] ^ op.ca;
-            let b = scratch[op.b as usize] ^ op.cb;
-            scratch[base + i] = a & b;
+            // Indices are in-bounds by construction (fanins always precede
+            // the op's own plane).
+            let a = scratch[op.a as usize].xor_mask(op.ca);
+            let b = scratch[op.b as usize].xor_mask(op.cb);
+            scratch[base + i] = a.and(b);
         }
         for (o, (plane, compl)) in outputs.iter_mut().zip(&self.outputs) {
-            *o = scratch[*plane as usize] ^ compl;
+            *o = scratch[*plane as usize].xor_mask(*compl);
         }
     }
 
-    /// Convenience: evaluate a batch of ≤64 boolean input rows; returns
-    /// one boolean row per sample.
-    pub fn eval_batch(&self, rows: &[Vec<bool>]) -> Vec<Vec<bool>> {
-        assert!(rows.len() <= 64);
-        let mut inputs = vec![0u64; self.n_inputs];
+    /// Convenience: evaluate a batch of ≤ `W::LANES` boolean input rows;
+    /// returns one boolean row per sample.
+    pub fn eval_batch_wide<W: BitWord>(&self, rows: &[Vec<bool>]) -> Vec<Vec<bool>> {
+        assert!(rows.len() <= W::LANES);
+        let mut inputs = vec![W::ZERO; self.n_inputs];
         for (s, row) in rows.iter().enumerate() {
             assert_eq!(row.len(), self.n_inputs);
             for (i, &b) in row.iter().enumerate() {
                 if b {
-                    inputs[i] |= 1 << s;
+                    inputs[i].set_lane(s, true);
                 }
             }
         }
-        let mut out_words = vec![0u64; self.outputs.len()];
-        let mut scratch = self.make_scratch();
+        let mut out_words = vec![W::ZERO; self.outputs.len()];
+        let mut scratch = self.make_scratch::<W>();
         self.eval_into(&inputs, &mut out_words, &mut scratch);
         rows.iter()
             .enumerate()
             .map(|(s, _)| {
                 out_words
                     .iter()
-                    .map(|w| (w >> s) & 1 == 1)
+                    .map(|w| w.get_lane(s))
                     .collect::<Vec<bool>>()
             })
             .collect()
+    }
+
+    /// [`LogicTape::eval_batch_wide`] at the default 64-lane width.
+    pub fn eval_batch(&self, rows: &[Vec<bool>]) -> Vec<Vec<bool>> {
+        self.eval_batch_wide::<u64>(rows)
     }
 }
 
@@ -122,7 +136,7 @@ impl LogicTape {
 mod tests {
     use super::*;
     use crate::aig::{sim_words, Lit};
-    use crate::util::SplitMix64;
+    use crate::util::{SplitMix64, W512};
 
     fn random_aig(rng: &mut SplitMix64, n_pis: usize, n_ands: usize, n_outs: usize) -> Aig {
         let mut g = Aig::new(n_pis);
@@ -156,6 +170,27 @@ mod tests {
             tape.eval_into(&inputs, &mut got, &mut scratch);
             assert_eq!(got, want);
         }
+    }
+
+    // The all-width eval-vs-sim_words_wide property test lives in
+    // tests/props.rs (tape_eval_matches_sim_reference_at_every_width);
+    // here we only check the lane-for-lane packing equivalence.
+    #[test]
+    fn wide_eval_agrees_with_u64_eval_lane_for_lane() {
+        // The same tape on the same samples must give identical answers
+        // whether the samples are packed 64- or 512-wide.
+        let mut rng = SplitMix64::new(9);
+        let g = random_aig(&mut rng, 8, 120, 4);
+        let tape = LogicTape::from_aig(&g);
+        let rows: Vec<Vec<bool>> = (0..512)
+            .map(|_| (0..8).map(|_| rng.bool(0.5)).collect())
+            .collect();
+        let wide = tape.eval_batch_wide::<W512>(&rows);
+        let narrow: Vec<Vec<bool>> = rows
+            .chunks(64)
+            .flat_map(|c| tape.eval_batch(c))
+            .collect();
+        assert_eq!(wide, narrow);
     }
 
     #[test]

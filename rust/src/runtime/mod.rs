@@ -1,116 +1,176 @@
 //! PJRT runtime: load AOT-compiled HLO text and execute it from Rust.
 //!
-//! Wraps the `xla` crate (PJRT C API, CPU plugin).  HLO *text* is the
-//! interchange format: jax >= 0.5 emits protos with 64-bit instruction
-//! ids that xla_extension 0.5.1 rejects; the text parser reassigns ids
-//! (see /opt/xla-example/README.md and python/compile/aot.py).
+//! The real implementation wraps the `xla` crate (PJRT C API, CPU
+//! plugin) and is gated behind the `pjrt` cargo feature, because the
+//! `xla` crate comes from outside this offline environment: enable the
+//! feature only after vendoring it as a local path dependency.  Without
+//! the feature this module compiles to a stub with the same API whose
+//! loads fail cleanly, so the rest of the system (engines, benches,
+//! CLI) builds and runs everywhere and callers degrade gracefully.
 //!
-//! Python never runs here — artifacts are produced once by
-//! `make artifacts` and this module is the only consumer.
+//! HLO *text* is the interchange format: jax >= 0.5 emits protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see python/compile/aot.py).  Python never runs
+//! here — artifacts are produced once by `make artifacts` and this
+//! module is the only consumer.
 
-use anyhow::{anyhow, Result};
-use once_cell::sync::OnceCell;
-use std::path::Path;
-use std::sync::Mutex;
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use crate::format_err;
+    use crate::util::error::Result;
+    use std::path::Path;
+    use std::sync::{Mutex, OnceLock};
 
-/// The xla crate wraps PJRT handles in `Rc`, so they are not `Send` by
-/// construction even though the underlying PJRT CPU client is thread-safe
-/// at the C++ level.  We serialize every access through a Mutex and never
-/// hand out unguarded clones, which makes the wrapper sound in practice.
-struct ClientCell(Mutex<xla::PjRtClient>);
-unsafe impl Send for ClientCell {}
-unsafe impl Sync for ClientCell {}
+    /// The xla crate wraps PJRT handles in `Rc`, so they are not `Send` by
+    /// construction even though the underlying PJRT CPU client is
+    /// thread-safe at the C++ level.  We serialize every access through a
+    /// Mutex and never hand out unguarded clones, which makes the wrapper
+    /// sound in practice.
+    struct ClientCell(Mutex<xla::PjRtClient>);
+    unsafe impl Send for ClientCell {}
+    unsafe impl Sync for ClientCell {}
 
-/// Process-wide PJRT CPU client (PJRT clients are heavyweight).
-static CLIENT: OnceCell<ClientCell> = OnceCell::new();
+    /// Process-wide PJRT CPU client (PJRT clients are heavyweight).
+    static CLIENT: OnceLock<ClientCell> = OnceLock::new();
 
-fn client() -> Result<&'static ClientCell> {
-    CLIENT.get_or_try_init(|| {
-        let c = xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
-        Ok::<_, anyhow::Error>(ClientCell(Mutex::new(c)))
-    })
-}
-
-/// A compiled XLA executable plus its I/O metadata.  Execution is
-/// serialized through a Mutex for the same `Rc`-wrapper reason as the
-/// client (the PJRT executable itself is thread-safe).
-pub struct CompiledModel {
-    exe: Mutex<xla::PjRtLoadedExecutable>,
-    pub name: String,
-}
-
-// The PJRT executable is used behind the coordinator's worker threads.
-unsafe impl Send for CompiledModel {}
-unsafe impl Sync for CompiledModel {}
-
-impl CompiledModel {
-    /// Load HLO text from `path` and compile it on the CPU client.
-    pub fn load(path: &Path) -> Result<CompiledModel> {
-        let c = client()?;
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow!("parse HLO {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = c
-            .0
-            .lock()
-            .unwrap()
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
-        Ok(CompiledModel {
-            exe: Mutex::new(exe),
-            name: path
-                .file_name()
-                .map(|s| s.to_string_lossy().into_owned())
-                .unwrap_or_default(),
-        })
+    /// Initialize (or fetch) the shared client.  A failed init is NOT
+    /// cached: the next call retries, and the error keeps the PJRT
+    /// detail.  Two racing first calls may build two clients; the loser
+    /// is dropped, which is benign.
+    fn client() -> Result<&'static ClientCell> {
+        if let Some(c) = CLIENT.get() {
+            return Ok(c);
+        }
+        let c = xla::PjRtClient::cpu().map_err(|e| format_err!("PjRtClient::cpu: {e:?}"))?;
+        Ok(CLIENT.get_or_init(|| ClientCell(Mutex::new(c))))
     }
 
-    /// Execute with f32 inputs; the computation was lowered with
-    /// return_tuple=True, so the single result is a tuple whose elements
-    /// are returned in order.
-    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
-        let mut lits = Vec::with_capacity(inputs.len());
-        for (data, shape) in inputs {
-            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(data)
-                .reshape(&dims)
-                .map_err(|e| anyhow!("reshape input: {e:?}"))?;
-            lits.push(lit);
+    /// A compiled XLA executable plus its I/O metadata.  Execution is
+    /// serialized through a Mutex for the same `Rc`-wrapper reason as the
+    /// client (the PJRT executable itself is thread-safe).
+    pub struct CompiledModel {
+        exe: Mutex<xla::PjRtLoadedExecutable>,
+        pub name: String,
+    }
+
+    // The PJRT executable is used behind the coordinator's worker threads.
+    unsafe impl Send for CompiledModel {}
+    unsafe impl Sync for CompiledModel {}
+
+    impl CompiledModel {
+        /// Load HLO text from `path` and compile it on the CPU client.
+        pub fn load(path: &Path) -> Result<CompiledModel> {
+            let c = client()?;
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| format_err!("non-utf8 path"))?,
+            )
+            .map_err(|e| format_err!("parse HLO {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = c
+                .0
+                .lock()
+                .unwrap()
+                .compile(&comp)
+                .map_err(|e| format_err!("compile {}: {e:?}", path.display()))?;
+            Ok(CompiledModel {
+                exe: Mutex::new(exe),
+                name: path
+                    .file_name()
+                    .map(|s| s.to_string_lossy().into_owned())
+                    .unwrap_or_default(),
+            })
         }
-        let exe = self.exe.lock().unwrap();
-        let result = exe
-            .execute::<xla::Literal>(&lits)
-            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
-        let out = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        let tuple = out
-            .to_tuple()
-            .map_err(|e| anyhow!("to_tuple: {e:?}"))?;
-        let mut res = Vec::with_capacity(tuple.len());
-        for t in tuple {
-            res.push(
-                t.to_vec::<f32>()
-                    .map_err(|e| anyhow!("to_vec: {e:?}"))?,
-            );
+
+        /// Execute with f32 inputs; the computation was lowered with
+        /// return_tuple=True, so the single result is a tuple whose
+        /// elements are returned in order.
+        pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+            let mut lits = Vec::with_capacity(inputs.len());
+            for (data, shape) in inputs {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                let lit = xla::Literal::vec1(data)
+                    .reshape(&dims)
+                    .map_err(|e| format_err!("reshape input: {e:?}"))?;
+                lits.push(lit);
+            }
+            let exe = self.exe.lock().unwrap();
+            let result = exe
+                .execute::<xla::Literal>(&lits)
+                .map_err(|e| format_err!("execute {}: {e:?}", self.name))?;
+            let out = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| format_err!("to_literal: {e:?}"))?;
+            let tuple = out
+                .to_tuple()
+                .map_err(|e| format_err!("to_tuple: {e:?}"))?;
+            let mut res = Vec::with_capacity(tuple.len());
+            for t in tuple {
+                res.push(t.to_vec::<f32>().map_err(|e| format_err!("to_vec: {e:?}"))?);
+            }
+            Ok(res)
         }
-        Ok(res)
+    }
+
+    /// Convenience: does a usable PJRT client exist in this environment?
+    pub fn pjrt_available() -> bool {
+        client().is_ok()
     }
 }
 
-/// Convenience: does a usable PJRT client exist in this environment?
-pub fn pjrt_available() -> bool {
-    client().is_ok()
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::{pjrt_available, CompiledModel};
+
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use crate::format_err;
+    use crate::util::error::Result;
+    use std::path::Path;
+
+    /// Stub compiled model: loading always fails with a clear message.
+    pub struct CompiledModel {
+        pub name: String,
+    }
+
+    impl CompiledModel {
+        pub fn load(path: &Path) -> Result<CompiledModel> {
+            Err(format_err!(
+                "PJRT runtime unavailable (built without the `pjrt` feature); \
+                 cannot load {}",
+                path.display()
+            ))
+        }
+
+        pub fn run_f32(&self, _inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+            Err(format_err!(
+                "PJRT runtime unavailable (built without the `pjrt` feature)"
+            ))
+        }
+    }
+
+    /// Always false in stub builds.
+    pub fn pjrt_available() -> bool {
+        false
+    }
 }
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{pjrt_available, CompiledModel};
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn client_initializes() {
         assert!(pjrt_available());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_reports_unavailable() {
+        assert!(!pjrt_available());
+        let err = CompiledModel::load(std::path::Path::new("nope.hlo")).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
     }
 }

@@ -10,7 +10,8 @@
 //! engine is CPU-bound anyway, so the coordinator's worker pool is the
 //! real concurrency limit).
 
-use anyhow::Result;
+use crate::format_err;
+use crate::util::error::Result;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -87,14 +88,14 @@ fn handle_conn(stream: TcpStream, coord: Arc<Coordinator>) -> Result<()> {
 }
 
 fn handle_line(line: &str, coord: &Coordinator) -> Result<Json> {
-    let j = Json::parse(line).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
+    let j = Json::parse(line).map_err(|e| format_err!("bad json: {e}"))?;
     if let Some(cmd) = j.get("cmd").and_then(Json::as_str) {
         return Ok(match cmd {
             "ping" => obj(vec![("ok", Json::Bool(true))]),
             "metrics" => obj(vec![
                 ("requests", num(coord.metrics.requests() as f64)),
-                ("batches", num(coord.metrics.batches() as f64)),
-                ("mean_batch", num(coord.metrics.mean_batch_size())),
+                ("blocks", num(coord.metrics.batches() as f64)),
+                ("mean_block", num(coord.metrics.mean_batch_size())),
                 ("p50_us", num(coord.metrics.latency_percentile_us(0.5) as f64)),
                 ("p99_us", num(coord.metrics.latency_percentile_us(0.99) as f64)),
             ]),
@@ -104,7 +105,7 @@ fn handle_line(line: &str, coord: &Coordinator) -> Result<Json> {
     let img = j
         .get("image")
         .and_then(Json::as_arr)
-        .ok_or_else(|| anyhow::anyhow!("missing image"))?;
+        .ok_or_else(|| format_err!("missing image"))?;
     let image: Vec<f32> = img.iter().filter_map(|v| v.as_f64()).map(|f| f as f32).collect();
     let resp = coord.infer(image)?;
     Ok(obj(vec![

@@ -178,6 +178,21 @@ impl BitVec {
     }
 }
 
+/// Transpose up to `W::LANES` bit-rows into `width` sample planes:
+/// plane `i` holds bit `i` of every row, row `s` in lane `s`.  This is
+/// the packing step in front of every bit-parallel tape evaluation.
+pub fn transpose_to_planes<W: super::BitWord>(rows: &[BitVec], width: usize) -> Vec<W> {
+    debug_assert!(rows.len() <= W::LANES);
+    let mut planes = vec![W::ZERO; width];
+    for (s, row) in rows.iter().enumerate() {
+        debug_assert_eq!(row.len(), width);
+        for i in row.iter_ones() {
+            planes[i].set_lane(s, true);
+        }
+    }
+    planes
+}
+
 impl std::fmt::Debug for BitVec {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(f, "BitVec[")?;
@@ -240,6 +255,34 @@ mod tests {
         let ones: Vec<_> = v.iter_ones().collect();
         assert_eq!(ones, vec![0, 63, 64, 100, 199]);
         assert_eq!(v.first_one(), Some(0));
+    }
+
+    #[test]
+    fn transpose_planes_all_widths() {
+        use crate::util::{BitWord, W256, W64};
+
+        fn check<W: BitWord>(n_rows: usize, width: usize) {
+            let rows: Vec<BitVec> = (0..n_rows)
+                .map(|s| BitVec::from_bools((0..width).map(|i| (s + i) % 3 == 0)))
+                .collect();
+            let planes: Vec<W> = transpose_to_planes(&rows, width);
+            assert_eq!(planes.len(), width);
+            for (s, row) in rows.iter().enumerate() {
+                for i in 0..width {
+                    assert_eq!(planes[i].get_lane(s), row.get(i), "row {s} bit {i}");
+                }
+            }
+            // Unused lanes stay clear.
+            for plane in &planes {
+                for lane in n_rows..W::LANES {
+                    assert!(!plane.get_lane(lane));
+                }
+            }
+        }
+
+        check::<W64>(5, 70);
+        check::<W64>(64, 7);
+        check::<W256>(200, 17);
     }
 
     #[test]

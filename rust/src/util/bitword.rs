@@ -1,0 +1,240 @@
+//! `BitWord`: the generic multi-word plane type behind bit-parallel
+//! evaluation.
+//!
+//! The substrate originally evaluated one `u64` plane per pass — 64
+//! samples per block, with wider registers idle.  `BitWord` abstracts
+//! the plane word so the same tape / AIG-sim code runs at 64 lanes
+//! (`u64`) or 128/256/512 lanes (`[u64; N]`, which LLVM auto-vectorizes
+//! to SSE/AVX/AVX-512 ops).  One lane = one sample.
+//!
+//! Complement masks in [`crate::netlist::TapeOp`] stay single `u64`
+//! broadcast masks (always `0` or `!0`), so the compiled tape is
+//! width-agnostic: [`BitWord::xor_mask`] broadcasts the mask across
+//! every limb.
+
+/// A fixed-width plane of sample lanes (lane `s` = sample `s`).
+pub trait BitWord:
+    Copy + Clone + Send + Sync + PartialEq + Eq + std::fmt::Debug + 'static
+{
+    /// Number of sample lanes (64 × limbs).
+    const LANES: usize;
+    /// All lanes clear.
+    const ZERO: Self;
+    /// All lanes set.
+    const ONES: Self;
+
+    fn and(self, other: Self) -> Self;
+    fn or(self, other: Self) -> Self;
+    fn xor(self, other: Self) -> Self;
+    fn not(self) -> Self;
+
+    /// XOR a broadcast `u64` mask (always `0` or `!0` in tape use) into
+    /// every limb.
+    fn xor_mask(self, mask: u64) -> Self;
+
+    fn get_lane(&self, lane: usize) -> bool;
+    fn set_lane(&mut self, lane: usize, v: bool);
+
+    fn count_ones(&self) -> usize;
+
+    /// All-zeros or all-ones from a bool.
+    #[inline]
+    fn splat(v: bool) -> Self {
+        if v {
+            Self::ONES
+        } else {
+            Self::ZERO
+        }
+    }
+
+    /// Build a word lane-by-lane.
+    fn from_lanes(mut f: impl FnMut(usize) -> bool) -> Self {
+        let mut w = Self::ZERO;
+        for lane in 0..Self::LANES {
+            if f(lane) {
+                w.set_lane(lane, true);
+            }
+        }
+        w
+    }
+}
+
+impl BitWord for u64 {
+    const LANES: usize = 64;
+    const ZERO: u64 = 0;
+    const ONES: u64 = !0;
+
+    #[inline(always)]
+    fn and(self, other: u64) -> u64 {
+        self & other
+    }
+
+    #[inline(always)]
+    fn or(self, other: u64) -> u64 {
+        self | other
+    }
+
+    #[inline(always)]
+    fn xor(self, other: u64) -> u64 {
+        self ^ other
+    }
+
+    #[inline(always)]
+    fn not(self) -> u64 {
+        !self
+    }
+
+    #[inline(always)]
+    fn xor_mask(self, mask: u64) -> u64 {
+        self ^ mask
+    }
+
+    #[inline(always)]
+    fn get_lane(&self, lane: usize) -> bool {
+        (*self >> lane) & 1 == 1
+    }
+
+    #[inline(always)]
+    fn set_lane(&mut self, lane: usize, v: bool) {
+        if v {
+            *self |= 1u64 << lane;
+        } else {
+            *self &= !(1u64 << lane);
+        }
+    }
+
+    #[inline(always)]
+    fn count_ones(&self) -> usize {
+        u64::count_ones(*self) as usize
+    }
+}
+
+impl<const N: usize> BitWord for [u64; N] {
+    const LANES: usize = 64 * N;
+    const ZERO: [u64; N] = [0; N];
+    const ONES: [u64; N] = [!0; N];
+
+    #[inline(always)]
+    fn and(self, other: [u64; N]) -> [u64; N] {
+        let mut r = self;
+        for i in 0..N {
+            r[i] &= other[i];
+        }
+        r
+    }
+
+    #[inline(always)]
+    fn or(self, other: [u64; N]) -> [u64; N] {
+        let mut r = self;
+        for i in 0..N {
+            r[i] |= other[i];
+        }
+        r
+    }
+
+    #[inline(always)]
+    fn xor(self, other: [u64; N]) -> [u64; N] {
+        let mut r = self;
+        for i in 0..N {
+            r[i] ^= other[i];
+        }
+        r
+    }
+
+    #[inline(always)]
+    fn not(self) -> [u64; N] {
+        let mut r = self;
+        for w in r.iter_mut() {
+            *w = !*w;
+        }
+        r
+    }
+
+    #[inline(always)]
+    fn xor_mask(self, mask: u64) -> [u64; N] {
+        let mut r = self;
+        for w in r.iter_mut() {
+            *w ^= mask;
+        }
+        r
+    }
+
+    #[inline(always)]
+    fn get_lane(&self, lane: usize) -> bool {
+        (self[lane / 64] >> (lane % 64)) & 1 == 1
+    }
+
+    #[inline(always)]
+    fn set_lane(&mut self, lane: usize, v: bool) {
+        if v {
+            self[lane / 64] |= 1u64 << (lane % 64);
+        } else {
+            self[lane / 64] &= !(1u64 << (lane % 64));
+        }
+    }
+
+    #[inline(always)]
+    fn count_ones(&self) -> usize {
+        self.iter().map(|w| w.count_ones() as usize).sum()
+    }
+}
+
+/// 64-lane plane (one sample word — the original substrate).
+pub type W64 = u64;
+/// 128-lane plane.
+pub type W128 = [u64; 2];
+/// 256-lane plane (AVX2-sized).
+pub type W256 = [u64; 4];
+/// 512-lane plane (AVX-512-sized).
+pub type W512 = [u64; 8];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exercise<W: BitWord>() {
+        assert_eq!(W::ZERO.count_ones(), 0);
+        assert_eq!(W::ONES.count_ones(), W::LANES);
+        assert_eq!(W::splat(true), W::ONES);
+        assert_eq!(W::splat(false), W::ZERO);
+
+        // lane get/set round-trips at word boundaries
+        let mut w = W::ZERO;
+        for lane in [0, 1, W::LANES / 2, W::LANES - 1] {
+            w.set_lane(lane, true);
+            assert!(w.get_lane(lane), "lane {lane}");
+        }
+        assert_eq!(w.count_ones(), 4);
+        w.set_lane(0, false);
+        assert!(!w.get_lane(0));
+
+        // boolean algebra
+        let a = W::from_lanes(|l| l % 2 == 0);
+        let b = W::from_lanes(|l| l % 3 == 0);
+        for lane in 0..W::LANES {
+            let (x, y) = (lane % 2 == 0, lane % 3 == 0);
+            assert_eq!(a.and(b).get_lane(lane), x && y);
+            assert_eq!(a.or(b).get_lane(lane), x || y);
+            assert_eq!(a.xor(b).get_lane(lane), x ^ y);
+            assert_eq!(a.not().get_lane(lane), !x);
+            assert_eq!(a.xor_mask(!0).get_lane(lane), !x);
+            assert_eq!(a.xor_mask(0).get_lane(lane), x);
+        }
+    }
+
+    #[test]
+    fn all_widths_behave_identically() {
+        exercise::<W64>();
+        exercise::<W128>();
+        exercise::<W256>();
+        exercise::<W512>();
+    }
+
+    #[test]
+    fn lane_counts() {
+        assert_eq!(W64::LANES, 64);
+        assert_eq!(W128::LANES, 128);
+        assert_eq!(W256::LANES, 256);
+        assert_eq!(W512::LANES, 512);
+    }
+}

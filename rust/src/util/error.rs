@@ -1,0 +1,234 @@
+//! In-tree error handling (anyhow is unavailable offline).
+//!
+//! [`Error`] is a message plus an optional boxed source, [`Result`]
+//! defaults its error type to it, and the [`Context`] trait adds
+//! `.context(..)` / `.with_context(..)` to both `Result` and `Option`.
+//! The `bail!` / `ensure!` / `format_err!` macros are exported at the
+//! crate root.
+//!
+//! `Display` prints the outermost message; the alternate form (`{:#}`)
+//! prints the whole chain separated by `: `, which is what the CLI uses
+//! for user-facing errors.
+
+use std::fmt;
+
+/// A message-first error with an optional source chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+/// Crate-wide result type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// An error from a plain message.
+    pub fn msg(msg: impl Into<String>) -> Error {
+        Error {
+            msg: msg.into(),
+            source: None,
+        }
+    }
+
+    /// Wrap any std error as the source of a new message.
+    pub fn wrap(
+        msg: impl Into<String>,
+        source: impl std::error::Error + Send + Sync + 'static,
+    ) -> Error {
+        Error {
+            msg: msg.into(),
+            source: Some(Box::new(source)),
+        }
+    }
+
+    /// Add an outer context layer (self becomes the source).
+    pub fn context(self, msg: impl Into<String>) -> Error {
+        Error {
+            msg: msg.into(),
+            source: Some(Box::new(self)),
+        }
+    }
+}
+
+impl Error {
+    fn source_dyn(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match &self.source {
+            Some(s) => {
+                let e: &(dyn std::error::Error + 'static) = s.as_ref();
+                Some(e)
+            }
+            None => None,
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            let mut cur = self.source_dyn();
+            while let Some(e) = cur {
+                write!(f, ": {e}")?;
+                cur = e.source();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Debug (what `unwrap` and `fn main() -> Result` print) shows the
+        // full chain.
+        write!(f, "{self:#}")
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        self.source_dyn()
+    }
+}
+
+impl From<String> for Error {
+    fn from(s: String) -> Error {
+        Error::msg(s)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Error {
+        Error::msg(s)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::wrap("io error", e)
+    }
+}
+
+impl From<std::sync::mpsc::RecvError> for Error {
+    fn from(e: std::sync::mpsc::RecvError) -> Error {
+        Error::wrap("channel closed", e)
+    }
+}
+
+impl From<std::num::ParseIntError> for Error {
+    fn from(e: std::num::ParseIntError) -> Error {
+        Error::wrap("parse int", e)
+    }
+}
+
+impl From<std::num::ParseFloatError> for Error {
+    fn from(e: std::num::ParseFloatError) -> Error {
+        Error::wrap("parse float", e)
+    }
+}
+
+/// `.context(..)` / `.with_context(..)` for `Result` and `Option`.
+pub trait Context<T> {
+    fn context(self, msg: impl Into<String>) -> Result<T>;
+    fn with_context<S: Into<String>, F: FnOnce() -> S>(self, f: F) -> Result<T>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context(self, msg: impl Into<String>) -> Result<T> {
+        self.map_err(|e| Error::wrap(msg, e))
+    }
+
+    fn with_context<S: Into<String>, F: FnOnce() -> S>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::wrap(f(), e))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl Into<String>) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg))
+    }
+
+    fn with_context<S: Into<String>, F: FnOnce() -> S>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! format_err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::format_err!($($arg)*))
+    };
+}
+
+/// Early-return with a formatted [`Error`] unless `cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("inner {}", 42);
+    }
+
+    #[test]
+    fn bail_and_display() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "inner 42");
+    }
+
+    #[test]
+    fn context_chains() {
+        let e = fails().map_err(|e| e.context("outer")).unwrap_err();
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner 42");
+    }
+
+    #[test]
+    fn io_conversion_and_context_trait() {
+        use super::Context as _;
+        let r: std::result::Result<(), std::io::Error> = Err(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            "gone",
+        ));
+        let e = r.context("opening file").unwrap_err();
+        assert!(format!("{e:#}").contains("opening file"));
+        assert!(format!("{e:#}").contains("gone"));
+    }
+
+    #[test]
+    fn option_context() {
+        use super::Context as _;
+        let v: Option<u32> = None;
+        assert!(v.with_context(|| "missing".to_string()).is_err());
+        assert_eq!(Some(3u32).context("fine").unwrap(), 3);
+    }
+
+    #[test]
+    fn ensure_macro() {
+        fn check(x: u32) -> Result<u32> {
+            ensure!(x < 10, "too big: {x}");
+            Ok(x)
+        }
+        assert!(check(5).is_ok());
+        assert!(check(50).is_err());
+    }
+}

@@ -1,9 +1,13 @@
-//! Small shared utilities: packed bit vectors and a deterministic PRNG.
+//! Small shared utilities: packed bit vectors, the generic plane word
+//! ([`BitWord`]), a deterministic PRNG, and in-tree error handling.
 
 mod bitvec;
+mod bitword;
+pub mod error;
 mod rng;
 
-pub use bitvec::BitVec;
+pub use bitvec::{transpose_to_planes, BitVec};
+pub use bitword::{BitWord, W128, W256, W512, W64};
 pub use rng::SplitMix64;
 
 /// Ceil division for usizes.

@@ -106,6 +106,86 @@ fn server_concurrent_clients() {
 }
 
 #[test]
+fn thousand_request_batch_shards_across_workers_in_order() {
+    use std::collections::HashSet;
+    use std::sync::Mutex;
+    use std::thread::ThreadId;
+
+    /// SumEngine that records which worker threads executed blocks and
+    /// enforces the engine's preferred block width.
+    struct ShardProbe {
+        threads: Mutex<HashSet<ThreadId>>,
+        max_block: usize,
+    }
+
+    impl InferenceEngine for ShardProbe {
+        fn infer_batch(&self, images: &[&[f32]]) -> Vec<Vec<f32>> {
+            assert!(
+                images.len() <= self.max_block,
+                "block of {} exceeds preferred width {}",
+                images.len(),
+                self.max_block
+            );
+            self.threads.lock().unwrap().insert(std::thread::current().id());
+            // Slow the block down slightly so blocks overlap in time and
+            // the pool genuinely runs them concurrently.
+            std::thread::sleep(Duration::from_micros(500));
+            SumEngine.infer_batch(images)
+        }
+        fn name(&self) -> &str {
+            "shard-probe"
+        }
+        fn preferred_block(&self) -> usize {
+            self.max_block
+        }
+    }
+
+    let probe = Arc::new(ShardProbe {
+        threads: Mutex::new(HashSet::new()),
+        max_block: 32,
+    });
+    let coord = Arc::new(Coordinator::start(
+        Arc::clone(&probe) as Arc<dyn InferenceEngine>,
+        CoordinatorConfig {
+            workers: 4,
+            max_batch: 512,
+            max_wait: Duration::from_millis(5),
+            ..Default::default()
+        },
+    ));
+
+    // One big wave of requests, receivers kept in submission order.
+    let n = 1000usize;
+    let mut rxs = Vec::with_capacity(n);
+    for i in 0..n {
+        rxs.push((i, coord.submit(vec![(i % 10) as f32]).unwrap()));
+    }
+    let mut last_id = None;
+    for (i, rx) in rxs {
+        let r = rx.recv().unwrap();
+        // Reassembly: response i answers request i...
+        assert_eq!(r.class, i % 10, "response for request {i} wrong");
+        // ...and ids are handed out in submission order.
+        assert_eq!(r.id, i as u64);
+        if let Some(prev) = last_id {
+            assert!(r.id > prev);
+        }
+        last_id = Some(r.id);
+    }
+    assert_eq!(coord.metrics.requests(), n as u64);
+
+    // 1000 requests at block width 32 → at least 32 blocks executed.
+    assert!(coord.metrics.batches() >= 32, "blocks: {}", coord.metrics.batches());
+    // The blocks must have been spread over the pool, not serialized on
+    // one worker.
+    let distinct = probe.threads.lock().unwrap().len();
+    assert!(distinct >= 2, "expected ≥2 workers to run blocks, saw {distinct}");
+
+    let coord = Arc::try_unwrap(coord).ok().expect("sole owner");
+    coord.shutdown();
+}
+
+#[test]
 fn queue_backpressure_does_not_deadlock() {
     let coord = Arc::new(Coordinator::start(
         Arc::new(SumEngine),

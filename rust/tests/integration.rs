@@ -85,7 +85,8 @@ fn logic_engine_close_to_threshold_engine_on_test_set() {
             s.tape
         })
         .collect();
-    let logic = engine::LogicEngine::new(net.clone(), tapes).unwrap();
+    // Serve at the 256-lane width: agreement must hold at any plane width.
+    let logic = engine::LogicEngine::<nullanet::util::W256>::new(net.clone(), tapes).unwrap();
     let thresh = engine::ThresholdEngine::new(net).unwrap();
     let images: Vec<&[f32]> = (0..ds.n).map(|i| ds.image(i)).collect();
     let (a, b) = (logic.infer_batch(&images), thresh.infer_batch(&images));

@@ -4,7 +4,7 @@ use nullanet::aig::{self, Aig, Lit};
 use nullanet::logic::{minimize, Cover, Cube, EspressoConfig, IsfFunction, TruthTable};
 use nullanet::netlist::LogicTape;
 use nullanet::prop::check;
-use nullanet::util::{BitVec, SplitMix64};
+use nullanet::util::{BitVec, BitWord, SplitMix64, W128, W256, W512};
 
 fn random_isf(rng: &mut SplitMix64, max_vars: usize, max_pats: usize) -> IsfFunction {
     let n = rng.range(2, max_vars);
@@ -124,6 +124,77 @@ fn bitsim_equals_scalar_eval() {
             .collect();
         let fast = tape.eval_batch(&rows);
         for (row, out) in rows.iter().zip(fast) {
+            assert_eq!(out, g.eval(row));
+        }
+    });
+}
+
+#[test]
+fn tape_eval_matches_sim_reference_at_every_width() {
+    // The generic multi-word eval must agree with the AIG word simulator
+    // (the semantic reference) at 64, 128, 256 and 512 lanes, on random
+    // AIGs and random inputs.
+    fn random_aig(rng: &mut SplitMix64) -> Aig {
+        let n = rng.range(2, 10);
+        let mut g = Aig::new(n);
+        let mut lits: Vec<Lit> = (0..n).map(|i| g.pi(i)).collect();
+        for _ in 0..rng.range(1, 120) {
+            let a = lits[rng.range(0, lits.len())];
+            let b = lits[rng.range(0, lits.len())];
+            lits.push(g.and(
+                if rng.bool(0.5) { a.not() } else { a },
+                if rng.bool(0.5) { b.not() } else { b },
+            ));
+        }
+        for _ in 0..rng.range(1, 5) {
+            let o = lits[rng.range(0, lits.len())];
+            g.add_output(if rng.bool(0.5) { o.not() } else { o });
+        }
+        g
+    }
+
+    fn agree_at_width<W: BitWord>(g: &Aig, tape: &LogicTape, rng: &mut SplitMix64) {
+        let inputs: Vec<W> = (0..g.n_pis())
+            .map(|_| W::from_lanes(|_| rng.bool(0.5)))
+            .collect();
+        let want = aig::sim_words_wide(g, &inputs);
+        let mut got = vec![W::ZERO; g.outputs.len()];
+        let mut scratch = tape.make_scratch::<W>();
+        tape.eval_into(&inputs, &mut got, &mut scratch);
+        assert_eq!(got, want, "width {}", W::LANES);
+    }
+
+    check("tape-matches-sim-all-widths", 25, |rng| {
+        let g = random_aig(rng);
+        let tape = LogicTape::from_aig(&g);
+        agree_at_width::<u64>(&g, &tape, rng);
+        agree_at_width::<W128>(&g, &tape, rng);
+        agree_at_width::<W256>(&g, &tape, rng);
+        agree_at_width::<W512>(&g, &tape, rng);
+    });
+}
+
+#[test]
+fn wide_eval_batch_agrees_with_scalar_eval() {
+    check("wide-batch-equals-scalar", 15, |rng| {
+        let n = rng.range(2, 9);
+        let mut g = Aig::new(n);
+        let mut lits: Vec<Lit> = (0..n).map(|i| g.pi(i)).collect();
+        for _ in 0..rng.range(1, 60) {
+            let a = lits[rng.range(0, lits.len())];
+            let b = lits[rng.range(0, lits.len())];
+            lits.push(g.and(
+                if rng.bool(0.5) { a.not() } else { a },
+                if rng.bool(0.5) { b.not() } else { b },
+            ));
+        }
+        g.add_output(*lits.last().unwrap());
+        let tape = LogicTape::from_aig(&g);
+        let rows: Vec<Vec<bool>> = (0..rng.range(65, 512))
+            .map(|_| (0..n).map(|_| rng.bool(0.5)).collect())
+            .collect();
+        let wide = tape.eval_batch_wide::<W512>(&rows);
+        for (row, out) in rows.iter().zip(wide) {
             assert_eq!(out, g.eval(row));
         }
     });

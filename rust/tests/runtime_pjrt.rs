@@ -1,5 +1,10 @@
 //! Integration: PJRT runtime against the AOT artifacts (skips politely
 //! when `make artifacts` hasn't been run).
+//!
+//! Compiled only with the `pjrt` feature: the default build stubs the
+//! runtime out because the `xla` crate is unavailable offline.
+
+#![cfg(feature = "pjrt")]
 
 use nullanet::coordinator::engine::{InferenceEngine, XlaEngine};
 use nullanet::{data, model, runtime};
