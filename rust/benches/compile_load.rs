@@ -1,0 +1,169 @@
+//! Bench: compile-once vs serve-many cold start — the reason the `.nnc`
+//! artifact subsystem exists.  Measures the full Algorithm-2 synthesis
+//! path (extract → minimize → optimize → map → emit) against saving,
+//! loading, and engine construction from a compiled artifact, on a
+//! synthetic hidden layer (no `make artifacts` needed).
+//!
+//! Run: cargo bench --bench compile_load
+//! Emits BENCH_compile.json (machine-readable medians) to seed the perf
+//! trajectory.  Cargo runs benches with CWD = the package root, so the
+//! file lands at rust/BENCH_compile.json.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use nullanet::artifact::{isf_digest, CompiledLayer, CompiledModel, LayerStats};
+use nullanet::bench_util::{bench, BenchResult, Table};
+use nullanet::coordinator::engine;
+use nullanet::cost::FpgaModel;
+use nullanet::isf::{extract, IsfConfig, LayerObservations};
+use nullanet::jsonio::{num, obj, s, Json};
+use nullanet::model::{Arch, Tensor, ThresholdLayer};
+use nullanet::synth::{optimize_layer, SynthConfig};
+use nullanet::util::{BitVec, SplitMix64};
+
+const HIDDEN: usize = 20;
+
+fn threshold_layer(rng: &mut SplitMix64, n_in: usize, n_out: usize) -> ThresholdLayer {
+    ThresholdLayer {
+        n_in,
+        n_out,
+        w: (0..n_in * n_out).map(|_| rng.normal() as f32).collect(),
+        theta: (0..n_out).map(|_| rng.normal() as f32).collect(),
+        flip: (0..n_out).map(|_| rng.bool(0.2)).collect(),
+    }
+}
+
+fn observe(layer: &ThresholdLayer, rng: &mut SplitMix64, n_samples: usize) -> LayerObservations {
+    let in_stride = (layer.n_in + 7) / 8;
+    let out_stride = (layer.n_out + 7) / 8;
+    let mut inputs = vec![0u8; n_samples * in_stride];
+    let mut outputs = vec![0u8; n_samples * out_stride];
+    for sample in 0..n_samples {
+        let bits = BitVec::from_bools((0..layer.n_in).map(|_| rng.bool(0.5)));
+        for i in bits.iter_ones() {
+            inputs[sample * in_stride + i / 8] |= 1 << (i % 8);
+        }
+        let out = layer.eval(&bits);
+        for j in out.iter_ones() {
+            outputs[sample * out_stride + j / 8] |= 1 << (j % 8);
+        }
+    }
+    LayerObservations {
+        name: "hidden2".into(),
+        n_in: layer.n_in,
+        n_out: layer.n_out,
+        inputs,
+        outputs,
+        n_samples,
+    }
+}
+
+fn random_tensor(rng: &mut SplitMix64, shape: Vec<usize>) -> Tensor {
+    let numel: usize = shape.iter().product();
+    Tensor { shape, f32s: (0..numel).map(|_| rng.normal() as f32).collect() }
+}
+
+fn main() {
+    let mut rng = SplitMix64::new(42);
+    let layer = threshold_layer(&mut rng, HIDDEN, HIDDEN);
+    let obs = observe(&layer, &mut rng, 800);
+    let cfg = SynthConfig::default();
+    let budget = Duration::from_millis(800);
+    let mut results: Vec<BenchResult> = Vec::new();
+
+    // Cold start, the old way: Algorithm 2 from raw observations.
+    let r_synth = bench("cold start: synthesize (Algorithm 2)", budget, || {
+        let isf = extract(&obs, &IsfConfig::default());
+        std::hint::black_box(optimize_layer("hidden2", &isf, &cfg));
+    });
+    results.push(r_synth.clone());
+
+    // Build the artifact once (what `nullanet compile` produces).
+    let isf = extract(&obs, &IsfConfig::default());
+    let synth = optimize_layer("hidden2", &isf, &cfg);
+    let hw = synth.hw_cost(&FpgaModel::default());
+    let stats = LayerStats {
+        n_distinct: isf.n_distinct,
+        n_conflicts: isf.n_conflicts,
+        total_cubes: synth.total_cubes,
+        total_literals: synth.total_literals,
+        ands_initial: synth.ands_initial,
+        ands_final: synth.aig.n_ands(),
+        n_luts: synth.mapping.n_luts(),
+        alms: synth.mapping.alms(),
+        lut_depth: synth.mapping.depth,
+        isf_digest: isf_digest(&isf),
+        hw_registers: hw.registers,
+        hw_fmax_mhz: hw.fmax_mhz,
+        hw_latency_ns: hw.latency_ns,
+        hw_power_mw: hw.power_mw,
+    };
+    let mut params = BTreeMap::new();
+    params.insert("w1".to_string(), random_tensor(&mut rng, vec![16, HIDDEN]));
+    params.insert("scale1".to_string(), random_tensor(&mut rng, vec![HIDDEN]));
+    params.insert("bias1".to_string(), random_tensor(&mut rng, vec![HIDDEN]));
+    params.insert("w3".to_string(), random_tensor(&mut rng, vec![HIDDEN, 10]));
+    params.insert("scale3".to_string(), random_tensor(&mut rng, vec![10]));
+    params.insert("bias3".to_string(), random_tensor(&mut rng, vec![10]));
+    let model = CompiledModel {
+        name: "bench".into(),
+        arch: Arch::Mlp { sizes: vec![16, HIDDEN, HIDDEN, 10] },
+        accuracy_test: f64::NAN,
+        layers: vec![CompiledLayer { name: "hidden2".into(), tape: synth.tape.clone(), stats }],
+        params,
+    };
+    let dir = std::env::temp_dir().join("nullanet_bench_compile");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("bench.nnc");
+
+    results.push(bench("artifact save", budget, || {
+        model.save(&path).unwrap();
+    }));
+    results.push(bench("cold start: artifact load", budget, || {
+        std::hint::black_box(CompiledModel::load(&path).unwrap());
+    }));
+    results.push(bench("cold start: load + engine construct (w256)", budget, || {
+        let cm = CompiledModel::load(&path).unwrap();
+        std::hint::black_box(engine::engine_from_artifact(&cm, 256).unwrap());
+    }));
+
+    let mut table = Table::new(
+        "Cold start: synthesize vs load artifact",
+        &["Path", "median", "vs synthesize"],
+    );
+    for r in &results {
+        table.row(&[
+            r.name.clone(),
+            nullanet::bench_util::format_ns(r.median_ns),
+            format!("{:.1}x faster", r_synth.median_ns / r.median_ns),
+        ]);
+    }
+    table.print();
+    let ratio = r_synth.median_ns / results[2].median_ns;
+    println!("\nsynthesize / artifact-load cold-start ratio: {ratio:.1}x");
+
+    let json = obj(vec![
+        ("bench", s("compile_load")),
+        ("tape_ops", num(model.layers[0].tape.n_ops() as f64)),
+        (
+            "results",
+            Json::Arr(
+                results
+                    .iter()
+                    .map(|r| {
+                        obj(vec![
+                            ("name", s(&r.name)),
+                            ("median_ns", num(r.median_ns)),
+                            ("mean_ns", num(r.mean_ns)),
+                            ("iters", num(r.iters as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("synth_over_load_ratio", num(ratio)),
+    ]);
+    std::fs::write("BENCH_compile.json", json.to_string()).unwrap();
+    println!("wrote BENCH_compile.json");
+}

@@ -1,0 +1,702 @@
+//! Compiled-model artifacts (`.nnc`): the versioned on-disk product of
+//! the staged compile pipeline, decoupling synthesis from serving.
+//!
+//! `nullanet compile` runs Algorithm 2 once (seconds to minutes) and
+//! serializes everything the request path needs; `nullanet serve
+//! --artifact model.nnc` then reconstructs the engines in milliseconds
+//! with zero synthesis work — the EIE/Deep-Compression split between an
+//! offline compression pipeline and the online inference engine.
+//!
+//! Format (JSON lines, via the in-tree [`crate::jsonio`] — no external
+//! deps):
+//!
+//! ```text
+//! line 1   header  {"magic":"nullanet-nnc","version":1,"name":...,
+//!                   "arch":{...},"n_sections":N}
+//! lines..  section {"section":"layer","name":...,"n_inputs":...,
+//!                   "ops":[[a,b,ca,cb],...],"outputs":[[plane,c],...],
+//!                   "stats":{...},"digest":"<fnv64 hex>"}
+//!          section {"section":"param","name":"w1","shape":[...],
+//!                   "data":[...],"digest":"<fnv64 hex>"}
+//! last     footer  {"end":true,"n_sections":N,"digest":"<fnv64 hex>"}
+//! ```
+//!
+//! Every section carries an FNV-1a digest over its *decoded* content
+//! (tape ops with expanded masks, tensor f32 bit patterns), recomputed
+//! and checked on load, and the footer chains the decoded header fields
+//! plus the section digests — so corruption is detected wherever it
+//! lands (header included) and truncation is caught by the missing
+//! footer / section count.  The version check runs before any digest
+//! work, so a version bump is reported as such, not as corruption.  Complement masks are stored as
+//! 0/1 and re-broadcast to `0`/`!0` on load, keeping the file compact
+//! while [`LogicTape`] stays width-agnostic.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use crate::isf::LayerIsf;
+use crate::jsonio::{num, obj, s, Json};
+use crate::model::{Arch, NetArtifacts, Tensor};
+use crate::netlist::{LogicTape, TapeOp};
+use crate::util::error::{Context, Result};
+use crate::{bail, format_err};
+
+pub const ARTIFACT_MAGIC: &str = "nullanet-nnc";
+pub const ARTIFACT_VERSION: u32 = 1;
+
+/// Synthesis statistics preserved per compiled layer: the evidence trail
+/// (espresso / AIG / mapping sizes, ISF digest) plus the hardware cost
+/// numbers so `nullanet serve`/`eval` never need the mapping itself.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LayerStats {
+    pub n_distinct: usize,
+    pub n_conflicts: usize,
+    pub total_cubes: usize,
+    pub total_literals: usize,
+    pub ands_initial: usize,
+    pub ands_final: usize,
+    pub n_luts: usize,
+    pub alms: usize,
+    pub lut_depth: u32,
+    /// Digest of the ISF the layer was verified against (0 violations at
+    /// compile time).
+    pub isf_digest: u64,
+    pub hw_registers: usize,
+    pub hw_fmax_mhz: f64,
+    pub hw_latency_ns: f64,
+    pub hw_power_mw: f64,
+}
+
+/// One synthesized layer as stored in the artifact: the request-path
+/// tape plus its statistics.
+#[derive(Clone, Debug)]
+pub struct CompiledLayer {
+    pub name: String,
+    pub tape: LogicTape,
+    pub stats: LayerStats,
+}
+
+/// A complete compiled model: everything the serving engines need,
+/// independent of the training artifacts directory.
+#[derive(Clone, Debug)]
+pub struct CompiledModel {
+    pub name: String,
+    pub arch: Arch,
+    /// Python-side reference accuracy (NaN when unknown).
+    pub accuracy_test: f64,
+    /// Hidden-layer tapes in network order (MLP), or the single conv2
+    /// tape (CNN).
+    pub layers: Vec<CompiledLayer>,
+    /// The non-logic parameters the engines read (first/last layer
+    /// weights and BN terms) — see [`required_params`].
+    pub params: BTreeMap<String, Tensor>,
+}
+
+/// The parameter tensors the serving engines read for a given
+/// architecture — the only tensors an artifact must carry.
+pub fn required_params(arch: &Arch) -> Vec<String> {
+    match arch {
+        Arch::Mlp { sizes } => {
+            let nl = sizes.len().saturating_sub(1).max(1);
+            let mut names: Vec<String> =
+                ["w1", "scale1", "bias1"].iter().map(|n| n.to_string()).collect();
+            names.push(format!("w{nl}"));
+            names.push(format!("scale{nl}"));
+            names.push(format!("bias{nl}"));
+            names
+        }
+        Arch::Cnn { .. } => ["k1", "scale_k1", "bias_k1", "w3", "scale_w3", "bias_w3"]
+            .iter()
+            .map(|n| n.to_string())
+            .collect(),
+    }
+}
+
+impl CompiledModel {
+    /// Write the artifact to `path` (see the module docs for the layout).
+    /// Writes to a sibling temp file and renames, so a failed save never
+    /// clobbers an existing good artifact with a partial file.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        // Validate before touching the destination.
+        for (name, tensor) in &self.params {
+            if let Some(bad) = tensor.f32s.iter().find(|x| !x.is_finite()) {
+                bail!("param {name}: non-finite value {bad} cannot be serialized");
+            }
+        }
+        let tmp = path.with_extension("nnc.tmp");
+        let file = std::fs::File::create(&tmp)
+            .with_context(|| format!("create artifact {}", tmp.display()))?;
+        let mut out = std::io::BufWriter::new(file);
+        let n_sections = self.layers.len() + self.params.len();
+        let header = obj(vec![
+            ("magic", s(ARTIFACT_MAGIC)),
+            ("version", num(ARTIFACT_VERSION as f64)),
+            ("name", s(&self.name)),
+            ("arch", arch_to_json(&self.arch)),
+            (
+                "accuracy_test",
+                if self.accuracy_test.is_finite() {
+                    num(self.accuracy_test)
+                } else {
+                    Json::Null
+                },
+            ),
+            ("n_sections", num(n_sections as f64)),
+        ]);
+        writeln!(out, "{}", header.to_string())?;
+        let mut combined =
+            header_digest(&self.name, &self.arch, self.accuracy_test, n_sections);
+        for layer in &self.layers {
+            let digest = layer_digest(layer);
+            combined = fnv_u64(combined, digest);
+            writeln!(out, "{}", layer_to_json(layer, digest).to_string())?;
+        }
+        for (name, tensor) in &self.params {
+            let digest = tensor_digest(name, tensor);
+            combined = fnv_u64(combined, digest);
+            writeln!(out, "{}", param_to_json(name, tensor, digest).to_string())?;
+        }
+        let footer = obj(vec![
+            ("end", Json::Bool(true)),
+            ("n_sections", num(n_sections as f64)),
+            ("digest", s(&format!("{combined:016x}"))),
+        ]);
+        writeln!(out, "{}", footer.to_string())?;
+        out.flush()?;
+        drop(out);
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("rename {} -> {}", tmp.display(), path.display()))?;
+        Ok(())
+    }
+
+    /// Load and fully validate an artifact: magic, version, per-section
+    /// digests, section count, and the footer chain digest.
+    pub fn load(path: &Path) -> Result<CompiledModel> {
+        let file = std::fs::File::open(path)
+            .with_context(|| format!("open artifact {}", path.display()))?;
+        let mut lines = BufReader::new(file).lines();
+        let header_line = lines
+            .next()
+            .ok_or_else(|| format_err!("{}: empty artifact", path.display()))??;
+        let header =
+            Json::parse(&header_line).map_err(|e| format_err!("artifact header: {e}"))?;
+        let magic = header.get("magic").and_then(Json::as_str).unwrap_or("");
+        if magic != ARTIFACT_MAGIC {
+            bail!("{}: not a nullanet artifact (magic {magic:?})", path.display());
+        }
+        let version = header.get("version").and_then(Json::as_usize).unwrap_or(0) as u32;
+        if version != ARTIFACT_VERSION {
+            bail!(
+                "artifact version {version} not supported (this build reads version \
+                 {ARTIFACT_VERSION}); re-run `nullanet compile`"
+            );
+        }
+        let name = header.get("name").and_then(Json::as_str).unwrap_or("").to_string();
+        let arch = arch_from_json(
+            header
+                .get("arch")
+                .ok_or_else(|| format_err!("artifact header: missing arch"))?,
+        )?;
+        let accuracy_test =
+            header.get("accuracy_test").and_then(Json::as_f64).unwrap_or(f64::NAN);
+        let n_sections = header
+            .get("n_sections")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| format_err!("artifact header: missing n_sections"))?;
+
+        let mut layers = Vec::new();
+        let mut params = BTreeMap::new();
+        let mut combined = header_digest(&name, &arch, accuracy_test, n_sections);
+        let mut seen_footer = false;
+        for (i, line) in lines.enumerate() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let lineno = i + 2;
+            let j = Json::parse(&line)
+                .map_err(|e| format_err!("artifact line {lineno}: {e}"))?;
+            if j.get("end").and_then(Json::as_bool) == Some(true) {
+                if j.get("n_sections").and_then(Json::as_usize) != Some(n_sections) {
+                    bail!("artifact footer: section count mismatch (corrupt file)");
+                }
+                if parse_digest(&j)? != combined {
+                    bail!("artifact footer: chain digest mismatch (corrupt file)");
+                }
+                seen_footer = true;
+                break;
+            }
+            match j.get("section").and_then(Json::as_str) {
+                Some("layer") => {
+                    let (layer, digest) = layer_from_json(&j)?;
+                    combined = fnv_u64(combined, digest);
+                    layers.push(layer);
+                }
+                Some("param") => {
+                    let (pname, tensor, digest) = param_from_json(&j)?;
+                    combined = fnv_u64(combined, digest);
+                    params.insert(pname, tensor);
+                }
+                other => bail!("artifact line {lineno}: unknown section {other:?}"),
+            }
+        }
+        let read = layers.len() + params.len();
+        if !seen_footer {
+            bail!("artifact truncated: footer missing after {read} of {n_sections} sections");
+        }
+        if read != n_sections {
+            bail!("artifact truncated: {read} of {n_sections} sections present");
+        }
+        Ok(CompiledModel { name, arch, accuracy_test, layers, params })
+    }
+
+    /// View the artifact's parameters as a [`NetArtifacts`] so the
+    /// engine constructors work unchanged (no directory behind it).
+    pub fn to_net_artifacts(&self) -> NetArtifacts {
+        NetArtifacts::detached(
+            self.name.clone(),
+            self.arch.clone(),
+            self.params.clone(),
+            self.accuracy_test,
+        )
+    }
+
+    /// The request-path tapes in layer order.
+    pub fn tapes(&self) -> Vec<LogicTape> {
+        self.layers.iter().map(|l| l.tape.clone()).collect()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Digests (FNV-1a 64 over decoded content)
+// ---------------------------------------------------------------------
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv_bytes(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+fn fnv_u64(h: u64, v: u64) -> u64 {
+    fnv_bytes(h, &v.to_le_bytes())
+}
+
+fn fnv_str(h: u64, v: &str) -> u64 {
+    fnv_bytes(h, v.as_bytes())
+}
+
+/// Content digest of a compiled tape (inputs, ops with expanded masks,
+/// outputs).
+pub fn tape_digest(tape: &LogicTape) -> u64 {
+    let mut h = fnv_u64(FNV_OFFSET, tape.n_inputs as u64);
+    for op in &tape.ops {
+        h = fnv_u64(h, op.a as u64);
+        h = fnv_u64(h, op.b as u64);
+        h = fnv_u64(h, op.ca);
+        h = fnv_u64(h, op.cb);
+    }
+    for (plane, compl) in &tape.outputs {
+        h = fnv_u64(h, *plane as u64);
+        h = fnv_u64(h, *compl);
+    }
+    h
+}
+
+/// Digest of an extracted ISF (patterns + per-neuron ON/OFF sets): ties
+/// an artifact to the exact specification its logic was verified
+/// against.
+pub fn isf_digest(isf: &LayerIsf) -> u64 {
+    let mut h = fnv_str(FNV_OFFSET, &isf.name);
+    h = fnv_u64(h, isf.patterns.n_vars as u64);
+    h = fnv_u64(h, isf.patterns.len() as u64);
+    for i in 0..isf.patterns.len() {
+        for &w in isf.patterns.row(i) {
+            h = fnv_u64(h, w);
+        }
+    }
+    for (on, off) in &isf.neurons {
+        h = fnv_u64(h, on.len() as u64);
+        for &p in on {
+            h = fnv_u64(h, p as u64);
+        }
+        h = fnv_u64(h, off.len() as u64);
+        for &p in off {
+            h = fnv_u64(h, p as u64);
+        }
+    }
+    h
+}
+
+/// Digest of the decoded header fields, seeding the footer chain so
+/// header tampering (name, arch, accuracy) is caught too.  Non-finite
+/// accuracy (serialized as null) hashes as a fixed marker so any NaN
+/// payload round-trips to the same digest.
+fn header_digest(name: &str, arch: &Arch, accuracy_test: f64, n_sections: usize) -> u64 {
+    let mut h = fnv_str(FNV_OFFSET, name);
+    match arch {
+        Arch::Mlp { sizes } => {
+            h = fnv_str(h, "mlp");
+            h = fnv_u64(h, sizes.len() as u64);
+            for &v in sizes {
+                h = fnv_u64(h, v as u64);
+            }
+        }
+        Arch::Cnn { c1, c2, fc_in } => {
+            h = fnv_str(h, "cnn");
+            for v in [*c1, *c2, *fc_in] {
+                h = fnv_u64(h, v as u64);
+            }
+        }
+    }
+    h = fnv_u64(
+        h,
+        if accuracy_test.is_finite() { accuracy_test.to_bits() } else { u64::MAX },
+    );
+    fnv_u64(h, n_sections as u64)
+}
+
+fn layer_digest(layer: &CompiledLayer) -> u64 {
+    let mut h = fnv_str(FNV_OFFSET, &layer.name);
+    h = fnv_u64(h, tape_digest(&layer.tape));
+    let st = &layer.stats;
+    for v in [
+        st.n_distinct,
+        st.n_conflicts,
+        st.total_cubes,
+        st.total_literals,
+        st.ands_initial,
+        st.ands_final,
+        st.n_luts,
+        st.alms,
+        st.hw_registers,
+    ] {
+        h = fnv_u64(h, v as u64);
+    }
+    h = fnv_u64(h, st.lut_depth as u64);
+    h = fnv_u64(h, st.isf_digest);
+    for v in [st.hw_fmax_mhz, st.hw_latency_ns, st.hw_power_mw] {
+        h = fnv_u64(h, v.to_bits());
+    }
+    h
+}
+
+fn tensor_digest(name: &str, t: &Tensor) -> u64 {
+    let mut h = fnv_str(FNV_OFFSET, name);
+    for &d in &t.shape {
+        h = fnv_u64(h, d as u64);
+    }
+    for &x in &t.f32s {
+        h = fnv_u64(h, x.to_bits() as u64);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------
+// JSON encode / decode
+// ---------------------------------------------------------------------
+
+fn arch_to_json(arch: &Arch) -> Json {
+    match arch {
+        Arch::Mlp { sizes } => obj(vec![
+            ("kind", s("mlp")),
+            ("sizes", Json::Arr(sizes.iter().map(|&v| num(v as f64)).collect())),
+        ]),
+        Arch::Cnn { c1, c2, fc_in } => obj(vec![
+            ("kind", s("cnn")),
+            ("c1", num(*c1 as f64)),
+            ("c2", num(*c2 as f64)),
+            ("fc_in", num(*fc_in as f64)),
+        ]),
+    }
+}
+
+fn arch_from_json(j: &Json) -> Result<Arch> {
+    match j.get("kind").and_then(Json::as_str) {
+        Some("mlp") => {
+            let sizes: Vec<usize> = j
+                .get("sizes")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| format_err!("artifact arch: mlp missing sizes"))?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect();
+            if sizes.len() < 2 {
+                bail!("artifact arch: mlp needs at least 2 sizes, got {sizes:?}");
+            }
+            Ok(Arch::Mlp { sizes })
+        }
+        Some("cnn") => Ok(Arch::Cnn {
+            c1: j.get("c1").and_then(Json::as_usize).unwrap_or(0),
+            c2: j.get("c2").and_then(Json::as_usize).unwrap_or(0),
+            fc_in: j.get("fc_in").and_then(Json::as_usize).unwrap_or(0),
+        }),
+        k => bail!("artifact arch: unknown kind {k:?}"),
+    }
+}
+
+fn mask01(v: u64) -> f64 {
+    if v == 0 {
+        0.0
+    } else {
+        1.0
+    }
+}
+
+fn broadcast(v: f64) -> u64 {
+    if v == 0.0 {
+        0
+    } else {
+        !0
+    }
+}
+
+fn layer_to_json(layer: &CompiledLayer, digest: u64) -> Json {
+    let ops: Vec<Json> = layer
+        .tape
+        .ops
+        .iter()
+        .map(|op| {
+            Json::Arr(vec![
+                num(op.a as f64),
+                num(op.b as f64),
+                num(mask01(op.ca)),
+                num(mask01(op.cb)),
+            ])
+        })
+        .collect();
+    let outputs: Vec<Json> = layer
+        .tape
+        .outputs
+        .iter()
+        .map(|(plane, compl)| Json::Arr(vec![num(*plane as f64), num(mask01(*compl))]))
+        .collect();
+    let st = &layer.stats;
+    obj(vec![
+        ("section", s("layer")),
+        ("name", s(&layer.name)),
+        ("n_inputs", num(layer.tape.n_inputs as f64)),
+        ("ops", Json::Arr(ops)),
+        ("outputs", Json::Arr(outputs)),
+        (
+            "stats",
+            obj(vec![
+                ("n_distinct", num(st.n_distinct as f64)),
+                ("n_conflicts", num(st.n_conflicts as f64)),
+                ("total_cubes", num(st.total_cubes as f64)),
+                ("total_literals", num(st.total_literals as f64)),
+                ("ands_initial", num(st.ands_initial as f64)),
+                ("ands_final", num(st.ands_final as f64)),
+                ("n_luts", num(st.n_luts as f64)),
+                ("alms", num(st.alms as f64)),
+                ("lut_depth", num(st.lut_depth as f64)),
+                ("isf_digest", s(&format!("{:016x}", st.isf_digest))),
+                ("hw_registers", num(st.hw_registers as f64)),
+                ("hw_fmax_mhz", num(st.hw_fmax_mhz)),
+                ("hw_latency_ns", num(st.hw_latency_ns)),
+                ("hw_power_mw", num(st.hw_power_mw)),
+            ]),
+        ),
+        ("digest", s(&format!("{digest:016x}"))),
+    ])
+}
+
+fn layer_from_json(j: &Json) -> Result<(CompiledLayer, u64)> {
+    let name = j.get("name").and_then(Json::as_str).unwrap_or("").to_string();
+    let n_inputs = j
+        .get("n_inputs")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| format_err!("layer {name}: missing n_inputs"))?;
+    let mut ops = Vec::new();
+    for (i, op_json) in j.get("ops").and_then(Json::as_arr).unwrap_or(&[]).iter().enumerate() {
+        let v = op_json
+            .as_arr()
+            .filter(|a| a.len() == 4)
+            .ok_or_else(|| format_err!("layer {name}: op {i} malformed"))?;
+        let field = |k: usize| {
+            v[k].as_f64().ok_or_else(|| format_err!("layer {name}: op {i} malformed"))
+        };
+        ops.push(TapeOp {
+            a: field(0)? as u32,
+            b: field(1)? as u32,
+            ca: broadcast(field(2)?),
+            cb: broadcast(field(3)?),
+        });
+    }
+    let mut outputs = Vec::new();
+    for (i, out_json) in
+        j.get("outputs").and_then(Json::as_arr).unwrap_or(&[]).iter().enumerate()
+    {
+        let v = out_json
+            .as_arr()
+            .filter(|a| a.len() == 2)
+            .ok_or_else(|| format_err!("layer {name}: output {i} malformed"))?;
+        let field = |k: usize| {
+            v[k].as_f64().ok_or_else(|| format_err!("layer {name}: output {i} malformed"))
+        };
+        outputs.push((field(0)? as u32, broadcast(field(1)?)));
+    }
+    let tape = LogicTape::from_parts(n_inputs, ops, outputs)
+        .with_context(|| format!("layer {name}: invalid tape"))?;
+    let stats = stats_from_json(j.get("stats").unwrap_or(&Json::Null));
+    let layer = CompiledLayer { name, tape, stats };
+    let want = parse_digest(j)?;
+    let got = layer_digest(&layer);
+    if got != want {
+        bail!("layer {}: digest mismatch (corrupt artifact)", layer.name);
+    }
+    Ok((layer, got))
+}
+
+fn stats_from_json(j: &Json) -> LayerStats {
+    let u = |k: &str| j.get(k).and_then(Json::as_usize).unwrap_or(0);
+    let f = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+    LayerStats {
+        n_distinct: u("n_distinct"),
+        n_conflicts: u("n_conflicts"),
+        total_cubes: u("total_cubes"),
+        total_literals: u("total_literals"),
+        ands_initial: u("ands_initial"),
+        ands_final: u("ands_final"),
+        n_luts: u("n_luts"),
+        alms: u("alms"),
+        lut_depth: u("lut_depth") as u32,
+        isf_digest: j
+            .get("isf_digest")
+            .and_then(Json::as_str)
+            .and_then(|h| u64::from_str_radix(h, 16).ok())
+            .unwrap_or(0),
+        hw_registers: u("hw_registers"),
+        hw_fmax_mhz: f("hw_fmax_mhz"),
+        hw_latency_ns: f("hw_latency_ns"),
+        hw_power_mw: f("hw_power_mw"),
+    }
+}
+
+fn param_to_json(name: &str, t: &Tensor, digest: u64) -> Json {
+    obj(vec![
+        ("section", s("param")),
+        ("name", s(name)),
+        ("shape", Json::Arr(t.shape.iter().map(|&d| num(d as f64)).collect())),
+        ("data", Json::Arr(t.f32s.iter().map(|&x| num(x as f64)).collect())),
+        ("digest", s(&format!("{digest:016x}"))),
+    ])
+}
+
+fn param_from_json(j: &Json) -> Result<(String, Tensor, u64)> {
+    let name = j.get("name").and_then(Json::as_str).unwrap_or("").to_string();
+    let shape: Vec<usize> = j
+        .get("shape")
+        .and_then(Json::as_arr)
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(Json::as_usize)
+        .collect();
+    let data = j
+        .get("data")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format_err!("param {name}: missing data"))?;
+    let mut f32s = Vec::with_capacity(data.len());
+    for (i, v) in data.iter().enumerate() {
+        f32s.push(
+            v.as_f64().ok_or_else(|| format_err!("param {name}: datum {i} not a number"))?
+                as f32,
+        );
+    }
+    let numel: usize = shape.iter().product();
+    if numel != f32s.len() {
+        bail!("param {name}: shape {shape:?} does not match {} values", f32s.len());
+    }
+    let tensor = Tensor { shape, f32s };
+    let want = parse_digest(j)?;
+    let got = tensor_digest(&name, &tensor);
+    if got != want {
+        bail!("param {name}: digest mismatch (corrupt artifact)");
+    }
+    Ok((name, tensor, got))
+}
+
+fn parse_digest(j: &Json) -> Result<u64> {
+    let hex = j
+        .get("digest")
+        .and_then(Json::as_str)
+        .ok_or_else(|| format_err!("artifact section: missing digest"))?;
+    u64::from_str_radix(hex, 16).map_err(|_| format_err!("artifact section: bad digest {hex:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aig::Aig;
+
+    fn swap_tape() -> LogicTape {
+        let mut g = Aig::new(2);
+        let (a, b) = (g.pi(0), g.pi(1));
+        let x = g.and(a, b);
+        g.add_output(b);
+        g.add_output(x.not());
+        LogicTape::from_aig(&g)
+    }
+
+    #[test]
+    fn tape_digest_is_sensitive_to_complements() {
+        let tape = swap_tape();
+        let d1 = tape_digest(&tape);
+        let mut flipped = tape.clone();
+        flipped.ops[0].ca = !flipped.ops[0].ca;
+        assert_ne!(d1, tape_digest(&flipped));
+        assert_eq!(d1, tape_digest(&tape)); // deterministic
+    }
+
+    #[test]
+    fn arch_json_roundtrip() {
+        for arch in [
+            Arch::Mlp { sizes: vec![784, 100, 100, 10] },
+            Arch::Cnn { c1: 10, c2: 20, fc_in: 500 },
+        ] {
+            let j = arch_to_json(&arch);
+            let back = arch_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+            assert_eq!(arch, back);
+        }
+    }
+
+    #[test]
+    fn required_params_cover_first_and_last_layers() {
+        let mlp = required_params(&Arch::Mlp { sizes: vec![784, 100, 100, 10] });
+        assert!(mlp.contains(&"w1".to_string()) && mlp.contains(&"w3".to_string()));
+        assert!(mlp.contains(&"scale3".to_string()) && mlp.contains(&"bias1".to_string()));
+        let cnn = required_params(&Arch::Cnn { c1: 10, c2: 20, fc_in: 500 });
+        assert!(cnn.contains(&"k1".to_string()) && cnn.contains(&"w3".to_string()));
+    }
+
+    #[test]
+    fn empty_model_roundtrip_in_memory() {
+        let dir = std::env::temp_dir().join("nullanet_artifact_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tiny.nnc");
+        let cm = CompiledModel {
+            name: "tiny".into(),
+            arch: Arch::Mlp { sizes: vec![2, 2, 2, 2] },
+            accuracy_test: 0.5,
+            layers: vec![CompiledLayer {
+                name: "layer2".into(),
+                tape: swap_tape(),
+                stats: LayerStats { n_distinct: 4, ..Default::default() },
+            }],
+            params: BTreeMap::new(),
+        };
+        cm.save(&path).unwrap();
+        let back = CompiledModel::load(&path).unwrap();
+        assert_eq!(back.name, "tiny");
+        assert_eq!(back.arch, cm.arch);
+        assert_eq!(back.layers.len(), 1);
+        assert_eq!(back.layers[0].stats, cm.layers[0].stats);
+        assert_eq!(tape_digest(&back.layers[0].tape), tape_digest(&cm.layers[0].tape));
+        assert!((back.accuracy_test - 0.5).abs() < 1e-12);
+    }
+}

@@ -12,12 +12,14 @@
 //!   (the AOT-lowered JAX graph; Nets 1.2/2.2).
 
 use std::marker::PhantomData;
+use std::sync::Arc;
 
+use crate::artifact::{required_params, CompiledModel};
 use crate::format_err;
 use crate::model::{Arch, NetArtifacts, ThresholdLayer};
 use crate::netlist::LogicTape;
 use crate::util::error::Result;
-use crate::util::{transpose_to_planes, BitVec, BitWord};
+use crate::util::{transpose_to_planes, BitVec, BitWord, W256, W512};
 
 /// A batched inference engine: images in, logits out.
 pub trait InferenceEngine: Send + Sync {
@@ -34,6 +36,83 @@ pub trait InferenceEngine: Send + Sync {
     /// logic engines) and spreads them over the worker pool.
     fn preferred_block(&self) -> usize {
         64
+    }
+}
+
+// ---------------------------------------------------------------------
+// Width dispatch + artifact-based construction
+// ---------------------------------------------------------------------
+
+/// Plane widths the serving stack supports (`u64`, `[u64; 4]`, `[u64; 8]`).
+pub const SUPPORTED_WIDTHS: [usize; 3] = [64, 256, 512];
+
+/// Construct a [`LogicEngine`] at a runtime-chosen plane width — the one
+/// place the width → type dispatch happens (CLI, artifact loading, and
+/// benches all route through here).
+pub fn logic_engine_at_width(
+    net: NetArtifacts,
+    tapes: Vec<LogicTape>,
+    width: usize,
+) -> Result<Arc<dyn InferenceEngine>> {
+    Ok(match width {
+        64 => Arc::new(LogicEngine::<u64>::new(net, tapes)?),
+        256 => Arc::new(LogicEngine::<W256>::new(net, tapes)?),
+        512 => Arc::new(LogicEngine::<W512>::new(net, tapes)?),
+        other => crate::bail!("unsupported plane width {other} (supported: 64|256|512)"),
+    })
+}
+
+/// [`CnnLogicEngine`] variant of [`logic_engine_at_width`].
+pub fn cnn_logic_engine_at_width(
+    net: NetArtifacts,
+    conv2_tape: LogicTape,
+    width: usize,
+) -> Result<Arc<dyn InferenceEngine>> {
+    Ok(match width {
+        64 => Arc::new(CnnLogicEngine::<u64>::new(net, conv2_tape)?),
+        256 => Arc::new(CnnLogicEngine::<W256>::new(net, conv2_tape)?),
+        512 => Arc::new(CnnLogicEngine::<W512>::new(net, conv2_tape)?),
+        other => crate::bail!("unsupported plane width {other} (supported: 64|256|512)"),
+    })
+}
+
+/// Build the serving engine for a loaded compiled-model artifact at any
+/// supported plane width — the "serve many" half of
+/// compile-once/serve-many.  No synthesis happens here: the tapes come
+/// straight off the artifact.
+pub fn engine_from_artifact(
+    compiled: &CompiledModel,
+    width: usize,
+) -> Result<Arc<dyn InferenceEngine>> {
+    for p in required_params(&compiled.arch) {
+        if !compiled.params.contains_key(&p) {
+            crate::bail!("artifact {}: missing parameter tensor {p}", compiled.name);
+        }
+    }
+    let net = compiled.to_net_artifacts();
+    match &compiled.arch {
+        Arch::Mlp { sizes } => {
+            let hidden = sizes.len().saturating_sub(3);
+            if compiled.layers.len() != hidden {
+                crate::bail!(
+                    "artifact {}: {} compiled layers but the {}-layer MLP needs {hidden} hidden tapes",
+                    compiled.name,
+                    compiled.layers.len(),
+                    sizes.len().saturating_sub(1)
+                );
+            }
+            logic_engine_at_width(net, compiled.tapes(), width)
+        }
+        Arch::Cnn { .. } => {
+            if compiled.layers.len() != 1 {
+                crate::bail!(
+                    "artifact {}: CNN artifacts carry exactly one compiled layer (conv2), found {}",
+                    compiled.name,
+                    compiled.layers.len()
+                );
+            }
+            cnn_logic_engine_at_width(net, compiled.layers[0].tape.clone(), width)
+        }
     }
 }
 

@@ -114,7 +114,12 @@ impl Json {
             Json::Null => s.push_str("null"),
             Json::Bool(b) => s.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if *n == 0.0 && n.is_sign_negative() {
+                    // The integer fast-path below would erase the sign
+                    // bit; "-0" parses back to -0.0 (artifact tensors
+                    // round-trip bit-exactly).
+                    s.push_str("-0");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     s.push_str(&format!("{}", *n as i64));
                 } else {
                     s.push_str(&format!("{}", n));
@@ -388,6 +393,16 @@ mod tests {
         let j = Json::parse(src).unwrap();
         let out = j.to_string();
         assert_eq!(Json::parse(&out).unwrap(), j);
+    }
+
+    #[test]
+    fn negative_zero_roundtrips() {
+        let j = Json::Num(-0.0);
+        assert_eq!(j.to_string(), "-0");
+        let back = Json::parse("-0").unwrap().as_f64().unwrap();
+        assert_eq!(back.to_bits(), (-0.0f64).to_bits());
+        // Positive zero still takes the integer path.
+        assert_eq!(Json::Num(0.0).to_string(), "0");
     }
 
     #[test]

@@ -16,6 +16,8 @@
 //!
 //! Module map (see DESIGN.md for the full inventory):
 //!
+//! * [`artifact`] — versioned compiled-model artifacts (`.nnc`): the
+//!   staged pipeline's product, loaded by `serve`/`eval` in milliseconds
 //! * [`logic`] — cube/cover algebra + the Espresso-style minimizer
 //! * [`enumerate`] — Section 3.2.1 input-enumeration realization
 //! * [`aig`] — and-inverter graph with rewrite/balance/refactor
@@ -40,6 +42,7 @@
 
 pub mod aig;
 pub mod arith;
+pub mod artifact;
 pub mod bench_util;
 pub mod cli;
 pub mod coordinator;

@@ -3,21 +3,26 @@
 //! Subcommands:
 //!   tables               print the paper's constant tables (1, 2, 3)
 //!   synth                run Algorithm 2 on a trained net, report costs
+//!   compile              run the staged pipeline, emit a .nnc artifact
 //!   eval                 accuracy of an engine on the test set
 //!   serve                run the TCP serving front-end
+//!
+//! `compile` is the "compile once" half of compile-once/serve-many:
+//! `eval`/`serve --artifact model.nnc` load its output in milliseconds
+//! instead of re-running synthesis at every cold start.
 //!
 //! Python is never invoked here: everything reads `artifacts/` produced
 //! once by `make artifacts`.
 
 use std::sync::Arc;
 
-use nullanet::cli::Cli;
+use nullanet::cli::{Cli, Parsed};
 use nullanet::coordinator::{engine, Coordinator, CoordinatorConfig};
 use nullanet::cost::FpgaModel;
 use nullanet::format_err;
+use nullanet::server::ServerInfo;
 use nullanet::util::error::Result;
-use nullanet::util::{W256, W512};
-use nullanet::{bench_util, data, isf, model, synth};
+use nullanet::{artifact, bench_util, data, isf, model, synth};
 
 fn main() {
     nullanet::logging::init_from_env();
@@ -27,13 +32,14 @@ fn main() {
     let code = match cmd.as_str() {
         "tables" => run_tables(),
         "synth" => run_synth(&rest),
+        "compile" => run_compile(&rest),
         "eval" => run_eval(&rest),
         "serve" => run_serve(&rest),
         "codegen" => run_codegen(&rest),
         _ => {
             eprintln!(
                 "nullanet — reduced-memory-access inference via Boolean logic\n\n\
-                 usage: nullanet <tables|synth|eval|serve|codegen> [--help]"
+                 usage: nullanet <tables|synth|compile|eval|serve|codegen> [--help]"
             );
             Ok(())
         }
@@ -183,22 +189,156 @@ fn build_engine(
     width: usize,
 ) -> Result<Arc<dyn engine::InferenceEngine>> {
     let net = art.net(net_name)?;
-    Ok(match engine_name {
+    let eng: Arc<dyn engine::InferenceEngine> = match engine_name {
         "logic" => {
             let layers = synth_net(net, cap, nullanet::util::default_threads())?;
             let tapes: Vec<_> = layers.into_iter().map(|l| l.tape).collect();
-            // Plane width = samples per bit-parallel block.
-            match width {
-                64 => Arc::new(engine::LogicEngine::<u64>::new(net.clone(), tapes)?),
-                256 => Arc::new(engine::LogicEngine::<W256>::new(net.clone(), tapes)?),
-                512 => Arc::new(engine::LogicEngine::<W512>::new(net.clone(), tapes)?),
-                other => return Err(format_err!("unsupported width {other} (64|256|512)")),
-            }
+            // Plane width = samples per bit-parallel block; the width →
+            // type dispatch lives in one place (engine.rs).
+            engine::logic_engine_at_width(net.clone(), tapes, width)?
         }
         "threshold" => Arc::new(engine::ThresholdEngine::new(net.clone())?),
         "xla" => Arc::new(engine::XlaEngine::from_net(net, "model_b64", 64, 784, 10)?),
         other => return Err(format_err!("unknown engine {other} (logic|threshold|xla)")),
+    };
+    Ok(eng)
+}
+
+/// A resolved serving engine plus everything `eval`/`serve` report
+/// about it.
+struct EngineHandle {
+    eng: Arc<dyn engine::InferenceEngine>,
+    /// `{"cmd": "info"}` metadata.
+    info: ServerInfo,
+    /// Display name ("net11" or "net11 (artifact model.nnc)").
+    label: String,
+    /// Python-side reference accuracy (NaN when unknown).
+    ref_accuracy: f64,
+}
+
+/// Expected image length for an architecture (what the server rejects
+/// mismatches against).
+fn input_dim(arch: &model::Arch) -> Option<usize> {
+    match arch {
+        model::Arch::Mlp { sizes } => sizes.first().copied(),
+        model::Arch::Cnn { .. } => Some(28 * 28),
+    }
+}
+
+/// Resolve the serving engine for `eval`/`serve`: `--artifact` loads a
+/// compiled model in milliseconds; otherwise Algorithm 2 synthesizes
+/// from `artifacts/` (seconds to minutes).  Pass an already-loaded
+/// `Artifacts` to avoid reading the directory twice; `None` loads it
+/// on demand (the artifact path never touches it).
+fn engine_from_cli(p: &Parsed, art: Option<&model::Artifacts>) -> Result<EngineHandle> {
+    let width = p.usize("width");
+    let apath = p.str("artifact");
+    if !apath.is_empty() {
+        if p.str("engine") != "logic" {
+            return Err(format_err!(
+                "--artifact always serves the compiled logic engine; drop --engine {}",
+                p.str("engine")
+            ));
+        }
+        let t0 = std::time::Instant::now();
+        let compiled = artifact::CompiledModel::load(std::path::Path::new(apath))?;
+        let eng = engine::engine_from_artifact(&compiled, width)?;
+        nullanet::info!(
+            "loaded artifact {apath} ({}, {} layers) in {:.1?} — no synthesis",
+            compiled.name,
+            compiled.layers.len(),
+            t0.elapsed()
+        );
+        let info = ServerInfo {
+            model: compiled.name.clone(),
+            engine: eng.name().to_string(),
+            width,
+            input_dim: input_dim(&compiled.arch),
+            artifact: Some(apath.to_string()),
+            artifact_version: Some(artifact::ARTIFACT_VERSION),
+        };
+        return Ok(EngineHandle {
+            eng,
+            info,
+            label: format!("{} (artifact {apath})", compiled.name),
+            ref_accuracy: compiled.accuracy_test,
+        });
+    }
+    let loaded;
+    let art = match art {
+        Some(a) => a,
+        None => {
+            loaded = model::Artifacts::load(&nullanet::artifacts_dir())?;
+            &loaded
+        }
+    };
+    let net = art.net(p.str("net"))?;
+    let eng = build_engine(art, p.str("net"), p.str("engine"), p.usize("cap"), width)?;
+    let info = ServerInfo {
+        model: net.name.clone(),
+        engine: eng.name().to_string(),
+        width,
+        input_dim: input_dim(&net.arch),
+        artifact: None,
+        artifact_version: None,
+    };
+    Ok(EngineHandle {
+        eng,
+        info,
+        label: net.name.clone(),
+        ref_accuracy: net.accuracy_test,
     })
+}
+
+fn run_compile(args: &[String]) -> Result<()> {
+    let p = Cli::new("nullanet compile", "compile a trained net into a serving artifact (.nnc)")
+        .opt("net", "net11", "network (net11|net21)")
+        .opt("cap", "4000", "max distinct ISF patterns per layer (0 = all)")
+        .opt("threads", "0", "worker threads (0 = auto)")
+        .opt("out", "model.nnc", "output artifact path")
+        .parse(args)
+        .map_err(|h| format_err!("{h}"))?;
+    let art = model::Artifacts::load(&nullanet::artifacts_dir())?;
+    let net = art.net(p.str("net"))?;
+    let threads = if p.usize("threads") == 0 {
+        nullanet::util::default_threads()
+    } else {
+        p.usize("threads")
+    };
+    let cfg = synth::SynthConfig { threads, ..Default::default() };
+    let t0 = std::time::Instant::now();
+    let (compiled, timings) = synth::compile_net(net, p.usize("cap"), &cfg)?;
+    let mut table = bench_util::Table::new(
+        &format!("Compile pipeline ({})", net.name),
+        &["Layer", "extract", "minimize", "optimize", "map", "emit", "verify", "ANDs", "LUTs"],
+    );
+    for (t, l) in timings.iter().zip(&compiled.layers) {
+        table.row(&[
+            t.name.clone(),
+            format!("{:.1?}", t.extract),
+            format!("{:.1?}", t.minimize),
+            format!("{:.1?}", t.optimize),
+            format!("{:.1?}", t.map),
+            format!("{:.1?}", t.emit),
+            format!("{:.1?}", t.verify),
+            l.stats.ands_final.to_string(),
+            l.stats.n_luts.to_string(),
+        ]);
+    }
+    table.print();
+    let out = std::path::PathBuf::from(p.str("out"));
+    compiled.save(&out)?;
+    let bytes = std::fs::metadata(&out).map(|m| m.len()).unwrap_or(0);
+    println!(
+        "wrote {} (format v{}, {} layers, {} params, {} bytes) in {:.1?}",
+        out.display(),
+        artifact::ARTIFACT_VERSION,
+        compiled.layers.len(),
+        compiled.params.len(),
+        bytes,
+        t0.elapsed()
+    );
+    Ok(())
 }
 
 fn run_eval(args: &[String]) -> Result<()> {
@@ -206,47 +346,55 @@ fn run_eval(args: &[String]) -> Result<()> {
         .opt("net", "net11", "network")
         .opt("engine", "logic", "logic|threshold|xla|f32")
         .opt("cap", "4000", "ISF pattern cap for logic synthesis")
+        .opt("artifact", "", "evaluate a compiled .nnc artifact (skips synthesis)")
         .opt("limit", "0", "evaluate only the first N test samples (0 = all)")
         .opt("width", "64", "bit-parallel plane width for the logic engine (64|256|512)")
         .parse(args)
         .map_err(|h| format_err!("{h}"))?;
     let art = model::Artifacts::load(&nullanet::artifacts_dir())?;
-    let net = art.net(p.str("net"))?;
     let mut ds = data::Dataset::load(&art.test_path)?;
     if p.usize("limit") > 0 {
         ds = ds.take(p.usize("limit"));
     }
-    let acc = if p.str("engine") == "f32" {
+    // An artifact is self-contained (own name + reference accuracy), so
+    // --net is only consulted on the synthesizing paths.  A conflicting
+    // --engine with --artifact errors inside engine_from_cli — checked
+    // before the f32 shortcut so it can't be silently ignored.
+    let (acc, label, ref_acc) = if p.str("engine") == "f32" && p.str("artifact").is_empty() {
+        let net = art.net(p.str("net"))?;
         let binary = net.name.contains("net11") || net.name.contains("net21");
-        net.accuracy_f32(&ds, binary)?
+        (net.accuracy_f32(&ds, binary)?, net.name.clone(), net.accuracy_test)
     } else {
-        let eng =
-            build_engine(&art, p.str("net"), p.str("engine"), p.usize("cap"), p.usize("width"))?;
-        // Feed the engine full plane-width blocks (a fixed 256 would
-        // leave --width 512 blocks half empty).
-        let step = eng.preferred_block().max(256);
-        let mut hits = 0usize;
-        for chunk_start in (0..ds.n).step_by(step) {
-            let end = (chunk_start + step).min(ds.n);
-            let images: Vec<&[f32]> = (chunk_start..end).map(|i| ds.image(i)).collect();
-            let out = eng.infer_batch(&images);
-            for (k, logits) in out.iter().enumerate() {
-                if model::argmax(logits) == ds.y[chunk_start + k] as usize {
-                    hits += 1;
-                }
-            }
-        }
-        hits as f64 / ds.n as f64
+        let handle = engine_from_cli(&p, Some(&art))?;
+        (eval_engine(&*handle.eng, &ds), handle.label, handle.ref_accuracy)
     };
     println!(
         "{} / {}: accuracy {:.4} over {} samples (python-side reference: {:.4})",
-        p.str("net"),
+        label,
         p.str("engine"),
         acc,
         ds.n,
-        net.accuracy_test
+        ref_acc
     );
     Ok(())
+}
+
+/// Accuracy of an engine over a dataset, fed full plane-width blocks (a
+/// fixed 256 would leave --width 512 blocks half empty).
+fn eval_engine(eng: &dyn engine::InferenceEngine, ds: &data::Dataset) -> f64 {
+    let step = eng.preferred_block().max(256);
+    let mut hits = 0usize;
+    for chunk_start in (0..ds.n).step_by(step) {
+        let end = (chunk_start + step).min(ds.n);
+        let images: Vec<&[f32]> = (chunk_start..end).map(|i| ds.image(i)).collect();
+        let out = eng.infer_batch(&images);
+        for (k, logits) in out.iter().enumerate() {
+            if model::argmax(logits) == ds.y[chunk_start + k] as usize {
+                hits += 1;
+            }
+        }
+    }
+    hits as f64 / ds.n as f64
 }
 
 fn run_codegen(args: &[String]) -> Result<()> {
@@ -289,24 +437,26 @@ fn run_serve(args: &[String]) -> Result<()> {
         .opt("net", "net11", "network")
         .opt("engine", "logic", "logic|threshold|xla")
         .opt("cap", "4000", "ISF pattern cap for logic synthesis")
+        .opt("artifact", "", "serve a compiled .nnc artifact (skips synthesis)")
         .opt("addr", "127.0.0.1:7878", "bind address")
         .opt("workers", "2", "coordinator worker threads")
         .opt("width", "64", "bit-parallel plane width for the logic engine (64|256|512)")
         .parse(args)
         .map_err(|h| format_err!("{h}"))?;
-    let art = model::Artifacts::load(&nullanet::artifacts_dir())?;
-    let eng = build_engine(&art, p.str("net"), p.str("engine"), p.usize("cap"), p.usize("width"))?;
-    nullanet::info!("engine {} ready", eng.name());
+    let handle = engine_from_cli(&p, None)?;
+    nullanet::info!("engine {} ready", handle.eng.name());
     let coord = Arc::new(Coordinator::start(
-        eng,
+        handle.eng,
         CoordinatorConfig {
             workers: p.usize("workers").max(1),
             ..Default::default()
         },
     ));
-    let server = nullanet::server::Server::start(p.str("addr"), Arc::clone(&coord))?;
+    let server = nullanet::server::Server::start(p.str("addr"), Arc::clone(&coord), handle.info)?;
     println!("listening on {} — protocol: one JSON object per line", server.addr);
-    println!("  {{\"image\": [f32; 784]}} | {{\"cmd\": \"metrics\"}} | {{\"cmd\": \"ping\"}}");
+    println!(
+        "  {{\"image\": [f32; 784]}} | {{\"cmd\": \"metrics\"}} | {{\"cmd\": \"info\"}} | {{\"cmd\": \"ping\"}}"
+    );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(5));
         nullanet::info!("{}", coord.metrics.summary());

@@ -195,6 +195,28 @@ fn load_net(root: &Path, name: &str, entry: &Json) -> Result<NetArtifacts> {
 // ---------------------------------------------------------------------
 
 impl NetArtifacts {
+    /// A directory-less view: no HLO graphs, no observation files —
+    /// just the tensors the engines read.  This is what a loaded
+    /// compiled-model artifact ([`crate::artifact::CompiledModel`])
+    /// presents to the engine constructors, which never touch `dir`.
+    pub fn detached(
+        name: String,
+        arch: Arch,
+        tensors: BTreeMap<String, Tensor>,
+        accuracy_test: f64,
+    ) -> NetArtifacts {
+        NetArtifacts {
+            name,
+            arch,
+            tensors,
+            accuracy_test,
+            dir: PathBuf::new(),
+            hlo: BTreeMap::new(),
+            hlo_params: BTreeMap::new(),
+            isf_layers: vec![],
+        }
+    }
+
     fn t(&self, name: &str) -> Result<&Tensor> {
         self.tensors
             .get(name)

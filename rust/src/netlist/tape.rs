@@ -13,7 +13,7 @@ use crate::util::BitWord;
 /// Complement flags are stored as broadcast `u64` masks (0 or !0) so the
 /// hot loop is branch-free at every plane width (see
 /// [`BitWord::xor_mask`]).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct TapeOp {
     pub a: u32,
     pub b: u32,
@@ -23,7 +23,7 @@ pub struct TapeOp {
 
 /// A compiled logic network: `n_inputs` input planes, then `ops.len()`
 /// computed planes; outputs pick (plane, complement-mask) pairs.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct LogicTape {
     pub n_inputs: usize,
     pub ops: Vec<TapeOp>,
@@ -59,6 +59,40 @@ impl LogicTape {
             outputs,
             n_planes: aig.n_nodes(),
         }
+    }
+
+    /// Reassemble a tape from serialized parts (the `.nnc` artifact
+    /// loader).  Validates the structural invariants `eval_into` relies
+    /// on: fanin planes must precede the op's own plane, output planes
+    /// must exist, and complement masks must be broadcast (`0` or `!0`).
+    pub fn from_parts(
+        n_inputs: usize,
+        ops: Vec<TapeOp>,
+        outputs: Vec<(u32, u64)>,
+    ) -> crate::util::error::Result<LogicTape> {
+        let n_planes = n_inputs + 1 + ops.len();
+        for (i, op) in ops.iter().enumerate() {
+            let limit = (n_inputs + 1 + i) as u32;
+            if op.a >= limit || op.b >= limit {
+                crate::bail!(
+                    "tape op {i}: fanin plane out of range ({} | {} >= {limit})",
+                    op.a,
+                    op.b
+                );
+            }
+            if (op.ca != 0 && op.ca != !0) || (op.cb != 0 && op.cb != !0) {
+                crate::bail!("tape op {i}: complement mask must be 0 or !0");
+            }
+        }
+        for (k, (plane, compl)) in outputs.iter().enumerate() {
+            if *plane as usize >= n_planes {
+                crate::bail!("tape output {k}: plane {plane} out of range ({n_planes} planes)");
+            }
+            if *compl != 0 && *compl != !0 {
+                crate::bail!("tape output {k}: complement mask must be 0 or !0");
+            }
+        }
+        Ok(LogicTape { n_inputs, ops, outputs, n_planes })
     }
 
     pub fn n_ops(&self) -> usize {
@@ -224,6 +258,24 @@ mod tests {
         let out = tape.eval_batch(&[vec![true], vec![false]]);
         assert_eq!(out[0], vec![true, false]);
         assert_eq!(out[1], vec![true, false]);
+    }
+
+    #[test]
+    fn from_parts_roundtrips_and_validates() {
+        let mut rng = SplitMix64::new(11);
+        let g = random_aig(&mut rng, 6, 40, 3);
+        let tape = LogicTape::from_aig(&g);
+        let rebuilt =
+            LogicTape::from_parts(tape.n_inputs, tape.ops.clone(), tape.outputs.clone()).unwrap();
+        assert_eq!(rebuilt, tape);
+        // Forward fanin reference is rejected.
+        let bad_op = vec![TapeOp { a: 7, b: 0, ca: 0, cb: 0 }];
+        assert!(LogicTape::from_parts(6, bad_op, vec![]).is_err());
+        // Non-broadcast complement mask is rejected.
+        let bad_mask = vec![TapeOp { a: 0, b: 1, ca: 5, cb: 0 }];
+        assert!(LogicTape::from_parts(6, bad_mask, vec![]).is_err());
+        // Out-of-range output plane is rejected.
+        assert!(LogicTape::from_parts(2, vec![], vec![(3, 0)]).is_err());
     }
 
     #[test]

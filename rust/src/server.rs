@@ -3,8 +3,12 @@
 //! Protocol: one JSON object per line.
 //!   request:  {"image": [f32; 784]}            -> inference
 //!             {"cmd": "metrics"}               -> metrics snapshot
+//!             {"cmd": "info"}                  -> model/artifact/engine metadata
 //!             {"cmd": "ping"}                  -> {"ok": true}
 //!   response: {"class": c, "logits": [...], "queue_us": q, "batch": b}
+//!
+//! Malformed requests and unknown commands get an {"error": "..."} line
+//! back (the connection stays open) rather than a silent drop.
 //!
 //! std::net + a thread per connection (tokio is unavailable offline; the
 //! engine is CPU-bound anyway, so the coordinator's worker pool is the
@@ -20,6 +24,44 @@ use std::sync::Arc;
 use crate::coordinator::Coordinator;
 use crate::jsonio::{num, obj, Json};
 
+/// Static serving metadata reported by `{"cmd": "info"}`: which model is
+/// loaded, from what source (compiled artifact vs in-process synthesis),
+/// and at what plane width.
+#[derive(Clone, Debug, Default)]
+pub struct ServerInfo {
+    pub model: String,
+    pub engine: String,
+    pub width: usize,
+    /// Expected image length; requests with a different length get an
+    /// error reply instead of a garbage prediction (None = unchecked).
+    pub input_dim: Option<usize>,
+    /// Path of the `.nnc` artifact when the engine was loaded from one.
+    pub artifact: Option<String>,
+    pub artifact_version: Option<u32>,
+}
+
+impl ServerInfo {
+    fn to_json(&self) -> Json {
+        let source = if self.artifact.is_some() { "artifact" } else { "synthesized" };
+        let mut pairs = vec![
+            ("model", Json::Str(self.model.clone())),
+            ("engine", Json::Str(self.engine.clone())),
+            ("width", num(self.width as f64)),
+            ("source", Json::Str(source.to_string())),
+        ];
+        if let Some(d) = self.input_dim {
+            pairs.push(("input_dim", num(d as f64)));
+        }
+        if let Some(path) = &self.artifact {
+            pairs.push(("artifact", Json::Str(path.clone())));
+        }
+        if let Some(v) = self.artifact_version {
+            pairs.push(("artifact_version", num(v as f64)));
+        }
+        obj(pairs)
+    }
+}
+
 /// A running TCP server handle.
 pub struct Server {
     pub addr: std::net::SocketAddr,
@@ -29,12 +71,13 @@ pub struct Server {
 
 impl Server {
     /// Bind `addr` (e.g. "127.0.0.1:0") and serve the coordinator.
-    pub fn start(addr: &str, coordinator: Arc<Coordinator>) -> Result<Server> {
+    pub fn start(addr: &str, coordinator: Arc<Coordinator>, info: ServerInfo) -> Result<Server> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = Arc::clone(&stop);
+        let info = Arc::new(info);
         let accept_thread = std::thread::Builder::new()
             .name("nullanet-accept".into())
             .spawn(move || {
@@ -42,8 +85,9 @@ impl Server {
                     match listener.accept() {
                         Ok((stream, _)) => {
                             let coord = Arc::clone(&coordinator);
+                            let info = Arc::clone(&info);
                             std::thread::spawn(move || {
-                                let _ = handle_conn(stream, coord);
+                                let _ = handle_conn(stream, coord, info);
                             });
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -68,7 +112,7 @@ impl Server {
     }
 }
 
-fn handle_conn(stream: TcpStream, coord: Arc<Coordinator>) -> Result<()> {
+fn handle_conn(stream: TcpStream, coord: Arc<Coordinator>, info: Arc<ServerInfo>) -> Result<()> {
     stream.set_nodelay(true).ok();
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
@@ -77,7 +121,7 @@ fn handle_conn(stream: TcpStream, coord: Arc<Coordinator>) -> Result<()> {
         if line.trim().is_empty() {
             continue;
         }
-        let reply = match handle_line(&line, &coord) {
+        let reply = match handle_line(&line, &coord, &info) {
             Ok(j) => j,
             Err(e) => obj(vec![("error", Json::Str(e.to_string()))]),
         };
@@ -87,11 +131,12 @@ fn handle_conn(stream: TcpStream, coord: Arc<Coordinator>) -> Result<()> {
     Ok(())
 }
 
-fn handle_line(line: &str, coord: &Coordinator) -> Result<Json> {
+fn handle_line(line: &str, coord: &Coordinator, info: &ServerInfo) -> Result<Json> {
     let j = Json::parse(line).map_err(|e| format_err!("bad json: {e}"))?;
     if let Some(cmd) = j.get("cmd").and_then(Json::as_str) {
         return Ok(match cmd {
             "ping" => obj(vec![("ok", Json::Bool(true))]),
+            "info" => info.to_json(),
             "metrics" => obj(vec![
                 ("requests", num(coord.metrics.requests() as f64)),
                 ("blocks", num(coord.metrics.batches() as f64)),
@@ -105,8 +150,19 @@ fn handle_line(line: &str, coord: &Coordinator) -> Result<Json> {
     let img = j
         .get("image")
         .and_then(Json::as_arr)
-        .ok_or_else(|| format_err!("missing image"))?;
-    let image: Vec<f32> = img.iter().filter_map(|v| v.as_f64()).map(|f| f as f32).collect();
+        .ok_or_else(|| format_err!("missing image (or unknown request shape)"))?;
+    let mut image = Vec::with_capacity(img.len());
+    for v in img {
+        match v.as_f64() {
+            Some(f) => image.push(f as f32),
+            None => return Err(format_err!("image must be an array of numbers")),
+        }
+    }
+    if let Some(dim) = info.input_dim {
+        if image.len() != dim {
+            return Err(format_err!("image has {} values, expected {dim}", image.len()));
+        }
+    }
     let resp = coord.infer(image)?;
     Ok(obj(vec![
         ("class", num(resp.class as f64)),
@@ -147,7 +203,7 @@ mod tests {
             Arc::new(Echo),
             CoordinatorConfig::default(),
         ));
-        let server = Server::start("127.0.0.1:0", Arc::clone(&coord)).unwrap();
+        let server = Server::start("127.0.0.1:0", Arc::clone(&coord), ServerInfo::default()).unwrap();
         let mut conn = TcpStream::connect(server.addr).unwrap();
         conn.write_all(b"{\"cmd\": \"ping\"}\n{\"image\": [2.0, 3.0]}\n")
             .unwrap();
@@ -168,13 +224,57 @@ mod tests {
             Arc::new(Echo),
             CoordinatorConfig::default(),
         ));
-        let server = Server::start("127.0.0.1:0", Arc::clone(&coord)).unwrap();
+        let server = Server::start("127.0.0.1:0", Arc::clone(&coord), ServerInfo::default()).unwrap();
         let mut conn = TcpStream::connect(server.addr).unwrap();
-        conn.write_all(b"not json\n").unwrap();
+        // Three malformed requests on one connection: the server must
+        // reply with an error line to each and keep the stream open.
+        conn.write_all(b"not json\n{\"cmd\": \"bogus\"}\n{\"image\": [1.0, \"x\"]}\n{\"cmd\": \"ping\"}\n")
+            .unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        for expect in ["error", "unknown cmd", "array of numbers", "\"ok\":true"] {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            assert!(line.contains(expect), "wanted {expect} in {line}");
+        }
+        drop(conn);
+        server.shutdown();
+    }
+
+    #[test]
+    fn info_reports_model_and_width() {
+        let coord = Arc::new(Coordinator::start(
+            Arc::new(Echo),
+            CoordinatorConfig::default(),
+        ));
+        let info = ServerInfo {
+            model: "net11".into(),
+            engine: "logic[w256]:net11".into(),
+            width: 256,
+            input_dim: Some(3),
+            artifact: Some("model.nnc".into()),
+            artifact_version: Some(1),
+        };
+        let server = Server::start("127.0.0.1:0", Arc::clone(&coord), info).unwrap();
+        let mut conn = TcpStream::connect(server.addr).unwrap();
+        conn.write_all(b"{\"cmd\": \"info\"}\n").unwrap();
         let mut reader = BufReader::new(conn.try_clone().unwrap());
         let mut line = String::new();
         reader.read_line(&mut line).unwrap();
-        assert!(line.contains("error"), "{line}");
+        let j = Json::parse(line.trim()).unwrap();
+        assert_eq!(j.get("model").and_then(Json::as_str), Some("net11"));
+        assert_eq!(j.get("width").and_then(Json::as_usize), Some(256));
+        assert_eq!(j.get("source").and_then(Json::as_str), Some("artifact"));
+        assert_eq!(j.get("artifact_version").and_then(Json::as_usize), Some(1));
+        assert_eq!(j.get("input_dim").and_then(Json::as_usize), Some(3));
+        // Wrong-length image gets an error line, then a correct-length
+        // one still works on the same connection.
+        conn.write_all(b"{\"image\": [1.0]}\n{\"image\": [1.0, 2.0, 2.0]}\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("expected 3"), "{line}");
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"class\":5"), "{line}");
         drop(conn);
         server.shutdown();
     }
@@ -186,7 +286,7 @@ mod tests {
             CoordinatorConfig::default(),
         ));
         coord.infer(vec![1.0]).unwrap();
-        let server = Server::start("127.0.0.1:0", Arc::clone(&coord)).unwrap();
+        let server = Server::start("127.0.0.1:0", Arc::clone(&coord), ServerInfo::default()).unwrap();
         let mut conn = TcpStream::connect(server.addr).unwrap();
         conn.write_all(b"{\"cmd\": \"metrics\"}\n").unwrap();
         let mut reader = BufReader::new(conn.try_clone().unwrap());

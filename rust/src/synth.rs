@@ -1,23 +1,34 @@
-//! Algorithm 2: the end-to-end DNN → logic optimization driver.
+//! Algorithm 2: the end-to-end DNN → logic optimization driver, exposed
+//! as an explicit staged compile pipeline:
 //!
-//!   1: for i = 2 .. L-1:                 (layers with binary in AND out)
-//!   2:   for j in neurons(i): OptimizeNeuron   → logic::espresso
-//!   5:   OptimizeLayer                         → aig (strash/balance/
-//!                                                rewrite/refactor) + lutmap
-//!   6:   Pythonize                             → netlist tape (+ codegen)
-//!   8: OptimizeNetwork                         → pipeline (macro stages)
+//!   extract    ISF from training activations        → isf::extract
+//!   minimize   OptimizeNeuron per neuron (line 3)   → logic::espresso
+//!   optimize   OptimizeLayer (line 5)               → aig (strash/balance/
+//!                                                     rewrite/refactor)
+//!   map        technology mapping for costing       → lutmap
+//!   emit       Pythonize (line 6)                   → netlist tape
 //!
-//! Output: per-layer synthesized blocks (tape for the request path,
-//! LUT mapping + HwCost for the paper's hardware tables) and the
-//! verification evidence that the logic realizes its ISF exactly.
+//! [`optimize_layer`] composes minimize → optimize → map → emit for one
+//! layer; [`compile_net`] drives the whole pipeline over a trained net
+//! and packages the result as a [`crate::artifact::CompiledModel`] — the
+//! "compile once" half of compile-once/serve-many.  Each compiled layer
+//! carries the verification evidence that the logic realizes its ISF
+//! exactly (0 violations, plus the ISF digest).
 
-use crate::aig::{self, Aig};
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use crate::artifact::{isf_digest, required_params, CompiledLayer, CompiledModel, LayerStats};
 use crate::cost::{FpgaModel, HwCost};
+use crate::format_err;
 use crate::isf::LayerIsf;
 use crate::logic::{minimize, Cover, EspressoConfig};
 use crate::lutmap::{map_luts, LutMapConfig, LutMapping};
+use crate::model::NetArtifacts;
 use crate::netlist::LogicTape;
+use crate::util::error::Result;
 use crate::util::{default_threads, par_for_each_chunk};
+use crate::aig::{self, Aig};
 
 /// Knobs for the whole Algorithm-2 flow.
 #[derive(Clone, Debug)]
@@ -89,15 +100,14 @@ pub fn optimize_neurons(isf: &LayerIsf, cfg: &SynthConfig) -> Vec<Cover> {
     covers.into_iter().map(|c| c.unwrap()).collect()
 }
 
-/// OptimizeLayer (line 5): build all neuron covers into one AIG (strash
-/// extracts common logic), then run the multi-level script.
-pub fn optimize_layer(name: &str, isf: &LayerIsf, cfg: &SynthConfig) -> LayerSynthesis {
-    let covers = optimize_neurons(isf, cfg);
-    let n_in = isf.patterns.n_vars;
-
+/// Stage `optimize` — OptimizeLayer (line 5): build all neuron covers
+/// into one AIG (strash extracts common logic), then run the multi-level
+/// script.  Returns the optimized graph and the pre-optimization AND
+/// count.
+pub fn optimize_stage(covers: &[Cover], n_in: usize, cfg: &SynthConfig) -> (Aig, usize) {
     let mut g = Aig::new(n_in);
     let pis: Vec<_> = (0..n_in).map(|i| g.pi(i)).collect();
-    for cover in &covers {
+    for cover in covers {
         let root = aig::factor_cover(&mut g, cover, &pis);
         g.add_output(root);
     }
@@ -110,9 +120,28 @@ pub fn optimize_layer(name: &str, isf: &LayerIsf, cfg: &SynthConfig) -> LayerSyn
         opt = aig::refactor(&opt, &aig::RefactorConfig::default());
         opt = aig::balance(&opt);
     }
+    (opt, ands_initial)
+}
 
-    let mapping = map_luts(&opt, &cfg.lutmap);
-    let tape = LogicTape::from_aig(&opt);
+/// Stage `map` — technology mapping for hardware costing (the request
+/// path never touches the LUT network).
+pub fn map_stage(aig: &Aig, cfg: &SynthConfig) -> LutMapping {
+    map_luts(aig, &cfg.lutmap)
+}
+
+/// Stage `emit` — Pythonize (line 6): flatten the optimized graph into
+/// the request-path instruction tape.
+pub fn emit_stage(aig: &Aig) -> LogicTape {
+    LogicTape::from_aig(aig)
+}
+
+/// One layer through minimize → optimize → map → emit (the per-layer
+/// body of Algorithm 2).
+pub fn optimize_layer(name: &str, isf: &LayerIsf, cfg: &SynthConfig) -> LayerSynthesis {
+    let covers = optimize_neurons(isf, cfg);
+    let (opt, ands_initial) = optimize_stage(&covers, isf.patterns.n_vars, cfg);
+    let mapping = map_stage(&opt, cfg);
+    let tape = emit_stage(&opt);
     let total_cubes = covers.iter().map(Cover::len).sum();
     let total_literals = covers.iter().map(Cover::n_literals).sum();
     LayerSynthesis {
@@ -125,6 +154,132 @@ pub fn optimize_layer(name: &str, isf: &LayerIsf, cfg: &SynthConfig) -> LayerSyn
         total_literals,
         ands_initial,
     }
+}
+
+/// Wall-clock of each compile-pipeline stage for one layer.
+#[derive(Clone, Debug)]
+pub struct StageTimings {
+    pub name: String,
+    pub extract: Duration,
+    pub minimize: Duration,
+    pub optimize: Duration,
+    pub map: Duration,
+    pub emit: Duration,
+    pub verify: Duration,
+}
+
+/// Drive the full staged pipeline over every binarized layer of a
+/// trained net and package the result as a serving artifact.  Refuses to
+/// emit if any layer's logic violates its ISF.
+pub fn compile_net(
+    net: &NetArtifacts,
+    cap: usize,
+    cfg: &SynthConfig,
+) -> Result<(CompiledModel, Vec<StageTimings>)> {
+    let obs = crate::isf::load_observations(&net.dir.join("activations.bin"))?;
+    let mut layers = Vec::new();
+    let mut timings = Vec::new();
+    for o in &obs {
+        let t = Instant::now();
+        let isf = crate::isf::extract(o, &crate::isf::IsfConfig { max_patterns: cap });
+        let extract = t.elapsed();
+
+        let t = Instant::now();
+        let covers = optimize_neurons(&isf, cfg);
+        let minimize = t.elapsed();
+
+        let t = Instant::now();
+        let (opt, ands_initial) = optimize_stage(&covers, isf.patterns.n_vars, cfg);
+        let optimize = t.elapsed();
+
+        let t = Instant::now();
+        let mapping = map_stage(&opt, cfg);
+        let map = t.elapsed();
+
+        let t = Instant::now();
+        let tape = emit_stage(&opt);
+        let emit = t.elapsed();
+
+        let synth = LayerSynthesis {
+            name: o.name.clone(),
+            total_cubes: covers.iter().map(Cover::len).sum(),
+            total_literals: covers.iter().map(Cover::n_literals).sum(),
+            covers,
+            aig: opt,
+            tape,
+            mapping,
+            ands_initial,
+        };
+        let t = Instant::now();
+        let violations = verify_layer(&isf, &synth);
+        let verify = t.elapsed();
+        if violations > 0 {
+            return Err(format_err!(
+                "{}: {violations} ISF violations — refusing to emit artifact",
+                o.name
+            ));
+        }
+        let hw = synth.hw_cost(&FpgaModel::default());
+        let stats = LayerStats {
+            n_distinct: isf.n_distinct,
+            n_conflicts: isf.n_conflicts,
+            total_cubes: synth.total_cubes,
+            total_literals: synth.total_literals,
+            ands_initial,
+            ands_final: synth.aig.n_ands(),
+            n_luts: synth.mapping.n_luts(),
+            alms: synth.mapping.alms(),
+            lut_depth: synth.mapping.depth,
+            isf_digest: isf_digest(&isf),
+            hw_registers: hw.registers,
+            hw_fmax_mhz: hw.fmax_mhz,
+            hw_latency_ns: hw.latency_ns,
+            hw_power_mw: hw.power_mw,
+        };
+        crate::info!(
+            "compile {}: {} patterns, {} ANDs ({} pre-opt), {} LUTs — extract {:.1?} / minimize {:.1?} / optimize {:.1?} / map {:.1?} / emit {:.1?} / verify {:.1?}",
+            o.name,
+            isf.n_distinct,
+            stats.ands_final,
+            ands_initial,
+            stats.n_luts,
+            extract,
+            minimize,
+            optimize,
+            map,
+            emit,
+            verify
+        );
+        layers.push(CompiledLayer { name: o.name.clone(), tape: synth.tape, stats });
+        timings.push(StageTimings {
+            name: o.name.clone(),
+            extract,
+            minimize,
+            optimize,
+            map,
+            emit,
+            verify,
+        });
+    }
+    // Non-logic parameters the engines need (first/last layer weights).
+    let mut params = BTreeMap::new();
+    for pname in required_params(&net.arch) {
+        let t = net
+            .tensors
+            .get(&pname)
+            .ok_or_else(|| format_err!("{}: tensor {pname} missing from artifacts", net.name))?;
+        params.insert(pname, t.clone());
+    }
+    Ok((
+        CompiledModel {
+            name: net.name.clone(),
+            arch: net.arch.clone(),
+            accuracy_test: net.accuracy_test,
+            layers,
+            params,
+        },
+        timings,
+    ))
 }
 
 /// Verify a synthesized layer against its ISF: every observed ON pattern

@@ -1,0 +1,328 @@
+//! Compiled-artifact integration tests: save→load→eval must be
+//! bit-identical to the in-memory tape at every supported plane width,
+//! damaged/stale files must be rejected with a clear error, and engines
+//! built from a loaded artifact must serve exactly the predictions the
+//! synthesizing path would have.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use nullanet::aig::{Aig, Lit};
+use nullanet::artifact::{CompiledLayer, CompiledModel, LayerStats};
+use nullanet::coordinator::engine;
+use nullanet::model::{Arch, Tensor};
+use nullanet::netlist::LogicTape;
+use nullanet::synth;
+use nullanet::util::{SplitMix64, W256, W512};
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("nullanet_artifact_{tag}"));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn random_tape(rng: &mut SplitMix64, n_pis: usize, n_ands: usize, n_outs: usize) -> LogicTape {
+    let mut g = Aig::new(n_pis);
+    let mut lits: Vec<Lit> = (0..n_pis).map(|i| g.pi(i)).collect();
+    for _ in 0..n_ands {
+        let a = lits[rng.range(0, lits.len())];
+        let b = lits[rng.range(0, lits.len())];
+        let a = if rng.bool(0.5) { a.not() } else { a };
+        let b = if rng.bool(0.5) { b.not() } else { b };
+        lits.push(g.and(a, b));
+    }
+    for _ in 0..n_outs {
+        let o = lits[rng.range(0, lits.len())];
+        g.add_output(if rng.bool(0.5) { o.not() } else { o });
+    }
+    LogicTape::from_aig(&g)
+}
+
+fn model_with(
+    tapes: Vec<LogicTape>,
+    params: BTreeMap<String, Tensor>,
+    arch: Arch,
+) -> CompiledModel {
+    CompiledModel {
+        name: "test".into(),
+        arch,
+        accuracy_test: f64::NAN,
+        layers: tapes
+            .into_iter()
+            .enumerate()
+            .map(|(i, tape)| CompiledLayer {
+                name: format!("layer{}", i + 2),
+                tape,
+                stats: LayerStats { n_distinct: 1 + i, ..Default::default() },
+            })
+            .collect(),
+        params,
+    }
+}
+
+/// Parameters for the 2-2-2-2 test MLP (first layer thresholds the two
+/// inputs at 0.5, last layer is identity) — mirrors the engine unit
+/// tests' tiny net.
+fn tiny_params() -> BTreeMap<String, Tensor> {
+    let t = |shape: Vec<usize>, f32s: Vec<f32>| Tensor { shape, f32s };
+    let mut m = BTreeMap::new();
+    m.insert("w1".to_string(), t(vec![2, 2], vec![1.0, 0.0, 0.0, 1.0]));
+    m.insert("scale1".to_string(), t(vec![2], vec![1.0, 1.0]));
+    m.insert("bias1".to_string(), t(vec![2], vec![-0.5, -0.5]));
+    m.insert("w3".to_string(), t(vec![2, 2], vec![1.0, 0.0, 0.0, 1.0]));
+    m.insert("scale3".to_string(), t(vec![2], vec![1.0, 1.0]));
+    m.insert("bias3".to_string(), t(vec![2], vec![0.0, 0.0]));
+    m
+}
+
+/// Tape for the 2-bit swap layer: out0 = in1, out1 = in0.
+fn swap_tape() -> LogicTape {
+    let mut g = Aig::new(2);
+    let (a, b) = (g.pi(0), g.pi(1));
+    g.add_output(b);
+    g.add_output(a);
+    LogicTape::from_aig(&g)
+}
+
+#[test]
+fn save_load_eval_bit_identical_at_every_width() {
+    let dir = tmpdir("widths");
+    let mut rng = SplitMix64::new(7);
+    for case in 0..6 {
+        let n = rng.range(2, 12);
+        let (na, no) = (rng.range(1, 120), rng.range(1, 6));
+        let tape = random_tape(&mut rng, n, na, no);
+        let cm = model_with(
+            vec![tape.clone()],
+            BTreeMap::new(),
+            Arch::Mlp { sizes: vec![n, n, n, n] },
+        );
+        let path = dir.join(format!("m{case}.nnc"));
+        cm.save(&path).unwrap();
+        let loaded = CompiledModel::load(&path).unwrap();
+        let lt = &loaded.layers[0].tape;
+        assert_eq!(*lt, tape, "loaded tape not structurally identical");
+        let rows: Vec<Vec<bool>> = (0..512)
+            .map(|_| (0..n).map(|_| rng.bool(0.5)).collect())
+            .collect();
+        for chunk in rows.chunks(64) {
+            assert_eq!(lt.eval_batch_wide::<u64>(chunk), tape.eval_batch_wide::<u64>(chunk));
+        }
+        for chunk in rows.chunks(256) {
+            assert_eq!(lt.eval_batch_wide::<W256>(chunk), tape.eval_batch_wide::<W256>(chunk));
+        }
+        assert_eq!(lt.eval_batch_wide::<W512>(&rows), tape.eval_batch_wide::<W512>(&rows));
+    }
+}
+
+#[test]
+fn params_and_stats_roundtrip_bitwise() {
+    let dir = tmpdir("params");
+    let mut rng = SplitMix64::new(3);
+    let tape = random_tape(&mut rng, 4, 10, 2);
+    let mut params = BTreeMap::new();
+    params.insert(
+        "w1".to_string(),
+        Tensor { shape: vec![2, 3], f32s: vec![0.5, -1.25, 3.0e-7, -0.0, 1.5e8, 0.1] },
+    );
+    params.insert(
+        "bias1".to_string(),
+        Tensor { shape: vec![4], f32s: (0..4).map(|_| rng.normal() as f32).collect() },
+    );
+    let mut cm = model_with(vec![tape], params, Arch::Mlp { sizes: vec![3, 4, 4, 2] });
+    cm.layers[0].stats = LayerStats {
+        n_distinct: 123,
+        n_conflicts: 4,
+        total_cubes: 56,
+        total_literals: 789,
+        ands_initial: 90,
+        ands_final: 77,
+        n_luts: 12,
+        alms: 7,
+        lut_depth: 3,
+        isf_digest: 0xdead_beef_1234_5678,
+        hw_registers: 44,
+        hw_fmax_mhz: 512.25,
+        hw_latency_ns: 3.75,
+        hw_power_mw: 0.875,
+    };
+    let path = dir.join("m.nnc");
+    cm.save(&path).unwrap();
+    let loaded = CompiledModel::load(&path).unwrap();
+    assert_eq!(loaded.name, cm.name);
+    assert_eq!(loaded.arch, cm.arch);
+    assert!(loaded.accuracy_test.is_nan());
+    assert_eq!(loaded.layers[0].stats, cm.layers[0].stats);
+    assert_eq!(loaded.params.len(), cm.params.len());
+    for (k, t) in &cm.params {
+        let lt = &loaded.params[k];
+        assert_eq!(lt.shape, t.shape);
+        let want: Vec<u32> = t.f32s.iter().map(|x| x.to_bits()).collect();
+        let got: Vec<u32> = lt.f32s.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(got, want, "tensor {k} not bit-identical");
+    }
+}
+
+#[test]
+fn truncated_artifact_rejected() {
+    let dir = tmpdir("trunc");
+    let mut rng = SplitMix64::new(5);
+    let tape = random_tape(&mut rng, 8, 200, 4);
+    let cm = model_with(vec![tape], tiny_params(), Arch::Mlp { sizes: vec![8, 8, 8, 8] });
+    let path = dir.join("full.nnc");
+    cm.save(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    let cut_path = dir.join("cut.nnc");
+    for frac in [1usize, 30, 60, 95] {
+        let cut = bytes.len() * frac / 100;
+        std::fs::write(&cut_path, &bytes[..cut]).unwrap();
+        assert!(CompiledModel::load(&cut_path).is_err(), "cut at {frac}% must fail");
+    }
+    // Dropping just the footer line must also fail.
+    let text = String::from_utf8(bytes).unwrap();
+    let no_footer: String = text
+        .lines()
+        .filter(|l| !l.contains("\"end\":true"))
+        .map(|l| format!("{l}\n"))
+        .collect();
+    std::fs::write(&cut_path, no_footer).unwrap();
+    let err = CompiledModel::load(&cut_path).unwrap_err();
+    assert!(format!("{err:#}").contains("truncated"), "{err:#}");
+}
+
+#[test]
+fn corrupted_section_rejected() {
+    let dir = tmpdir("corrupt");
+    let mut rng = SplitMix64::new(6);
+    let tape = random_tape(&mut rng, 6, 80, 3);
+    let cm = model_with(vec![tape], BTreeMap::new(), Arch::Mlp { sizes: vec![6, 6, 6, 6] });
+    let path = dir.join("ok.nnc");
+    cm.save(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    // Flip one digit inside the layer section's ops array: whatever it
+    // decodes to afterwards, the digest (or the tape validator) must
+    // catch it.
+    let pos = text.find("\"ops\":[[").expect("ops present") + "\"ops\":[[".len();
+    let mut bytes = text.into_bytes();
+    let digit = pos + bytes[pos..].iter().position(|b| b.is_ascii_digit()).unwrap();
+    bytes[digit] = if bytes[digit] == b'9' { b'0' } else { bytes[digit] + 1 };
+    let bad = dir.join("bad.nnc");
+    std::fs::write(&bad, &bytes).unwrap();
+    assert!(CompiledModel::load(&bad).is_err(), "corrupted op value must be rejected");
+
+    // Header tampering (model name) is caught by the footer chain
+    // digest, which is seeded with the decoded header fields.
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.contains("\"name\":\"test\""), "{text}");
+    let renamed = text.replacen("\"name\":\"test\"", "\"name\":\"evil\"", 1);
+    std::fs::write(&bad, renamed).unwrap();
+    let err = CompiledModel::load(&bad).unwrap_err();
+    assert!(format!("{err:#}").contains("digest"), "{err:#}");
+}
+
+#[test]
+fn version_mismatch_rejected() {
+    let dir = tmpdir("version");
+    let cm = model_with(vec![swap_tape()], BTreeMap::new(), Arch::Mlp { sizes: vec![2, 2, 2, 2] });
+    let path = dir.join("v1.nnc");
+    cm.save(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.contains("\"version\":1"), "{text}");
+    let bumped = text.replacen("\"version\":1", "\"version\":99", 1);
+    let path2 = dir.join("v99.nnc");
+    std::fs::write(&path2, bumped).unwrap();
+    let err = CompiledModel::load(&path2).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("version"), "{msg}");
+}
+
+#[test]
+fn non_artifact_file_rejected() {
+    let dir = tmpdir("magic");
+    let p = dir.join("junk.nnc");
+    std::fs::write(&p, "hello world\n").unwrap();
+    assert!(CompiledModel::load(&p).is_err());
+    std::fs::write(&p, "{\"magic\":\"something-else\",\"version\":1}\n").unwrap();
+    let err = CompiledModel::load(&p).unwrap_err();
+    assert!(format!("{err:#}").contains("magic"), "{err:#}");
+}
+
+#[test]
+fn engine_from_loaded_artifact_serves_identical_predictions() {
+    use nullanet::coordinator::engine::InferenceEngine;
+
+    let dir = tmpdir("engine");
+    let cm = model_with(vec![swap_tape()], tiny_params(), Arch::Mlp { sizes: vec![2, 2, 2, 2] });
+    let path = dir.join("tiny.nnc");
+    cm.save(&path).unwrap();
+    let loaded = CompiledModel::load(&path).unwrap();
+
+    let direct = engine::LogicEngine::<u64>::new(cm.to_net_artifacts(), cm.tapes()).unwrap();
+    let images: Vec<Vec<f32>> = (0..200)
+        .map(|i| vec![((i % 3) as f32) * 0.45, ((i % 7) as f32) * 0.15])
+        .collect();
+    let refs: Vec<&[f32]> = images.iter().map(|v| v.as_slice()).collect();
+    let want = direct.infer_batch(&refs);
+    for width in [64usize, 256, 512] {
+        let eng = engine::engine_from_artifact(&loaded, width).unwrap();
+        assert_eq!(eng.preferred_block(), width);
+        let got = eng.infer_batch(&refs);
+        assert_eq!(got, want, "width {width} logits differ from the synthesizing path");
+    }
+    // Swap semantics survive the round trip: (0.9, 0.1) -> class 1.
+    let probe: Vec<&[f32]> = vec![&[0.9, 0.1]];
+    let eng = engine::engine_from_artifact(&loaded, 64).unwrap();
+    let out = eng.infer_batch(&probe);
+    assert_eq!(nullanet::model::argmax(&out[0]), 1);
+    // One helper, one error message for unsupported widths.
+    let err = engine::engine_from_artifact(&loaded, 128).unwrap_err();
+    assert!(format!("{err:#}").contains("unsupported plane width"), "{err:#}");
+}
+
+#[test]
+fn compile_net_to_artifact_end_to_end() {
+    use nullanet::coordinator::engine::InferenceEngine;
+
+    let dir = tmpdir("compile");
+    // Synthetic trained net: the hidden layer is a 2-bit swap observed
+    // over all 4 input patterns (so synthesis has the full truth table).
+    let mut buf: Vec<u8> = b"NACT".to_vec();
+    buf.extend(1u32.to_le_bytes());
+    buf.extend(6u32.to_le_bytes());
+    buf.extend(b"layer2");
+    buf.extend(2u32.to_le_bytes()); // n_in
+    buf.extend(2u32.to_le_bytes()); // n_out
+    buf.extend(4u32.to_le_bytes()); // n_samples
+    buf.extend([0b00, 0b01, 0b10, 0b11]); // inputs
+    buf.extend([0b00, 0b10, 0b01, 0b11]); // outputs (bits swapped)
+    std::fs::write(dir.join("activations.bin"), &buf).unwrap();
+
+    let net = nullanet::model::NetArtifacts {
+        name: "tiny".into(),
+        arch: Arch::Mlp { sizes: vec![2, 2, 2, 2] },
+        tensors: tiny_params(),
+        accuracy_test: f64::NAN,
+        dir: dir.clone(),
+        hlo: BTreeMap::new(),
+        hlo_params: BTreeMap::new(),
+        isf_layers: vec![],
+    };
+    let cfg = synth::SynthConfig { threads: 2, ..Default::default() };
+    let (compiled, timings) = synth::compile_net(&net, 0, &cfg).unwrap();
+    assert_eq!(compiled.layers.len(), 1);
+    assert_eq!(timings.len(), 1);
+    assert_eq!(compiled.layers[0].stats.n_distinct, 4);
+    assert_ne!(compiled.layers[0].stats.isf_digest, 0);
+    assert!(compiled.params.contains_key("w1") && compiled.params.contains_key("w3"));
+
+    let path = dir.join("tiny.nnc");
+    compiled.save(&path).unwrap();
+    let loaded = CompiledModel::load(&path).unwrap();
+    // Serve the loaded artifact: it behaves exactly like the 2-bit swap.
+    let eng = engine::engine_from_artifact(&loaded, 256).unwrap();
+    let images: Vec<Vec<f32>> = vec![vec![0.9, 0.1], vec![0.1, 0.9]];
+    let refs: Vec<&[f32]> = images.iter().map(|v| v.as_slice()).collect();
+    let out = eng.infer_batch(&refs);
+    assert_eq!(nullanet::model::argmax(&out[0]), 1); // swapped
+    assert_eq!(nullanet::model::argmax(&out[1]), 0);
+}

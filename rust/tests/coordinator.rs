@@ -6,7 +6,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use nullanet::coordinator::{engine::InferenceEngine, Coordinator, CoordinatorConfig};
-use nullanet::server::Server;
+use nullanet::server::{Server, ServerInfo};
 
 /// Deterministic stand-in engine: class = round(sum) % 10.
 struct SumEngine;
@@ -78,7 +78,7 @@ fn server_concurrent_clients() {
         Arc::new(SumEngine),
         CoordinatorConfig::default(),
     ));
-    let srv = Server::start("127.0.0.1:0", Arc::clone(&coord)).unwrap();
+    let srv = Server::start("127.0.0.1:0", Arc::clone(&coord), ServerInfo::default()).unwrap();
     let addr = srv.addr;
     let mut handles = vec![];
     for t in 0..4 {
