@@ -1,6 +1,7 @@
-//! Serving demo: start the TCP front-end over the synthesized logic
-//! engine, then act as a client — send pings, images, and a metrics
-//! probe over the JSON-lines protocol.
+//! Serving demo: start the TCP front-end over a registry holding the
+//! synthesized logic engine, then act as a client — send pings, v1
+//! images, a pipelined v2 request, and a metrics probe over the
+//! JSON-lines protocol.
 //!
 //! Run: cargo run --release --example serve  [-- cap]
 
@@ -8,10 +9,12 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::sync::Arc;
 
-use nullanet::coordinator::{engine, Coordinator, CoordinatorConfig};
+use nullanet::coordinator::{engine, CoordinatorConfig};
+use nullanet::registry::{ModelMeta, ModelRegistry};
+use nullanet::util::error::Result;
 use nullanet::{data, isf, model, server, synth};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let cap: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(2000);
     let art = model::Artifacts::load(&nullanet::artifacts_dir())?;
     let net = art.net("net11")?;
@@ -27,9 +30,14 @@ fn main() -> anyhow::Result<()> {
         assert_eq!(synth::verify_layer(&layer_isf, &s), 0);
         tapes.push(s.tape);
     }
-    let eng = Arc::new(engine::LogicEngine::new(net.clone(), tapes)?);
-    let coord = Arc::new(Coordinator::start(eng, CoordinatorConfig::default()));
-    let srv = server::Server::start("127.0.0.1:0", Arc::clone(&coord))?;
+    let eng: Arc<dyn engine::InferenceEngine> =
+        Arc::new(engine::LogicEngine::<u64>::new(net.clone(), tapes)?);
+
+    // One model in the registry; `nullanet serve --artifact a.nnc
+    // --artifact b.nnc` is the multi-model variant of the same setup.
+    let registry = Arc::new(ModelRegistry::new(CoordinatorConfig::default(), 64));
+    registry.register(ModelMeta::for_engine(&net.name, eng.as_ref(), 64), eng)?;
+    let srv = server::Server::start("127.0.0.1:0", Arc::clone(&registry))?;
     println!("server on {}", srv.addr);
 
     // --- client side -----------------------------------------------------
@@ -54,6 +62,20 @@ fn main() -> anyhow::Result<()> {
         }
     }
     println!("classified {} images over TCP: {} correct", ds.n, correct);
+
+    // A pipelined v2 request: id-tagged, model-routed, batched.
+    let img: Vec<String> = ds.image(0).iter().map(|v| format!("{v}")).collect();
+    conn.write_all(
+        format!(
+            "{{\"id\": 1, \"model\": \"{}\", \"images\": [[{}]]}}\n",
+            net.name,
+            img.join(",")
+        )
+        .as_bytes(),
+    )?;
+    line.clear();
+    reader.read_line(&mut line)?;
+    println!("pipelined -> {}", line.trim());
 
     line.clear();
     conn.write_all(b"{\"cmd\": \"metrics\"}\n")?;

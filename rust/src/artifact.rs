@@ -144,25 +144,25 @@ impl CompiledModel {
             ),
             ("n_sections", num(n_sections as f64)),
         ]);
-        writeln!(out, "{}", header.to_string())?;
+        writeln!(out, "{header}")?;
         let mut combined =
             header_digest(&self.name, &self.arch, self.accuracy_test, n_sections);
         for layer in &self.layers {
             let digest = layer_digest(layer);
             combined = fnv_u64(combined, digest);
-            writeln!(out, "{}", layer_to_json(layer, digest).to_string())?;
+            writeln!(out, "{}", layer_to_json(layer, digest))?;
         }
         for (name, tensor) in &self.params {
             let digest = tensor_digest(name, tensor);
             combined = fnv_u64(combined, digest);
-            writeln!(out, "{}", param_to_json(name, tensor, digest).to_string())?;
+            writeln!(out, "{}", param_to_json(name, tensor, digest))?;
         }
         let footer = obj(vec![
             ("end", Json::Bool(true)),
             ("n_sections", num(n_sections as f64)),
             ("digest", s(&format!("{combined:016x}"))),
         ]);
-        writeln!(out, "{}", footer.to_string())?;
+        writeln!(out, "{footer}")?;
         out.flush()?;
         drop(out);
         std::fs::rename(&tmp, path)

@@ -12,6 +12,7 @@ struct Opt {
     help: String,
     default: Option<String>,
     is_flag: bool,
+    is_multi: bool,
 }
 
 /// A small argument parser: declare options, then parse.
@@ -21,6 +22,7 @@ pub struct Cli {
     about: String,
     opts: Vec<Opt>,
     values: BTreeMap<String, String>,
+    lists: BTreeMap<String, Vec<String>>,
     positionals: Vec<String>,
 }
 
@@ -40,6 +42,20 @@ impl Cli {
             help: help.into(),
             default: Some(default.into()),
             is_flag: false,
+            is_multi: false,
+        });
+        self
+    }
+
+    /// Declare a repeatable `--name <value>` (collected in order; empty
+    /// list when absent).  Read with [`Parsed::strs`].
+    pub fn multi(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            is_flag: false,
+            is_multi: true,
         });
         self
     }
@@ -51,6 +67,7 @@ impl Cli {
             help: help.into(),
             default: None,
             is_flag: true,
+            is_multi: false,
         });
         self
     }
@@ -84,7 +101,11 @@ impl Cli {
                         .cloned()
                         .ok_or_else(|| format!("--{key} needs a value"))?
                 };
-                self.values.insert(key, val);
+                if opt.is_multi {
+                    self.lists.entry(key).or_default().push(val);
+                } else {
+                    self.values.insert(key, val);
+                }
             } else {
                 self.positionals.push(a.clone());
             }
@@ -100,6 +121,7 @@ impl Cli {
         }
         Ok(Parsed {
             values: self.values,
+            lists: self.lists,
             positionals: self.positionals,
         })
     }
@@ -112,7 +134,8 @@ impl Cli {
                 .as_ref()
                 .map(|d| format!(" (default: {d})"))
                 .unwrap_or_default();
-            s.push_str(&format!("  --{:<18} {}{}\n", o.name, o.help, d));
+            let rep = if o.is_multi { " (repeatable)" } else { "" };
+            s.push_str(&format!("  --{:<18} {}{}{}\n", o.name, o.help, d, rep));
         }
         s.push_str("  --help               show this help\n");
         s
@@ -123,12 +146,18 @@ impl Cli {
 #[derive(Debug)]
 pub struct Parsed {
     values: BTreeMap<String, String>,
+    lists: BTreeMap<String, Vec<String>>,
     pub positionals: Vec<String>,
 }
 
 impl Parsed {
     pub fn get(&self, name: &str) -> Option<&str> {
         self.values.get(name).map(String::as_str)
+    }
+
+    /// All values of a repeatable option, in command-line order.
+    pub fn strs(&self, name: &str) -> &[String] {
+        self.lists.get(name).map(Vec::as_slice).unwrap_or(&[])
     }
 
     pub fn str(&self, name: &str) -> &str {
@@ -199,6 +228,21 @@ mod tests {
     #[test]
     fn missing_value_errors() {
         let r = Cli::new("t", "t").opt("k", "", "").parse(&argv(&["--k"]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn multi_options_collect_in_order() {
+        let p = Cli::new("t", "test")
+            .multi("artifact", "model artifact")
+            .opt("width", "64", "")
+            .parse(&argv(&["--artifact", "a.nnc", "--width=256", "--artifact=b.nnc"]))
+            .unwrap();
+        assert_eq!(p.strs("artifact"), &["a.nnc".to_string(), "b.nnc".to_string()]);
+        assert_eq!(p.usize("width"), 256);
+        // Absent multi = empty slice, and missing-value still errors.
+        assert!(p.strs("nope").is_empty());
+        let r = Cli::new("t", "t").multi("a", "").parse(&argv(&["--a"]));
         assert!(r.is_err());
     }
 }

@@ -37,6 +37,12 @@ pub trait InferenceEngine: Send + Sync {
     fn preferred_block(&self) -> usize {
         64
     }
+    /// Expected image length, if the engine knows it.  The server rejects
+    /// mismatched requests with an error line instead of a garbage
+    /// prediction (None = unchecked).
+    fn input_dim(&self) -> Option<usize> {
+        None
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -262,6 +268,13 @@ impl<W: BitWord> InferenceEngine for LogicEngine<W> {
     fn preferred_block(&self) -> usize {
         W::LANES
     }
+
+    fn input_dim(&self) -> Option<usize> {
+        match &self.net.arch {
+            Arch::Mlp { sizes } => sizes.first().copied(),
+            Arch::Cnn { .. } => Some(28 * 28),
+        }
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -311,6 +324,13 @@ impl InferenceEngine for ThresholdEngine {
 
     fn param_bytes_per_inference(&self) -> usize {
         self.net.tensors.values().map(|t| t.numel() * 4).sum()
+    }
+
+    fn input_dim(&self) -> Option<usize> {
+        match &self.net.arch {
+            Arch::Mlp { sizes } => sizes.first().copied(),
+            Arch::Cnn { .. } => Some(28 * 28),
+        }
     }
 }
 
@@ -390,6 +410,10 @@ impl InferenceEngine for XlaEngine {
 
     fn preferred_block(&self) -> usize {
         self.batch
+    }
+
+    fn input_dim(&self) -> Option<usize> {
+        Some(self.dim)
     }
 }
 
@@ -653,5 +677,9 @@ impl<W: BitWord> InferenceEngine for CnnLogicEngine<W> {
 
     fn preferred_block(&self) -> usize {
         W::LANES
+    }
+
+    fn input_dim(&self) -> Option<usize> {
+        Some(28 * 28)
     }
 }

@@ -12,7 +12,9 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
-const BUCKETS: usize = 64;
+/// Number of log2 latency buckets (public so callers can merge
+/// histograms from several coordinators — see [`percentile_from_hist`]).
+pub const BUCKETS: usize = 64;
 
 /// Lock-free metrics registry shared by the coordinator's workers.
 pub struct Metrics {
@@ -20,6 +22,8 @@ pub struct Metrics {
     batches: AtomicU64,
     batch_items: AtomicU64,
     infer_us_total: AtomicU64,
+    /// Requests submitted but not yet answered (queue + in execution).
+    in_flight: AtomicU64,
     /// log2-scaled latency histogram: bucket i counts latencies in
     /// [2^i, 2^{i+1}) microseconds.
     latency_hist: [AtomicU64; BUCKETS],
@@ -32,8 +36,24 @@ impl Metrics {
             batches: AtomicU64::new(0),
             batch_items: AtomicU64::new(0),
             infer_us_total: AtomicU64::new(0),
+            in_flight: AtomicU64::new(0),
             latency_hist: std::array::from_fn(|_| AtomicU64::new(0)),
         }
+    }
+
+    /// A request entered the coordinator (called by `submit`).
+    pub fn queue_enter(&self) {
+        self.in_flight.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request was answered (called by the worker after replying).
+    pub fn queue_exit(&self) {
+        self.in_flight.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Requests currently inside the coordinator (queued or executing).
+    pub fn queue_depth(&self) -> u64 {
+        self.in_flight.load(Ordering::Relaxed)
     }
 
     pub fn record_batch(&self, n: usize, infer_us: u64) {
@@ -65,22 +85,16 @@ impl Metrics {
         self.infer_us_total.load(Ordering::Relaxed)
     }
 
+    /// Snapshot of the log-scaled latency histogram, for merging across
+    /// coordinators (one per registry model) before taking percentiles.
+    pub fn latency_histogram(&self) -> [u64; BUCKETS] {
+        std::array::from_fn(|i| self.latency_hist[i].load(Ordering::Relaxed))
+    }
+
     /// Approximate latency percentile from the log histogram (upper bucket
     /// bound, microseconds).
     pub fn latency_percentile_us(&self, p: f64) -> u64 {
-        let total: u64 = self.latency_hist.iter().map(|b| b.load(Ordering::Relaxed)).sum();
-        if total == 0 {
-            return 0;
-        }
-        let target = (total as f64 * p).ceil() as u64;
-        let mut seen = 0u64;
-        for (i, b) in self.latency_hist.iter().enumerate() {
-            seen += b.load(Ordering::Relaxed);
-            if seen >= target {
-                return 1u64 << (i + 1);
-            }
-        }
-        u64::MAX
+        percentile_from_hist(&self.latency_histogram(), p)
     }
 
     /// One-line human summary (blocks = engine-width execution units).
@@ -100,6 +114,26 @@ impl Default for Metrics {
     fn default() -> Self {
         Self::new()
     }
+}
+
+/// Percentile over a (possibly merged) log2 latency histogram: upper
+/// bound of the bucket containing the `p`-quantile, in microseconds.
+pub fn percentile_from_hist(hist: &[u64], p: f64) -> u64 {
+    let total: u64 = hist.iter().sum();
+    if total == 0 {
+        return 0;
+    }
+    let target = (total as f64 * p).ceil() as u64;
+    let mut seen = 0u64;
+    for (i, &b) in hist.iter().enumerate() {
+        seen += b;
+        if seen >= target {
+            // The top bucket's upper bound (2^64) saturates rather than
+            // overflowing the shift.
+            return 1u64.checked_shl(i as u32 + 1).unwrap_or(u64::MAX);
+        }
+    }
+    u64::MAX
 }
 
 #[cfg(test)]
@@ -133,5 +167,34 @@ mod tests {
     fn empty_percentile_is_zero() {
         let m = Metrics::new();
         assert_eq!(m.latency_percentile_us(0.99), 0);
+    }
+
+    #[test]
+    fn queue_depth_gauge() {
+        let m = Metrics::new();
+        assert_eq!(m.queue_depth(), 0);
+        m.queue_enter();
+        m.queue_enter();
+        assert_eq!(m.queue_depth(), 2);
+        m.queue_exit();
+        assert_eq!(m.queue_depth(), 1);
+    }
+
+    #[test]
+    fn merged_histograms_give_global_percentiles() {
+        let (a, b) = (Metrics::new(), Metrics::new());
+        for us in [1u64, 2, 4] {
+            a.record_latency(us);
+        }
+        for us in [1000u64, 1000, 1000] {
+            b.record_latency(us);
+        }
+        let mut hist = a.latency_histogram();
+        for (h, v) in hist.iter_mut().zip(b.latency_histogram()) {
+            *h += v;
+        }
+        assert!(percentile_from_hist(&hist, 0.99) >= 1000);
+        assert!(percentile_from_hist(&hist, 0.25) <= 8);
+        assert_eq!(percentile_from_hist(&[0; BUCKETS], 0.5), 0);
     }
 }

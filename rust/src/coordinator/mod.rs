@@ -83,8 +83,16 @@ struct Block {
 }
 
 /// A handle to a running coordinator.
+///
+/// Dropping the handle is a full graceful shutdown (flag + channel close
+/// + join), so a registry can retire a hot-swapped model by simply
+/// letting the last `Arc` clone go out of scope — whichever thread drops
+/// it last drains and joins the pool.  `shutdown()` is the explicit
+/// spelling of the same thing.
 pub struct Coordinator {
-    tx: SyncSender<Request>,
+    /// `Some` while running; taken on drop so the channel closes and the
+    /// batcher sees `Disconnected` instead of waiting out its poll tick.
+    tx: Option<SyncSender<Request>>,
     pub metrics: Arc<Metrics>,
     shutdown: Arc<AtomicBool>,
     batcher: Option<std::thread::JoinHandle<()>>,
@@ -129,7 +137,7 @@ impl Coordinator {
             );
         }
         Coordinator {
-            tx,
+            tx: Some(tx),
             metrics,
             shutdown,
             batcher: Some(batcher),
@@ -149,9 +157,12 @@ impl Coordinator {
             reply: reply_tx,
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
         };
-        self.tx
-            .send(req)
-            .map_err(|_| format_err!("coordinator stopped"))?;
+        let tx = self.tx.as_ref().ok_or_else(|| format_err!("coordinator stopped"))?;
+        self.metrics.queue_enter();
+        if tx.send(req).is_err() {
+            self.metrics.queue_exit();
+            return Err(format_err!("coordinator stopped"));
+        }
         Ok(reply_rx)
     }
 
@@ -165,10 +176,18 @@ impl Coordinator {
         &self.cfg
     }
 
-    /// Stop accepting work and join the batcher + workers.
-    pub fn shutdown(mut self) {
+    /// Stop accepting work and join the batcher + workers (equivalent to
+    /// dropping the handle; kept for call-site readability).
+    pub fn shutdown(self) {}
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
         self.shutdown.store(true, Ordering::SeqCst);
-        drop(self.tx);
+        // Closing the request channel lets the batcher drain whatever is
+        // buffered and exit on `Disconnected`; the batcher dropping its
+        // block sender then stops the workers.
+        drop(self.tx.take());
         if let Some(b) = self.batcher.take() {
             let _ = b.join();
         }
@@ -231,7 +250,16 @@ fn worker_loop(
         let outputs = engine.infer_batch(&images);
         let infer_us = t0.elapsed().as_micros() as u64;
         metrics.record_batch(n, infer_us);
-        for (req, logits) in block.reqs.into_iter().zip(outputs) {
+        debug_assert_eq!(outputs.len(), n, "engine {} returned wrong output count", engine.name());
+        let mut outputs = outputs.into_iter();
+        for req in block.reqs {
+            // Exit the gauge for every request in the block — including
+            // any left unanswered by a buggy engine that returned too few
+            // outputs (their reply sender drops below, surfacing an error
+            // to the caller) — and before the send, so a caller woken by
+            // recv() already observes the decrement.
+            metrics.queue_exit();
+            let Some(logits) = outputs.next() else { continue };
             let queue_us = req.submitted.elapsed().as_micros() as u64;
             metrics.record_latency(queue_us);
             let class = crate::model::argmax(&logits);
@@ -377,5 +405,13 @@ mod tests {
         let c = Coordinator::start(Arc::new(EchoEngine), CoordinatorConfig::default());
         let _ = c.infer(vec![1.0]).unwrap();
         c.shutdown(); // must not hang
+    }
+
+    #[test]
+    fn drop_is_graceful_shutdown_and_gauge_returns_to_zero() {
+        let c = Coordinator::start(Arc::new(EchoEngine), CoordinatorConfig::default());
+        let _ = c.infer(vec![2.0]).unwrap();
+        assert_eq!(c.metrics.queue_depth(), 0);
+        drop(c); // must join the batcher + workers, not hang or leak
     }
 }

@@ -33,9 +33,15 @@
 //! * [`data`] — SynthDigits dataset loader
 //! * [`coordinator`] — request router + dynamic batcher that shards big
 //!   batches into plane-width blocks across the worker pool
+//! * [`registry`] — multi-model serving: named engine+coordinator
+//!   entries with runtime load/unload and atomic hot-swap
+//! * [`protocol`] — wire protocol v2 codec (request ids, per-request
+//!   model routing, client-side batching, v1-compatible replies)
 //! * [`runtime`] — PJRT client wrapper (HLO text → compiled executable;
 //!   real backend behind the `pjrt` feature, honest stub otherwise)
-//! * [`server`] — TCP JSON-lines front-end
+//! * [`server`] — TCP JSON-lines front-end (a thin codec over
+//!   [`protocol`] + [`registry`]: pipelined out-of-order replies, admin
+//!   surface, joined connection handlers)
 //! * [`cli`], [`jsonio`], [`logging`], [`bench_util`], [`prop`],
 //!   [`util::error`] — offline substrates (no crates.io access in this
 //!   environment, so there are zero external dependencies)
@@ -58,6 +64,8 @@ pub mod model;
 pub mod netlist;
 pub mod pipeline;
 pub mod prop;
+pub mod protocol;
+pub mod registry;
 pub mod runtime;
 pub mod server;
 pub mod synth;

@@ -17,10 +17,10 @@
 use std::sync::Arc;
 
 use nullanet::cli::{Cli, Parsed};
-use nullanet::coordinator::{engine, Coordinator, CoordinatorConfig};
+use nullanet::coordinator::{engine, CoordinatorConfig};
 use nullanet::cost::FpgaModel;
 use nullanet::format_err;
-use nullanet::server::ServerInfo;
+use nullanet::registry::{ModelMeta, ModelRegistry};
 use nullanet::util::error::Result;
 use nullanet::{artifact, bench_util, data, isf, model, synth};
 
@@ -208,21 +208,12 @@ fn build_engine(
 /// about it.
 struct EngineHandle {
     eng: Arc<dyn engine::InferenceEngine>,
-    /// `{"cmd": "info"}` metadata.
-    info: ServerInfo,
+    /// `{"cmd": "info"}` metadata (the registry's per-model entry).
+    meta: ModelMeta,
     /// Display name ("net11" or "net11 (artifact model.nnc)").
     label: String,
     /// Python-side reference accuracy (NaN when unknown).
     ref_accuracy: f64,
-}
-
-/// Expected image length for an architecture (what the server rejects
-/// mismatches against).
-fn input_dim(arch: &model::Arch) -> Option<usize> {
-    match arch {
-        model::Arch::Mlp { sizes } => sizes.first().copied(),
-        model::Arch::Cnn { .. } => Some(28 * 28),
-    }
 }
 
 /// Resolve the serving engine for `eval`/`serve`: `--artifact` loads a
@@ -249,17 +240,18 @@ fn engine_from_cli(p: &Parsed, art: Option<&model::Artifacts>) -> Result<EngineH
             compiled.layers.len(),
             t0.elapsed()
         );
-        let info = ServerInfo {
+        let meta = ModelMeta {
             model: compiled.name.clone(),
             engine: eng.name().to_string(),
             width,
-            input_dim: input_dim(&compiled.arch),
+            input_dim: eng.input_dim(),
             artifact: Some(apath.to_string()),
             artifact_version: Some(artifact::ARTIFACT_VERSION),
+            generation: 0,
         };
         return Ok(EngineHandle {
             eng,
-            info,
+            meta,
             label: format!("{} (artifact {apath})", compiled.name),
             ref_accuracy: compiled.accuracy_test,
         });
@@ -274,17 +266,10 @@ fn engine_from_cli(p: &Parsed, art: Option<&model::Artifacts>) -> Result<EngineH
     };
     let net = art.net(p.str("net"))?;
     let eng = build_engine(art, p.str("net"), p.str("engine"), p.usize("cap"), width)?;
-    let info = ServerInfo {
-        model: net.name.clone(),
-        engine: eng.name().to_string(),
-        width,
-        input_dim: input_dim(&net.arch),
-        artifact: None,
-        artifact_version: None,
-    };
+    let meta = ModelMeta::for_engine(&net.name, eng.as_ref(), width);
     Ok(EngineHandle {
         eng,
-        info,
+        meta,
         label: net.name.clone(),
         ref_accuracy: net.accuracy_test,
     })
@@ -433,32 +418,62 @@ fn run_codegen(args: &[String]) -> Result<()> {
 }
 
 fn run_serve(args: &[String]) -> Result<()> {
-    let p = Cli::new("nullanet serve", "TCP JSON-lines inference server")
-        .opt("net", "net11", "network")
-        .opt("engine", "logic", "logic|threshold|xla")
+    let p = Cli::new("nullanet serve", "TCP JSON-lines multi-model inference server")
+        .opt("net", "net11", "network (synthesis fallback when no --artifact)")
+        .opt("engine", "logic", "logic|threshold|xla (synthesis fallback)")
         .opt("cap", "4000", "ISF pattern cap for logic synthesis")
-        .opt("artifact", "", "serve a compiled .nnc artifact (skips synthesis)")
+        .multi("artifact", "serve a compiled .nnc artifact; repeat to serve several models")
         .opt("addr", "127.0.0.1:7878", "bind address")
-        .opt("workers", "2", "coordinator worker threads")
-        .opt("width", "64", "bit-parallel plane width for the logic engine (64|256|512)")
+        .opt("workers", "2", "coordinator worker threads per model")
+        .opt("width", "64", "bit-parallel plane width for logic engines (64|256|512)")
         .parse(args)
         .map_err(|h| format_err!("{h}"))?;
-    let handle = engine_from_cli(&p, None)?;
-    nullanet::info!("engine {} ready", handle.eng.name());
-    let coord = Arc::new(Coordinator::start(
-        handle.eng,
-        CoordinatorConfig {
-            workers: p.usize("workers").max(1),
-            ..Default::default()
-        },
-    ));
-    let server = nullanet::server::Server::start(p.str("addr"), Arc::clone(&coord), handle.info)?;
-    println!("listening on {} — protocol: one JSON object per line", server.addr);
+    let width = p.usize("width");
+    let cfg = CoordinatorConfig {
+        workers: p.usize("workers").max(1),
+        ..Default::default()
+    };
+    let registry = Arc::new(ModelRegistry::new(cfg, width));
+    let artifacts = p.strs("artifact");
+    if artifacts.is_empty() {
+        // No artifacts: synthesize one engine (Algorithm 2) and serve it
+        // as the sole (default) model.
+        let handle = engine_from_cli(&p, None)?;
+        nullanet::info!("engine {} ready", handle.eng.name());
+        registry.register(handle.meta, handle.eng)?;
+    } else {
+        if p.str("engine") != "logic" {
+            return Err(format_err!(
+                "--artifact always serves the compiled logic engine; drop --engine {}",
+                p.str("engine")
+            ));
+        }
+        for apath in artifacts {
+            let t0 = std::time::Instant::now();
+            let name = registry.load_artifact(None, apath, Some(width))?;
+            nullanet::info!("loaded {apath} as model {name} in {:.1?}", t0.elapsed());
+        }
+    }
+    let server = nullanet::server::Server::start(p.str("addr"), Arc::clone(&registry))?;
+    let (entries, default) = registry.list();
     println!(
-        "  {{\"image\": [f32; 784]}} | {{\"cmd\": \"metrics\"}} | {{\"cmd\": \"info\"}} | {{\"cmd\": \"ping\"}}"
+        "listening on {} — wire protocol v2, one JSON object per line, {} model(s), default {}",
+        server.addr,
+        entries.len(),
+        default.as_deref().unwrap_or("-")
+    );
+    println!(
+        "  {{\"image\": [...]}} | {{\"id\": 1, \"model\": \"m\", \"images\": [[...], ...]}} | \
+         {{\"cmd\": \"info\"|\"metrics\"|\"list\"|\"ping\"}}"
+    );
+    println!(
+        "  admin: {{\"cmd\": \"load\"|\"swap\", \"name\": \"m\", \"artifact\": \"m.nnc\"}} | \
+         {{\"cmd\": \"unload\", \"name\": \"m\"}}"
     );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(5));
-        nullanet::info!("{}", coord.metrics.summary());
+        for e in registry.list().0 {
+            nullanet::info!("{}: {}", e.meta.model, e.coordinator.metrics.summary());
+        }
     }
 }

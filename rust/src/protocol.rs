@@ -1,0 +1,338 @@
+//! Wire protocol v2: the request/reply codec for the TCP JSON-lines
+//! server.
+//!
+//! One JSON object per line in both directions.  Requests:
+//!
+//! ```text
+//! {"image":  [f32; D]}                      single inference (v1 shape)
+//! {"images": [[f32; D], ...]}               client-side batch, one line
+//! {"cmd": "ping"|"info"|"metrics"|"list"
+//!        |"load"|"unload"|"swap", ...}      commands / admin surface
+//! ```
+//!
+//! Every request may additionally carry
+//!
+//! * `"id"` — a number or string echoed in the reply, enabling request
+//!   pipelining: a connection may send many id-tagged requests without
+//!   waiting, and replies arrive *as they complete*, possibly out of
+//!   order, each reassembled to its request by `"id"`.  (Numeric ids
+//!   ride through IEEE doubles; use string ids beyond 2^53.)
+//! * `"model"` — the registry name to serve the request with; absent
+//!   means the registry's default model.
+//!
+//! v1 compatibility: a request without `"id"` is answered in submission
+//! order against the default model.  Inference, `ping`, and error
+//! replies are byte-identical to protocol v1 (no `"id"` key, same field
+//! set, same error strings) — `tests/protocol_compat.rs` replays a
+//! recorded v1 session to hold this.  `info` and `metrics` replies are
+//! v1 *supersets*: every v1 key is still present with its v1 meaning,
+//! plus the new per-model/registry fields (`generation`, `default`,
+//! `protocol`; `p90_us`, `infer_us`, `queue_depth`, `models`).
+//!
+//! This module is pure codec — parsing into [`WireRequest`] and encoding
+//! replies.  Execution (registry lookups, coordinator submission, admin
+//! mutation) lives in [`crate::server`]; model state in
+//! [`crate::registry`].
+
+use crate::coordinator::Response;
+use crate::format_err;
+use crate::jsonio::{num, obj, Json};
+use crate::util::error::Result;
+
+/// Wire protocol version reported by `{"cmd":"info"}`.
+pub const PROTOCOL_VERSION: u32 = 2;
+
+/// A parsed inference request (either the `"image"` or `"images"` form).
+#[derive(Clone, Debug)]
+pub struct InferRequest {
+    /// Echoed in the reply when present (number or string).  Numeric ids
+    /// are IEEE doubles end to end, so integers above 2^53 lose
+    /// precision — clients with 64-bit sequence numbers should send
+    /// string ids.
+    pub id: Option<Json>,
+    /// Registry model name; None = default model.
+    pub model: Option<String>,
+    /// One image per entry; the `"image"` form yields exactly one.
+    pub images: Vec<Vec<f32>>,
+    /// True for the `"images"` (client-side batch) form — the reply is
+    /// then a `"results"` array rather than a bare response object.
+    pub batched: bool,
+}
+
+/// A parsed command request.
+#[derive(Clone, Debug)]
+pub struct CmdRequest {
+    pub id: Option<Json>,
+    /// Model scope for `info`/`metrics`; None = default/aggregate.
+    pub model: Option<String>,
+    pub cmd: Cmd,
+}
+
+/// The command set: v1 commands plus the registry admin surface.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Cmd {
+    Ping,
+    Info,
+    Metrics,
+    List,
+    Load { name: Option<String>, artifact: String, width: Option<usize> },
+    Unload { name: String },
+    Swap { name: String, artifact: String, width: Option<usize> },
+}
+
+/// Any well-formed request line.
+#[derive(Clone, Debug)]
+pub enum WireRequest {
+    Infer(InferRequest),
+    Cmd(CmdRequest),
+}
+
+/// Parse one request line.  Error messages on the v1 shapes are kept
+/// byte-identical to protocol v1.
+pub fn parse_request(line: &str) -> Result<WireRequest> {
+    let j = Json::parse(line).map_err(|e| format_err!("bad json: {e}"))?;
+    let id = match j.get("id") {
+        None => None,
+        Some(v @ (Json::Num(_) | Json::Str(_))) => Some(v.clone()),
+        Some(_) => return Err(format_err!("id must be a number or string")),
+    };
+    let model = match j.get("model") {
+        None => None,
+        Some(Json::Str(s)) => Some(s.clone()),
+        Some(_) => return Err(format_err!("model must be a string")),
+    };
+    // v1 semantics: "cmd" is a command only when it is a string; any
+    // other type falls through to the image path exactly as v1 did.
+    if let Some(cmd) = j.get("cmd").and_then(Json::as_str) {
+        let cmd = parse_cmd(cmd, &j)?;
+        return Ok(WireRequest::Cmd(CmdRequest { id, model, cmd }));
+    }
+    if let Some(imgs) = j.get("images") {
+        let imgs = imgs
+            .as_arr()
+            .ok_or_else(|| format_err!("images must be an array of arrays of numbers"))?;
+        let mut images = Vec::with_capacity(imgs.len());
+        for (i, img) in imgs.iter().enumerate() {
+            let arr = img
+                .as_arr()
+                .ok_or_else(|| format_err!("images[{i}] must be an array of numbers"))?;
+            images.push(numbers(arr).ok_or_else(|| {
+                format_err!("images[{i}] must be an array of numbers")
+            })?);
+        }
+        if images.is_empty() {
+            return Err(format_err!("images must not be empty"));
+        }
+        return Ok(WireRequest::Infer(InferRequest { id, model, images, batched: true }));
+    }
+    let img = j
+        .get("image")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format_err!("missing image (or unknown request shape)"))?;
+    let image =
+        numbers(img).ok_or_else(|| format_err!("image must be an array of numbers"))?;
+    Ok(WireRequest::Infer(InferRequest {
+        id,
+        model,
+        images: vec![image],
+        batched: false,
+    }))
+}
+
+fn numbers(arr: &[Json]) -> Option<Vec<f32>> {
+    let mut out = Vec::with_capacity(arr.len());
+    for v in arr {
+        out.push(v.as_f64()? as f32);
+    }
+    Some(out)
+}
+
+fn parse_cmd(cmd: &str, j: &Json) -> Result<Cmd> {
+    let name = |j: &Json| j.get("name").and_then(Json::as_str).map(str::to_string);
+    let artifact = |j: &Json, cmd: &str| {
+        j.get("artifact")
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| format_err!("{cmd} needs an \"artifact\" path"))
+    };
+    let width = |j: &Json| j.get("width").and_then(Json::as_usize);
+    Ok(match cmd {
+        "ping" => Cmd::Ping,
+        "info" => Cmd::Info,
+        "metrics" => Cmd::Metrics,
+        "list" => Cmd::List,
+        "load" => Cmd::Load { name: name(j), artifact: artifact(j, "load")?, width: width(j) },
+        "unload" => Cmd::Unload {
+            name: name(j).ok_or_else(|| format_err!("unload needs a \"name\""))?,
+        },
+        "swap" => Cmd::Swap {
+            name: name(j).ok_or_else(|| format_err!("swap needs a \"name\""))?,
+            artifact: artifact(j, "swap")?,
+            width: width(j),
+        },
+        other => return Err(format_err!("unknown cmd {other}")),
+    })
+}
+
+// ---------------------------------------------------------------------
+// Reply encoding
+// ---------------------------------------------------------------------
+
+/// Attach the echoed request id to a reply object (no-op without id, so
+/// v1 replies stay byte-identical).
+pub fn with_id(reply: Json, id: Option<&Json>) -> Json {
+    match (reply, id) {
+        (Json::Obj(mut m), Some(id)) => {
+            m.insert("id".to_string(), id.clone());
+            Json::Obj(m)
+        }
+        (r, _) => r,
+    }
+}
+
+/// The v1 response object: `{"batch":…,"class":…,"logits":…,"queue_us":…}`.
+fn response_obj(r: &Response) -> Json {
+    obj(vec![
+        ("class", num(r.class as f64)),
+        ("logits", Json::Arr(r.logits.iter().map(|&l| num(l as f64)).collect())),
+        ("queue_us", num(r.queue_us as f64)),
+        ("batch", num(r.batch_size as f64)),
+    ])
+}
+
+/// Reply to a single-image inference.
+pub fn infer_reply(id: Option<&Json>, r: &Response) -> Json {
+    with_id(response_obj(r), id)
+}
+
+/// Reply to an `"images"` batch: per-image response objects in request
+/// order under `"results"`.
+pub fn batch_reply(id: Option<&Json>, rs: &[Response]) -> Json {
+    with_id(
+        obj(vec![("results", Json::Arr(rs.iter().map(response_obj).collect()))]),
+        id,
+    )
+}
+
+/// Error line; echoes the id when the request carried one.
+pub fn error_reply(id: Option<&Json>, msg: &str) -> Json {
+    with_id(obj(vec![("error", Json::Str(msg.to_string()))]), id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(line: &str) -> WireRequest {
+        parse_request(line).unwrap()
+    }
+
+    #[test]
+    fn v1_image_shape_parses_without_id() {
+        let WireRequest::Infer(r) = parse(r#"{"image": [1.0, 2.5]}"#) else {
+            panic!("not infer")
+        };
+        assert!(r.id.is_none() && r.model.is_none() && !r.batched);
+        assert_eq!(r.images, vec![vec![1.0, 2.5]]);
+    }
+
+    #[test]
+    fn v2_image_carries_id_and_model() {
+        let WireRequest::Infer(r) =
+            parse(r#"{"id": 7, "model": "net21", "image": [0.0]}"#)
+        else {
+            panic!("not infer")
+        };
+        assert_eq!(r.id, Some(Json::Num(7.0)));
+        assert_eq!(r.model.as_deref(), Some("net21"));
+    }
+
+    #[test]
+    fn images_batch_form() {
+        let WireRequest::Infer(r) =
+            parse(r#"{"id": "a", "images": [[1.0], [2.0], [3.0]]}"#)
+        else {
+            panic!("not infer")
+        };
+        assert!(r.batched);
+        assert_eq!(r.images.len(), 3);
+        assert!(parse_request(r#"{"images": []}"#).is_err());
+        assert!(parse_request(r#"{"images": [[1.0], "x"]}"#).is_err());
+    }
+
+    #[test]
+    fn v1_error_strings_are_preserved() {
+        let e = parse_request("not json").unwrap_err().to_string();
+        assert!(e.starts_with("bad json: "), "{e}");
+        let e = parse_request(r#"{"cmd": "bogus"}"#).unwrap_err().to_string();
+        assert_eq!(e, "unknown cmd bogus");
+        let e = parse_request(r#"{"x": 1}"#).unwrap_err().to_string();
+        assert_eq!(e, "missing image (or unknown request shape)");
+        let e = parse_request(r#"{"image": [1.0, "x"]}"#).unwrap_err().to_string();
+        assert_eq!(e, "image must be an array of numbers");
+    }
+
+    #[test]
+    fn bad_id_and_model_rejected() {
+        assert!(parse_request(r#"{"id": [1], "image": [1.0]}"#).is_err());
+        assert!(parse_request(r#"{"model": 3, "image": [1.0]}"#).is_err());
+        // String ids are fine.
+        assert!(parse_request(r#"{"id": "req-1", "image": [1.0]}"#).is_ok());
+    }
+
+    #[test]
+    fn admin_cmds_parse() {
+        let WireRequest::Cmd(c) =
+            parse(r#"{"cmd": "load", "artifact": "m.nnc", "name": "m", "width": 256}"#)
+        else {
+            panic!("not cmd")
+        };
+        assert_eq!(
+            c.cmd,
+            Cmd::Load {
+                name: Some("m".into()),
+                artifact: "m.nnc".into(),
+                width: Some(256)
+            }
+        );
+        assert!(parse_request(r#"{"cmd": "swap", "name": "m"}"#).is_err());
+        assert!(parse_request(r#"{"cmd": "unload"}"#).is_err());
+        let WireRequest::Cmd(c) = parse(r#"{"cmd": "list", "id": 1}"#) else {
+            panic!("not cmd")
+        };
+        assert_eq!(c.cmd, Cmd::List);
+        assert_eq!(c.id, Some(Json::Num(1.0)));
+    }
+
+    #[test]
+    fn reply_encoding_id_echo_and_v1_bytes() {
+        let r = Response {
+            id: 0,
+            class: 5,
+            logits: vec![0.0, 1.0],
+            queue_us: 12,
+            batch_size: 1,
+        };
+        // v1 (no id): exact key set, sorted by BTreeMap.
+        assert_eq!(
+            infer_reply(None, &r).to_string(),
+            r#"{"batch":1,"class":5,"logits":[0,1],"queue_us":12}"#
+        );
+        // v2: id echoed verbatim (string and number).
+        assert_eq!(
+            infer_reply(Some(&Json::Str("a".into())), &r).to_string(),
+            r#"{"batch":1,"class":5,"id":"a","logits":[0,1],"queue_us":12}"#
+        );
+        let b = batch_reply(Some(&Json::Num(3.0)), &[r.clone(), r]);
+        let s = b.to_string();
+        assert!(s.starts_with(r#"{"id":3,"results":["#), "{s}");
+        assert_eq!(
+            error_reply(None, "boom").to_string(),
+            r#"{"error":"boom"}"#
+        );
+        assert_eq!(
+            error_reply(Some(&Json::Num(9.0)), "boom").to_string(),
+            r#"{"error":"boom","id":9}"#
+        );
+    }
+}

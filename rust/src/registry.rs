@@ -1,0 +1,432 @@
+//! Multi-model serving: a registry of named `(engine, coordinator,
+//! meta)` entries with runtime load/unload and atomic hot-swap.
+//!
+//! A compiled NullaNet model is tiny — the hidden layers carry no
+//! parameter memory at all — so the natural deployment shape is *many*
+//! resident models behind one process (the EIE play: keep everything
+//! compiled and resident, route per request).  The registry owns that
+//! shape; the server is a codec in front of it and the CLI just decides
+//! what to preload.
+//!
+//! Concurrency model (the hot-swap ordering guarantee):
+//!
+//! 1. Request threads resolve a name to an `Arc<ModelEntry>` under a
+//!    read lock and then *hold that Arc* for the request's lifetime.
+//! 2. `swap` builds the replacement entry completely (artifact load,
+//!    digest checks, engine construction, coordinator start) *before*
+//!    taking the write lock; the critical section is a map insert.
+//! 3. The displaced entry is dropped outside the lock.  In-flight
+//!    requests still hold Arcs to it, so its coordinator keeps serving
+//!    them; when the last Arc drops, [`Coordinator`]'s `Drop` drains and
+//!    joins the old pool.  No request ever fails because of a swap, and
+//!    no thread ever blocks on a draining model while holding the
+//!    registry lock.
+//!
+//! Requests that resolved before the swap complete against the old
+//! engine; requests that resolve after see the new one — there is no
+//! intermediate state where the name is missing.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::artifact::{self, CompiledModel};
+use crate::coordinator::engine::{engine_from_artifact, InferenceEngine};
+use crate::coordinator::{Coordinator, CoordinatorConfig};
+use crate::jsonio::{num, obj, Json};
+use crate::util::error::Result;
+use crate::{bail, format_err};
+
+/// Per-model serving metadata, reported by `{"cmd":"info"}` and
+/// `{"cmd":"list"}` (the per-entry replacement for the old server-global
+/// `ServerInfo`).
+#[derive(Clone, Debug, Default)]
+pub struct ModelMeta {
+    /// Registry name (what requests put in `"model"`).
+    pub model: String,
+    pub engine: String,
+    pub width: usize,
+    /// Expected image length; mismatched requests get an error reply.
+    pub input_dim: Option<usize>,
+    /// Path of the `.nnc` artifact when loaded from one.
+    pub artifact: Option<String>,
+    pub artifact_version: Option<u32>,
+    /// Bumped on every load/swap of this name; lets clients observe
+    /// which incarnation answered.
+    pub generation: u64,
+}
+
+impl ModelMeta {
+    /// Derive metadata from an engine (name, dims) — the common path for
+    /// directly registered engines.
+    pub fn for_engine(model: &str, eng: &dyn InferenceEngine, width: usize) -> ModelMeta {
+        ModelMeta {
+            model: model.to_string(),
+            engine: eng.name().to_string(),
+            width,
+            input_dim: eng.input_dim(),
+            artifact: None,
+            artifact_version: None,
+            generation: 0,
+        }
+    }
+
+    /// The `{"cmd":"info"}` shape (v1 fields plus `generation`,
+    /// `default`, `protocol`).
+    pub fn to_json(&self, is_default: bool) -> Json {
+        let source = if self.artifact.is_some() { "artifact" } else { "synthesized" };
+        let mut pairs = vec![
+            ("model", Json::Str(self.model.clone())),
+            ("engine", Json::Str(self.engine.clone())),
+            ("width", num(self.width as f64)),
+            ("source", Json::Str(source.to_string())),
+            ("generation", num(self.generation as f64)),
+            ("default", Json::Bool(is_default)),
+            ("protocol", num(crate::protocol::PROTOCOL_VERSION as f64)),
+        ];
+        if let Some(d) = self.input_dim {
+            pairs.push(("input_dim", num(d as f64)));
+        }
+        if let Some(path) = &self.artifact {
+            pairs.push(("artifact", Json::Str(path.clone())));
+        }
+        if let Some(v) = self.artifact_version {
+            pairs.push(("artifact_version", num(v as f64)));
+        }
+        obj(pairs)
+    }
+}
+
+/// One resident model: metadata plus its running coordinator (engine
+/// behind it).  Dropping the entry drains and joins the coordinator.
+pub struct ModelEntry {
+    pub meta: ModelMeta,
+    pub coordinator: Coordinator,
+}
+
+struct Inner {
+    models: BTreeMap<String, Arc<ModelEntry>>,
+    /// The model serving v1 requests (no `"model"` field).  First
+    /// registered wins; re-pointed when that model is unloaded.
+    default: Option<String>,
+}
+
+/// The registry: N named models, one coordinator each.
+pub struct ModelRegistry {
+    inner: RwLock<Inner>,
+    /// Coordinator configuration applied to every model's pool.
+    cfg: CoordinatorConfig,
+    /// Plane width used when a load/swap command doesn't specify one.
+    default_width: usize,
+    generation: AtomicU64,
+}
+
+impl ModelRegistry {
+    pub fn new(cfg: CoordinatorConfig, default_width: usize) -> ModelRegistry {
+        ModelRegistry {
+            inner: RwLock::new(Inner { models: BTreeMap::new(), default: None }),
+            cfg,
+            default_width,
+            generation: AtomicU64::new(0),
+        }
+    }
+
+    fn next_generation(&self) -> u64 {
+        self.generation.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Register an engine under `meta.model`.  Errors if the name is
+    /// already taken (use [`swap_artifact`](Self::swap_artifact) to
+    /// replace a live model).
+    pub fn register(&self, mut meta: ModelMeta, eng: Arc<dyn InferenceEngine>) -> Result<()> {
+        meta.generation = self.next_generation();
+        let name = meta.model.clone();
+        let entry =
+            Arc::new(ModelEntry { meta, coordinator: Coordinator::start(eng, self.cfg.clone()) });
+        let mut inner = self.inner.write().unwrap();
+        if inner.models.contains_key(&name) {
+            // Release the lock first: bailing drops `entry`, which joins
+            // its just-started coordinator — never do that under the lock.
+            drop(inner);
+            drop(entry);
+            bail!("model {name} already loaded (use swap to replace it)");
+        }
+        if inner.default.is_none() {
+            inner.default = Some(name.clone());
+        }
+        inner.models.insert(name, entry);
+        Ok(())
+    }
+
+    /// Load a `.nnc` artifact and register it.  `name` defaults to the
+    /// compiled model's own name; `width` to the registry default.
+    /// Returns the registry name it was stored under.
+    pub fn load_artifact(
+        &self,
+        name: Option<&str>,
+        path: &str,
+        width: Option<usize>,
+    ) -> Result<String> {
+        let (meta, eng) = self.build_from_artifact(name, path, width)?;
+        let stored = meta.model.clone();
+        self.register(meta, eng)?;
+        Ok(stored)
+    }
+
+    /// Atomic hot-swap: load the artifact at `path`, then replace the
+    /// live entry named `name` in one map write.  In-flight requests on
+    /// the old entry complete against the old engine (they hold its
+    /// Arc); the old coordinator drains and joins when the last holder
+    /// finishes.  Returns the new generation.
+    pub fn swap_artifact(&self, name: &str, path: &str, width: Option<usize>) -> Result<u64> {
+        let (mut meta, eng) = self.build_from_artifact(Some(name), path, width)?;
+        // The generation is stamped after the (slow) build, so it orders
+        // swaps by completion; `register` stamps the load path the same
+        // way.
+        meta.generation = self.next_generation();
+        let generation = meta.generation;
+        let entry =
+            Arc::new(ModelEntry { meta, coordinator: Coordinator::start(eng, self.cfg.clone()) });
+        let displaced = {
+            let mut inner = self.inner.write().unwrap();
+            let current = inner.models.get(name).map(|e| e.meta.generation);
+            match current {
+                None => {
+                    drop(inner);
+                    // The fully built replacement (and its coordinator) is
+                    // dropped here — joining it must not happen under the
+                    // lock.
+                    drop(entry);
+                    bail!("model {name} not loaded (use load)");
+                }
+                // Two concurrent swaps race: only the newer generation may
+                // land, so the counter clients observe never goes backwards.
+                Some(live) if live > generation => {
+                    drop(inner);
+                    drop(entry);
+                    bail!(
+                        "model {name} was concurrently swapped to a newer \
+                         generation ({live} > {generation}); retry if intended"
+                    );
+                }
+                Some(_) => inner.models.insert(name.to_string(), entry),
+            }
+        };
+        // Dropped outside the lock: if we are the last holder this joins
+        // the old coordinator's threads.
+        drop(displaced);
+        Ok(generation)
+    }
+
+    /// Remove a model.  Its coordinator drains once in-flight holders
+    /// finish.  The default model is re-pointed to the alphabetically
+    /// first survivor (or None).
+    pub fn unload(&self, name: &str) -> Result<()> {
+        let removed = {
+            let mut inner = self.inner.write().unwrap();
+            let removed = inner
+                .models
+                .remove(name)
+                .ok_or_else(|| format_err!("unknown model {name}"))?;
+            if inner.default.as_deref() == Some(name) {
+                inner.default = inner.models.keys().next().cloned();
+            }
+            removed
+        };
+        drop(removed); // outside the lock, as in swap
+        Ok(())
+    }
+
+    /// Resolve a request's model: `Some(name)` looks up that name, None
+    /// the default model.
+    pub fn get(&self, model: Option<&str>) -> Result<Arc<ModelEntry>> {
+        let inner = self.inner.read().unwrap();
+        match model {
+            Some(name) => inner
+                .models
+                .get(name)
+                .cloned()
+                .ok_or_else(|| format_err!("unknown model {name}")),
+            None => {
+                let name = inner
+                    .default
+                    .as_deref()
+                    .ok_or_else(|| format_err!("no models loaded"))?;
+                inner
+                    .models
+                    .get(name)
+                    .cloned()
+                    .ok_or_else(|| format_err!("no models loaded"))
+            }
+        }
+    }
+
+    /// All live entries (name order) plus the default model's name.
+    pub fn list(&self) -> (Vec<Arc<ModelEntry>>, Option<String>) {
+        let inner = self.inner.read().unwrap();
+        (inner.models.values().cloned().collect(), inner.default.clone())
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.read().unwrap().models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn build_from_artifact(
+        &self,
+        name: Option<&str>,
+        path: &str,
+        width: Option<usize>,
+    ) -> Result<(ModelMeta, Arc<dyn InferenceEngine>)> {
+        let width = width.unwrap_or(self.default_width);
+        let compiled = CompiledModel::load(std::path::Path::new(path))?;
+        let eng = engine_from_artifact(&compiled, width)?;
+        let model = name.unwrap_or(&compiled.name);
+        let meta = ModelMeta {
+            model: model.to_string(),
+            engine: eng.name().to_string(),
+            width,
+            input_dim: eng.input_dim(),
+            artifact: Some(path.to_string()),
+            artifact_version: Some(artifact::ARTIFACT_VERSION),
+            // The caller stamps the generation: `register` (load path) or
+            // `swap_artifact` — never both.
+            generation: 0,
+        };
+        Ok((meta, eng))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Engine whose every logit vector is one-hot at `class`.
+    struct ConstEngine(usize);
+
+    impl InferenceEngine for ConstEngine {
+        fn infer_batch(&self, images: &[&[f32]]) -> Vec<Vec<f32>> {
+            images
+                .iter()
+                .map(|_| {
+                    let mut l = vec![0.0; 10];
+                    l[self.0] = 1.0;
+                    l
+                })
+                .collect()
+        }
+        fn name(&self) -> &str {
+            "const"
+        }
+    }
+
+    fn registry() -> ModelRegistry {
+        ModelRegistry::new(CoordinatorConfig { workers: 1, ..Default::default() }, 64)
+    }
+
+    fn add(reg: &ModelRegistry, name: &str, class: usize) {
+        let eng = Arc::new(ConstEngine(class));
+        let meta = ModelMeta::for_engine(name, eng.as_ref(), 64);
+        reg.register(meta, eng).unwrap();
+    }
+
+    #[test]
+    fn register_get_and_default_routing() {
+        let reg = registry();
+        assert!(reg.get(None).is_err(), "empty registry must error");
+        add(&reg, "a", 3);
+        add(&reg, "b", 7);
+        assert_eq!(reg.len(), 2);
+        // Default = first registered.
+        let r = reg.get(None).unwrap().coordinator.infer(vec![0.0]).unwrap();
+        assert_eq!(r.class, 3);
+        let r = reg.get(Some("b")).unwrap().coordinator.infer(vec![0.0]).unwrap();
+        assert_eq!(r.class, 7);
+        assert!(reg.get(Some("zzz")).is_err());
+        // Generations are distinct and rising.
+        let (entries, default) = reg.list();
+        assert_eq!(default.as_deref(), Some("a"));
+        assert!(entries[0].meta.generation != entries[1].meta.generation);
+    }
+
+    #[test]
+    fn duplicate_register_is_rejected() {
+        let reg = registry();
+        add(&reg, "a", 1);
+        let eng = Arc::new(ConstEngine(2));
+        let meta = ModelMeta::for_engine("a", eng.as_ref(), 64);
+        let err = reg.register(meta, eng).unwrap_err().to_string();
+        assert!(err.contains("already loaded"), "{err}");
+        // The survivor is the original.
+        let r = reg.get(Some("a")).unwrap().coordinator.infer(vec![0.0]).unwrap();
+        assert_eq!(r.class, 1);
+    }
+
+    #[test]
+    fn unload_repoints_default_and_drains() {
+        let reg = registry();
+        add(&reg, "a", 1);
+        add(&reg, "b", 2);
+        // Hold an Arc across the unload: the entry must keep serving.
+        let held = reg.get(Some("a")).unwrap();
+        reg.unload("a").unwrap();
+        assert_eq!(reg.len(), 1);
+        assert!(reg.get(Some("a")).is_err());
+        // Default re-pointed to the survivor.
+        let r = reg.get(None).unwrap().coordinator.infer(vec![0.0]).unwrap();
+        assert_eq!(r.class, 2);
+        // The held Arc still answers (drain semantics).
+        assert_eq!(held.coordinator.infer(vec![0.0]).unwrap().class, 1);
+        drop(held); // joins the retired coordinator here
+        assert!(reg.unload("a").is_err(), "double unload must error");
+    }
+
+    #[test]
+    fn in_flight_requests_survive_entry_replacement() {
+        // Direct-register variant of the hot-swap drain guarantee (the
+        // artifact-file path is covered by tests/serve_smoke.rs).
+        let reg = registry();
+        add(&reg, "m", 4);
+        let old = reg.get(Some("m")).unwrap();
+        reg.unload("m").unwrap();
+        add(&reg, "m", 9);
+        // Old holder: old engine. New resolution: new engine.
+        assert_eq!(old.coordinator.infer(vec![0.0]).unwrap().class, 4);
+        assert_eq!(
+            reg.get(Some("m")).unwrap().coordinator.infer(vec![0.0]).unwrap().class,
+            9
+        );
+    }
+
+    #[test]
+    fn meta_json_reports_per_model_fields() {
+        let eng = ConstEngine(0);
+        let meta = ModelMeta {
+            model: "net11".into(),
+            engine: eng.name().into(),
+            width: 256,
+            input_dim: Some(784),
+            artifact: Some("m.nnc".into()),
+            artifact_version: Some(1),
+            generation: 5,
+        };
+        let j = meta.to_json(true);
+        assert_eq!(j.get("model").and_then(Json::as_str), Some("net11"));
+        assert_eq!(j.get("width").and_then(Json::as_usize), Some(256));
+        assert_eq!(j.get("source").and_then(Json::as_str), Some("artifact"));
+        assert_eq!(j.get("generation").and_then(Json::as_usize), Some(5));
+        assert_eq!(j.get("default").and_then(Json::as_bool), Some(true));
+        assert_eq!(j.get("input_dim").and_then(Json::as_usize), Some(784));
+        assert_eq!(j.get("artifact_version").and_then(Json::as_usize), Some(1));
+    }
+
+    #[test]
+    fn load_artifact_missing_file_errors() {
+        let reg = registry();
+        assert!(reg.load_artifact(None, "/nonexistent/x.nnc", None).is_err());
+        assert!(reg.swap_artifact("m", "/nonexistent/x.nnc", None).is_err());
+    }
+}

@@ -1,64 +1,70 @@
-//! TCP JSON-lines front-end over the coordinator.
+//! TCP JSON-lines front-end: a thin codec over [`crate::protocol`]
+//! (wire format) and [`crate::registry`] (model state).
 //!
-//! Protocol: one JSON object per line.
-//!   request:  {"image": [f32; 784]}            -> inference
-//!             {"cmd": "metrics"}               -> metrics snapshot
-//!             {"cmd": "info"}                  -> model/artifact/engine metadata
-//!             {"cmd": "ping"}                  -> {"ok": true}
-//!   response: {"class": c, "logits": [...], "queue_us": q, "batch": b}
+//! Per connection:
 //!
-//! Malformed requests and unknown commands get an {"error": "..."} line
-//! back (the connection stays open) rather than a silent drop.
+//! * a **reader** (the connection handler thread) parses request lines;
+//! * a **writer thread** owns the socket's write half behind an mpsc
+//!   channel, so replies from any thread serialize without interleaving;
+//! * id-tagged inference requests are answered by per-request **waiter
+//!   threads** that forward the coordinator's response to the writer as
+//!   it completes — a pipelined connection receives replies possibly out
+//!   of order, reassembled by `"id"`;
+//! * requests *without* an id (protocol v1) are answered inline by the
+//!   reader, preserving v1's strict request/reply ordering byte for byte;
+//! * commands (`"cmd"`) are always answered inline in request order, id
+//!   or not — deliberately, so a connection that sends `load`/`swap`
+//!   followed by an inference observes the admin action happen first.
+//!   Out-of-order completion is an inference-path property.
+//!
+//! Lifecycle: the accept loop blocks in `accept()` (no polling);
+//! `shutdown()` wakes it with a self-connect, closes every live
+//! connection, and joins all handler threads — nothing is left detached.
 //!
 //! std::net + a thread per connection (tokio is unavailable offline; the
-//! engine is CPU-bound anyway, so the coordinator's worker pool is the
-//! real concurrency limit).
+//! engine is CPU-bound anyway, so each model's worker pool is the real
+//! concurrency limit).  The connection set is bounded: beyond
+//! `max_conns` live connections, new ones get one error line and are
+//! closed.
 
-use crate::format_err;
-use crate::util::error::Result;
+use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
 
-use crate::coordinator::Coordinator;
+use crate::coordinator::metrics::{percentile_from_hist, BUCKETS};
 use crate::jsonio::{num, obj, Json};
+use crate::protocol::{self, Cmd, CmdRequest, InferRequest, WireRequest};
+use crate::registry::{ModelEntry, ModelRegistry};
+use crate::util::error::Result;
 
-/// Static serving metadata reported by `{"cmd": "info"}`: which model is
-/// loaded, from what source (compiled artifact vs in-process synthesis),
-/// and at what plane width.
-#[derive(Clone, Debug, Default)]
-pub struct ServerInfo {
-    pub model: String,
-    pub engine: String,
-    pub width: usize,
-    /// Expected image length; requests with a different length get an
-    /// error reply instead of a garbage prediction (None = unchecked).
-    pub input_dim: Option<usize>,
-    /// Path of the `.nnc` artifact when the engine was loaded from one.
-    pub artifact: Option<String>,
-    pub artifact_version: Option<u32>,
+/// Default cap on simultaneously live connections.
+pub const DEFAULT_MAX_CONNS: usize = 1024;
+
+/// Tracked per-connection state: the stream (for shutdown) and the
+/// handler's join handle.
+struct ConnTable {
+    next_id: u64,
+    live: BTreeMap<u64, TcpStream>,
+    handles: Vec<(u64, JoinHandle<()>)>,
 }
 
-impl ServerInfo {
-    fn to_json(&self) -> Json {
-        let source = if self.artifact.is_some() { "artifact" } else { "synthesized" };
-        let mut pairs = vec![
-            ("model", Json::Str(self.model.clone())),
-            ("engine", Json::Str(self.engine.clone())),
-            ("width", num(self.width as f64)),
-            ("source", Json::Str(source.to_string())),
-        ];
-        if let Some(d) = self.input_dim {
-            pairs.push(("input_dim", num(d as f64)));
+impl ConnTable {
+    /// Join handlers that have already finished (their streams are gone
+    /// from `live`), keeping the table bounded on long-lived servers.
+    fn reap(&mut self) {
+        let mut keep = Vec::with_capacity(self.handles.len());
+        for (id, h) in self.handles.drain(..) {
+            if h.is_finished() {
+                let _ = h.join();
+            } else {
+                keep.push((id, h));
+            }
         }
-        if let Some(path) = &self.artifact {
-            pairs.push(("artifact", Json::Str(path.clone())));
-        }
-        if let Some(v) = self.artifact_version {
-            pairs.push(("artifact_version", num(v as f64)));
-        }
-        obj(pairs)
+        self.handles = keep;
     }
 }
 
@@ -66,119 +72,410 @@ impl ServerInfo {
 pub struct Server {
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
-    accept_thread: Option<std::thread::JoinHandle<()>>,
+    accept_thread: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<ConnTable>>,
 }
 
 impl Server {
-    /// Bind `addr` (e.g. "127.0.0.1:0") and serve the coordinator.
-    pub fn start(addr: &str, coordinator: Arc<Coordinator>, info: ServerInfo) -> Result<Server> {
-        let listener = TcpListener::bind(addr)?;
-        let local = listener.local_addr()?;
-        listener.set_nonblocking(true)?;
-        let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = Arc::clone(&stop);
-        let info = Arc::new(info);
-        let accept_thread = std::thread::Builder::new()
-            .name("nullanet-accept".into())
-            .spawn(move || {
-                while !stop2.load(Ordering::SeqCst) {
-                    match listener.accept() {
-                        Ok((stream, _)) => {
-                            let coord = Arc::clone(&coordinator);
-                            let info = Arc::clone(&info);
-                            std::thread::spawn(move || {
-                                let _ = handle_conn(stream, coord, info);
-                            });
-                        }
-                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(std::time::Duration::from_millis(5));
-                        }
-                        Err(_) => break,
-                    }
-                }
-            })?;
-        Ok(Server {
-            addr: local,
-            stop,
-            accept_thread: Some(accept_thread),
-        })
+    /// Bind `addr` (e.g. "127.0.0.1:0") and serve the registry.
+    pub fn start(addr: &str, registry: Arc<ModelRegistry>) -> Result<Server> {
+        Server::start_with(addr, registry, DEFAULT_MAX_CONNS)
     }
 
+    /// [`start`](Self::start) with an explicit live-connection cap.
+    pub fn start_with(
+        addr: &str,
+        registry: Arc<ModelRegistry>,
+        max_conns: usize,
+    ) -> Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns = Arc::new(Mutex::new(ConnTable {
+            next_id: 0,
+            live: BTreeMap::new(),
+            handles: Vec::new(),
+        }));
+        let accept_thread = {
+            let stop = Arc::clone(&stop);
+            let conns = Arc::clone(&conns);
+            std::thread::Builder::new().name("nullanet-accept".into()).spawn(move || {
+                // Blocking accept: zero idle CPU.  `shutdown()` stores the
+                // stop flag and then self-connects, so the pending accept
+                // returns, observes the flag, and exits.
+                for stream in listener.incoming() {
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let stream = match stream {
+                        Ok(s) => s,
+                        Err(_) => {
+                            // Persistent accept errors (e.g. EMFILE when
+                            // the fd limit is hit) return instantly; back
+                            // off instead of spinning a core until
+                            // connections close.
+                            std::thread::sleep(std::time::Duration::from_millis(10));
+                            continue;
+                        }
+                    };
+                    accept_one(stream, &registry, &conns, max_conns);
+                }
+            })?
+        };
+        Ok(Server { addr: local, stop, accept_thread: Some(accept_thread), conns })
+    }
+
+    /// Stop accepting, close every live connection, and join all
+    /// connection handlers (and the accept thread).
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        if let Some(t) = self.accept_thread.take() {
-            let _ = t.join();
+        // Wake the blocking accept with a self-connect.  A wildcard bind
+        // address (0.0.0.0 / ::) is not connectable on every platform, so
+        // aim at the loopback of the same family; if the wake still
+        // fails, skip the join rather than hang — the accept thread stays
+        // parked in accept() and is detached when its handle drops.
+        let wake = if self.addr.ip().is_unspecified() {
+            let ip: std::net::IpAddr = if self.addr.is_ipv4() {
+                std::net::Ipv4Addr::LOCALHOST.into()
+            } else {
+                std::net::Ipv6Addr::LOCALHOST.into()
+            };
+            std::net::SocketAddr::new(ip, self.addr.port())
+        } else {
+            self.addr
+        };
+        let woke =
+            TcpStream::connect_timeout(&wake, std::time::Duration::from_secs(1)).is_ok();
+        if woke {
+            if let Some(t) = self.accept_thread.take() {
+                let _ = t.join();
+            }
+        }
+        let (streams, handles) = {
+            let mut t = self.conns.lock().unwrap();
+            let streams: Vec<TcpStream> = std::mem::take(&mut t.live).into_values().collect();
+            let handles = std::mem::take(&mut t.handles);
+            (streams, handles)
+        };
+        for s in &streams {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        for (_, h) in handles {
+            let _ = h.join();
         }
     }
 }
 
-fn handle_conn(stream: TcpStream, coord: Arc<Coordinator>, info: Arc<ServerInfo>) -> Result<()> {
+fn accept_one(
+    stream: TcpStream,
+    registry: &Arc<ModelRegistry>,
+    conns: &Arc<Mutex<ConnTable>>,
+    max_conns: usize,
+) {
+    let mut t = conns.lock().unwrap();
+    t.reap();
+    if t.live.len() >= max_conns {
+        // One error line, then close (drop).
+        let mut s = stream;
+        let line = protocol::error_reply(None, "server at connection capacity").to_string();
+        let _ = s.write_all(line.as_bytes());
+        let _ = s.write_all(b"\n");
+        return;
+    }
+    let Ok(tracked) = stream.try_clone() else { return };
+    let id = t.next_id;
+    t.next_id += 1;
+    t.live.insert(id, tracked);
+    let registry = Arc::clone(registry);
+    let conns2 = Arc::clone(conns);
+    let spawned = std::thread::Builder::new()
+        .name(format!("nullanet-conn-{id}"))
+        .spawn(move || {
+            let _ = handle_conn(stream, registry);
+            conns2.lock().unwrap().live.remove(&id);
+        });
+    match spawned {
+        Ok(h) => t.handles.push((id, h)),
+        Err(_) => {
+            t.live.remove(&id);
+        }
+    }
+}
+
+/// Bound on the per-connection reply queue.  The writer thread drains it
+/// onto the socket; when a client stops reading, the queue fills, sends
+/// block, and the backpressure reaches the reader — same throttling the
+/// old inline `write_all` provided, without letting replies pile up in
+/// memory.
+const REPLY_QUEUE_DEPTH: usize = 256;
+
+/// Reap finished waiter threads once this many are outstanding…
+const WAITER_REAP_THRESHOLD: usize = 64;
+/// …and block on the oldest beyond this hard cap, so a pipelining client
+/// can't hold an unbounded number of OS threads on one connection.
+const MAX_PENDING_REPLIES: usize = 256;
+
+fn handle_conn(stream: TcpStream, registry: Arc<ModelRegistry>) -> Result<()> {
     stream.set_nodelay(true).ok();
-    let mut writer = stream.try_clone()?;
+    let writer = stream.try_clone()?;
+    let (out_tx, out_rx) = sync_channel::<String>(REPLY_QUEUE_DEPTH);
+    let writer_thread = std::thread::Builder::new()
+        .name("nullanet-conn-writer".into())
+        .spawn(move || writer_loop(writer, out_rx))?;
     let reader = BufReader::new(stream);
+    let mut waiters: Vec<JoinHandle<()>> = Vec::new();
     for line in reader.lines() {
-        let line = line?;
+        let Ok(line) = line else { break };
         if line.trim().is_empty() {
             continue;
         }
-        let reply = match handle_line(&line, &coord, &info) {
-            Ok(j) => j,
-            Err(e) => obj(vec![("error", Json::Str(e.to_string()))]),
-        };
-        writer.write_all(reply.to_string().as_bytes())?;
-        writer.write_all(b"\n")?;
+        handle_line(&line, &registry, &out_tx, &mut waiters);
+        if waiters.len() >= WAITER_REAP_THRESHOLD {
+            let (done, pending): (Vec<_>, Vec<_>) =
+                waiters.drain(..).partition(|h| h.is_finished());
+            for h in done {
+                let _ = h.join();
+            }
+            waiters = pending;
+            while waiters.len() >= MAX_PENDING_REPLIES {
+                let oldest = waiters.remove(0);
+                let _ = oldest.join();
+            }
+        }
     }
+    // Connection closed: let in-flight replies finish, then retire the
+    // writer by dropping the last sender.
+    for w in waiters {
+        let _ = w.join();
+    }
+    drop(out_tx);
+    let _ = writer_thread.join();
     Ok(())
 }
 
-fn handle_line(line: &str, coord: &Coordinator, info: &ServerInfo) -> Result<Json> {
-    let j = Json::parse(line).map_err(|e| format_err!("bad json: {e}"))?;
-    if let Some(cmd) = j.get("cmd").and_then(Json::as_str) {
-        return Ok(match cmd {
-            "ping" => obj(vec![("ok", Json::Bool(true))]),
-            "info" => info.to_json(),
-            "metrics" => obj(vec![
-                ("requests", num(coord.metrics.requests() as f64)),
-                ("blocks", num(coord.metrics.batches() as f64)),
-                ("mean_block", num(coord.metrics.mean_batch_size())),
-                ("p50_us", num(coord.metrics.latency_percentile_us(0.5) as f64)),
-                ("p99_us", num(coord.metrics.latency_percentile_us(0.99) as f64)),
+fn writer_loop(mut writer: TcpStream, rx: Receiver<String>) {
+    while let Ok(line) = rx.recv() {
+        if writer.write_all(line.as_bytes()).is_err() || writer.write_all(b"\n").is_err() {
+            // Peer gone: keep draining the bounded channel so blocked
+            // senders (reader/waiters) wake up instead of sticking on a
+            // full queue forever.
+            while rx.recv().is_ok() {}
+            return;
+        }
+    }
+}
+
+fn send(out: &SyncSender<String>, reply: Json) {
+    let _ = out.send(reply.to_string());
+}
+
+fn handle_line(
+    line: &str,
+    registry: &Arc<ModelRegistry>,
+    out: &SyncSender<String>,
+    waiters: &mut Vec<JoinHandle<()>>,
+) {
+    match protocol::parse_request(line) {
+        Err(e) => send(out, protocol::error_reply(None, &e.to_string())),
+        Ok(WireRequest::Cmd(c)) => {
+            let reply = run_cmd(&c, registry)
+                .map(|j| protocol::with_id(j, c.id.as_ref()))
+                .unwrap_or_else(|e| protocol::error_reply(c.id.as_ref(), &e.to_string()));
+            send(out, reply);
+        }
+        Ok(WireRequest::Infer(mut req)) => match submit_infer(registry, &mut req) {
+            Err(e) => send(out, protocol::error_reply(req.id.as_ref(), &e.to_string())),
+            Ok((entry, rxs)) => {
+                if req.id.is_some() {
+                    // Pipelined: answer out of order as it completes.
+                    // The waiter holds the entry Arc, so a concurrent
+                    // hot-swap cannot fail this request.  One spawn per
+                    // id-tagged request is a deliberate tradeoff (capped
+                    // by MAX_PENDING_REPLIES per connection); if a
+                    // pipelined hot path ever needs to shed the ~tens of
+                    // microseconds of spawn cost, the next step is one
+                    // demux thread per connection selecting over the
+                    // outstanding receivers.
+                    let out2 = out.clone();
+                    let id = req.id.clone();
+                    let spawned = std::thread::Builder::new()
+                        .name("nullanet-waiter".into())
+                        .spawn(move || {
+                            let reply = collect_reply(&req, &entry, rxs);
+                            send(&out2, reply);
+                        });
+                    match spawned {
+                        Ok(h) => waiters.push(h),
+                        Err(e) => send(
+                            out,
+                            protocol::error_reply(id.as_ref(), &format!("spawn failed: {e}")),
+                        ),
+                    }
+                } else {
+                    // v1: strict in-order request/reply on the reader.
+                    let reply = collect_reply(&req, &entry, rxs);
+                    send(out, reply);
+                }
+            }
+        },
+    }
+}
+
+type PendingResponses = Vec<std::sync::mpsc::Receiver<crate::coordinator::Response>>;
+
+/// Resolve the model, validate dimensions, and submit every image.
+/// Takes the images out of `req` (the reply only needs id/batched), so
+/// the hot path moves each buffer into the coordinator instead of
+/// cloning it.
+fn submit_infer(
+    registry: &ModelRegistry,
+    req: &mut InferRequest,
+) -> Result<(Arc<ModelEntry>, PendingResponses)> {
+    let entry = registry.get(req.model.as_deref())?;
+    // Validate every dimension before submitting anything, so a bad
+    // batch is rejected whole.
+    if let Some(dim) = entry.meta.input_dim {
+        for (i, img) in req.images.iter().enumerate() {
+            if img.len() != dim {
+                if req.batched {
+                    crate::bail!("images[{i}] has {} values, expected {dim}", img.len());
+                }
+                crate::bail!("image has {} values, expected {dim}", img.len());
+            }
+        }
+    }
+    let images = std::mem::take(&mut req.images);
+    let mut rxs = Vec::with_capacity(images.len());
+    for img in images {
+        rxs.push(entry.coordinator.submit(img)?);
+    }
+    Ok((entry, rxs))
+}
+
+/// Wait for all of a request's responses and encode the reply.  `_entry`
+/// keeps the model alive (hot-swap drain guarantee) until the reply is
+/// built.
+fn collect_reply(req: &InferRequest, _entry: &ModelEntry, rxs: PendingResponses) -> Json {
+    let mut responses = Vec::with_capacity(rxs.len());
+    for rx in rxs {
+        match rx.recv() {
+            Ok(r) => responses.push(r),
+            Err(_) => {
+                return protocol::error_reply(req.id.as_ref(), "coordinator stopped");
+            }
+        }
+    }
+    if req.batched {
+        protocol::batch_reply(req.id.as_ref(), &responses)
+    } else {
+        protocol::infer_reply(req.id.as_ref(), &responses[0])
+    }
+}
+
+/// Execute a command against the registry (the admin surface shares the
+/// request socket).
+fn run_cmd(c: &CmdRequest, registry: &ModelRegistry) -> Result<Json> {
+    Ok(match &c.cmd {
+        Cmd::Ping => obj(vec![("ok", Json::Bool(true))]),
+        Cmd::Info => {
+            let entry = registry.get(c.model.as_deref())?;
+            let (_, default) = registry.list();
+            let is_default = default.as_deref() == Some(entry.meta.model.as_str());
+            entry.meta.to_json(is_default)
+        }
+        Cmd::List => {
+            let (entries, default) = registry.list();
+            let models: Vec<Json> = entries
+                .iter()
+                .map(|e| {
+                    let is_default = default.as_deref() == Some(e.meta.model.as_str());
+                    e.meta.to_json(is_default)
+                })
+                .collect();
+            obj(vec![
+                (
+                    "default",
+                    default.map(Json::Str).unwrap_or(Json::Null),
+                ),
+                ("models", Json::Arr(models)),
+            ])
+        }
+        Cmd::Metrics => metrics_json(registry, c.model.as_deref())?,
+        Cmd::Load { name, artifact, width } => {
+            let stored = registry.load_artifact(name.as_deref(), artifact, *width)?;
+            obj(vec![("loaded", Json::Str(stored))])
+        }
+        Cmd::Unload { name } => {
+            registry.unload(name)?;
+            obj(vec![("unloaded", Json::Str(name.clone()))])
+        }
+        Cmd::Swap { name, artifact, width } => {
+            let generation = registry.swap_artifact(name, artifact, *width)?;
+            obj(vec![
+                ("swapped", Json::Str(name.clone())),
+                ("generation", num(generation as f64)),
+            ])
+        }
+    })
+}
+
+/// `{"cmd":"metrics"}`: aggregate counters + latency percentiles (p50 /
+/// p90 / p99 over the merged histograms), total inference microseconds,
+/// current queue depth, and per-model request counts.  With `"model"`,
+/// scoped to that model alone.
+fn metrics_json(registry: &ModelRegistry, model: Option<&str>) -> Result<Json> {
+    let entries = match model {
+        Some(_) => vec![registry.get(model)?],
+        None => registry.list().0,
+    };
+    let mut requests = 0u64;
+    let mut blocks = 0u64;
+    let mut items = 0f64;
+    let mut infer_us = 0u64;
+    let mut queue_depth = 0u64;
+    let mut hist = [0u64; BUCKETS];
+    let mut per_model = Vec::with_capacity(entries.len());
+    for e in &entries {
+        let m = &e.coordinator.metrics;
+        requests += m.requests();
+        blocks += m.batches();
+        items += m.mean_batch_size() * m.batches() as f64;
+        infer_us += m.total_infer_us();
+        queue_depth += m.queue_depth();
+        for (h, v) in hist.iter_mut().zip(m.latency_histogram()) {
+            *h += v;
+        }
+        per_model.push((
+            e.meta.model.clone(),
+            obj(vec![
+                ("requests", num(m.requests() as f64)),
+                ("queue_depth", num(m.queue_depth() as f64)),
             ]),
-            other => obj(vec![("error", Json::Str(format!("unknown cmd {other}")))]),
-        });
+        ));
     }
-    let img = j
-        .get("image")
-        .and_then(Json::as_arr)
-        .ok_or_else(|| format_err!("missing image (or unknown request shape)"))?;
-    let mut image = Vec::with_capacity(img.len());
-    for v in img {
-        match v.as_f64() {
-            Some(f) => image.push(f as f32),
-            None => return Err(format_err!("image must be an array of numbers")),
-        }
-    }
-    if let Some(dim) = info.input_dim {
-        if image.len() != dim {
-            return Err(format_err!("image has {} values, expected {dim}", image.len()));
-        }
-    }
-    let resp = coord.infer(image)?;
+    let mean_block = if blocks == 0 { 0.0 } else { items / blocks as f64 };
     Ok(obj(vec![
-        ("class", num(resp.class as f64)),
+        ("requests", num(requests as f64)),
+        ("blocks", num(blocks as f64)),
+        ("mean_block", num(mean_block)),
+        ("p50_us", num(percentile_from_hist(&hist, 0.5) as f64)),
+        ("p90_us", num(percentile_from_hist(&hist, 0.9) as f64)),
+        ("p99_us", num(percentile_from_hist(&hist, 0.99) as f64)),
+        ("infer_us", num(infer_us as f64)),
+        ("queue_depth", num(queue_depth as f64)),
         (
-            "logits",
-            Json::Arr(resp.logits.iter().map(|&l| num(l as f64)).collect()),
+            "models",
+            Json::Obj(per_model.into_iter().collect()),
         ),
-        ("queue_us", num(resp.queue_us as f64)),
-        ("batch", num(resp.batch_size as f64)),
     ]))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::{engine::InferenceEngine, CoordinatorConfig};
+    use crate::coordinator::engine::InferenceEngine;
+    use crate::coordinator::CoordinatorConfig;
+    use crate::registry::ModelMeta;
 
     struct Echo;
     impl InferenceEngine for Echo {
@@ -197,40 +494,60 @@ mod tests {
         }
     }
 
-    #[test]
-    fn tcp_roundtrip() {
-        let coord = Arc::new(Coordinator::start(
-            Arc::new(Echo),
-            CoordinatorConfig::default(),
+    fn registry_with(models: &[(&str, Option<usize>)]) -> Arc<ModelRegistry> {
+        let reg = Arc::new(ModelRegistry::new(
+            CoordinatorConfig { workers: 1, ..Default::default() },
+            64,
         ));
-        let server = Server::start("127.0.0.1:0", Arc::clone(&coord), ServerInfo::default()).unwrap();
-        let mut conn = TcpStream::connect(server.addr).unwrap();
-        conn.write_all(b"{\"cmd\": \"ping\"}\n{\"image\": [2.0, 3.0]}\n")
-            .unwrap();
-        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        for (name, dim) in models {
+            let eng = Arc::new(Echo);
+            let meta = ModelMeta {
+                input_dim: *dim,
+                ..ModelMeta::for_engine(name, eng.as_ref(), 64)
+            };
+            reg.register(meta, eng).unwrap();
+        }
+        reg
+    }
+
+    fn connect(addr: std::net::SocketAddr) -> (TcpStream, BufReader<TcpStream>) {
+        let conn = TcpStream::connect(addr).unwrap();
+        let reader = BufReader::new(conn.try_clone().unwrap());
+        (conn, reader)
+    }
+
+    #[test]
+    fn tcp_roundtrip_v1_and_v2() {
+        let reg = registry_with(&[("echo", None)]);
+        let server = Server::start("127.0.0.1:0", Arc::clone(&reg)).unwrap();
+        let (mut conn, mut reader) = connect(server.addr);
+        conn.write_all(
+            b"{\"cmd\": \"ping\"}\n{\"image\": [2.0, 3.0]}\n{\"id\": 1, \"image\": [2.0, 3.0]}\n",
+        )
+        .unwrap();
         let mut line = String::new();
         reader.read_line(&mut line).unwrap();
-        assert!(line.contains("\"ok\":true"), "{line}");
+        assert_eq!(line.trim(), "{\"ok\":true}");
         line.clear();
         reader.read_line(&mut line).unwrap();
         assert!(line.contains("\"class\":5"), "{line}");
+        assert!(!line.contains("\"id\""), "v1 reply must not grow an id: {line}");
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"class\":5") && line.contains("\"id\":1"), "{line}");
         drop(conn);
         server.shutdown();
     }
 
     #[test]
-    fn malformed_json_reports_error() {
-        let coord = Arc::new(Coordinator::start(
-            Arc::new(Echo),
-            CoordinatorConfig::default(),
-        ));
-        let server = Server::start("127.0.0.1:0", Arc::clone(&coord), ServerInfo::default()).unwrap();
-        let mut conn = TcpStream::connect(server.addr).unwrap();
-        // Three malformed requests on one connection: the server must
-        // reply with an error line to each and keep the stream open.
-        conn.write_all(b"not json\n{\"cmd\": \"bogus\"}\n{\"image\": [1.0, \"x\"]}\n{\"cmd\": \"ping\"}\n")
-            .unwrap();
-        let mut reader = BufReader::new(conn.try_clone().unwrap());
+    fn malformed_lines_get_error_replies_and_stream_survives() {
+        let reg = registry_with(&[("echo", None)]);
+        let server = Server::start("127.0.0.1:0", Arc::clone(&reg)).unwrap();
+        let (mut conn, mut reader) = connect(server.addr);
+        conn.write_all(
+            b"not json\n{\"cmd\": \"bogus\"}\n{\"image\": [1.0, \"x\"]}\n{\"cmd\": \"ping\"}\n",
+        )
+        .unwrap();
         for expect in ["error", "unknown cmd", "array of numbers", "\"ok\":true"] {
             let mut line = String::new();
             reader.read_line(&mut line).unwrap();
@@ -241,34 +558,27 @@ mod tests {
     }
 
     #[test]
-    fn info_reports_model_and_width() {
-        let coord = Arc::new(Coordinator::start(
-            Arc::new(Echo),
-            CoordinatorConfig::default(),
-        ));
-        let info = ServerInfo {
-            model: "net11".into(),
-            engine: "logic[w256]:net11".into(),
-            width: 256,
-            input_dim: Some(3),
-            artifact: Some("model.nnc".into()),
-            artifact_version: Some(1),
-        };
-        let server = Server::start("127.0.0.1:0", Arc::clone(&coord), info).unwrap();
-        let mut conn = TcpStream::connect(server.addr).unwrap();
-        conn.write_all(b"{\"cmd\": \"info\"}\n").unwrap();
-        let mut reader = BufReader::new(conn.try_clone().unwrap());
+    fn info_and_unknown_model_routing() {
+        let reg = registry_with(&[("a", Some(3)), ("b", None)]);
+        let server = Server::start("127.0.0.1:0", Arc::clone(&reg)).unwrap();
+        let (mut conn, mut reader) = connect(server.addr);
+        conn.write_all(b"{\"cmd\": \"info\"}\n{\"cmd\": \"info\", \"model\": \"b\"}\n{\"image\": [1.0], \"model\": \"zzz\"}\n{\"image\": [1.0]}\n{\"image\": [1.0, 2.0, 2.0]}\n")
+            .unwrap();
         let mut line = String::new();
         reader.read_line(&mut line).unwrap();
         let j = Json::parse(line.trim()).unwrap();
-        assert_eq!(j.get("model").and_then(Json::as_str), Some("net11"));
-        assert_eq!(j.get("width").and_then(Json::as_usize), Some(256));
-        assert_eq!(j.get("source").and_then(Json::as_str), Some("artifact"));
-        assert_eq!(j.get("artifact_version").and_then(Json::as_usize), Some(1));
+        assert_eq!(j.get("model").and_then(Json::as_str), Some("a"));
+        assert_eq!(j.get("default").and_then(Json::as_bool), Some(true));
         assert_eq!(j.get("input_dim").and_then(Json::as_usize), Some(3));
-        // Wrong-length image gets an error line, then a correct-length
-        // one still works on the same connection.
-        conn.write_all(b"{\"image\": [1.0]}\n{\"image\": [1.0, 2.0, 2.0]}\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(line.trim()).unwrap();
+        assert_eq!(j.get("model").and_then(Json::as_str), Some("b"));
+        assert_eq!(j.get("default").and_then(Json::as_bool), Some(false));
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("unknown model zzz"), "{line}");
+        // Dimension check against the default model (input_dim = 3).
         line.clear();
         reader.read_line(&mut line).unwrap();
         assert!(line.contains("expected 3"), "{line}");
@@ -280,20 +590,97 @@ mod tests {
     }
 
     #[test]
-    fn metrics_endpoint() {
-        let coord = Arc::new(Coordinator::start(
-            Arc::new(Echo),
-            CoordinatorConfig::default(),
-        ));
-        coord.infer(vec![1.0]).unwrap();
-        let server = Server::start("127.0.0.1:0", Arc::clone(&coord), ServerInfo::default()).unwrap();
-        let mut conn = TcpStream::connect(server.addr).unwrap();
-        conn.write_all(b"{\"cmd\": \"metrics\"}\n").unwrap();
-        let mut reader = BufReader::new(conn.try_clone().unwrap());
+    fn batch_images_reply_in_request_order() {
+        let reg = registry_with(&[("echo", None)]);
+        let server = Server::start("127.0.0.1:0", Arc::clone(&reg)).unwrap();
+        let (mut conn, mut reader) = connect(server.addr);
+        conn.write_all(b"{\"id\": \"B\", \"images\": [[1.0], [2.0], [3.0]]}\n")
+            .unwrap();
         let mut line = String::new();
         reader.read_line(&mut line).unwrap();
-        assert!(line.contains("\"requests\":1"), "{line}");
+        let j = Json::parse(line.trim()).unwrap();
+        assert_eq!(j.get("id").and_then(Json::as_str), Some("B"));
+        let results = j.get("results").and_then(Json::as_arr).unwrap();
+        let classes: Vec<usize> =
+            results.iter().map(|r| r.get("class").unwrap().as_usize().unwrap()).collect();
+        assert_eq!(classes, vec![1, 2, 3]);
         drop(conn);
+        server.shutdown();
+    }
+
+    #[test]
+    fn metrics_reports_extended_fields_and_per_model_counts() {
+        let reg = registry_with(&[("a", None), ("b", None)]);
+        reg.get(Some("a")).unwrap().coordinator.infer(vec![1.0]).unwrap();
+        reg.get(Some("a")).unwrap().coordinator.infer(vec![1.0]).unwrap();
+        reg.get(Some("b")).unwrap().coordinator.infer(vec![1.0]).unwrap();
+        let server = Server::start("127.0.0.1:0", Arc::clone(&reg)).unwrap();
+        let (mut conn, mut reader) = connect(server.addr);
+        conn.write_all(b"{\"cmd\": \"metrics\"}\n{\"cmd\": \"metrics\", \"model\": \"b\"}\n")
+            .unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(line.trim()).unwrap();
+        assert_eq!(j.get("requests").and_then(Json::as_usize), Some(3));
+        assert_eq!(j.get("queue_depth").and_then(Json::as_usize), Some(0));
+        assert!(j.get("p90_us").is_some() && j.get("infer_us").is_some());
+        assert_eq!(
+            j.at(&["models", "a", "requests"]).and_then(Json::as_usize),
+            Some(2)
+        );
+        assert_eq!(
+            j.at(&["models", "b", "requests"]).and_then(Json::as_usize),
+            Some(1)
+        );
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(line.trim()).unwrap();
+        assert_eq!(j.get("requests").and_then(Json::as_usize), Some(1));
+        assert!(j.at(&["models", "a"]).is_none());
+        drop(conn);
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_closes_live_connections_and_joins() {
+        let reg = registry_with(&[("echo", None)]);
+        let server = Server::start("127.0.0.1:0", Arc::clone(&reg)).unwrap();
+        let (mut conn, mut reader) = connect(server.addr);
+        conn.write_all(b"{\"cmd\": \"ping\"}\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"ok\":true"));
+        // Shutdown with the connection still open: must return promptly
+        // (blocking accept woken, handler joined) and close our stream.
+        let t0 = std::time::Instant::now();
+        server.shutdown();
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(5),
+            "shutdown took {:?}",
+            t0.elapsed()
+        );
+        line.clear();
+        let n = reader.read_line(&mut line).unwrap_or(0);
+        assert_eq!(n, 0, "expected EOF after server shutdown, got {line}");
+    }
+
+    #[test]
+    fn connection_cap_sheds_with_error_line() {
+        let reg = registry_with(&[("echo", None)]);
+        let server = Server::start_with("127.0.0.1:0", Arc::clone(&reg), 1).unwrap();
+        let (mut c1, mut r1) = connect(server.addr);
+        c1.write_all(b"{\"cmd\": \"ping\"}\n").unwrap();
+        let mut line = String::new();
+        r1.read_line(&mut line).unwrap();
+        assert!(line.contains("\"ok\":true"));
+        // Second connection: one error line, then EOF.
+        let (_c2, mut r2) = connect(server.addr);
+        line.clear();
+        r2.read_line(&mut line).unwrap();
+        assert!(line.contains("connection capacity"), "{line}");
+        line.clear();
+        assert_eq!(r2.read_line(&mut line).unwrap_or(0), 0);
+        drop(c1);
         server.shutdown();
     }
 }

@@ -6,7 +6,8 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use nullanet::coordinator::{engine::InferenceEngine, Coordinator, CoordinatorConfig};
-use nullanet::server::{Server, ServerInfo};
+use nullanet::registry::{ModelMeta, ModelRegistry};
+use nullanet::server::Server;
 
 /// Deterministic stand-in engine: class = round(sum) % 10.
 struct SumEngine;
@@ -74,11 +75,12 @@ fn responses_match_requests_not_reordered_within_stream() {
 
 #[test]
 fn server_concurrent_clients() {
-    let coord = Arc::new(Coordinator::start(
-        Arc::new(SumEngine),
-        CoordinatorConfig::default(),
-    ));
-    let srv = Server::start("127.0.0.1:0", Arc::clone(&coord), ServerInfo::default()).unwrap();
+    let registry = Arc::new(ModelRegistry::new(CoordinatorConfig::default(), 64));
+    let eng = Arc::new(SumEngine);
+    registry
+        .register(ModelMeta::for_engine("sum", eng.as_ref(), 64), eng)
+        .unwrap();
+    let srv = Server::start("127.0.0.1:0", Arc::clone(&registry)).unwrap();
     let addr = srv.addr;
     let mut handles = vec![];
     for t in 0..4 {
@@ -101,7 +103,8 @@ fn server_concurrent_clients() {
     for h in handles {
         h.join().unwrap();
     }
-    assert_eq!(coord.metrics.requests(), 200);
+    let entry = registry.get(Some("sum")).unwrap();
+    assert_eq!(entry.coordinator.metrics.requests(), 200);
     srv.shutdown();
 }
 

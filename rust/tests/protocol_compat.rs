@@ -1,0 +1,235 @@
+//! v1 → v2 wire compatibility: a recorded v1 session replayed against
+//! the v2 server must produce byte-equivalent replies.
+//!
+//! The "recording" is a frozen copy of the protocol-v1 request handler
+//! (`v1_reply`, transcribed from the pre-registry `server.rs`) run
+//! against the same engine: for every v1 request line, the bytes the v2
+//! server sends over TCP must equal the bytes v1 would have produced.
+//! The only normalization is the `queue_us` timing counter, which is
+//! nondeterministic by nature; every other byte — key set, key order,
+//! number formatting, error strings — must match exactly.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use nullanet::coordinator::{engine::InferenceEngine, Coordinator, CoordinatorConfig};
+use nullanet::jsonio::{num, obj, Json};
+use nullanet::registry::{ModelMeta, ModelRegistry};
+use nullanet::server::Server;
+
+/// Deterministic engine: class = sum(image) % 10 (the same stand-in the
+/// v1 server tests used).
+struct SumEngine;
+
+impl InferenceEngine for SumEngine {
+    fn infer_batch(&self, images: &[&[f32]]) -> Vec<Vec<f32>> {
+        images
+            .iter()
+            .map(|img| {
+                let mut l = vec![0.0; 10];
+                l[img.iter().sum::<f32>() as usize % 10] = 1.0;
+                l
+            })
+            .collect()
+    }
+    fn name(&self) -> &str {
+        "sum"
+    }
+    fn input_dim(&self) -> Option<usize> {
+        Some(2)
+    }
+}
+
+/// The recorded v1 session: the v1 request shapes with byte-stable
+/// replies (inference, ping, and every error path).  `info` and
+/// `metrics` are deliberately absent: their v2 replies are supersets of
+/// v1 (new keys added, no v1 key changed), which
+/// `v1_info_and_metrics_keys_survive_as_supersets` below holds instead.
+const V1_SESSION: &[&str] = &[
+    "{\"cmd\": \"ping\"}",
+    "{\"cmd\": \"bogus\"}",
+    "not json",
+    "{\"image\": [1.0, \"x\"]}",
+    "{\"image\": [2.0, 3.0]}",
+    "{\"image\": [1.0]}",
+    "{}",
+    "{\"image\": [9.0, 9.0]}",
+];
+
+// ---------------------------------------------------------------------
+// Frozen v1 handler (transcribed from the pre-registry server.rs).
+// ---------------------------------------------------------------------
+
+fn v1_reply(line: &str, coord: &Coordinator, input_dim: Option<usize>) -> String {
+    let reply = match v1_handle(line, coord, input_dim) {
+        Ok(j) => j,
+        Err(e) => obj(vec![("error", Json::Str(e))]),
+    };
+    reply.to_string()
+}
+
+fn v1_handle(
+    line: &str,
+    coord: &Coordinator,
+    input_dim: Option<usize>,
+) -> Result<Json, String> {
+    let j = Json::parse(line).map_err(|e| format!("bad json: {e}"))?;
+    if let Some(cmd) = j.get("cmd").and_then(Json::as_str) {
+        return Ok(match cmd {
+            "ping" => obj(vec![("ok", Json::Bool(true))]),
+            other => obj(vec![("error", Json::Str(format!("unknown cmd {other}")))]),
+        });
+    }
+    let img = j
+        .get("image")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "missing image (or unknown request shape)".to_string())?;
+    let mut image = Vec::with_capacity(img.len());
+    for v in img {
+        match v.as_f64() {
+            Some(f) => image.push(f as f32),
+            None => return Err("image must be an array of numbers".to_string()),
+        }
+    }
+    if let Some(dim) = input_dim {
+        if image.len() != dim {
+            return Err(format!("image has {} values, expected {dim}", image.len()));
+        }
+    }
+    let resp = coord.infer(image).map_err(|e| e.to_string())?;
+    Ok(obj(vec![
+        ("class", num(resp.class as f64)),
+        (
+            "logits",
+            Json::Arr(resp.logits.iter().map(|&l| num(l as f64)).collect()),
+        ),
+        ("queue_us", num(resp.queue_us as f64)),
+        ("batch", num(resp.batch_size as f64)),
+    ]))
+}
+
+/// Zero out the digits after `"queue_us":` — the one nondeterministic
+/// field in a v1 reply.
+fn normalize(line: &str) -> String {
+    let key = "\"queue_us\":";
+    let Some(start) = line.find(key) else {
+        return line.to_string();
+    };
+    let digits_from = start + key.len();
+    let digits_len = line[digits_from..]
+        .bytes()
+        .take_while(|b| b.is_ascii_digit())
+        .count();
+    format!("{}0{}", &line[..digits_from], &line[digits_from + digits_len..])
+}
+
+#[test]
+fn v1_session_replay_is_byte_equivalent() {
+    // Reference: the frozen v1 handler over its own coordinator.
+    let v1_coord = Coordinator::start(Arc::new(SumEngine), CoordinatorConfig::default());
+    let expected: Vec<String> = V1_SESSION
+        .iter()
+        .map(|line| normalize(&v1_reply(line, &v1_coord, Some(2))))
+        .collect();
+
+    // Live: the v2 server with the same engine as its default model.
+    let registry = Arc::new(ModelRegistry::new(CoordinatorConfig::default(), 64));
+    let eng = Arc::new(SumEngine);
+    registry
+        .register(ModelMeta::for_engine("sum", eng.as_ref(), 64), eng)
+        .unwrap();
+    let server = Server::start("127.0.0.1:0", Arc::clone(&registry)).unwrap();
+    let mut conn = TcpStream::connect(server.addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+
+    for (line, want) in V1_SESSION.iter().zip(&expected) {
+        conn.write_all(line.as_bytes()).unwrap();
+        conn.write_all(b"\n").unwrap();
+        let mut got = String::new();
+        reader.read_line(&mut got).unwrap();
+        let got = normalize(got.trim_end_matches('\n'));
+        assert_eq!(&got, want, "v1 request {line:?}: v2 replied {got:?}, v1 said {want:?}");
+        // The compat guarantee includes *not* growing new keys on v1
+        // replies.
+        assert!(!got.contains("\"id\""), "v1 reply grew an id: {got}");
+    }
+
+    drop(conn);
+    server.shutdown();
+    v1_coord.shutdown();
+}
+
+#[test]
+fn v1_info_and_metrics_keys_survive_as_supersets() {
+    let registry = Arc::new(ModelRegistry::new(CoordinatorConfig::default(), 64));
+    let eng = Arc::new(SumEngine);
+    registry
+        .register(ModelMeta::for_engine("sum", eng.as_ref(), 64), eng)
+        .unwrap();
+    registry.get(None).unwrap().coordinator.infer(vec![1.0, 2.0]).unwrap();
+    let server = Server::start("127.0.0.1:0", Arc::clone(&registry)).unwrap();
+    let mut conn = TcpStream::connect(server.addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    conn.write_all(b"{\"cmd\": \"info\"}\n{\"cmd\": \"metrics\"}\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let info = Json::parse(line.trim()).unwrap();
+    // Every v1 info key is still present with its v1 meaning.
+    assert_eq!(info.get("model").and_then(Json::as_str), Some("sum"));
+    assert_eq!(info.get("engine").and_then(Json::as_str), Some("sum"));
+    assert_eq!(info.get("width").and_then(Json::as_usize), Some(64));
+    assert_eq!(info.get("source").and_then(Json::as_str), Some("synthesized"));
+    assert_eq!(info.get("input_dim").and_then(Json::as_usize), Some(2));
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let metrics = Json::parse(line.trim()).unwrap();
+    for key in ["requests", "blocks", "mean_block", "p50_us", "p99_us"] {
+        assert!(metrics.get(key).is_some(), "v1 metrics key {key} missing: {metrics:?}");
+    }
+    assert_eq!(metrics.get("requests").and_then(Json::as_usize), Some(1));
+    drop(conn);
+    server.shutdown();
+}
+
+#[test]
+fn v1_requests_route_to_default_model_among_many() {
+    // A v1 client (no "model" field) on a multi-model server must hit
+    // the default (first-registered) model.
+    struct ConstEngine(usize);
+    impl InferenceEngine for ConstEngine {
+        fn infer_batch(&self, images: &[&[f32]]) -> Vec<Vec<f32>> {
+            images
+                .iter()
+                .map(|_| {
+                    let mut l = vec![0.0; 10];
+                    l[self.0] = 1.0;
+                    l
+                })
+                .collect()
+        }
+        fn name(&self) -> &str {
+            "const"
+        }
+    }
+    let registry = Arc::new(ModelRegistry::new(CoordinatorConfig::default(), 64));
+    for (name, class) in [("first", 4usize), ("second", 6usize)] {
+        let eng = Arc::new(ConstEngine(class));
+        registry
+            .register(ModelMeta::for_engine(name, eng.as_ref(), 64), eng)
+            .unwrap();
+    }
+    let server = Server::start("127.0.0.1:0", Arc::clone(&registry)).unwrap();
+    let mut conn = TcpStream::connect(server.addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    conn.write_all(b"{\"image\": [0.0]}\n{\"model\": \"second\", \"image\": [0.0]}\n")
+        .unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"class\":4"), "default model should answer: {line}");
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"class\":6"), "routed model should answer: {line}");
+    drop(conn);
+    server.shutdown();
+}

@@ -1,0 +1,330 @@
+//! Serve smoke: boots the real TCP server over real `.nnc` artifacts
+//! and exercises the v2 serving story end-to-end —
+//!
+//! * two compiled models resident in one process, served concurrently,
+//! * runtime load/unload over the admin surface,
+//! * hot-swap with zero failed in-flight requests,
+//! * a pipelined connection whose replies complete out of order and
+//!   reassemble by `"id"`.
+//!
+//! The artifacts are built in-process (tiny 2-2-2-2 MLPs whose one
+//! hidden tape either passes bits through or swaps them, so the two
+//! models give different classes for the same image) and go through the
+//! full `CompiledModel::save` → `load_artifact` → `engine_from_artifact`
+//! path — no `make artifacts` needed, which is what lets CI run this as
+//! its serve-smoke job.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use nullanet::aig::Aig;
+use nullanet::artifact::{CompiledLayer, CompiledModel, LayerStats};
+use nullanet::coordinator::{engine::InferenceEngine, CoordinatorConfig};
+use nullanet::jsonio::Json;
+use nullanet::model::{Arch, Tensor};
+use nullanet::netlist::LogicTape;
+use nullanet::registry::{ModelMeta, ModelRegistry};
+use nullanet::server::Server;
+
+/// Build and save a tiny compiled model.  First layer thresholds each
+/// input at 0.5; the hidden tape is identity or bit-swap; the last
+/// layer maps bit j to logit j.  Image (0.9, 0.1) ⇒ class 0 (identity)
+/// or class 1 (swap).
+fn tiny_artifact(dir: &Path, name: &str, swap: bool) -> PathBuf {
+    let mut g = Aig::new(2);
+    let (a, b) = (g.pi(0), g.pi(1));
+    if swap {
+        g.add_output(b);
+        g.add_output(a);
+    } else {
+        g.add_output(a);
+        g.add_output(b);
+    }
+    let tape = LogicTape::from_aig(&g);
+    let t = |shape: Vec<usize>, f32s: Vec<f32>| Tensor { shape, f32s };
+    let mut params = BTreeMap::new();
+    params.insert("w1".to_string(), t(vec![2, 2], vec![1.0, 0.0, 0.0, 1.0]));
+    params.insert("scale1".to_string(), t(vec![2], vec![1.0, 1.0]));
+    params.insert("bias1".to_string(), t(vec![2], vec![-0.5, -0.5]));
+    params.insert("w3".to_string(), t(vec![2, 2], vec![1.0, 0.0, 0.0, 1.0]));
+    params.insert("scale3".to_string(), t(vec![2], vec![1.0, 1.0]));
+    params.insert("bias3".to_string(), t(vec![2], vec![0.0, 0.0]));
+    let cm = CompiledModel {
+        name: name.to_string(),
+        arch: Arch::Mlp { sizes: vec![2, 2, 2, 2] },
+        accuracy_test: f64::NAN,
+        layers: vec![CompiledLayer {
+            name: "layer2".to_string(),
+            tape,
+            stats: LayerStats::default(),
+        }],
+        params,
+    };
+    std::fs::create_dir_all(dir).unwrap();
+    let path = dir.join(format!("{name}.nnc"));
+    cm.save(&path).unwrap();
+    path
+}
+
+fn tmp(test: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("nullanet_serve_smoke_{test}"))
+}
+
+fn registry(workers: usize) -> Arc<ModelRegistry> {
+    Arc::new(ModelRegistry::new(
+        CoordinatorConfig { workers, max_wait: Duration::from_millis(1), ..Default::default() },
+        64,
+    ))
+}
+
+fn connect(addr: std::net::SocketAddr) -> (TcpStream, BufReader<TcpStream>) {
+    let conn = TcpStream::connect(addr).unwrap();
+    let reader = BufReader::new(conn.try_clone().unwrap());
+    (conn, reader)
+}
+
+fn request(conn: &mut TcpStream, reader: &mut BufReader<TcpStream>, line: &str) -> Json {
+    conn.write_all(line.as_bytes()).unwrap();
+    conn.write_all(b"\n").unwrap();
+    let mut reply = String::new();
+    reader.read_line(&mut reply).unwrap();
+    Json::parse(reply.trim()).unwrap_or_else(|e| panic!("bad reply {reply:?}: {e}"))
+}
+
+fn class_of(j: &Json) -> usize {
+    j.get("class")
+        .and_then(Json::as_usize)
+        .unwrap_or_else(|| panic!("no class in {j:?}"))
+}
+
+#[test]
+fn two_artifact_models_served_concurrently() {
+    let dir = tmp("two_models");
+    let ident = tiny_artifact(&dir, "ident", false);
+    let swap = tiny_artifact(&dir, "swapm", true);
+    let reg = registry(2);
+    reg.load_artifact(None, ident.to_str().unwrap(), None).unwrap();
+    reg.load_artifact(None, swap.to_str().unwrap(), None).unwrap();
+    let server = Server::start("127.0.0.1:0", Arc::clone(&reg)).unwrap();
+
+    // Same image, both models, one connection: different answers.
+    let (mut conn, mut reader) = connect(server.addr);
+    let a = request(&mut conn, &mut reader, "{\"model\": \"ident\", \"image\": [0.9, 0.1]}");
+    let b = request(&mut conn, &mut reader, "{\"model\": \"swapm\", \"image\": [0.9, 0.1]}");
+    assert_eq!(class_of(&a), 0);
+    assert_eq!(class_of(&b), 1);
+    // Client-side batching routes through the same model.
+    let batch = request(
+        &mut conn,
+        &mut reader,
+        "{\"id\": 1, \"model\": \"swapm\", \"images\": [[0.9, 0.1], [0.1, 0.9]]}",
+    );
+    let classes: Vec<usize> = batch
+        .get("results")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .map(class_of)
+        .collect();
+    assert_eq!(classes, vec![1, 0]);
+    drop(conn);
+
+    // Concurrent clients pinned to different models.
+    let mut handles = vec![];
+    for (model, want) in [("ident", 0usize), ("swapm", 1usize)] {
+        let addr = server.addr;
+        handles.push(std::thread::spawn(move || {
+            let (mut conn, mut reader) = connect(addr);
+            for _ in 0..50 {
+                let j = request(
+                    &mut conn,
+                    &mut reader,
+                    &format!("{{\"model\": \"{model}\", \"image\": [0.9, 0.1]}}"),
+                );
+                assert_eq!(class_of(&j), want, "{model}");
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    server.shutdown();
+}
+
+#[test]
+fn admin_load_list_unload_over_the_socket() {
+    let dir = tmp("admin");
+    let ident = tiny_artifact(&dir, "ident", false);
+    let swap = tiny_artifact(&dir, "swapm", true);
+    let reg = registry(1);
+    reg.load_artifact(None, ident.to_str().unwrap(), None).unwrap();
+    let server = Server::start("127.0.0.1:0", Arc::clone(&reg)).unwrap();
+    let (mut conn, mut reader) = connect(server.addr);
+
+    let j = request(&mut conn, &mut reader, "{\"cmd\": \"list\"}");
+    assert_eq!(j.get("models").and_then(Json::as_arr).unwrap().len(), 1);
+    assert_eq!(j.get("default").and_then(Json::as_str), Some("ident"));
+
+    let j = request(
+        &mut conn,
+        &mut reader,
+        &format!("{{\"cmd\": \"load\", \"artifact\": {:?}}}", swap.to_str().unwrap()),
+    );
+    assert_eq!(j.get("loaded").and_then(Json::as_str), Some("swapm"));
+    let j = request(&mut conn, &mut reader, "{\"cmd\": \"list\"}");
+    assert_eq!(j.get("models").and_then(Json::as_arr).unwrap().len(), 2);
+
+    // Loading the same name again must be rejected (swap is the tool).
+    let j = request(
+        &mut conn,
+        &mut reader,
+        &format!("{{\"cmd\": \"load\", \"artifact\": {:?}}}", swap.to_str().unwrap()),
+    );
+    assert!(
+        j.get("error").and_then(Json::as_str).unwrap_or("").contains("already loaded"),
+        "{j:?}"
+    );
+
+    let j = request(&mut conn, &mut reader, "{\"model\": \"swapm\", \"image\": [0.9, 0.1]}");
+    assert_eq!(class_of(&j), 1);
+
+    let j = request(&mut conn, &mut reader, "{\"cmd\": \"unload\", \"name\": \"swapm\"}");
+    assert_eq!(j.get("unloaded").and_then(Json::as_str), Some("swapm"));
+    let j = request(&mut conn, &mut reader, "{\"model\": \"swapm\", \"image\": [0.9, 0.1]}");
+    assert!(
+        j.get("error").and_then(Json::as_str).unwrap_or("").contains("unknown model"),
+        "{j:?}"
+    );
+
+    drop(conn);
+    server.shutdown();
+}
+
+#[test]
+fn hot_swap_has_zero_failed_in_flight_requests() {
+    let dir = tmp("hot_swap");
+    let ident = tiny_artifact(&dir, "ident", false);
+    let swap = tiny_artifact(&dir, "swapm", true);
+    let reg = registry(2);
+    // Both incarnations serve under the registry name "hot".
+    reg.load_artifact(Some("hot"), ident.to_str().unwrap(), None).unwrap();
+    let server = Server::start("127.0.0.1:0", Arc::clone(&reg)).unwrap();
+
+    // Hammer threads: v1-style requests against the default model while
+    // the swap happens.  Every reply must be a class (0 before the swap,
+    // 1 after) — never an error line.
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let mut handles = vec![];
+    for _ in 0..4 {
+        let addr = server.addr;
+        let stop = Arc::clone(&stop);
+        handles.push(std::thread::spawn(move || {
+            let (mut conn, mut reader) = connect(addr);
+            let mut served = 0usize;
+            while !stop.load(std::sync::atomic::Ordering::SeqCst) {
+                let j = request(&mut conn, &mut reader, "{\"image\": [0.9, 0.1]}");
+                assert!(
+                    j.get("error").is_none(),
+                    "in-flight request failed during hot-swap: {j:?}"
+                );
+                let c = class_of(&j);
+                assert!(c == 0 || c == 1, "nonsense class {c}");
+                served += 1;
+            }
+            served
+        }));
+    }
+
+    // Let traffic build, then swap over the admin surface.
+    std::thread::sleep(Duration::from_millis(100));
+    let (mut admin, mut admin_reader) = connect(server.addr);
+    let j = request(
+        &mut admin,
+        &mut admin_reader,
+        &format!(
+            "{{\"cmd\": \"swap\", \"name\": \"hot\", \"artifact\": {:?}}}",
+            swap.to_str().unwrap()
+        ),
+    );
+    assert_eq!(j.get("swapped").and_then(Json::as_str), Some("hot"), "{j:?}");
+    assert!(j.get("generation").and_then(Json::as_usize).unwrap() >= 2);
+
+    // Traffic keeps flowing across the swap boundary.
+    std::thread::sleep(Duration::from_millis(100));
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    let served: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert!(served > 20, "hammer barely ran ({served} requests)");
+
+    // Post-swap, the new incarnation answers.
+    let j = request(&mut admin, &mut admin_reader, "{\"image\": [0.9, 0.1]}");
+    assert_eq!(class_of(&j), 1, "swap did not take effect: {j:?}");
+    let j = request(&mut admin, &mut admin_reader, "{\"cmd\": \"info\"}");
+    assert_eq!(j.get("model").and_then(Json::as_str), Some("hot"));
+    drop(admin);
+    server.shutdown();
+}
+
+#[test]
+fn pipelined_replies_complete_out_of_order_and_reassemble_by_id() {
+    /// Sleeps image[0] milliseconds, classifies as image[1].
+    struct SleepEngine;
+    impl InferenceEngine for SleepEngine {
+        fn infer_batch(&self, images: &[&[f32]]) -> Vec<Vec<f32>> {
+            images
+                .iter()
+                .map(|img| {
+                    std::thread::sleep(Duration::from_millis(img[0] as u64));
+                    let mut l = vec![0.0; 10];
+                    l[img[1] as usize % 10] = 1.0;
+                    l
+                })
+                .collect()
+        }
+        fn name(&self) -> &str {
+            "sleep"
+        }
+        fn preferred_block(&self) -> usize {
+            1 // every request its own block, so blocks overlap in time
+        }
+    }
+
+    let reg = registry(3);
+    let eng = Arc::new(SleepEngine);
+    reg.register(ModelMeta::for_engine("sleep", eng.as_ref(), 64), eng).unwrap();
+    let server = Server::start("127.0.0.1:0", Arc::clone(&reg)).unwrap();
+    let (mut conn, mut reader) = connect(server.addr);
+
+    // Three pipelined requests on one connection, no waiting between
+    // them: the first sleeps 400 ms, the other two are instant.
+    conn.write_all(
+        b"{\"id\": \"slow\", \"image\": [400.0, 1.0]}\n\
+          {\"id\": \"fast1\", \"image\": [0.0, 2.0]}\n\
+          {\"id\": \"fast2\", \"image\": [0.0, 3.0]}\n",
+    )
+    .unwrap();
+
+    let mut order = Vec::new();
+    let mut by_id = BTreeMap::new();
+    for _ in 0..3 {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(line.trim()).unwrap();
+        let id = j.get("id").and_then(Json::as_str).unwrap().to_string();
+        order.push(id.clone());
+        by_id.insert(id, class_of(&j));
+    }
+    // Reassembly: every id answered with its own class.
+    assert_eq!(by_id.get("slow"), Some(&1));
+    assert_eq!(by_id.get("fast1"), Some(&2));
+    assert_eq!(by_id.get("fast2"), Some(&3));
+    // Out-of-order completion: the slow request must not come first.
+    assert_ne!(order[0], "slow", "replies arrived in submission order: {order:?}");
+    assert_eq!(order[2], "slow", "slow reply should complete last: {order:?}");
+
+    drop(conn);
+    server.shutdown();
+}
