@@ -125,7 +125,7 @@ fn main() {
     }));
     results.push(bench("cold start: load + engine construct (w256)", budget, || {
         let cm = CompiledModel::load(&path).unwrap();
-        std::hint::black_box(engine::engine_from_artifact(&cm, 256).unwrap());
+        std::hint::black_box(engine::engine_from_artifact(cm, 256).unwrap());
     }));
 
     let mut table = Table::new(

@@ -1,86 +1,338 @@
-//! Bench: end-to-end serving — the paper's headline restated for the CPU
-//! engine: synthesized-logic inference vs threshold (dot-product) vs the
-//! PJRT fp32 baseline, with throughput, latency, and parameter-memory
-//! traffic per inference.
+//! Bench: end-to-end serving — the scheduled + pooled logic engines
+//! against a faithful replica of the pre-scheduling serving path
+//! (per-image first layer -> `BitVec` -> `transpose_to_planes`, fresh
+//! full-size scratch per block, per-sample `BitVec` last layer), at
+//! plane widths 64/256/512, plus the threshold (Eq. 1 dot-product)
+//! reference and coordinator sharding throughput.
+//!
+//! Self-contained: synthesizes a Table-5-style hidden layer from random
+//! observations, exactly like `compile_load.rs` — no `make artifacts`
+//! needed, so this runs in CI.  `NULLANET_BENCH_CAP` caps the ISF
+//! pattern count (default 2000).
 //!
 //! Run: cargo bench --bench e2e_serving
+//! Emits BENCH_serving.json (machine-readable medians: per-width batch
+//! latency, amortized per-image latency, imgs/sec, and the
+//! scheduled-vs-pre-PR speedups) — the serving half of the perf
+//! trajectory, mirroring
+//! BENCH_compile.json.  Cargo runs benches with CWD = the package root,
+//! so the file lands at rust/BENCH_serving.json.
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use nullanet::bench_util::{bench, Table};
+use nullanet::bench_util::{bench, BenchResult, Table};
 use nullanet::coordinator::{engine, engine::InferenceEngine, Coordinator, CoordinatorConfig};
-use nullanet::util::{W256, W512};
-use nullanet::{data, isf, model, synth};
+use nullanet::isf::{extract, IsfConfig, LayerObservations};
+use nullanet::jsonio::{num, obj, s, Json};
+use nullanet::model::{Arch, NetArtifacts, Tensor, ThresholdLayer};
+use nullanet::netlist::LogicTape;
+use nullanet::synth::{optimize_layer, SynthConfig};
+use nullanet::util::{transpose_to_planes, BitVec, BitWord, SplitMix64, W256, W512};
+
+const N_IN: usize = 16;
+const HIDDEN: usize = 20;
+const N_OUT: usize = 10;
+const BATCH: usize = 512;
+
+fn tensor(shape: Vec<usize>, f32s: Vec<f32>) -> Tensor {
+    Tensor { shape, f32s }
+}
+
+fn random_tensor(rng: &mut SplitMix64, shape: Vec<usize>) -> Tensor {
+    let numel: usize = shape.iter().product();
+    tensor(shape, (0..numel).map(|_| rng.normal() as f32).collect())
+}
+
+fn threshold_layer(rng: &mut SplitMix64, n_in: usize, n_out: usize) -> ThresholdLayer {
+    ThresholdLayer {
+        n_in,
+        n_out,
+        w: (0..n_in * n_out).map(|_| rng.normal() as f32).collect(),
+        theta: (0..n_out).map(|_| rng.normal() as f32).collect(),
+        flip: (0..n_out).map(|_| rng.bool(0.2)).collect(),
+    }
+}
+
+fn observe(layer: &ThresholdLayer, rng: &mut SplitMix64, n_samples: usize) -> LayerObservations {
+    let in_stride = (layer.n_in + 7) / 8;
+    let out_stride = (layer.n_out + 7) / 8;
+    let mut inputs = vec![0u8; n_samples * in_stride];
+    let mut outputs = vec![0u8; n_samples * out_stride];
+    for sample in 0..n_samples {
+        let bits = BitVec::from_bools((0..layer.n_in).map(|_| rng.bool(0.5)));
+        for i in bits.iter_ones() {
+            inputs[sample * in_stride + i / 8] |= 1 << (i % 8);
+        }
+        let out = layer.eval(&bits);
+        for j in out.iter_ones() {
+            outputs[sample * out_stride + j / 8] |= 1 << (j % 8);
+        }
+    }
+    LayerObservations {
+        name: "hidden2".into(),
+        n_in: layer.n_in,
+        n_out: layer.n_out,
+        inputs,
+        outputs,
+        n_samples,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Pre-PR serving path, replicated verbatim: per-image first layer into a
+// BitVec, transpose_to_planes, a freshly allocated full-n_planes scratch
+// + output vec per tape per block, and a per-sample BitVec rebuild in
+// front of the popcount last layer.
+// ---------------------------------------------------------------------
+
+struct NaiveLast {
+    n_out: usize,
+    w_eff: Vec<f32>,
+    correction: Vec<f32>,
+}
+
+impl NaiveLast {
+    fn new(w: &Tensor, sc: &Tensor, b: &Tensor) -> NaiveLast {
+        let (n_in, n_out) = (w.shape[0], w.shape[1]);
+        let mut w_eff = vec![0f32; n_in * n_out];
+        let mut colsum = vec![0f32; n_out];
+        for i in 0..n_in {
+            for j in 0..n_out {
+                let v = w.f32s[i * n_out + j] * sc.f32s[j];
+                w_eff[i * n_out + j] = v;
+                colsum[j] += v;
+            }
+        }
+        let correction = (0..n_out).map(|j| b.f32s[j] - colsum[j]).collect();
+        NaiveLast { n_out, w_eff, correction }
+    }
+
+    fn logits(&self, bits: &BitVec) -> Vec<f32> {
+        let mut acc = vec![0f32; self.n_out];
+        for i in bits.iter_ones() {
+            let row = &self.w_eff[i * self.n_out..(i + 1) * self.n_out];
+            for (j, &w) in row.iter().enumerate() {
+                acc[j] += w;
+            }
+        }
+        (0..self.n_out)
+            .map(|j| 2.0 * acc[j] + self.correction[j])
+            .collect()
+    }
+}
+
+fn naive_first_layer(net: &NetArtifacts, img: &[f32]) -> BitVec {
+    let w = &net.tensors["w1"];
+    let sc = &net.tensors["scale1"];
+    let b = &net.tensors["bias1"];
+    let (n_in, n_out) = (w.shape[0], w.shape[1]);
+    let mut z = vec![0f32; n_out];
+    for (i, &x) in img.iter().enumerate().take(n_in) {
+        if x == 0.0 {
+            continue;
+        }
+        let row = &w.f32s[i * n_out..(i + 1) * n_out];
+        for (j, &wv) in row.iter().enumerate() {
+            z[j] += x * wv;
+        }
+    }
+    BitVec::from_bools((0..n_out).map(|j| z[j] * sc.f32s[j] + b.f32s[j] >= 0.0))
+}
+
+fn naive_infer_batch<W: BitWord>(
+    net: &NetArtifacts,
+    tapes: &[LogicTape],
+    last: &NaiveLast,
+    images: &[&[f32]],
+) -> Vec<Vec<f32>> {
+    let mut out_all = Vec::with_capacity(images.len());
+    for chunk in images.chunks(W::LANES) {
+        let first: Vec<BitVec> = chunk.iter().map(|im| naive_first_layer(net, im)).collect();
+        let width = first[0].len();
+        let mut cur: Vec<W> = transpose_to_planes(&first, width);
+        for tape in tapes {
+            let mut out = vec![W::ZERO; tape.outputs.len()];
+            let mut scratch = tape.make_scratch::<W>();
+            tape.eval_into(&cur, &mut out, &mut scratch);
+            cur = out;
+        }
+        for samp in 0..chunk.len() {
+            let bits = BitVec::from_bools((0..cur.len()).map(|j| cur[j].get_lane(samp)));
+            out_all.push(last.logits(&bits));
+        }
+    }
+    out_all
+}
 
 fn main() {
-    let art = match model::Artifacts::load(&nullanet::artifacts_dir()) {
-        Ok(a) => a,
-        Err(e) => {
-            eprintln!("skipping (run `make artifacts` first): {e}");
-            return;
-        }
-    };
-    let net = art.net("net11").expect("net11").clone();
-    let ds = data::Dataset::load(&art.test_path).expect("test set").take(512);
+    let mut rng = SplitMix64::new(42);
     let cap = std::env::var("NULLANET_BENCH_CAP")
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(2000);
 
-    // Build the three engines.
-    let obs = isf::load_observations(&net.dir.join("activations.bin")).unwrap();
-    let tapes: Vec<_> = obs
-        .iter()
-        .map(|o| {
-            let l = isf::extract(o, &isf::IsfConfig { max_patterns: cap });
-            synth::optimize_layer(&o.name, &l, &synth::SynthConfig::default()).tape
+    // Synthesize the hidden layer (Table-5 style: one parameter-free
+    // Boolean stage between the f32 first layer and the popcount last).
+    let hidden = threshold_layer(&mut rng, HIDDEN, HIDDEN);
+    let obs = observe(&hidden, &mut rng, 800);
+    let isf = extract(&obs, &IsfConfig { max_patterns: cap });
+    let opt = optimize_layer("hidden2", &isf, &SynthConfig::default());
+    let tape = opt.tape;
+
+    // The surrounding net: random f32 first/last layers + the threshold
+    // form of the hidden layer for the reference engine.
+    let mut tensors = BTreeMap::new();
+    tensors.insert("w1".to_string(), random_tensor(&mut rng, vec![N_IN, HIDDEN]));
+    tensors.insert("scale1".to_string(), tensor(vec![HIDDEN], vec![1.0; HIDDEN]));
+    tensors.insert("bias1".to_string(), random_tensor(&mut rng, vec![HIDDEN]));
+    tensors.insert("w2".to_string(), tensor(vec![HIDDEN, HIDDEN], hidden.w.clone()));
+    tensors.insert("theta2".to_string(), tensor(vec![HIDDEN], hidden.theta.clone()));
+    tensors.insert(
+        "flip2".to_string(),
+        tensor(vec![HIDDEN], hidden.flip.iter().map(|&f| f as u8 as f32).collect()),
+    );
+    tensors.insert("w3".to_string(), random_tensor(&mut rng, vec![HIDDEN, N_OUT]));
+    tensors.insert("scale3".to_string(), tensor(vec![N_OUT], vec![1.0; N_OUT]));
+    tensors.insert("bias3".to_string(), random_tensor(&mut rng, vec![N_OUT]));
+    let net = NetArtifacts::detached(
+        "bench".to_string(),
+        Arch::Mlp { sizes: vec![N_IN, HIDDEN, HIDDEN, N_OUT] },
+        tensors,
+        f64::NAN,
+    );
+
+    // Sparse-ish random images (zero-skipping first layer sees ~50%).
+    let images: Vec<Vec<f32>> = (0..BATCH)
+        .map(|_| {
+            (0..N_IN)
+                .map(|_| if rng.bool(0.5) { 0.0 } else { rng.normal() as f32 })
+                .collect()
         })
         .collect();
-    let logic = Arc::new(engine::LogicEngine::<u64>::new(net.clone(), tapes.clone()).unwrap());
-    let logic256 =
-        Arc::new(engine::LogicEngine::<W256>::new(net.clone(), tapes.clone()).unwrap());
-    let logic512 = Arc::new(engine::LogicEngine::<W512>::new(net.clone(), tapes).unwrap());
-    let thresh = Arc::new(engine::ThresholdEngine::new(net.clone()).unwrap());
-    let xla = engine::XlaEngine::from_net(&net, "model_b64", 64, 784, 10)
-        .ok()
-        .map(Arc::new);
+    let image_refs: Vec<&[f32]> = images.iter().map(|v| v.as_slice()).collect();
 
-    // Batch = 512 so the wider planes get full blocks (the 64-lane
-    // engine chews through it in 8 passes).
-    let n_bench = 512.min(ds.n);
-    let images: Vec<&[f32]> = (0..n_bench).map(|i| ds.image(i)).collect();
-    let budget = Duration::from_millis(1500);
-    let mut table = Table::new(
-        &format!("End-to-end inference engines (batch = {n_bench})"),
-        &["Engine", "batch latency", "images/s", "param bytes/inference"],
+    let logic64 = engine::LogicEngine::<u64>::new(net.clone(), vec![tape.clone()]).unwrap();
+    let logic256 = engine::LogicEngine::<W256>::new(net.clone(), vec![tape.clone()]).unwrap();
+    let logic512 = engine::LogicEngine::<W512>::new(net.clone(), vec![tape.clone()]).unwrap();
+    let thresh = engine::ThresholdEngine::new(net.clone()).unwrap();
+    let last = NaiveLast::new(
+        &net.tensors["w3"],
+        &net.tensors["scale3"],
+        &net.tensors["bias3"],
     );
-    let mut add_row = |name: &str, eng: &dyn InferenceEngine| {
-        let r = bench(&format!("{name} batch{n_bench}"), budget, || {
-            std::hint::black_box(eng.infer_batch(std::hint::black_box(&images)));
+    let tapes = vec![tape.clone()];
+
+    // The scheduled engine must be bit-identical to the pre-PR path
+    // (same f32 accumulation order throughout) — assert, don't assume.
+    let want = naive_infer_batch::<u64>(&net, &tapes, &last, &image_refs);
+    assert_eq!(logic64.infer_batch(&image_refs), want, "w64 scheduled != pre-PR path");
+    assert_eq!(logic256.infer_batch(&image_refs), want, "w256 scheduled != pre-PR path");
+    assert_eq!(logic512.infer_batch(&image_refs), want, "w512 scheduled != pre-PR path");
+
+    let stats = logic64.schedule_stats().expect("logic engine stats");
+    println!(
+        "schedule: {} ops ({} stripped), max_live {} vs {} unscheduled planes \
+         => {} scratch words/block",
+        stats.n_ops,
+        stats.ops_stripped,
+        stats.max_live,
+        stats.planes_unscheduled,
+        stats.scratch_planes,
+    );
+
+    let budget = Duration::from_millis(700);
+    let mut results: Vec<(String, usize, BenchResult)> = Vec::new();
+    {
+        let mut run = |name: &str, width: usize, f: &mut dyn FnMut()| {
+            let r = bench(name, budget, f);
+            results.push((name.to_string(), width, r));
+        };
+        run("logic w64 scheduled+pooled", 64, &mut || {
+            std::hint::black_box(logic64.infer_batch(std::hint::black_box(&image_refs)));
         });
+        run("logic w64 pre-PR path", 64, &mut || {
+            std::hint::black_box(naive_infer_batch::<u64>(
+                &net,
+                &tapes,
+                &last,
+                std::hint::black_box(&image_refs),
+            ));
+        });
+        run("logic w256 scheduled+pooled", 256, &mut || {
+            std::hint::black_box(logic256.infer_batch(std::hint::black_box(&image_refs)));
+        });
+        run("logic w256 pre-PR path", 256, &mut || {
+            std::hint::black_box(naive_infer_batch::<W256>(
+                &net,
+                &tapes,
+                &last,
+                std::hint::black_box(&image_refs),
+            ));
+        });
+        run("logic w512 scheduled+pooled", 512, &mut || {
+            std::hint::black_box(logic512.infer_batch(std::hint::black_box(&image_refs)));
+        });
+        run("logic w512 pre-PR path", 512, &mut || {
+            std::hint::black_box(naive_infer_batch::<W512>(
+                &net,
+                &tapes,
+                &last,
+                std::hint::black_box(&image_refs),
+            ));
+        });
+        run("threshold (Eq.1 dot products)", 64, &mut || {
+            std::hint::black_box(thresh.infer_batch(std::hint::black_box(&image_refs)));
+        });
+    }
+
+    let mut table = Table::new(
+        &format!("End-to-end inference engines (batch = {BATCH})"),
+        &["Engine", "batch latency", "per image", "images/s"],
+    );
+    for (name, _width, r) in &results {
         table.row(&[
-            name.into(),
+            name.clone(),
             nullanet::bench_util::format_ns(r.median_ns),
-            format!("{:.0}", r.throughput(n_bench as f64)),
-            eng.param_bytes_per_inference().to_string(),
+            nullanet::bench_util::format_ns(r.median_ns / BATCH as f64),
+            format!("{:.0}", r.throughput(BATCH as f64)),
         ]);
-    };
-    add_row("logic w64 (synthesized tapes)", &*logic);
-    add_row("logic w256 (synthesized tapes)", &*logic256);
-    add_row("logic w512 (synthesized tapes)", &*logic512);
-    add_row("threshold (Eq.1 dot products)", &*thresh);
-    if let Some(x) = &xla {
-        add_row("xla fp32 (PJRT baseline)", &**x);
     }
     table.print();
 
-    // Coordinator throughput under concurrent load: big batches are
-    // sharded into plane-width blocks over the worker pool.
+    // Scheduled-vs-pre-PR deltas (the PR's acceptance evidence).
+    let median = |name: &str| {
+        results
+            .iter()
+            .find(|(n, _, _)| n == name)
+            .map(|(_, _, r)| r.median_ns)
+            .unwrap()
+    };
+    let mut speedups: Vec<(&str, f64)> = Vec::new();
+    for width in [64usize, 256, 512] {
+        let sched = median(&format!("logic w{width} scheduled+pooled"));
+        let prepr = median(&format!("logic w{width} pre-PR path"));
+        let ratio = prepr / sched;
+        println!("w{width}: scheduled+pooled is {ratio:.2}x the pre-PR path");
+        speedups.push(match width {
+            64 => ("speedup_w64", ratio),
+            256 => ("speedup_w256", ratio),
+            _ => ("speedup_w512", ratio),
+        });
+    }
+
+    // Coordinator throughput under concurrent load: big batches sharded
+    // into plane-width blocks over the worker pool.
+    let logic64: Arc<dyn InferenceEngine> = Arc::new(
+        engine::LogicEngine::<u64>::new(net.clone(), vec![tape.clone()]).unwrap(),
+    );
+    let logic512: Arc<dyn InferenceEngine> =
+        Arc::new(engine::LogicEngine::<W512>::new(net.clone(), vec![tape.clone()]).unwrap());
     for (label, eng, workers) in [
-        ("w64, 1 worker", Arc::clone(&logic) as Arc<dyn InferenceEngine>, 1),
-        ("w64, 4 workers", Arc::clone(&logic) as Arc<dyn InferenceEngine>, 4),
-        ("w512, 4 workers", Arc::clone(&logic512) as Arc<dyn InferenceEngine>, 4),
+        ("w64, 1 worker", Arc::clone(&logic64), 1),
+        ("w64, 4 workers", Arc::clone(&logic64), 4),
+        ("w512, 4 workers", Arc::clone(&logic512), 4),
     ] {
         let coord = Arc::new(Coordinator::start(
             eng,
@@ -90,7 +342,7 @@ fn main() {
         let t0 = Instant::now();
         let mut pending = Vec::with_capacity(n_req);
         for i in 0..n_req {
-            pending.push(coord.submit(ds.image(i % ds.n).to_vec()).unwrap());
+            pending.push(coord.submit(images[i % images.len()].clone()).unwrap());
         }
         for rx in pending {
             rx.recv().unwrap();
@@ -104,4 +356,43 @@ fn main() {
             coord.metrics.summary()
         );
     }
+
+    // Machine-readable trajectory, mirroring BENCH_compile.json.
+    let mut pairs = vec![
+        ("bench", s("e2e_serving")),
+        ("batch", num(BATCH as f64)),
+        ("isf_cap", num(cap as f64)),
+        ("tape_ops", num(stats.n_ops as f64)),
+        ("ops_stripped", num(stats.ops_stripped as f64)),
+        ("max_live", num(stats.max_live as f64)),
+        ("planes_unscheduled", num(stats.planes_unscheduled as f64)),
+        ("scratch_planes", num(stats.scratch_planes as f64)),
+        (
+            "results",
+            Json::Arr(
+                results
+                    .iter()
+                    .map(|(name, width, r)| {
+                        obj(vec![
+                            ("name", s(name)),
+                            ("width", num(*width as f64)),
+                            ("median_ns", num(r.median_ns)),
+                            // Median batch latency amortized per image —
+                            // NOT a per-image latency percentile (see the
+                            // server's latency histogram for those).
+                            ("image_ns", num(r.median_ns / BATCH as f64)),
+                            ("imgs_per_s", num(r.throughput(BATCH as f64))),
+                            ("iters", num(r.iters as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ];
+    for (k, v) in speedups {
+        pairs.push((k, num(v)));
+    }
+    let json = obj(pairs);
+    std::fs::write("BENCH_serving.json", json.to_string()).unwrap();
+    println!("wrote BENCH_serving.json");
 }

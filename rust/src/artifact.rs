@@ -266,6 +266,17 @@ impl CompiledModel {
     pub fn tapes(&self) -> Vec<LogicTape> {
         self.layers.iter().map(|l| l.tape.clone()).collect()
     }
+
+    /// Consume the artifact into the engine constructor's inputs,
+    /// *moving* the tapes and parameter tensors instead of cloning them
+    /// (the `engine_from_artifact` path: load → engine with zero
+    /// copies).  Layer stats are dropped here; callers that need them
+    /// must read them before converting.
+    pub fn into_net_and_tapes(self) -> (NetArtifacts, Vec<LogicTape>) {
+        let CompiledModel { name, arch, accuracy_test, layers, params } = self;
+        let net = NetArtifacts::detached(name, arch, params, accuracy_test);
+        (net, layers.into_iter().map(|l| l.tape).collect())
+    }
 }
 
 // ---------------------------------------------------------------------

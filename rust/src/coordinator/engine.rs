@@ -11,15 +11,14 @@
 //! * [`XlaEngine`] — the fp32 baseline served through the PJRT runtime
 //!   (the AOT-lowered JAX graph; Nets 1.2/2.2).
 
-use std::marker::PhantomData;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::artifact::{required_params, CompiledModel};
 use crate::format_err;
 use crate::model::{Arch, NetArtifacts, ThresholdLayer};
-use crate::netlist::LogicTape;
+use crate::netlist::{LogicTape, ScheduleStats, ScheduledTape};
 use crate::util::error::Result;
-use crate::util::{transpose_to_planes, BitVec, BitWord, W256, W512};
+use crate::util::{BitVec, BitWord, W256, W512};
 
 /// A batched inference engine: images in, logits out.
 pub trait InferenceEngine: Send + Sync {
@@ -41,6 +40,13 @@ pub trait InferenceEngine: Send + Sync {
     /// mismatched requests with an error line instead of a garbage
     /// prediction (None = unchecked).
     fn input_dim(&self) -> Option<usize> {
+        None
+    }
+    /// Tape-scheduling statistics, for engines whose request path runs
+    /// [`ScheduledTape`]s: dead-stripped op counts and the
+    /// liveness-compacted scratch size.  Surfaced per model by
+    /// `{"cmd":"metrics"}`; None for non-logic engines.
+    fn schedule_stats(&self) -> Option<ScheduleStats> {
         None
     }
 }
@@ -84,10 +90,11 @@ pub fn cnn_logic_engine_at_width(
 
 /// Build the serving engine for a loaded compiled-model artifact at any
 /// supported plane width — the "serve many" half of
-/// compile-once/serve-many.  No synthesis happens here: the tapes come
-/// straight off the artifact.
+/// compile-once/serve-many.  No synthesis happens here, and nothing is
+/// copied: the artifact is consumed, moving its tapes and parameter
+/// tensors straight into the engine.
 pub fn engine_from_artifact(
-    compiled: &CompiledModel,
+    compiled: CompiledModel,
     width: usize,
 ) -> Result<Arc<dyn InferenceEngine>> {
     for p in required_params(&compiled.arch) {
@@ -95,30 +102,31 @@ pub fn engine_from_artifact(
             crate::bail!("artifact {}: missing parameter tensor {p}", compiled.name);
         }
     }
-    let net = compiled.to_net_artifacts();
-    match &compiled.arch {
-        Arch::Mlp { sizes } => {
-            let hidden = sizes.len().saturating_sub(3);
-            if compiled.layers.len() != hidden {
-                crate::bail!(
-                    "artifact {}: {} compiled layers but the {}-layer MLP needs {hidden} hidden tapes",
-                    compiled.name,
-                    compiled.layers.len(),
-                    sizes.len().saturating_sub(1)
-                );
-            }
-            logic_engine_at_width(net, compiled.tapes(), width)
+    let is_cnn = matches!(compiled.arch, Arch::Cnn { .. });
+    if let Arch::Mlp { ref sizes } = compiled.arch {
+        let hidden = sizes.len().saturating_sub(3);
+        if compiled.layers.len() != hidden {
+            crate::bail!(
+                "artifact {}: {} compiled layers but the {}-layer MLP needs {hidden} hidden tapes",
+                compiled.name,
+                compiled.layers.len(),
+                sizes.len().saturating_sub(1)
+            );
         }
-        Arch::Cnn { .. } => {
-            if compiled.layers.len() != 1 {
-                crate::bail!(
-                    "artifact {}: CNN artifacts carry exactly one compiled layer (conv2), found {}",
-                    compiled.name,
-                    compiled.layers.len()
-                );
-            }
-            cnn_logic_engine_at_width(net, compiled.layers[0].tape.clone(), width)
-        }
+    } else if compiled.layers.len() != 1 {
+        crate::bail!(
+            "artifact {}: CNN artifacts carry exactly one compiled layer (conv2), found {}",
+            compiled.name,
+            compiled.layers.len()
+        );
+    }
+    let (net, mut tapes) = compiled.into_net_and_tapes();
+    if is_cnn {
+        // Exactly one layer (checked above): move the conv2 tape out.
+        let conv2 = tapes.pop().expect("one compiled CNN layer");
+        cnn_logic_engine_at_width(net, conv2, width)
+    } else {
+        logic_engine_at_width(net, tapes, width)
     }
 }
 
@@ -126,13 +134,16 @@ pub fn engine_from_artifact(
 // Shared first/last layer math
 // ---------------------------------------------------------------------
 
-/// First MLP layer: bits_j = [ (x·w_j)·s_j + b_j >= 0 ].
-fn mlp_first_layer(net: &NetArtifacts, img: &[f32]) -> BitVec {
+/// Zero-skipping first-layer pre-activation accumulate for one image:
+/// `z[j] = Σ_i x_i · w1[i][j]`.  One definition shared by the per-image
+/// and block paths, so the threshold reference and the logic engines
+/// can never diverge in f32 accumulation order (the bench's bit-identity
+/// assertion depends on this).
+fn first_layer_preact(net: &NetArtifacts, img: &[f32], z: &mut [f32]) {
     let w = &net.tensors["w1"];
-    let s = &net.tensors["scale1"];
-    let b = &net.tensors["bias1"];
     let (n_in, n_out) = (w.shape[0], w.shape[1]);
-    let mut z = vec![0f32; n_out];
+    debug_assert_eq!(z.len(), n_out);
+    z.fill(0.0);
     for (i, &x) in img.iter().enumerate().take(n_in) {
         if x == 0.0 {
             continue;
@@ -142,7 +153,46 @@ fn mlp_first_layer(net: &NetArtifacts, img: &[f32]) -> BitVec {
             z[j] += x * wv;
         }
     }
+}
+
+/// First MLP layer: bits_j = [ (x·w_j)·s_j + b_j >= 0 ].
+fn mlp_first_layer(net: &NetArtifacts, img: &[f32]) -> BitVec {
+    let s = &net.tensors["scale1"];
+    let b = &net.tensors["bias1"];
+    let n_out = net.tensors["w1"].shape[1];
+    let mut z = vec![0f32; n_out];
+    first_layer_preact(net, img, &mut z);
     BitVec::from_bools((0..n_out).map(|j| z[j] * s.f32s[j] + b.f32s[j] >= 0.0))
+}
+
+/// Block-level first MLP layer: the transposed (input-major, zero-
+/// skipping) GEMM per sample, written *directly* into the caller's bit
+/// planes — plane `j`, lane `s` = sign bit of sample `s`'s neuron `j`.
+/// Replaces the per-image `BitVec` + `transpose_to_planes` round trip on
+/// the serving path; `z` (one neuron row of pre-activations, reused
+/// across samples) and `planes` come from the engine's scratch pool, so
+/// the call allocates nothing.  Lanes `images.len()..` are left clear.
+fn first_layer_block<W: BitWord>(
+    net: &NetArtifacts,
+    images: &[&[f32]],
+    z: &mut [f32],
+    planes: &mut [W],
+) {
+    let s = &net.tensors["scale1"];
+    let b = &net.tensors["bias1"];
+    debug_assert!(images.len() <= W::LANES);
+    debug_assert_eq!(planes.len(), z.len());
+    for p in planes.iter_mut() {
+        *p = W::ZERO;
+    }
+    for (samp, img) in images.iter().enumerate() {
+        first_layer_preact(net, img, z);
+        for (j, &zj) in z.iter().enumerate() {
+            if zj * s.f32s[j] + b.f32s[j] >= 0.0 {
+                planes[j].set_lane(samp, true);
+            }
+        }
+    }
 }
 
 /// Last layer on bits (popcount form): logits = 2·(bits·w_eff) − colsum +
@@ -186,6 +236,46 @@ impl PopcountLast {
             .map(|j| 2.0 * acc[j] + self.correction[j])
             .collect()
     }
+
+    /// Plane-parallel last layer: consume `n` samples straight off the
+    /// lane-planes (plane `i`, lane `s` = bit `i` of sample `s`) with no
+    /// per-sample `BitVec` rebuild.  Set lanes are walked limb-by-limb
+    /// with `trailing_zeros`; `acc` (`W::LANES * n_out`, pooled) is the
+    /// only intermediate, so nothing but the returned logits allocates.
+    /// Lanes `>= n` may hold garbage (complemented tape ops set them)
+    /// and are ignored.
+    fn logits_block<W: BitWord>(&self, planes: &[W], n: usize, acc: &mut [f32]) -> Vec<Vec<f32>> {
+        debug_assert_eq!(planes.len(), self.n_in);
+        debug_assert!(n <= W::LANES);
+        let acc = &mut acc[..n * self.n_out];
+        acc.fill(0.0);
+        // Lanes >= n never contribute; skip their whole limbs outright.
+        let n_limbs = n.div_ceil(64);
+        for (i, plane) in planes.iter().enumerate() {
+            let row = &self.w_eff[i * self.n_out..(i + 1) * self.n_out];
+            for (li, &limb) in plane.limbs().iter().take(n_limbs).enumerate() {
+                let mut bits = limb;
+                while bits != 0 {
+                    let s = li * 64 + bits.trailing_zeros() as usize;
+                    if s >= n {
+                        break; // lanes are ascending within a limb
+                    }
+                    bits &= bits - 1;
+                    let a = &mut acc[s * self.n_out..(s + 1) * self.n_out];
+                    for (av, &wv) in a.iter_mut().zip(row) {
+                        *av += wv;
+                    }
+                }
+            }
+        }
+        (0..n)
+            .map(|s| {
+                (0..self.n_out)
+                    .map(|j| 2.0 * acc[s * self.n_out + j] + self.correction[j])
+                    .collect()
+            })
+            .collect()
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -193,18 +283,42 @@ impl PopcountLast {
 // ---------------------------------------------------------------------
 
 /// The synthesized-network engine (MLP form).  Hidden layers (2..L-1)
-/// run as bit-parallel tapes over `W::LANES`-request planes.
+/// run as liveness-compacted [`ScheduledTape`]s over `W::LANES`-request
+/// planes; all per-block scratch comes from a checkout/return pool, so
+/// steady-state inference allocates nothing but the returned logits.
 pub struct LogicEngine<W: BitWord = u64> {
     net: NetArtifacts,
-    tapes: Vec<LogicTape>,
+    tapes: Vec<ScheduledTape>,
     last: PopcountLast,
+    /// Aggregated scheduling stats across the hidden stack (metrics).
+    stats: ScheduleStats,
+    /// First-layer output width (= tape 0's input plane count).
+    n_first_out: usize,
+    /// Reusable per-block scratch: checked out at `infer_block` entry,
+    /// returned at exit.  Grows to the number of concurrently executing
+    /// blocks (≤ worker count) and is then stable.
+    pool: Mutex<Vec<MlpScratch<W>>>,
     name: String,
-    _width: PhantomData<fn() -> W>,
+}
+
+/// One block's worth of reusable evaluation state for [`LogicEngine`].
+struct MlpScratch<W: BitWord> {
+    /// First-layer pre-activations for one sample (reused per lane).
+    z: Vec<f32>,
+    /// First-layer output bit planes (the first tape's inputs).
+    planes: Vec<W>,
+    /// Per-tape output planes: tape k's outputs feed tape k+1.
+    tape_out: Vec<Vec<W>>,
+    /// Per-tape compacted eval scratch (`scratch_planes()` words each).
+    tape_scratch: Vec<Vec<W>>,
+    /// Popcount last-layer accumulators (`W::LANES * n_out`).
+    acc: Vec<f32>,
 }
 
 impl<W: BitWord> LogicEngine<W> {
     /// Build from artifacts + the synthesized hidden-layer tapes
-    /// (ordered: layer2, layer3, ...).
+    /// (ordered: layer2, layer3, ...).  Each tape is dead-stripped and
+    /// liveness-scheduled here, once.
     pub fn new(net: NetArtifacts, tapes: Vec<LogicTape>) -> Result<LogicEngine<W>> {
         let Arch::Mlp { ref sizes } = net.arch else {
             crate::bail!("LogicEngine::new expects an MLP; use new_cnn");
@@ -213,7 +327,28 @@ impl<W: BitWord> LogicEngine<W> {
         let last =
             PopcountLast::new(&net, &format!("w{nl}"), &format!("scale{nl}"), &format!("bias{nl}"));
         let name = format!("logic[w{}]:{}", W::LANES, net.name);
-        Ok(LogicEngine { net, tapes, last, name, _width: PhantomData })
+        let n_first_out = net.tensors["w1"].shape[1];
+        let scheduled: Vec<ScheduledTape> = tapes.iter().map(ScheduledTape::new).collect();
+        let stats = ScheduleStats::aggregate(scheduled.iter().map(|t| *t.stats()));
+        Ok(LogicEngine {
+            net,
+            tapes: scheduled,
+            last,
+            stats,
+            n_first_out,
+            pool: Mutex::new(Vec::new()),
+            name,
+        })
+    }
+
+    fn fresh_scratch(&self) -> MlpScratch<W> {
+        MlpScratch {
+            z: vec![0.0; self.n_first_out],
+            planes: vec![W::ZERO; self.n_first_out],
+            tape_out: self.tapes.iter().map(|t| vec![W::ZERO; t.n_outputs()]).collect(),
+            tape_scratch: self.tapes.iter().map(|t| t.make_scratch::<W>()).collect(),
+            acc: vec![0.0; W::LANES * self.last.n_out],
+        }
     }
 
     fn infer_block(&self, images: &[&[f32]]) -> Vec<Vec<f32>> {
@@ -224,25 +359,24 @@ impl<W: BitWord> LogicEngine<W> {
         }
         debug_assert!(images.len() <= W::LANES);
         let n = images.len();
-        // First layer per image -> bit planes (sample s in lane s).
-        let first: Vec<BitVec> =
-            images.iter().map(|im| mlp_first_layer(&self.net, im)).collect();
-        let width = first[0].len();
-        let mut cur: Vec<W> = transpose_to_planes(&first, width);
-        // Hidden layers: tape after tape on the planes.
-        for tape in &self.tapes {
-            let mut out = vec![W::ZERO; tape.outputs.len()];
-            let mut scratch = tape.make_scratch::<W>();
-            tape.eval_into(&cur, &mut out, &mut scratch);
-            cur = out;
+        let popped = self.pool.lock().unwrap().pop();
+        let mut scratch = popped.unwrap_or_else(|| self.fresh_scratch());
+        // First layer for the whole block, straight into bit planes.
+        first_layer_block(&self.net, images, &mut scratch.z, &mut scratch.planes);
+        // Hidden layers: scheduled tape after scheduled tape.
+        for k in 0..self.tapes.len() {
+            let (prev, rest) = scratch.tape_out.split_at_mut(k);
+            let cur: &[W] = if k == 0 { &scratch.planes } else { &prev[k - 1] };
+            self.tapes[k].eval_into(cur, &mut rest[0], &mut scratch.tape_scratch[k]);
         }
-        // Last layer per sample.
-        (0..n)
-            .map(|s| {
-                let bits = BitVec::from_bools((0..cur.len()).map(|j| cur[j].get_lane(s)));
-                self.last.logits(&bits)
-            })
-            .collect()
+        // Last layer, plane-parallel.
+        let final_planes: &[W] = match scratch.tape_out.last() {
+            Some(out) => out,
+            None => &scratch.planes,
+        };
+        let logits = self.last.logits_block(final_planes, n, &mut scratch.acc);
+        self.pool.lock().unwrap().push(scratch);
+        logits
     }
 }
 
@@ -274,6 +408,10 @@ impl<W: BitWord> InferenceEngine for LogicEngine<W> {
             Arch::Mlp { sizes } => sizes.first().copied(),
             Arch::Cnn { .. } => Some(28 * 28),
         }
+    }
+
+    fn schedule_stats(&self) -> Option<ScheduleStats> {
+        Some(self.stats)
     }
 }
 
@@ -539,6 +677,49 @@ mod tests {
         let thresh = ThresholdEngine::new(net).unwrap();
         assert!(logic.param_bytes_per_inference() < thresh.param_bytes_per_inference());
     }
+
+    #[test]
+    fn logic_engine_chains_multiple_tapes() {
+        // swap ∘ swap == identity: a double-swap stack must agree with a
+        // tape-less engine (last layer reading the first-layer planes),
+        // exercising the tape_out chaining in infer_block.
+        let net = tiny_net();
+        let double = LogicEngine::<u64>::new(net.clone(), vec![swap_tape(), swap_tape()]).unwrap();
+        let none = LogicEngine::<u64>::new(net, vec![]).unwrap();
+        let images: Vec<Vec<f32>> = (0..130)
+            .map(|i| vec![(i % 2) as f32, ((i / 2) % 2) as f32])
+            .collect();
+        let refs: Vec<&[f32]> = images.iter().map(|v| v.as_slice()).collect();
+        assert_eq!(double.infer_batch(&refs), none.infer_batch(&refs));
+    }
+
+    #[test]
+    fn scratch_pool_reuse_is_deterministic() {
+        // Two passes over the same batch must agree exactly: the second
+        // pass runs on recycled scratch, so any stale state would show.
+        let net = tiny_net();
+        let logic = LogicEngine::<W256>::new(net, vec![swap_tape()]).unwrap();
+        let images: Vec<Vec<f32>> = (0..300)
+            .map(|i| vec![(i % 2) as f32, ((i / 3) % 2) as f32])
+            .collect();
+        let refs: Vec<&[f32]> = images.iter().map(|v| v.as_slice()).collect();
+        let a = logic.infer_batch(&refs);
+        let b = logic.infer_batch(&refs);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn logic_engine_reports_schedule_stats() {
+        let net = tiny_net();
+        let logic = LogicEngine::<u64>::new(net.clone(), vec![swap_tape()]).unwrap();
+        let stats = logic.schedule_stats().expect("logic engines have stats");
+        // The swap tape is pure wiring (no AND ops survive).
+        assert_eq!(stats.n_ops, 0);
+        assert_eq!(stats.max_live, 0);
+        assert!(stats.scratch_planes <= stats.planes_unscheduled);
+        // The reference engine reads all params and runs no tapes.
+        assert!(ThresholdEngine::new(net).unwrap().schedule_stats().is_none());
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -547,17 +728,38 @@ mod tests {
 // ---------------------------------------------------------------------
 
 /// The CNN variant of the logic engine.  conv2's per-patch Boolean
-/// function (90 bits -> 20 bits) runs as a tape, applied over all 11x11
-/// patch positions with `W::LANES`-way bit-parallelism (positions x
-/// images are flattened into sample planes).
+/// function (90 bits -> 20 bits) runs as a scheduled tape, applied over
+/// all 11x11 patch positions with `W::LANES`-way bit-parallelism
+/// (positions x images are flattened into sample planes).  All
+/// per-image buffers come from a checkout/return scratch pool.
 pub struct CnnLogicEngine<W: BitWord = u64> {
     net: NetArtifacts,
-    conv2_tape: LogicTape,
+    conv2: ScheduledTape,
     last: PopcountLast,
     c1: usize,
     c2: usize,
+    stats: ScheduleStats,
+    pool: Mutex<Vec<CnnScratch<W>>>,
     name: String,
-    _width: PhantomData<fn() -> W>,
+}
+
+/// Reusable evaluation state for [`CnnLogicEngine`] (one per
+/// concurrently executing `infer_batch`).
+struct CnnScratch<W: BitWord> {
+    /// conv1 + sign bits, 26x26xc1.
+    conv: Vec<bool>,
+    /// Pooled first-stage bits, 13x13xc1.
+    a1: Vec<bool>,
+    /// conv2 tape input planes (9*c1 patch bits).
+    inputs: Vec<W>,
+    /// conv2 tape output planes (c2).
+    out_words: Vec<W>,
+    /// conv2 compacted eval scratch.
+    tape_scratch: Vec<W>,
+    /// conv2 output bits over the 11x11 positions.
+    out_bits: Vec<bool>,
+    /// Pooled last-layer bit pattern (5*5*c2), cleared per image.
+    bits: BitVec,
 }
 
 impl<W: BitWord> CnnLogicEngine<W> {
@@ -567,17 +769,40 @@ impl<W: BitWord> CnnLogicEngine<W> {
         };
         let last = PopcountLast::new(&net, "w3", "scale_w3", "bias_w3");
         let name = format!("logic[w{}]:{}", W::LANES, net.name);
-        Ok(CnnLogicEngine { net, conv2_tape, last, c1, c2, name, _width: PhantomData })
+        let conv2 = ScheduledTape::new(&conv2_tape);
+        let stats = *conv2.stats();
+        Ok(CnnLogicEngine {
+            net,
+            conv2,
+            last,
+            c1,
+            c2,
+            stats,
+            pool: Mutex::new(Vec::new()),
+            name,
+        })
     }
 
-    /// conv1 (f32) + sign + pool for one image -> 13x13xc1 bits.
-    fn first_stage(&self, img: &[f32]) -> Vec<bool> {
+    fn fresh_scratch(&self) -> CnnScratch<W> {
+        CnnScratch {
+            conv: vec![false; 26 * 26 * self.c1],
+            a1: vec![false; 13 * 13 * self.c1],
+            inputs: vec![W::ZERO; self.conv2.n_inputs()],
+            out_words: vec![W::ZERO; self.conv2.n_outputs()],
+            tape_scratch: self.conv2.make_scratch::<W>(),
+            out_bits: vec![false; 11 * 11 * self.c2],
+            bits: BitVec::zeros(5 * 5 * self.c2),
+        }
+    }
+
+    /// conv1 (f32) + sign + pool for one image -> 13x13xc1 bits, written
+    /// into the pooled `conv` / `pooled` buffers (fully overwritten).
+    fn first_stage(&self, img: &[f32], conv: &mut [bool], pooled: &mut [bool]) {
         let k1 = &self.net.tensors["k1"];
         let s1 = &self.net.tensors["scale_k1"];
         let b1 = &self.net.tensors["bias_k1"];
         let c1 = self.c1;
         // 28 -> 26 conv + sign
-        let mut conv = vec![false; 26 * 26 * c1];
         for y in 0..26 {
             for x in 0..26 {
                 for co in 0..c1 {
@@ -585,7 +810,7 @@ impl<W: BitWord> CnnLogicEngine<W> {
                     for dy in 0..3 {
                         for dx in 0..3 {
                             let v = img[(y + dy) * 28 + (x + dx)];
-                            acc += v * k1.f32s[((dy * 3 + dx) * 1 + 0) * c1 + co];
+                            acc += v * k1.f32s[(dy * 3 + dx) * c1 + co];
                         }
                     }
                     conv[(y * 26 + x) * c1 + co] = acc * s1.f32s[co] + b1.f32s[co] >= 0.0;
@@ -593,7 +818,6 @@ impl<W: BitWord> CnnLogicEngine<W> {
             }
         }
         // 2x2 max pool == OR in the bit domain: 26 -> 13
-        let mut pooled = vec![false; 13 * 13 * c1];
         for y in 0..13 {
             for x in 0..13 {
                 for co in 0..c1 {
@@ -604,66 +828,70 @@ impl<W: BitWord> CnnLogicEngine<W> {
                 }
             }
         }
-        pooled
     }
 
-    fn infer_one(&self, img: &[f32]) -> Vec<f32> {
+    fn infer_one(&self, img: &[f32], scratch: &mut CnnScratch<W>) -> Vec<f32> {
         let (c1, c2) = (self.c1, self.c2);
-        let a1 = self.first_stage(img);
-        // conv2 as logic over 11x11 patch positions, W::LANES
-        // positions/plane.
-        let positions: Vec<(usize, usize)> = (0..11)
-            .flat_map(|y| (0..11).map(move |x| (y, x)))
-            .collect();
-        let mut out_bits = vec![false; 11 * 11 * c2];
-        let mut scratch = self.conv2_tape.make_scratch::<W>();
-        debug_assert_eq!(self.conv2_tape.n_inputs, 9 * c1);
-        let mut inputs = vec![W::ZERO; 9 * c1];
-        let mut out_words = vec![W::ZERO; self.conv2_tape.outputs.len()];
-        for block in positions.chunks(W::LANES) {
-            for w in inputs.iter_mut() {
+        self.first_stage(img, &mut scratch.conv, &mut scratch.a1);
+        debug_assert_eq!(self.conv2.n_inputs(), 9 * c1);
+        // conv2 as logic over the 11x11 patch positions (row-major
+        // position index p = y*11 + x), W::LANES positions per pass.
+        let n_pos = 11 * 11;
+        let mut p0 = 0;
+        while p0 < n_pos {
+            let block_len = (n_pos - p0).min(W::LANES);
+            for w in scratch.inputs.iter_mut() {
                 *w = W::ZERO;
             }
-            for (s, &(y, x)) in block.iter().enumerate() {
+            for s in 0..block_len {
+                let (y, x) = ((p0 + s) / 11, (p0 + s) % 11);
                 // patch bit order: (dy, dx, c) row-major — matches the
                 // python exporter and theta_k2 layout.
                 for dy in 0..3 {
                     for dx in 0..3 {
                         for c in 0..c1 {
-                            if a1[((y + dy) * 13 + (x + dx)) * c1 + c] {
-                                inputs[(dy * 3 + dx) * c1 + c].set_lane(s, true);
+                            if scratch.a1[((y + dy) * 13 + (x + dx)) * c1 + c] {
+                                scratch.inputs[(dy * 3 + dx) * c1 + c].set_lane(s, true);
                             }
                         }
                     }
                 }
             }
-            self.conv2_tape.eval_into(&inputs, &mut out_words, &mut scratch);
-            for (s, &(y, x)) in block.iter().enumerate() {
+            self.conv2
+                .eval_into(&scratch.inputs, &mut scratch.out_words, &mut scratch.tape_scratch);
+            for s in 0..block_len {
                 for j in 0..c2 {
-                    out_bits[(y * 11 + x) * c2 + j] = out_words[j].get_lane(s);
+                    scratch.out_bits[(p0 + s) * c2 + j] = scratch.out_words[j].get_lane(s);
                 }
             }
+            p0 += block_len;
         }
         // OR-pool 11 -> 5 (last row/col dropped), then popcount FC.
-        let mut bits = BitVec::zeros(5 * 5 * c2);
+        scratch.bits.clear_bits();
         for y in 0..5 {
             for x in 0..5 {
                 for j in 0..c2 {
-                    let b = out_bits[((2 * y) * 11 + 2 * x) * c2 + j]
-                        || out_bits[((2 * y) * 11 + 2 * x + 1) * c2 + j]
-                        || out_bits[((2 * y + 1) * 11 + 2 * x) * c2 + j]
-                        || out_bits[((2 * y + 1) * 11 + 2 * x + 1) * c2 + j];
-                    bits.set((y * 5 + x) * c2 + j, b);
+                    let b = scratch.out_bits[((2 * y) * 11 + 2 * x) * c2 + j]
+                        || scratch.out_bits[((2 * y) * 11 + 2 * x + 1) * c2 + j]
+                        || scratch.out_bits[((2 * y + 1) * 11 + 2 * x) * c2 + j]
+                        || scratch.out_bits[((2 * y + 1) * 11 + 2 * x + 1) * c2 + j];
+                    if b {
+                        scratch.bits.set((y * 5 + x) * c2 + j, true);
+                    }
                 }
             }
         }
-        self.last.logits(&bits)
+        self.last.logits(&scratch.bits)
     }
 }
 
 impl<W: BitWord> InferenceEngine for CnnLogicEngine<W> {
     fn infer_batch(&self, images: &[&[f32]]) -> Vec<Vec<f32>> {
-        images.iter().map(|img| self.infer_one(img)).collect()
+        let popped = self.pool.lock().unwrap().pop();
+        let mut scratch = popped.unwrap_or_else(|| self.fresh_scratch());
+        let out = images.iter().map(|img| self.infer_one(img, &mut scratch)).collect();
+        self.pool.lock().unwrap().push(scratch);
+        out
     }
 
     fn name(&self) -> &str {
@@ -681,5 +909,9 @@ impl<W: BitWord> InferenceEngine for CnnLogicEngine<W> {
 
     fn input_dim(&self) -> Option<usize> {
         Some(28 * 28)
+    }
+
+    fn schedule_stats(&self) -> Option<ScheduleStats> {
+        Some(self.stats)
     }
 }

@@ -94,6 +94,9 @@ pub struct Coordinator {
     /// batcher sees `Disconnected` instead of waiting out its poll tick.
     tx: Option<SyncSender<Request>>,
     pub metrics: Arc<Metrics>,
+    /// The engine behind the pool — exposed read-only so the metrics
+    /// surface can report engine-level gauges (schedule stats).
+    engine: Arc<dyn InferenceEngine>,
     shutdown: Arc<AtomicBool>,
     batcher: Option<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
@@ -139,12 +142,19 @@ impl Coordinator {
         Coordinator {
             tx: Some(tx),
             metrics,
+            engine,
             shutdown,
             batcher: Some(batcher),
             workers,
             next_id: AtomicU64::new(0),
             cfg,
         }
+    }
+
+    /// The engine this coordinator serves (for engine-level gauges like
+    /// [`engine::InferenceEngine::schedule_stats`]).
+    pub fn engine(&self) -> &Arc<dyn InferenceEngine> {
+        &self.engine
     }
 
     /// Submit one image; returns a receiver for the response.

@@ -23,7 +23,10 @@
 //! * [`aig`] — and-inverter graph with rewrite/balance/refactor
 //! * [`lutmap`] — priority-cut 6-LUT technology mapping
 //! * [`netlist`] — linear AIG "tape" + multi-word bit-parallel simulator
-//!   (generic over [`util::BitWord`]: 64/128/256/512 samples per pass)
+//!   (generic over [`util::BitWord`]: 64/128/256/512 samples per pass),
+//!   plus the post-load optimizer ([`netlist::ScheduledTape`]):
+//!   dead-stripping + liveness-compacted scratch slots, so the serving
+//!   eval working set is `max_live` words instead of one per plane
 //! * [`isf`] — ON/OFF/DC-set extraction from training activations
 //! * [`synth`] — Algorithm 2 (OptimizeNeuron / OptimizeLayer / OptimizeNetwork)
 //! * [`pipeline`] — macro/micro pipelining (Section 3.2.2, OptimizeNetwork)

@@ -233,15 +233,16 @@ fn engine_from_cli(p: &Parsed, art: Option<&model::Artifacts>) -> Result<EngineH
         }
         let t0 = std::time::Instant::now();
         let compiled = artifact::CompiledModel::load(std::path::Path::new(apath))?;
-        let eng = engine::engine_from_artifact(&compiled, width)?;
+        let (name, n_layers, ref_accuracy) =
+            (compiled.name.clone(), compiled.layers.len(), compiled.accuracy_test);
+        // Consumes the artifact: tapes/tensors move into the engine.
+        let eng = engine::engine_from_artifact(compiled, width)?;
         nullanet::info!(
-            "loaded artifact {apath} ({}, {} layers) in {:.1?} — no synthesis",
-            compiled.name,
-            compiled.layers.len(),
+            "loaded artifact {apath} ({name}, {n_layers} layers) in {:.1?} — no synthesis",
             t0.elapsed()
         );
         let meta = ModelMeta {
-            model: compiled.name.clone(),
+            model: name.clone(),
             engine: eng.name().to_string(),
             width,
             input_dim: eng.input_dim(),
@@ -252,8 +253,8 @@ fn engine_from_cli(p: &Parsed, art: Option<&model::Artifacts>) -> Result<EngineH
         return Ok(EngineHandle {
             eng,
             meta,
-            label: format!("{} (artifact {apath})", compiled.name),
-            ref_accuracy: compiled.accuracy_test,
+            label: format!("{name} (artifact {apath})"),
+            ref_accuracy,
         });
     }
     let loaded;

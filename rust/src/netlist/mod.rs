@@ -10,9 +10,17 @@
 //! this point — they are folded into the wiring, which is the paper's
 //! "no memory accesses for weights" claim in CPU form: the only memory
 //! traffic is the activation planes themselves.
+//!
+//! At engine-construction time a [`LogicTape`] is compiled once more
+//! into a [`ScheduledTape`]: dead ops outside every output cone are
+//! stripped and scratch planes are liveness-compacted into reusable
+//! slots, shrinking the eval working set from `n_planes` words to
+//! `1 + n_inputs + max_live` (see `schedule.rs`).
 
 mod codegen;
+mod schedule;
 mod tape;
 
 pub use codegen::tape_to_rust_source;
+pub use schedule::{ScheduleStats, ScheduledTape};
 pub use tape::{LogicTape, TapeOp};

@@ -1,0 +1,451 @@
+//! Post-load tape optimizer: dead-code stripping + liveness-compacted
+//! scratch scheduling.
+//!
+//! [`LogicTape::eval_into`] keeps one scratch word per plane alive for
+//! the whole pass — `n_planes` words even though most op results are
+//! consumed within a few instructions.  At `W512` a Table-5-sized hidden
+//! stack holds thousands of 64-byte words live at once, which is exactly
+//! the memory traffic the paper's logic realization is supposed to
+//! eliminate.  [`ScheduledTape`] fixes this at engine-construction time:
+//!
+//! 1. **Dead-strip** — ops outside every output cone are dropped (they
+//!    can exist after `from_parts` round trips or conservative synthesis
+//!    passes, and the linear evaluator would otherwise execute them).
+//! 2. **Liveness analysis + slot assignment** — each surviving op's
+//!    result is assigned a reusable scratch *slot*, register-allocator
+//!    style (linear scan over the fixed op order; a slot is recycled the
+//!    instant its plane's last reader has executed).  The eval working
+//!    set shrinks from `n_planes` words to `1 + n_inputs + max_live`
+//!    words, which keeps even wide (`W512`) planes L1/L2-resident.
+//!
+//! Op order is preserved, so a scheduled tape is lane-for-lane
+//! equivalent to its source tape at every plane width (property-tested
+//! in `tests/props.rs`).  The recorded [`ScheduleStats`] feed the
+//! per-model `{"cmd":"metrics"}` gauges and DESIGN.md.
+
+use crate::netlist::LogicTape;
+use crate::util::BitWord;
+
+/// One scheduled AND instruction: `buf[dst] = (buf[a]^ca) & (buf[b]^cb)`.
+///
+/// Operand and destination indices address the compacted evaluation
+/// buffer: index 0 is constant FALSE, `1..=n_inputs` are the input
+/// planes, and `n_inputs+1..` are reusable scratch slots.  Operands are
+/// read before `dst` is written, so an op may legally write over one of
+/// its own operands' slots (the allocator exploits this).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SchedOp {
+    pub a: u32,
+    pub b: u32,
+    pub dst: u32,
+    /// Broadcast complement masks (`0` or `!0`), as in
+    /// [`crate::netlist::TapeOp`].
+    pub ca: u64,
+    pub cb: u64,
+}
+
+/// Scheduling statistics for one tape (or, via [`ScheduleStats::merge`],
+/// an engine's whole tape stack).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ScheduleStats {
+    /// Ops that survived dead-stripping (= ops executed per eval).
+    pub n_ops: usize,
+    /// Ops dropped because no output cone reaches them.
+    pub ops_stripped: usize,
+    /// Peak number of simultaneously-live op-result planes — the number
+    /// of scratch slots the schedule needs.
+    pub max_live: usize,
+    /// Plane count of the unscheduled source tape (`n_planes`), for the
+    /// compaction ratio.  Aggregated stats sum this (an unscheduled
+    /// engine would allocate every tape's planes per block).
+    pub planes_unscheduled: usize,
+    /// Words of scratch per eval: `1 + n_inputs + max_live` for one
+    /// tape.  Aggregated stats sum this — an engine allocates every
+    /// tape's compacted scratch in its per-block bundle.
+    pub scratch_planes: usize,
+}
+
+impl ScheduleStats {
+    /// Combine stats across an engine's tapes.  Op and plane counts add
+    /// (every tape runs per block, and the engine's scratch bundle holds
+    /// every tape's buffers at once); `max_live` takes the maximum —
+    /// tapes run sequentially, so it is the peak simultaneously-live
+    /// slot count of any single eval.
+    pub fn merge(self, other: ScheduleStats) -> ScheduleStats {
+        ScheduleStats {
+            n_ops: self.n_ops + other.n_ops,
+            ops_stripped: self.ops_stripped + other.ops_stripped,
+            max_live: self.max_live.max(other.max_live),
+            planes_unscheduled: self.planes_unscheduled + other.planes_unscheduled,
+            scratch_planes: self.scratch_planes + other.scratch_planes,
+        }
+    }
+
+    /// Merge an iterator of per-tape stats (identity when empty).
+    pub fn aggregate(stats: impl IntoIterator<Item = ScheduleStats>) -> ScheduleStats {
+        stats
+            .into_iter()
+            .fold(ScheduleStats::default(), ScheduleStats::merge)
+    }
+}
+
+/// A [`LogicTape`] compiled into slot-compacted form.  Built once at
+/// engine construction; evaluation semantics are identical to the source
+/// tape's `eval_into` at every width.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScheduledTape {
+    n_inputs: usize,
+    ops: Vec<SchedOp>,
+    /// (buffer index, complement mask) per output.
+    outputs: Vec<(u32, u64)>,
+    stats: ScheduleStats,
+}
+
+impl ScheduledTape {
+    /// Schedule a tape: dead-strip, then assign scratch slots by linear
+    /// scan over the (preserved) op order.
+    pub fn new(tape: &LogicTape) -> ScheduledTape {
+        let base = tape.n_inputs + 1;
+        let n_ops = tape.ops.len();
+
+        // 1. Dead-strip: mark the cone of every output.
+        let mut live = vec![false; n_ops];
+        let mut stack: Vec<usize> = tape
+            .outputs
+            .iter()
+            .filter_map(|&(p, _)| (p as usize).checked_sub(base))
+            .collect();
+        while let Some(i) = stack.pop() {
+            if live[i] {
+                continue;
+            }
+            live[i] = true;
+            let op = &tape.ops[i];
+            if op.a as usize >= base {
+                stack.push(op.a as usize - base);
+            }
+            if op.b as usize >= base {
+                stack.push(op.b as usize - base);
+            }
+        }
+
+        // 2. Use counts among live ops; output planes are pinned (their
+        // slots stay allocated until the output copy at the end of eval).
+        let mut uses = vec![0u32; n_ops];
+        for (i, op) in tape.ops.iter().enumerate() {
+            if !live[i] {
+                continue;
+            }
+            if op.a as usize >= base {
+                uses[op.a as usize - base] += 1;
+            }
+            if op.b as usize >= base {
+                uses[op.b as usize - base] += 1;
+            }
+        }
+        let mut pinned = vec![false; n_ops];
+        for &(p, _) in &tape.outputs {
+            if p as usize >= base {
+                pinned[p as usize - base] = true;
+            }
+        }
+
+        // 3. Linear scan: walk live ops in order, recycling a fanin's
+        // slot at its last use.  Freeing fanins *before* allocating dst
+        // lets dst reuse a dying operand's slot (safe: eval reads both
+        // operands before writing).
+        let mut slot_of = vec![u32::MAX; n_ops];
+        let mut free: Vec<u32> = Vec::new();
+        let mut n_slots: u32 = 0;
+        let mut ops = Vec::with_capacity(live.iter().filter(|&&l| l).count());
+        for (i, op) in tape.ops.iter().enumerate() {
+            if !live[i] {
+                continue;
+            }
+            let a = Self::resolve(op.a, base, &slot_of);
+            let b = Self::resolve(op.b, base, &slot_of);
+            for f in [op.a as usize, op.b as usize] {
+                if f >= base {
+                    let fi = f - base;
+                    uses[fi] -= 1;
+                    if uses[fi] == 0 && !pinned[fi] {
+                        free.push(slot_of[fi]);
+                    }
+                }
+            }
+            let slot = free.pop().unwrap_or_else(|| {
+                n_slots += 1;
+                n_slots - 1
+            });
+            slot_of[i] = slot;
+            ops.push(SchedOp {
+                a,
+                b,
+                dst: (base as u32) + slot,
+                ca: op.ca,
+                cb: op.cb,
+            });
+        }
+
+        let outputs = tape
+            .outputs
+            .iter()
+            .map(|&(p, c)| (Self::resolve(p, base, &slot_of), c))
+            .collect();
+        let stats = ScheduleStats {
+            n_ops: ops.len(),
+            ops_stripped: n_ops - ops.len(),
+            max_live: n_slots as usize,
+            planes_unscheduled: tape.n_planes(),
+            scratch_planes: base + n_slots as usize,
+        };
+        ScheduledTape { n_inputs: tape.n_inputs, ops, outputs, stats }
+    }
+
+    /// Map a source-tape plane index into the compacted buffer: const
+    /// and input planes are identity, op planes go through their slot.
+    fn resolve(plane: u32, base: usize, slot_of: &[u32]) -> u32 {
+        if (plane as usize) < base {
+            plane
+        } else {
+            base as u32 + slot_of[plane as usize - base]
+        }
+    }
+
+    pub fn n_inputs(&self) -> usize {
+        self.n_inputs
+    }
+
+    pub fn n_outputs(&self) -> usize {
+        self.outputs.len()
+    }
+
+    pub fn n_ops(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// Scheduling statistics (compaction evidence for metrics/DESIGN.md).
+    pub fn stats(&self) -> &ScheduleStats {
+        &self.stats
+    }
+
+    /// Words of scratch [`ScheduledTape::eval_into`] needs.
+    pub fn scratch_planes(&self) -> usize {
+        self.stats.scratch_planes
+    }
+
+    /// Allocate a compacted scratch buffer at plane width `W`.
+    pub fn make_scratch<W: BitWord>(&self) -> Vec<W> {
+        vec![W::ZERO; self.stats.scratch_planes]
+    }
+
+    /// Evaluate one `W::LANES`-sample plane batch — same contract as
+    /// [`LogicTape::eval_into`], but `scratch` is `scratch_planes()`
+    /// (not `n_planes`) words and must come from
+    /// [`ScheduledTape::make_scratch`].
+    pub fn eval_into<W: BitWord>(&self, inputs: &[W], outputs: &mut [W], scratch: &mut [W]) {
+        debug_assert_eq!(inputs.len(), self.n_inputs);
+        debug_assert_eq!(outputs.len(), self.outputs.len());
+        debug_assert_eq!(scratch.len(), self.stats.scratch_planes);
+        scratch[0] = W::ZERO;
+        scratch[1..=self.n_inputs].copy_from_slice(inputs);
+        for op in &self.ops {
+            // Indices are in-bounds by construction; operands are read
+            // before dst is written, so dst may alias an operand slot.
+            let a = scratch[op.a as usize].xor_mask(op.ca);
+            let b = scratch[op.b as usize].xor_mask(op.cb);
+            scratch[op.dst as usize] = a.and(b);
+        }
+        for (o, &(idx, compl)) in outputs.iter_mut().zip(&self.outputs) {
+            *o = scratch[idx as usize].xor_mask(compl);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aig::{Aig, Lit};
+    use crate::netlist::TapeOp;
+    use crate::util::{SplitMix64, W512};
+
+    fn random_aig(rng: &mut SplitMix64, n_pis: usize, n_ands: usize, n_outs: usize) -> Aig {
+        let mut g = Aig::new(n_pis);
+        let mut lits: Vec<Lit> = (0..n_pis).map(|i| g.pi(i)).collect();
+        for _ in 0..n_ands {
+            let a = lits[rng.range(0, lits.len())];
+            let b = lits[rng.range(0, lits.len())];
+            let a = if rng.bool(0.5) { a.not() } else { a };
+            let b = if rng.bool(0.5) { b.not() } else { b };
+            lits.push(g.and(a, b));
+        }
+        for _ in 0..n_outs {
+            let o = lits[rng.range(0, lits.len())];
+            g.add_output(if rng.bool(0.5) { o.not() } else { o });
+        }
+        g
+    }
+
+    fn assert_equivalent(tape: &LogicTape, sched: &ScheduledTape, rng: &mut SplitMix64) {
+        let inputs: Vec<u64> = (0..tape.n_inputs).map(|_| rng.next_u64()).collect();
+        let mut want = vec![0u64; tape.outputs.len()];
+        let mut got = vec![0u64; tape.outputs.len()];
+        tape.eval_into(&inputs, &mut want, &mut tape.make_scratch());
+        sched.eval_into(&inputs, &mut got, &mut sched.make_scratch());
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn scheduled_matches_unscheduled_random() {
+        let mut rng = SplitMix64::new(17);
+        for _ in 0..30 {
+            let n = rng.range(2, 12);
+            let g = random_aig(&mut rng, n, rng.range(1, 150), rng.range(1, 6));
+            let tape = LogicTape::from_aig(&g);
+            let sched = ScheduledTape::new(&tape);
+            assert!(sched.stats().scratch_planes <= tape.n_planes());
+            for _ in 0..4 {
+                assert_equivalent(&tape, &sched, &mut rng);
+            }
+        }
+    }
+
+    #[test]
+    fn dead_ops_are_stripped() {
+        // out = a & b; two more ANDs feed nothing.
+        let mut g = Aig::new(3);
+        let (a, b, c) = (g.pi(0), g.pi(1), g.pi(2));
+        let used = g.and(a, b);
+        let dead1 = g.and(a, c);
+        let _dead2 = g.and(dead1, b);
+        g.add_output(used);
+        let tape = LogicTape::from_aig(&g);
+        let sched = ScheduledTape::new(&tape);
+        assert_eq!(sched.stats().ops_stripped, 2);
+        assert_eq!(sched.n_ops(), 1);
+        let mut rng = SplitMix64::new(1);
+        assert_equivalent(&tape, &sched, &mut rng);
+    }
+
+    #[test]
+    fn chain_reuses_one_slot() {
+        // t1 = p0 & p1; t_{k+1} = t_k & p_{k mod n}: every intermediate
+        // dies at its only use, so the whole chain needs max_live == 1.
+        let n = 4;
+        let mut g = Aig::new(n);
+        let pis: Vec<Lit> = (0..n).map(|i| g.pi(i)).collect();
+        let mut cur = g.and(pis[0], pis[1]);
+        for k in 0..100 {
+            cur = g.and(cur, pis[k % n].not());
+        }
+        g.add_output(cur);
+        let tape = LogicTape::from_aig(&g);
+        let sched = ScheduledTape::new(&tape);
+        assert_eq!(sched.stats().max_live, 1, "{:?}", sched.stats());
+        assert_eq!(sched.stats().scratch_planes, n + 2);
+        assert!(tape.n_planes() > 100);
+        let mut rng = SplitMix64::new(2);
+        assert_equivalent(&tape, &sched, &mut rng);
+    }
+
+    #[test]
+    fn output_on_input_and_constant_planes() {
+        // Outputs that never touch an op plane: a PI, its complement,
+        // and both constants.  Zero ops survive; max_live == 0.
+        let mut g = Aig::new(2);
+        let a = g.pi(0);
+        g.add_output(a);
+        g.add_output(a.not());
+        g.add_output(Lit::TRUE);
+        g.add_output(Lit::FALSE);
+        let tape = LogicTape::from_aig(&g);
+        let sched = ScheduledTape::new(&tape);
+        assert_eq!(sched.n_ops(), 0);
+        assert_eq!(sched.stats().max_live, 0);
+        assert_eq!(sched.scratch_planes(), 3); // const + 2 inputs
+        let inputs = [0b01u64, 0b10u64];
+        let mut got = vec![0u64; 4];
+        sched.eval_into(&inputs, &mut got, &mut sched.make_scratch());
+        assert_eq!(got, vec![0b01, !0b01, !0u64, 0u64]);
+    }
+
+    #[test]
+    fn zero_op_tape_from_parts() {
+        // from_parts round trip of an op-less tape (the .nnc loader can
+        // legitimately produce one for a constant layer).
+        let tape = LogicTape::from_parts(3, vec![], vec![(1, 0), (0, !0u64)]).unwrap();
+        let sched = ScheduledTape::new(&tape);
+        assert_eq!(sched.n_ops(), 0);
+        assert_eq!(sched.stats().ops_stripped, 0);
+        assert_eq!(sched.scratch_planes(), 4);
+        let inputs = [7u64, 0, 0];
+        let mut got = vec![0u64; 2];
+        sched.eval_into(&inputs, &mut got, &mut sched.make_scratch());
+        assert_eq!(got, vec![7, !0u64]);
+    }
+
+    #[test]
+    fn from_parts_rebuilt_tape_schedules_identically() {
+        let mut rng = SplitMix64::new(23);
+        let g = random_aig(&mut rng, 6, 60, 3);
+        let tape = LogicTape::from_aig(&g);
+        let rebuilt =
+            LogicTape::from_parts(tape.n_inputs, tape.ops.clone(), tape.outputs.clone()).unwrap();
+        assert_eq!(ScheduledTape::new(&tape), ScheduledTape::new(&rebuilt));
+    }
+
+    #[test]
+    fn shared_fanin_used_twice_by_one_op() {
+        // op with a == b (x & x == x): the double decrement must not
+        // double-free the slot.
+        let ops = vec![
+            TapeOp { a: 1, b: 2, ca: 0, cb: 0 },  // plane 3 = p0 & p1
+            TapeOp { a: 3, b: 3, ca: 0, cb: !0 }, // plane 4 = t & !t == 0
+            TapeOp { a: 4, b: 1, ca: !0, cb: 0 }, // plane 5 = !0-plane & p0 = p0
+        ];
+        let tape = LogicTape::from_parts(2, ops, vec![(5, 0)]).unwrap();
+        let sched = ScheduledTape::new(&tape);
+        let mut rng = SplitMix64::new(5);
+        assert_equivalent(&tape, &sched, &mut rng);
+        assert!(sched.stats().max_live <= 2);
+    }
+
+    #[test]
+    fn wide_width_equivalence() {
+        let mut rng = SplitMix64::new(31);
+        let g = random_aig(&mut rng, 8, 120, 4);
+        let tape = LogicTape::from_aig(&g);
+        let sched = ScheduledTape::new(&tape);
+        let inputs: Vec<W512> = (0..8).map(|_| W512::from_lanes(|_| rng.bool(0.5))).collect();
+        let mut want = vec![W512::ZERO; 4];
+        let mut got = vec![W512::ZERO; 4];
+        tape.eval_into(&inputs, &mut want, &mut tape.make_scratch());
+        sched.eval_into(&inputs, &mut got, &mut sched.make_scratch());
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn stats_aggregate() {
+        let a = ScheduleStats {
+            n_ops: 10,
+            ops_stripped: 2,
+            max_live: 4,
+            planes_unscheduled: 17,
+            scratch_planes: 9,
+        };
+        let b = ScheduleStats {
+            n_ops: 5,
+            ops_stripped: 0,
+            max_live: 7,
+            planes_unscheduled: 12,
+            scratch_planes: 13,
+        };
+        let m = ScheduleStats::aggregate([a, b]);
+        assert_eq!(m.n_ops, 15);
+        assert_eq!(m.ops_stripped, 2);
+        assert_eq!(m.max_live, 7);
+        assert_eq!(m.planes_unscheduled, 29);
+        assert_eq!(m.scratch_planes, 22);
+        assert_eq!(ScheduleStats::aggregate([]), ScheduleStats::default());
+    }
+}

@@ -283,10 +283,12 @@ impl ModelRegistry {
     ) -> Result<(ModelMeta, Arc<dyn InferenceEngine>)> {
         let width = width.unwrap_or(self.default_width);
         let compiled = CompiledModel::load(std::path::Path::new(path))?;
-        let eng = engine_from_artifact(&compiled, width)?;
-        let model = name.unwrap_or(&compiled.name);
+        let model = name.unwrap_or(&compiled.name).to_string();
+        // The artifact is consumed: tapes and tensors move into the
+        // engine rather than being cloned.
+        let eng = engine_from_artifact(compiled, width)?;
         let meta = ModelMeta {
-            model: model.to_string(),
+            model,
             engine: eng.name().to_string(),
             width,
             input_dim: eng.input_dim(),

@@ -421,8 +421,10 @@ fn run_cmd(c: &CmdRequest, registry: &ModelRegistry) -> Result<Json> {
 
 /// `{"cmd":"metrics"}`: aggregate counters + latency percentiles (p50 /
 /// p90 / p99 over the merged histograms), total inference microseconds,
-/// current queue depth, and per-model request counts.  With `"model"`,
-/// scoped to that model alone.
+/// current queue depth, and per-model request counts plus — for logic
+/// engines — the tape-schedule gauges (`tape_ops`, `ops_stripped`,
+/// `max_live`, `scratch_planes`, `planes_unscheduled`).  With
+/// `"model"`, scoped to that model alone.
 fn metrics_json(registry: &ModelRegistry, model: Option<&str>) -> Result<Json> {
     let entries = match model {
         Some(_) => vec![registry.get(model)?],
@@ -445,13 +447,22 @@ fn metrics_json(registry: &ModelRegistry, model: Option<&str>) -> Result<Json> {
         for (h, v) in hist.iter_mut().zip(m.latency_histogram()) {
             *h += v;
         }
-        per_model.push((
-            e.meta.model.clone(),
-            obj(vec![
-                ("requests", num(m.requests() as f64)),
-                ("queue_depth", num(m.queue_depth() as f64)),
-            ]),
-        ));
+        let mut fields = vec![
+            ("requests", num(m.requests() as f64)),
+            ("queue_depth", num(m.queue_depth() as f64)),
+        ];
+        // Logic engines expose their tape-schedule gauges: how many ops
+        // the dead-strip removed and how small the liveness-compacted
+        // eval working set is (max_live slots vs the unscheduled plane
+        // count).  Absent for engines that run no tapes.
+        if let Some(st) = e.coordinator.engine().schedule_stats() {
+            fields.push(("tape_ops", num(st.n_ops as f64)));
+            fields.push(("ops_stripped", num(st.ops_stripped as f64)));
+            fields.push(("max_live", num(st.max_live as f64)));
+            fields.push(("scratch_planes", num(st.scratch_planes as f64)));
+            fields.push(("planes_unscheduled", num(st.planes_unscheduled as f64)));
+        }
+        per_model.push((e.meta.model.clone(), obj(fields)));
     }
     let mean_block = if blocks == 0 { 0.0 } else { items / blocks as f64 };
     Ok(obj(vec![
@@ -637,6 +648,52 @@ mod tests {
         let j = Json::parse(line.trim()).unwrap();
         assert_eq!(j.get("requests").and_then(Json::as_usize), Some(1));
         assert!(j.at(&["models", "a"]).is_none());
+        drop(conn);
+        server.shutdown();
+    }
+
+    #[test]
+    fn metrics_reports_schedule_gauges_for_tape_engines() {
+        /// Echo with fixed schedule stats, standing in for a logic
+        /// engine (the real aggregation is unit-tested in engine.rs).
+        struct SchedEcho;
+        impl InferenceEngine for SchedEcho {
+            fn infer_batch(&self, images: &[&[f32]]) -> Vec<Vec<f32>> {
+                Echo.infer_batch(images)
+            }
+            fn name(&self) -> &str {
+                "sched-echo"
+            }
+            fn schedule_stats(&self) -> Option<crate::netlist::ScheduleStats> {
+                Some(crate::netlist::ScheduleStats {
+                    n_ops: 40,
+                    ops_stripped: 2,
+                    max_live: 5,
+                    planes_unscheduled: 50,
+                    scratch_planes: 9,
+                })
+            }
+        }
+
+        let reg = registry_with(&[("plain", None)]);
+        let eng = Arc::new(SchedEcho);
+        let meta = ModelMeta::for_engine("tape", eng.as_ref(), 64);
+        reg.register(meta, eng).unwrap();
+        let server = Server::start("127.0.0.1:0", Arc::clone(&reg)).unwrap();
+        let (mut conn, mut reader) = connect(server.addr);
+        conn.write_all(b"{\"cmd\": \"metrics\"}\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(line.trim()).unwrap();
+        assert_eq!(j.at(&["models", "tape", "max_live"]).and_then(Json::as_usize), Some(5));
+        assert_eq!(j.at(&["models", "tape", "ops_stripped"]).and_then(Json::as_usize), Some(2));
+        assert_eq!(j.at(&["models", "tape", "tape_ops"]).and_then(Json::as_usize), Some(40));
+        assert_eq!(
+            j.at(&["models", "tape", "scratch_planes"]).and_then(Json::as_usize),
+            Some(9)
+        );
+        // Engines without tapes don't grow the gauges.
+        assert!(j.at(&["models", "plain", "max_live"]).is_none());
         drop(conn);
         server.shutdown();
     }

@@ -104,6 +104,14 @@ impl BitVec {
         }
     }
 
+    /// Clear every bit, keeping the length and capacity (lets hot paths
+    /// reuse one `BitVec` instead of reallocating per sample).
+    pub fn clear_bits(&mut self) {
+        for w in &mut self.words {
+            *w = 0;
+        }
+    }
+
     /// Number of set bits.
     pub fn count_ones(&self) -> usize {
         self.words.iter().map(|w| w.count_ones() as usize).sum()
@@ -182,15 +190,24 @@ impl BitVec {
 /// plane `i` holds bit `i` of every row, row `s` in lane `s`.  This is
 /// the packing step in front of every bit-parallel tape evaluation.
 pub fn transpose_to_planes<W: super::BitWord>(rows: &[BitVec], width: usize) -> Vec<W> {
-    debug_assert!(rows.len() <= W::LANES);
     let mut planes = vec![W::ZERO; width];
+    transpose_to_planes_into(rows, &mut planes);
+    planes
+}
+
+/// [`transpose_to_planes`] into a caller-owned buffer (cleared first),
+/// for callers that reuse one planes buffer across batches.
+pub fn transpose_to_planes_into<W: super::BitWord>(rows: &[BitVec], planes: &mut [W]) {
+    debug_assert!(rows.len() <= W::LANES);
+    for p in planes.iter_mut() {
+        *p = W::ZERO;
+    }
     for (s, row) in rows.iter().enumerate() {
-        debug_assert_eq!(row.len(), width);
+        debug_assert_eq!(row.len(), planes.len());
         for i in row.iter_ones() {
             planes[i].set_lane(s, true);
         }
     }
-    planes
 }
 
 impl std::fmt::Debug for BitVec {
@@ -283,6 +300,30 @@ mod tests {
         check::<W64>(5, 70);
         check::<W64>(64, 7);
         check::<W256>(200, 17);
+    }
+
+    #[test]
+    fn transpose_into_reuses_and_clears_buffer() {
+        use super::transpose_to_planes_into;
+        use crate::util::{BitWord, W64};
+        let rows1 = vec![BitVec::from_bools([true, true, false])];
+        let rows2 = vec![BitVec::from_bools([false, true, true])];
+        let mut planes = vec![W64::ZERO; 3];
+        transpose_to_planes_into(&rows1, &mut planes);
+        assert!(planes[0].get_lane(0) && planes[1].get_lane(0) && !planes[2].get_lane(0));
+        // Second use must fully overwrite the first (stale bits cleared).
+        transpose_to_planes_into(&rows2, &mut planes);
+        assert!(!planes[0].get_lane(0) && planes[1].get_lane(0) && planes[2].get_lane(0));
+    }
+
+    #[test]
+    fn clear_bits_keeps_len() {
+        let mut v = BitVec::ones(130);
+        v.clear_bits();
+        assert_eq!(v.len(), 130);
+        assert_eq!(v.count_ones(), 0);
+        v.set(129, true);
+        assert!(v.get(129));
     }
 
     #[test]

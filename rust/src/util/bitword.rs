@@ -37,6 +37,11 @@ pub trait BitWord:
 
     fn count_ones(&self) -> usize;
 
+    /// The word's `u64` limbs, lane 0 in bit 0 of limb 0.  Lets plane
+    /// consumers iterate set lanes with `trailing_zeros` instead of
+    /// probing `get_lane` per lane (the popcount last layer's hot loop).
+    fn limbs(&self) -> &[u64];
+
     /// All-zeros or all-ones from a bool.
     #[inline]
     fn splat(v: bool) -> Self {
@@ -106,6 +111,11 @@ impl BitWord for u64 {
     #[inline(always)]
     fn count_ones(&self) -> usize {
         u64::count_ones(*self) as usize
+    }
+
+    #[inline(always)]
+    fn limbs(&self) -> &[u64] {
+        std::slice::from_ref(self)
     }
 }
 
@@ -177,6 +187,11 @@ impl<const N: usize> BitWord for [u64; N] {
     fn count_ones(&self) -> usize {
         self.iter().map(|w| w.count_ones() as usize).sum()
     }
+
+    #[inline(always)]
+    fn limbs(&self) -> &[u64] {
+        &self[..]
+    }
 }
 
 /// 64-lane plane (one sample word — the original substrate).
@@ -219,6 +234,13 @@ mod tests {
             assert_eq!(a.not().get_lane(lane), !x);
             assert_eq!(a.xor_mask(!0).get_lane(lane), !x);
             assert_eq!(a.xor_mask(0).get_lane(lane), x);
+        }
+
+        // limbs() exposes the same bits, LSB-first per 64-lane limb.
+        let limbs = a.limbs();
+        assert_eq!(limbs.len() * 64, W::LANES);
+        for lane in 0..W::LANES {
+            assert_eq!((limbs[lane / 64] >> (lane % 64)) & 1 == 1, a.get_lane(lane));
         }
     }
 

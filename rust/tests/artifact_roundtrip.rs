@@ -263,19 +263,21 @@ fn engine_from_loaded_artifact_serves_identical_predictions() {
         .collect();
     let refs: Vec<&[f32]> = images.iter().map(|v| v.as_slice()).collect();
     let want = direct.infer_batch(&refs);
+    // engine_from_artifact consumes the model (move semantics), so each
+    // width gets its own clone of the loaded artifact.
     for width in [64usize, 256, 512] {
-        let eng = engine::engine_from_artifact(&loaded, width).unwrap();
+        let eng = engine::engine_from_artifact(loaded.clone(), width).unwrap();
         assert_eq!(eng.preferred_block(), width);
         let got = eng.infer_batch(&refs);
         assert_eq!(got, want, "width {width} logits differ from the synthesizing path");
     }
     // Swap semantics survive the round trip: (0.9, 0.1) -> class 1.
     let probe: Vec<&[f32]> = vec![&[0.9, 0.1]];
-    let eng = engine::engine_from_artifact(&loaded, 64).unwrap();
+    let eng = engine::engine_from_artifact(loaded.clone(), 64).unwrap();
     let out = eng.infer_batch(&probe);
     assert_eq!(nullanet::model::argmax(&out[0]), 1);
     // One helper, one error message for unsupported widths.
-    let err = engine::engine_from_artifact(&loaded, 128).unwrap_err();
+    let err = engine::engine_from_artifact(loaded, 128).unwrap_err();
     assert!(format!("{err:#}").contains("unsupported plane width"), "{err:#}");
 }
 
@@ -319,7 +321,7 @@ fn compile_net_to_artifact_end_to_end() {
     compiled.save(&path).unwrap();
     let loaded = CompiledModel::load(&path).unwrap();
     // Serve the loaded artifact: it behaves exactly like the 2-bit swap.
-    let eng = engine::engine_from_artifact(&loaded, 256).unwrap();
+    let eng = engine::engine_from_artifact(loaded, 256).unwrap();
     let images: Vec<Vec<f32>> = vec![vec![0.9, 0.1], vec![0.1, 0.9]];
     let refs: Vec<&[f32]> = images.iter().map(|v| v.as_slice()).collect();
     let out = eng.infer_batch(&refs);

@@ -2,7 +2,7 @@
 
 use nullanet::aig::{self, Aig, Lit};
 use nullanet::logic::{minimize, Cover, Cube, EspressoConfig, IsfFunction, TruthTable};
-use nullanet::netlist::LogicTape;
+use nullanet::netlist::{LogicTape, ScheduledTape};
 use nullanet::prop::check;
 use nullanet::util::{BitVec, BitWord, SplitMix64, W128, W256, W512};
 
@@ -171,6 +171,104 @@ fn tape_eval_matches_sim_reference_at_every_width() {
         agree_at_width::<W128>(&g, &tape, rng);
         agree_at_width::<W256>(&g, &tape, rng);
         agree_at_width::<W512>(&g, &tape, rng);
+    });
+}
+
+#[test]
+fn scheduled_tape_is_lane_identical_at_all_widths() {
+    // The liveness-compacted ScheduledTape must be lane-for-lane
+    // identical to LogicTape::eval_into at every serving width, on
+    // random AIGs with random complement/output structure — including
+    // tapes reassembled via from_parts, which is exactly how the .nnc
+    // artifact loader rebuilds them before the engine schedules them.
+    fn random_aig(rng: &mut SplitMix64) -> Aig {
+        let n = rng.range(2, 12);
+        let mut g = Aig::new(n);
+        let mut lits: Vec<Lit> = (0..n).map(|i| g.pi(i)).collect();
+        for _ in 0..rng.range(1, 160) {
+            let a = lits[rng.range(0, lits.len())];
+            let b = lits[rng.range(0, lits.len())];
+            lits.push(g.and(
+                if rng.bool(0.5) { a.not() } else { a },
+                if rng.bool(0.5) { b.not() } else { b },
+            ));
+        }
+        for _ in 0..rng.range(1, 6) {
+            let o = lits[rng.range(0, lits.len())];
+            g.add_output(if rng.bool(0.5) { o.not() } else { o });
+        }
+        g
+    }
+
+    fn agree_at_width<W: BitWord>(tape: &LogicTape, sched: &ScheduledTape, rng: &mut SplitMix64) {
+        let inputs: Vec<W> = (0..tape.n_inputs)
+            .map(|_| W::from_lanes(|_| rng.bool(0.5)))
+            .collect();
+        let mut want = vec![W::ZERO; tape.outputs.len()];
+        let mut got = vec![W::ZERO; tape.outputs.len()];
+        tape.eval_into(&inputs, &mut want, &mut tape.make_scratch());
+        let mut scratch = sched.make_scratch::<W>();
+        sched.eval_into(&inputs, &mut got, &mut scratch);
+        assert_eq!(got, want, "width {}", W::LANES);
+        // Scratch is reusable: a second pass on the same (dirty) buffer
+        // must not change the answer.
+        sched.eval_into(&inputs, &mut got, &mut scratch);
+        assert_eq!(got, want, "width {} (reused scratch)", W::LANES);
+    }
+
+    check("scheduled-lane-identical-all-widths", 25, |rng| {
+        let g = random_aig(rng);
+        let tape = LogicTape::from_aig(&g);
+        let sched = ScheduledTape::new(&tape);
+        // Compaction never grows the working set.
+        assert!(sched.scratch_planes() <= tape.n_planes());
+        agree_at_width::<u64>(&tape, &sched, rng);
+        agree_at_width::<W256>(&tape, &sched, rng);
+        agree_at_width::<W512>(&tape, &sched, rng);
+        // The .nnc loader path: reassemble from serialized parts, then
+        // schedule.  Must produce the identical schedule and outputs.
+        let rebuilt =
+            LogicTape::from_parts(tape.n_inputs, tape.ops.clone(), tape.outputs.clone()).unwrap();
+        let resched = ScheduledTape::new(&rebuilt);
+        assert_eq!(resched, sched, "from_parts round trip changed the schedule");
+        agree_at_width::<u64>(&rebuilt, &resched, rng);
+        agree_at_width::<W512>(&rebuilt, &resched, rng);
+    });
+}
+
+#[test]
+fn scheduled_tape_strips_exactly_the_dead_cone() {
+    // Growing a random AIG, then outputting only the first half of its
+    // nodes: everything the kept outputs can't reach must be stripped,
+    // and the stripped tape must still agree with the full one.
+    check("scheduled-dead-strip", 20, |rng| {
+        let n = rng.range(2, 8);
+        let mut g = Aig::new(n);
+        let mut lits: Vec<Lit> = (0..n).map(|i| g.pi(i)).collect();
+        for _ in 0..rng.range(10, 80) {
+            let a = lits[rng.range(0, lits.len())];
+            let b = lits[rng.range(0, lits.len())];
+            lits.push(g.and(
+                if rng.bool(0.5) { a.not() } else { a },
+                if rng.bool(0.5) { b.not() } else { b },
+            ));
+        }
+        // Output only from the early nodes: late ANDs are dead weight.
+        let o = lits[rng.range(0, lits.len() / 2)];
+        g.add_output(if rng.bool(0.5) { o.not() } else { o });
+        let tape = LogicTape::from_aig(&g);
+        let sched = ScheduledTape::new(&tape);
+        assert_eq!(
+            sched.n_ops() + sched.stats().ops_stripped,
+            tape.n_ops(),
+            "stripped + kept != total"
+        );
+        let inputs: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+        let mut want = vec![0u64; 1];
+        let mut got = vec![0u64; 1];
+        tape.eval_into(&inputs, &mut want, &mut tape.make_scratch());
+        sched.eval_into(&inputs, &mut got, &mut sched.make_scratch());
+        assert_eq!(got, want);
     });
 }
 
