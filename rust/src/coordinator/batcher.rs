@@ -39,7 +39,7 @@ pub fn collect_batch(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::Response;
+    use crate::coordinator::{ReplyTo, Response};
     use std::sync::mpsc::{sync_channel, Receiver};
 
     /// Build a request and hand back its reply receiver so the caller
@@ -50,7 +50,7 @@ mod tests {
             Request {
                 image: vec![],
                 submitted: Instant::now(),
-                reply: tx,
+                reply: ReplyTo::Oneshot(tx),
                 id,
             },
             rx,

@@ -24,6 +24,9 @@ pub struct Metrics {
     infer_us_total: AtomicU64,
     /// Requests submitted but not yet answered (queue + in execution).
     in_flight: AtomicU64,
+    /// Requests refused by `try_submit` because the bounded queue was
+    /// full (load shedding — the event loop never blocks on a queue).
+    sheds: AtomicU64,
     /// log2-scaled latency histogram: bucket i counts latencies in
     /// [2^i, 2^{i+1}) microseconds.
     latency_hist: [AtomicU64; BUCKETS],
@@ -37,6 +40,7 @@ impl Metrics {
             batch_items: AtomicU64::new(0),
             infer_us_total: AtomicU64::new(0),
             in_flight: AtomicU64::new(0),
+            sheds: AtomicU64::new(0),
             latency_hist: std::array::from_fn(|_| AtomicU64::new(0)),
         }
     }
@@ -54,6 +58,16 @@ impl Metrics {
     /// Requests currently inside the coordinator (queued or executing).
     pub fn queue_depth(&self) -> u64 {
         self.in_flight.load(Ordering::Relaxed)
+    }
+
+    /// A request was refused because the queue was full.
+    pub fn record_shed(&self) {
+        self.sheds.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Requests shed at this coordinator's queue.
+    pub fn sheds(&self) -> u64 {
+        self.sheds.load(Ordering::Relaxed)
     }
 
     pub fn record_batch(&self, n: usize, infer_us: u64) {
@@ -178,6 +192,18 @@ mod tests {
         assert_eq!(m.queue_depth(), 2);
         m.queue_exit();
         assert_eq!(m.queue_depth(), 1);
+    }
+
+    #[test]
+    fn shed_counter() {
+        let m = Metrics::new();
+        assert_eq!(m.sheds(), 0);
+        m.record_shed();
+        m.record_shed();
+        assert_eq!(m.sheds(), 2);
+        // Sheds are not requests: the request counter only moves on
+        // completed work.
+        assert_eq!(m.requests(), 0);
     }
 
     #[test]

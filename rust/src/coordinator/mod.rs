@@ -20,21 +20,142 @@ pub mod engine;
 pub mod metrics;
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::format_err;
+use crate::sys::Waker;
 use crate::util::error::Result;
 use engine::InferenceEngine;
 use metrics::Metrics;
 
-/// One inference request: a flat image and a oneshot reply channel.
+/// One inference request: a flat image and where to deliver the answer.
 pub struct Request {
     pub image: Vec<f32>,
     pub submitted: Instant,
-    pub reply: SyncSender<Response>,
+    pub reply: ReplyTo,
     pub id: u64,
+}
+
+impl Request {
+    /// Recover the completion handle from a request the queue bounced
+    /// back (`try_send` returns the rejected value).  Only the
+    /// `try_submit` path constructs `ReplyTo::Completion` requests.
+    fn take_handle(self) -> CompletionHandle {
+        match self.reply {
+            ReplyTo::Completion(h) => h,
+            ReplyTo::Oneshot(_) => unreachable!("try_submit only builds completion requests"),
+        }
+    }
+}
+
+/// Where a finished request's response goes.
+///
+/// `Oneshot` is the blocking path ([`Coordinator::submit`] hands the
+/// caller a `Receiver`).  `Completion` is the event-loop path: the
+/// worker pushes a [`Completion`] onto an unbounded channel and rings
+/// the loop's wake pipe — no thread ever parks waiting for one reply.
+pub enum ReplyTo {
+    Oneshot(SyncSender<Response>),
+    Completion(CompletionHandle),
+}
+
+impl ReplyTo {
+    fn deliver(self, resp: Response) {
+        match self {
+            ReplyTo::Oneshot(tx) => {
+                let _ = tx.send(resp);
+            }
+            ReplyTo::Completion(h) => h.deliver(resp),
+        }
+    }
+}
+
+/// A finished (or failed) unit of work, routed back to the event loop.
+/// `conn`/`req`/`index` are caller-chosen coordinates: which connection,
+/// which pipelined request on it, which image within the request.
+pub struct Completion {
+    pub conn: u64,
+    pub req: u64,
+    pub index: usize,
+    pub result: std::result::Result<Response, String>,
+}
+
+/// One-shot ticket for a non-blocking submit.  Exactly one completion is
+/// always delivered: on success the worker sends `Ok(response)`; if the
+/// handle is dropped undelivered (coordinator shutting down, or a buggy
+/// engine returning too few outputs) `Drop` sends
+/// `Err("coordinator stopped")` — the same error the blocking path
+/// surfaces — so the event loop never leaks a pending request.
+pub struct CompletionHandle {
+    tx: Sender<Completion>,
+    waker: Waker,
+    conn: u64,
+    req: u64,
+    index: usize,
+    delivered: bool,
+}
+
+impl CompletionHandle {
+    pub fn new(
+        tx: Sender<Completion>,
+        waker: Waker,
+        conn: u64,
+        req: u64,
+        index: usize,
+    ) -> CompletionHandle {
+        CompletionHandle {
+            tx,
+            waker,
+            conn,
+            req,
+            index,
+            delivered: false,
+        }
+    }
+
+    fn send(&mut self, result: std::result::Result<Response, String>) {
+        if self.delivered {
+            return;
+        }
+        self.delivered = true;
+        let _ = self.tx.send(Completion {
+            conn: self.conn,
+            req: self.req,
+            index: self.index,
+            result,
+        });
+        self.waker.wake();
+    }
+
+    fn deliver(mut self, resp: Response) {
+        self.send(Ok(resp));
+    }
+
+    /// Suppress the ticket without delivering anything — used by the
+    /// caller when a submit is rejected and it reports the failure
+    /// itself (a drop here would enqueue a spurious error completion).
+    pub fn cancel(mut self) {
+        self.delivered = true;
+    }
+}
+
+impl Drop for CompletionHandle {
+    fn drop(&mut self) {
+        if !self.delivered {
+            self.send(Err("coordinator stopped".to_string()));
+        }
+    }
+}
+
+/// Why [`Coordinator::try_submit`] refused a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitRejection {
+    /// Bounded queue full: the caller should shed load, not block.
+    QueueFull,
+    /// Coordinator is shutting down.
+    Stopped,
 }
 
 /// The reply: predicted class + logits + timing.
@@ -164,7 +285,7 @@ impl Coordinator {
         let req = Request {
             image,
             submitted: Instant::now(),
-            reply: reply_tx,
+            reply: ReplyTo::Oneshot(reply_tx),
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
         };
         let tx = self.tx.as_ref().ok_or_else(|| format_err!("coordinator stopped"))?;
@@ -174,6 +295,41 @@ impl Coordinator {
             return Err(format_err!("coordinator stopped"));
         }
         Ok(reply_rx)
+    }
+
+    /// Non-blocking submit for the event loop: never parks the calling
+    /// thread.  On success the response arrives later as a
+    /// [`Completion`] through the handle's channel; on rejection the
+    /// handle is returned so the caller can shed (reply with an error)
+    /// without a spurious completion firing.  A full queue is counted in
+    /// [`Metrics::sheds`].
+    pub fn try_submit(
+        &self,
+        image: Vec<f32>,
+        reply: CompletionHandle,
+    ) -> std::result::Result<(), (SubmitRejection, CompletionHandle)> {
+        let req = Request {
+            image,
+            submitted: Instant::now(),
+            reply: ReplyTo::Completion(reply),
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+        };
+        let Some(tx) = self.tx.as_ref() else {
+            return Err((SubmitRejection::Stopped, req.take_handle()));
+        };
+        self.metrics.queue_enter();
+        match tx.try_send(req) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(req)) => {
+                self.metrics.queue_exit();
+                self.metrics.record_shed();
+                Err((SubmitRejection::QueueFull, req.take_handle()))
+            }
+            Err(TrySendError::Disconnected(req)) => {
+                self.metrics.queue_exit();
+                Err((SubmitRejection::Stopped, req.take_handle()))
+            }
+        }
     }
 
     /// Submit and wait (convenience).
@@ -265,16 +421,18 @@ fn worker_loop(
         for req in block.reqs {
             // Exit the gauge for every request in the block — including
             // any left unanswered by a buggy engine that returned too few
-            // outputs (their reply sender drops below, surfacing an error
-            // to the caller) — and before the send, so a caller woken by
-            // recv() already observes the decrement.
+            // outputs (their reply is dropped below, which surfaces an
+            // error to the caller on both reply paths) — and before the
+            // delivery, so a caller woken by recv() already observes the
+            // decrement.
             metrics.queue_exit();
             let Some(logits) = outputs.next() else { continue };
             let queue_us = req.submitted.elapsed().as_micros() as u64;
             metrics.record_latency(queue_us);
             let class = crate::model::argmax(&logits);
-            let _ = req.reply.send(Response {
-                id: req.id,
+            let Request { reply, id, .. } = req;
+            reply.deliver(Response {
+                id,
                 class,
                 logits,
                 queue_us,
@@ -408,6 +566,101 @@ mod tests {
         assert!(c.metrics.batches() >= 5, "blocks: {}", c.metrics.batches());
         let c = Arc::try_unwrap(c).ok().expect("sole owner");
         c.shutdown();
+    }
+
+    #[test]
+    fn try_submit_delivers_a_completion_and_rings_the_waker() {
+        let c = Coordinator::start(Arc::new(EchoEngine), CoordinatorConfig::default());
+        let wake = crate::sys::WakePipe::new().unwrap();
+        let mut poller = crate::sys::Poller::new().unwrap();
+        poller.register(wake.fd(), 9, crate::sys::Interest::READ).unwrap();
+        let (ctx, crx) = std::sync::mpsc::channel();
+        let h = CompletionHandle::new(ctx, wake.waker(), 3, 17, 2);
+        assert!(c.try_submit(vec![4.0], h).is_ok());
+        let comp = crx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!((comp.conn, comp.req, comp.index), (3, 17, 2));
+        assert_eq!(comp.result.unwrap().class, 4);
+        // The waker fired: a selecting event loop would observe a
+        // readable wake pipe.
+        let mut events = Vec::new();
+        poller.wait(&mut events, Some(Duration::from_millis(500))).unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].token, 9);
+        c.shutdown();
+    }
+
+    #[test]
+    fn try_submit_sheds_on_a_full_queue_and_work_still_drains() {
+        /// Engine that parks until the test releases it (one token per
+        /// call), so the bounded pipeline demonstrably fills up.
+        struct GateEngine(Mutex<Receiver<()>>);
+        impl InferenceEngine for GateEngine {
+            fn infer_batch(&self, images: &[&[f32]]) -> Vec<Vec<f32>> {
+                let _ = self.0.lock().unwrap().recv();
+                EchoEngine.infer_batch(images)
+            }
+            fn name(&self) -> &str {
+                "gate"
+            }
+        }
+
+        let (gate_tx, gate_rx) = std::sync::mpsc::channel::<()>();
+        let c = Coordinator::start(
+            Arc::new(GateEngine(Mutex::new(gate_rx))),
+            CoordinatorConfig {
+                max_batch: 1,
+                queue_depth: 1,
+                workers: 1,
+                max_wait: Duration::from_millis(1),
+            },
+        );
+        let wake = crate::sys::WakePipe::new().unwrap();
+        let (ctx, crx) = std::sync::mpsc::channel();
+        let mut accepted = 0u64;
+        let mut shed = false;
+        for i in 0..64 {
+            let h = CompletionHandle::new(ctx.clone(), wake.waker(), 1, i, 0);
+            match c.try_submit(vec![1.0], h) {
+                Ok(()) => accepted += 1,
+                Err((SubmitRejection::QueueFull, h)) => {
+                    h.cancel();
+                    shed = true;
+                    break;
+                }
+                Err((SubmitRejection::Stopped, h)) => {
+                    h.cancel();
+                    panic!("coordinator is running");
+                }
+            }
+        }
+        assert!(shed, "bounded pipeline never filled after 64 submits");
+        assert!(c.metrics.sheds() >= 1);
+        assert!(accepted >= 1);
+        // Release the gate once per accepted request: every accepted
+        // submit completes successfully; the shed one never fires.
+        for _ in 0..accepted {
+            gate_tx.send(()).unwrap();
+        }
+        for _ in 0..accepted {
+            let comp = crx.recv_timeout(Duration::from_secs(10)).unwrap();
+            assert!(comp.result.is_ok());
+        }
+        c.shutdown();
+        assert!(crx.try_recv().is_err(), "shed request must not complete");
+    }
+
+    #[test]
+    fn dropped_handle_delivers_an_error_and_cancel_suppresses_it() {
+        let wake = crate::sys::WakePipe::new().unwrap();
+        let (ctx, crx) = std::sync::mpsc::channel();
+        drop(CompletionHandle::new(ctx, wake.waker(), 5, 6, 7));
+        let comp = crx.recv().unwrap();
+        assert_eq!((comp.conn, comp.req, comp.index), (5, 6, 7));
+        assert_eq!(comp.result.unwrap_err(), "coordinator stopped");
+
+        let (ctx, crx) = std::sync::mpsc::channel();
+        CompletionHandle::new(ctx, wake.waker(), 0, 0, 0).cancel();
+        assert!(crx.try_recv().is_err(), "cancelled handle must stay silent");
     }
 
     #[test]

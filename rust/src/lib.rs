@@ -42,9 +42,12 @@
 //!   model routing, client-side batching, v1-compatible replies)
 //! * [`runtime`] — PJRT client wrapper (HLO text → compiled executable;
 //!   real backend behind the `pjrt` feature, honest stub otherwise)
-//! * [`server`] — TCP JSON-lines front-end (a thin codec over
-//!   [`protocol`] + [`registry`]: pipelined out-of-order replies, admin
-//!   surface, joined connection handlers)
+//! * [`sys`] — zero-dep readiness polling (epoll on Linux, `poll(2)`
+//!   fallback) and the wake pipe, the substrate under the server's
+//!   event loop
+//! * [`server`] — TCP JSON-lines front-end: a single-threaded event
+//!   loop of per-connection state machines over [`protocol`] +
+//!   [`registry`], with admission control and load shedding
 //! * [`cli`], [`jsonio`], [`logging`], [`bench_util`], [`prop`],
 //!   [`util::error`] — offline substrates (no crates.io access in this
 //!   environment, so there are zero external dependencies)
@@ -72,6 +75,7 @@ pub mod registry;
 pub mod runtime;
 pub mod server;
 pub mod synth;
+pub mod sys;
 pub mod util;
 
 /// Default location of the AOT artifacts, overridable with `NULLANET_ARTIFACTS`.

@@ -425,6 +425,7 @@ fn run_serve(args: &[String]) -> Result<()> {
         .opt("cap", "4000", "ISF pattern cap for logic synthesis")
         .multi("artifact", "serve a compiled .nnc artifact; repeat to serve several models")
         .opt("addr", "127.0.0.1:7878", "bind address")
+        .opt("max-conns", "1024", "live-connection admission cap (beyond it, shed)")
         .opt("workers", "2", "coordinator worker threads per model")
         .opt("width", "64", "bit-parallel plane width for logic engines (64|256|512)")
         .parse(args)
@@ -455,7 +456,11 @@ fn run_serve(args: &[String]) -> Result<()> {
             nullanet::info!("loaded {apath} as model {name} in {:.1?}", t0.elapsed());
         }
     }
-    let server = nullanet::server::Server::start(p.str("addr"), Arc::clone(&registry))?;
+    let server = nullanet::server::Server::start_with(
+        p.str("addr"),
+        Arc::clone(&registry),
+        p.usize("max-conns").max(1),
+    )?;
     let (entries, default) = registry.list();
     println!(
         "listening on {} — wire protocol v2, one JSON object per line, {} model(s), default {}",

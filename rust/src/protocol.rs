@@ -219,6 +219,21 @@ pub fn error_reply(id: Option<&Json>, msg: &str) -> Json {
     with_id(obj(vec![("error", Json::Str(msg.to_string()))]), id)
 }
 
+/// Structured load-shed line: an [`error_reply`] plus `"shed":true`, so
+/// clients can tell overload (retry later / elsewhere) apart from
+/// request errors (don't retry).  Never used on v1 reply paths — v1
+/// requests that are shed arrive only through overload-specific code —
+/// so v1 byte compatibility is unaffected.
+pub fn shed_reply(id: Option<&Json>, msg: &str) -> Json {
+    match error_reply(id, msg) {
+        Json::Obj(mut m) => {
+            m.insert("shed".to_string(), Json::Bool(true));
+            Json::Obj(m)
+        }
+        other => other,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -333,6 +348,18 @@ mod tests {
         assert_eq!(
             error_reply(Some(&Json::Num(9.0)), "boom").to_string(),
             r#"{"error":"boom","id":9}"#
+        );
+    }
+
+    #[test]
+    fn shed_reply_is_an_error_with_a_shed_marker() {
+        assert_eq!(
+            shed_reply(None, "overloaded").to_string(),
+            r#"{"error":"overloaded","shed":true}"#
+        );
+        assert_eq!(
+            shed_reply(Some(&Json::Num(4.0)), "overloaded").to_string(),
+            r#"{"error":"overloaded","id":4,"shed":true}"#
         );
     }
 }

@@ -10,8 +10,11 @@
 //!
 //! Concurrency model (the hot-swap ordering guarantee):
 //!
-//! 1. Request threads resolve a name to an `Arc<ModelEntry>` under a
-//!    read lock and then *hold that Arc* for the request's lifetime.
+//! 1. Requests resolve a name to an `Arc<ModelEntry>` under a read lock
+//!    and then *hold that Arc* for the request's lifetime.  The lock is
+//!    never held across I/O or a coordinator submit — the event-loop
+//!    server clones the Arc per request and releases the lock before
+//!    touching any socket or queue.
 //! 2. `swap` builds the replacement entry completely (artifact load,
 //!    digest checks, engine construction, coordinator start) *before*
 //!    taking the write lock; the critical section is a map insert.
@@ -261,6 +264,26 @@ impl ModelRegistry {
         }
     }
 
+    /// [`get`](Self::get) plus whether the resolved entry is the current
+    /// default, read under one lock acquisition — the `info` path used
+    /// to take the lock twice (`get` + `list`) and could observe a
+    /// default re-pointed in between.
+    pub fn get_with_default(&self, model: Option<&str>) -> Result<(Arc<ModelEntry>, bool)> {
+        let inner = self.inner.read().unwrap();
+        let name = match model {
+            Some(name) => name,
+            None => inner
+                .default
+                .as_deref()
+                .ok_or_else(|| format_err!("no models loaded"))?,
+        };
+        let entry = inner.models.get(name).cloned().ok_or_else(|| match model {
+            Some(name) => format_err!("unknown model {name}"),
+            None => format_err!("no models loaded"),
+        })?;
+        Ok((entry, inner.default.as_deref() == Some(name)))
+    }
+
     /// All live entries (name order) plus the default model's name.
     pub fn list(&self) -> (Vec<Arc<ModelEntry>>, Option<String>) {
         let inner = self.inner.read().unwrap();
@@ -401,6 +424,22 @@ mod tests {
             reg.get(Some("m")).unwrap().coordinator.infer(vec![0.0]).unwrap().class,
             9
         );
+    }
+
+    #[test]
+    fn get_with_default_resolves_and_flags_in_one_acquisition() {
+        let reg = registry();
+        assert!(reg.get_with_default(None).is_err());
+        add(&reg, "a", 1);
+        add(&reg, "b", 2);
+        let (entry, is_default) = reg.get_with_default(None).unwrap();
+        assert_eq!(entry.meta.model, "a");
+        assert!(is_default);
+        let (entry, is_default) = reg.get_with_default(Some("b")).unwrap();
+        assert_eq!(entry.meta.model, "b");
+        assert!(!is_default);
+        let err = reg.get_with_default(Some("zzz")).unwrap_err().to_string();
+        assert!(err.contains("unknown model zzz"), "{err}");
     }
 
     #[test]

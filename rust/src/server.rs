@@ -1,79 +1,151 @@
-//! TCP JSON-lines front-end: a thin codec over [`crate::protocol`]
-//! (wire format) and [`crate::registry`] (model state).
+//! TCP JSON-lines front-end: a single-threaded **event loop** of
+//! per-connection state machines over [`crate::protocol`] (wire format)
+//! and [`crate::registry`] (model state).
 //!
-//! Per connection:
+//! One thread owns every socket.  A [`crate::sys::Poller`] (epoll on
+//! Linux, `poll(2)` fallback) multiplexes the listener, a wake pipe,
+//! and all connections; each connection is a [`Conn`] state machine
+//! owning a read buffer, a parse cursor, and a bounded reply queue.
+//! Inference never blocks the loop: requests enter the coordinator
+//! through the non-blocking [`try_submit`] path, the worker pool rings
+//! the wake pipe on completion, and the loop collects finished work
+//! from an in-process channel — no thread is ever parked on one reply
+//! (the old design burned a waiter thread per pipelined request).
 //!
-//! * a **reader** (the connection handler thread) parses request lines;
-//! * a **writer thread** owns the socket's write half behind an mpsc
-//!   channel, so replies from any thread serialize without interleaving;
-//! * id-tagged inference requests are answered by per-request **waiter
-//!   threads** that forward the coordinator's response to the writer as
-//!   it completes — a pipelined connection receives replies possibly out
-//!   of order, reassembled by `"id"`;
-//! * requests *without* an id (protocol v1) are answered inline by the
-//!   reader, preserving v1's strict request/reply ordering byte for byte;
-//! * commands (`"cmd"`) are always answered inline in request order, id
-//!   or not — deliberately, so a connection that sends `load`/`swap`
+//! Reply ordering per connection:
+//!
+//! * requests *without* an id (protocol v1) reserve a slot in a FIFO
+//!   ([`Slot::Waiting`]) at parse time and fill it at completion time,
+//!   preserving v1's strict request/reply ordering byte for byte;
+//! * id-tagged requests append their reply directly as it completes —
+//!   a pipelined connection receives replies possibly out of order,
+//!   reassembled by `"id"`;
+//! * commands (`"cmd"`) are answered at parse time in request order,
+//!   id or not — deliberately, so a connection that sends `load`/`swap`
 //!   followed by an inference observes the admin action happen first.
-//!   Out-of-order completion is an inference-path property.
+//!   (`load`/`swap` run inline on the loop: admin traffic is rare and
+//!   artifact loads are milliseconds; an event loop that must never
+//!   stall on admin would move them to a side thread.)
 //!
-//! Lifecycle: the accept loop blocks in `accept()` (no polling);
-//! `shutdown()` wakes it with a self-connect, closes every live
-//! connection, and joins all handler threads — nothing is left detached.
+//! Overload behavior is explicit, not emergent:
 //!
-//! std::net + a thread per connection (tokio is unavailable offline; the
-//! engine is CPU-bound anyway, so each model's worker pool is the real
-//! concurrency limit).  The connection set is bounded: beyond
-//! `max_conns` live connections, new ones get one error line and are
-//! closed.
+//! * **admission control** — beyond `max_conns` live connections, a new
+//!   connection gets one structured shed line and is closed;
+//! * **per-connection cap** — more than [`MAX_PENDING_REPLIES`]
+//!   outstanding replies on one connection sheds the excess request;
+//! * **queue-full shedding** — when a model's bounded queue rejects a
+//!   submit, the client gets an `{"error":…,"shed":true}` line instead
+//!   of blocking the loop;
+//! * **write backpressure** — a connection whose reply bytes exceed
+//!   [`OUT_HIGH_WATER`] stops being read until the client drains it
+//!   below [`OUT_LOW_WATER`] (interest hysteresis, no thrash).
+//!
+//! Lifecycle: `shutdown()` rings the wake pipe (no self-connect), the
+//! loop stops accepting, finishes every in-flight request, flushes, and
+//! closes — bounded by [`DRAIN_DEADLINE`].
 
-use std::collections::BTreeMap;
-use std::io::{BufRead, BufReader, Write};
-use std::net::{Shutdown, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::{Arc, Mutex};
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::metrics::{percentile_from_hist, BUCKETS};
+use crate::coordinator::{Completion, CompletionHandle, Response, SubmitRejection};
 use crate::jsonio::{num, obj, Json};
 use crate::protocol::{self, Cmd, CmdRequest, InferRequest, WireRequest};
 use crate::registry::{ModelEntry, ModelRegistry};
+use crate::sys::{Event, Interest, Poller, WakePipe, Waker};
 use crate::util::error::Result;
 
 /// Default cap on simultaneously live connections.
 pub const DEFAULT_MAX_CONNS: usize = 1024;
 
-/// Tracked per-connection state: the stream (for shutdown) and the
-/// handler's join handle.
-struct ConnTable {
-    next_id: u64,
-    live: BTreeMap<u64, TcpStream>,
-    handles: Vec<(u64, JoinHandle<()>)>,
+/// Cap on outstanding replies (pending inferences + queued lines) per
+/// connection; beyond it requests are shed, so one pipelining client
+/// can't hold unbounded server memory.
+const MAX_PENDING_REPLIES: usize = 256;
+
+/// Stop reading a connection whose unflushed reply bytes exceed this…
+const OUT_HIGH_WATER: usize = 1 << 20;
+/// …and resume only once the client has drained it below this
+/// (hysteresis, so interest doesn't thrash at the boundary).
+const OUT_LOW_WATER: usize = 64 << 10;
+
+/// A single request line larger than this is answered with an error and
+/// the connection is closed (a line that big is a bug or an attack).
+const MAX_LINE_BYTES: usize = 64 << 20;
+
+/// Bytes per `read` call.
+const READ_CHUNK: usize = 64 << 10;
+/// Reads per readiness event: bounds how long one firehosing client can
+/// monopolize the loop before other connections get a turn
+/// (level-triggered readiness re-reports leftover data next tick).
+const READ_BUDGET: usize = 16;
+
+/// Shrink per-connection buffers whose capacity exceeds this…
+const BUF_SHRINK_AT: usize = 256 << 10;
+/// …back down to this, so one oversized request doesn't pin its peak
+/// allocation for the connection's lifetime.
+const BUF_RETAIN: usize = 64 << 10;
+
+/// Graceful-shutdown bound: in-flight work gets this long to complete
+/// and flush before remaining connections are dropped.
+const DRAIN_DEADLINE: Duration = Duration::from_secs(5);
+
+/// Pause after a failed `accept` (e.g. EMFILE returns instantly;
+/// without a pause the loop would spin a core until an fd frees up).
+const ACCEPT_BACKOFF: Duration = Duration::from_millis(10);
+
+const TOKEN_LISTENER: u64 = 0;
+const TOKEN_WAKE: u64 = 1;
+/// Connection tokens count up from here and are never reused, so a
+/// stale readiness event can't alias a new connection (no ABA).
+const FIRST_CONN_TOKEN: u64 = 2;
+
+/// Serving gauges the event loop maintains, surfaced by
+/// `{"cmd":"metrics"}` (`open_conns`, `shed_total`).
+#[derive(Default)]
+pub struct ServerStats {
+    open_conns: AtomicU64,
+    shed_conns: AtomicU64,
+    shed_requests: AtomicU64,
 }
 
-impl ConnTable {
-    /// Join handlers that have already finished (their streams are gone
-    /// from `live`), keeping the table bounded on long-lived servers.
-    fn reap(&mut self) {
-        let mut keep = Vec::with_capacity(self.handles.len());
-        for (id, h) in self.handles.drain(..) {
-            if h.is_finished() {
-                let _ = h.join();
-            } else {
-                keep.push((id, h));
-            }
-        }
-        self.handles = keep;
+impl ServerStats {
+    /// Currently live connections.
+    pub fn open_conns(&self) -> u64 {
+        self.open_conns.load(Ordering::Relaxed)
+    }
+
+    /// Connections refused at the admission cap.
+    pub fn shed_conns(&self) -> u64 {
+        self.shed_conns.load(Ordering::Relaxed)
+    }
+
+    /// Requests shed by the server (per-connection cap or a model
+    /// queue rejecting the submit).
+    pub fn shed_requests(&self) -> u64 {
+        self.shed_requests.load(Ordering::Relaxed)
+    }
+
+    /// Everything shed at the server layer.
+    pub fn shed_total(&self) -> u64 {
+        self.shed_conns() + self.shed_requests()
     }
 }
 
 /// A running TCP server handle.
 pub struct Server {
-    pub addr: std::net::SocketAddr,
+    pub addr: SocketAddr,
     stop: Arc<AtomicBool>,
-    accept_thread: Option<JoinHandle<()>>,
-    conns: Arc<Mutex<ConnTable>>,
+    waker: Waker,
+    loop_thread: Option<JoinHandle<()>>,
+    stats: Arc<ServerStats>,
 }
 
 impl Server {
@@ -90,297 +162,691 @@ impl Server {
     ) -> Result<Server> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
-        let conns = Arc::new(Mutex::new(ConnTable {
-            next_id: 0,
-            live: BTreeMap::new(),
-            handles: Vec::new(),
-        }));
-        let accept_thread = {
-            let stop = Arc::clone(&stop);
-            let conns = Arc::clone(&conns);
-            std::thread::Builder::new().name("nullanet-accept".into()).spawn(move || {
-                // Blocking accept: zero idle CPU.  `shutdown()` stores the
-                // stop flag and then self-connects, so the pending accept
-                // returns, observes the flag, and exits.
-                for stream in listener.incoming() {
-                    if stop.load(Ordering::SeqCst) {
+        let stats = Arc::new(ServerStats::default());
+        let mut el = EventLoop::new(
+            listener,
+            registry,
+            Arc::clone(&stop),
+            Arc::clone(&stats),
+            max_conns,
+        )?;
+        let waker = el.waker();
+        let loop_thread = std::thread::Builder::new()
+            .name("nullanet-event-loop".into())
+            .spawn(move || el.run())?;
+        Ok(Server { addr: local, stop, waker, loop_thread: Some(loop_thread), stats })
+    }
+
+    /// The loop's serving gauges (also surfaced over the socket by
+    /// `{"cmd":"metrics"}`).
+    pub fn stats(&self) -> &ServerStats {
+        &self.stats
+    }
+
+    /// Stop accepting, finish in-flight requests, flush, close, and
+    /// join the loop thread (equivalent to dropping the handle; kept
+    /// for call-site readability).
+    pub fn shutdown(self) {}
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Ring the wake pipe: works for any bind address (the old
+        // design self-connected to wake a blocking accept, which a
+        // wildcard bind made awkward).
+        self.waker.wake();
+        if let Some(t) = self.loop_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// One entry in a connection's ordered reply FIFO: either bytes ready
+/// to send, or a reservation for an in-flight v1 request (filled at
+/// completion time so v1 replies leave in request order).
+enum Slot {
+    Ready(String),
+    Waiting(u64),
+}
+
+/// An in-flight inference request: where its responses land and what
+/// the reply looks like once they all have.
+struct PendingReq {
+    id: Option<Json>,
+    batched: bool,
+    /// v1 (no id): the reply fills a reserved FIFO slot.  With an id it
+    /// appends directly at completion (out-of-order pipelining).
+    ordered: bool,
+    responses: Vec<Option<Response>>,
+    remaining: usize,
+    failed: Option<String>,
+    /// The failure is a shed (reply carries `"shed":true`).
+    shed: bool,
+    /// Keeps the model incarnation alive until the reply is built
+    /// (hot-swap drain guarantee).
+    _entry: Arc<ModelEntry>,
+}
+
+/// Per-connection state machine.  All mutation happens on the loop
+/// thread; the coordinator only ever touches the completion channel.
+struct Conn {
+    stream: TcpStream,
+    token: u64,
+    /// Unparsed request bytes; `rpos` is the parse cursor (consumed
+    /// prefix, compacted after each readiness event).
+    rbuf: Vec<u8>,
+    rpos: usize,
+    /// Unflushed reply bytes; `out_pos` is the flush cursor.
+    out: Vec<u8>,
+    out_pos: usize,
+    /// Ordered reply queue (v1 reservations + parse-time replies).
+    fifo: VecDeque<Slot>,
+    /// In-flight inference requests by request token.
+    pending: BTreeMap<u64, PendingReq>,
+    next_req: u64,
+    /// Interest currently registered with the poller.
+    registered: Interest,
+    read_eof: bool,
+    /// Unrecoverable socket error: close without flushing.
+    dead: bool,
+    /// Protocol-level close: flush queued replies, then close.
+    closing: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, token: u64) -> Conn {
+        Conn {
+            stream,
+            token,
+            rbuf: Vec::new(),
+            rpos: 0,
+            out: Vec::new(),
+            out_pos: 0,
+            fifo: VecDeque::new(),
+            pending: BTreeMap::new(),
+            next_req: 0,
+            registered: Interest::READ,
+            read_eof: false,
+            dead: false,
+            closing: false,
+        }
+    }
+
+    fn out_len(&self) -> usize {
+        self.out.len() - self.out_pos
+    }
+
+    /// Outstanding replies this connection is owed (admission input).
+    fn inflight(&self) -> usize {
+        self.pending.len() + self.fifo.len()
+    }
+
+    /// Append a reply straight to the write buffer (id-tagged path).
+    fn push_direct(&mut self, reply: &Json) {
+        self.out.extend_from_slice(reply.to_string().as_bytes());
+        self.out.push(b'\n');
+    }
+
+    /// Append a reply in request order (v1 + command path).
+    fn push_ordered(&mut self, reply: Json) {
+        self.fifo.push_back(Slot::Ready(reply.to_string()));
+        self.pump();
+    }
+
+    /// Deliver a finished inference reply.
+    fn finish_request(&mut self, req_tok: u64, reply: Json, ordered: bool) {
+        if ordered {
+            self.fill_slot(req_tok, &reply);
+        } else {
+            self.push_direct(&reply);
+        }
+    }
+
+    /// Fill a v1 reservation and release everything unblocked by it.
+    fn fill_slot(&mut self, req_tok: u64, reply: &Json) {
+        for slot in self.fifo.iter_mut() {
+            let hit = matches!(slot, Slot::Waiting(t) if *t == req_tok);
+            if hit {
+                *slot = Slot::Ready(reply.to_string());
+                break;
+            }
+        }
+        self.pump();
+    }
+
+    /// Move the FIFO's ready prefix into the write buffer.
+    fn pump(&mut self) {
+        while let Some(Slot::Ready(_)) = self.fifo.front() {
+            if let Some(Slot::Ready(s)) = self.fifo.pop_front() {
+                self.out.extend_from_slice(s.as_bytes());
+                self.out.push(b'\n');
+            }
+        }
+    }
+
+    /// Write as much of `out` as the socket takes without blocking.
+    fn flush(&mut self) {
+        while self.out_pos < self.out.len() {
+            match self.stream.write(&self.out[self.out_pos..]) {
+                Ok(0) => {
+                    self.dead = true;
+                    break;
+                }
+                Ok(n) => self.out_pos += n,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    break;
+                }
+            }
+        }
+        if self.out_pos == self.out.len() {
+            self.out.clear();
+            self.out_pos = 0;
+            if self.out.capacity() > BUF_SHRINK_AT {
+                self.out.shrink_to(BUF_RETAIN);
+            }
+        } else if self.out_pos >= BUF_SHRINK_AT {
+            // Large partially-flushed buffer: reclaim the sent prefix.
+            self.out.drain(..self.out_pos);
+            self.out_pos = 0;
+        }
+    }
+
+    /// Drop consumed request bytes and return peak allocation after an
+    /// oversized request has passed through.
+    fn compact_rbuf(&mut self) {
+        if self.rpos > 0 {
+            self.rbuf.drain(..self.rpos);
+            self.rpos = 0;
+        }
+        if self.rbuf.capacity() > BUF_SHRINK_AT && self.rbuf.len() < BUF_RETAIN {
+            self.rbuf.shrink_to(BUF_RETAIN);
+        }
+    }
+}
+
+/// The loop itself: poller + listener + wake pipe + connection table +
+/// the completion channel the coordinator workers feed.
+struct EventLoop {
+    poller: Poller,
+    listener: TcpListener,
+    wake: WakePipe,
+    registry: Arc<ModelRegistry>,
+    stop: Arc<AtomicBool>,
+    stats: Arc<ServerStats>,
+    max_conns: usize,
+    conns: BTreeMap<u64, Conn>,
+    next_token: u64,
+    completions_tx: Sender<Completion>,
+    completions_rx: Receiver<Completion>,
+    draining_since: Option<Instant>,
+}
+
+impl EventLoop {
+    fn new(
+        listener: TcpListener,
+        registry: Arc<ModelRegistry>,
+        stop: Arc<AtomicBool>,
+        stats: Arc<ServerStats>,
+        max_conns: usize,
+    ) -> Result<EventLoop> {
+        let mut poller = Poller::new()?;
+        let wake = WakePipe::new()?;
+        poller.register(listener.as_raw_fd(), TOKEN_LISTENER, Interest::READ)?;
+        poller.register(wake.fd(), TOKEN_WAKE, Interest::READ)?;
+        let (completions_tx, completions_rx) = channel();
+        Ok(EventLoop {
+            poller,
+            listener,
+            wake,
+            registry,
+            stop,
+            stats,
+            max_conns,
+            conns: BTreeMap::new(),
+            next_token: FIRST_CONN_TOKEN,
+            completions_tx,
+            completions_rx,
+            draining_since: None,
+        })
+    }
+
+    fn waker(&self) -> Waker {
+        self.wake.waker()
+    }
+
+    fn run(&mut self) {
+        let mut events: Vec<Event> = Vec::new();
+        loop {
+            events.clear();
+            let timeout = self.draining_since.map(|_| Duration::from_millis(50));
+            if self.poller.wait(&mut events, timeout).is_err() {
+                // A persistent poller error would otherwise spin; the
+                // pause keeps the process debuggable.
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            let mut accept_ready = false;
+            for &ev in &events {
+                match ev.token {
+                    TOKEN_WAKE => self.wake.drain(),
+                    TOKEN_LISTENER => accept_ready = true,
+                    token => self.conn_event(token, ev),
+                }
+            }
+            self.drain_completions();
+            if self.stop.load(Ordering::SeqCst) && self.draining_since.is_none() {
+                self.begin_drain();
+            }
+            match self.draining_since {
+                None => {
+                    if accept_ready {
+                        self.accept_new();
+                    }
+                }
+                Some(t0) => {
+                    if self.conns.is_empty() || t0.elapsed() >= DRAIN_DEADLINE {
                         break;
                     }
-                    let stream = match stream {
-                        Ok(s) => s,
-                        Err(_) => {
-                            // Persistent accept errors (e.g. EMFILE when
-                            // the fd limit is hit) return instantly; back
-                            // off instead of spinning a core until
-                            // connections close.
-                            std::thread::sleep(std::time::Duration::from_millis(10));
-                            continue;
-                        }
-                    };
-                    accept_one(stream, &registry, &conns, max_conns);
                 }
-            })?
-        };
-        Ok(Server { addr: local, stop, accept_thread: Some(accept_thread), conns })
+            }
+        }
     }
 
-    /// Stop accepting, close every live connection, and join all
-    /// connection handlers (and the accept thread).
-    pub fn shutdown(mut self) {
-        self.stop.store(true, Ordering::SeqCst);
-        // Wake the blocking accept with a self-connect.  A wildcard bind
-        // address (0.0.0.0 / ::) is not connectable on every platform, so
-        // aim at the loopback of the same family; if the wake still
-        // fails, skip the join rather than hang — the accept thread stays
-        // parked in accept() and is detached when its handle drops.
-        let wake = if self.addr.ip().is_unspecified() {
-            let ip: std::net::IpAddr = if self.addr.is_ipv4() {
-                std::net::Ipv4Addr::LOCALHOST.into()
-            } else {
-                std::net::Ipv6Addr::LOCALHOST.into()
+    /// Readiness on a connection: read + parse if readable, then flush
+    /// and recompute interest.
+    fn conn_event(&mut self, token: u64, ev: Event) {
+        // Remove-operate-reinsert: the state machine runs without the
+        // table borrowed, so request handling can reach the registry,
+        // the stats, and the completion channel freely.
+        let Some(mut conn) = self.conns.remove(&token) else {
+            return; // stale event for a connection closed this tick
+        };
+        if ev.readable && !conn.read_eof && !conn.closing && !conn.dead {
+            self.conn_read(&mut conn);
+        }
+        self.finish_conn(conn);
+    }
+
+    /// Drain the socket (bounded by [`READ_BUDGET`]) and run the parser
+    /// over whatever arrived.
+    fn conn_read(&mut self, conn: &mut Conn) {
+        for _ in 0..READ_BUDGET {
+            let start = conn.rbuf.len();
+            conn.rbuf.resize(start + READ_CHUNK, 0);
+            let n = match conn.stream.read(&mut conn.rbuf[start..]) {
+                Ok(0) => {
+                    conn.rbuf.truncate(start);
+                    conn.read_eof = true;
+                    break;
+                }
+                Ok(n) => n,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    conn.rbuf.truncate(start);
+                    break;
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {
+                    conn.rbuf.truncate(start);
+                    continue;
+                }
+                Err(_) => {
+                    conn.rbuf.truncate(start);
+                    conn.dead = true;
+                    break;
+                }
             };
-            std::net::SocketAddr::new(ip, self.addr.port())
-        } else {
-            self.addr
+            conn.rbuf.truncate(start + n);
+            self.process_lines(conn);
+            if conn.read_eof || conn.dead || conn.closing {
+                break;
+            }
+            if conn.out_len() > OUT_HIGH_WATER {
+                break; // backpressure: stop reading until the client drains
+            }
+        }
+        conn.compact_rbuf();
+    }
+
+    /// Parse and dispatch every complete line in the read buffer.
+    fn process_lines(&mut self, conn: &mut Conn) {
+        loop {
+            let rest = &conn.rbuf[conn.rpos..];
+            let Some(nl) = rest.iter().position(|&b| b == b'\n') else {
+                if rest.len() > MAX_LINE_BYTES {
+                    conn.rbuf.clear();
+                    conn.rpos = 0;
+                    conn.push_ordered(protocol::error_reply(None, "request line too long"));
+                    conn.closing = true;
+                }
+                return;
+            };
+            let end = conn.rpos + nl;
+            let line = match std::str::from_utf8(&conn.rbuf[conn.rpos..end]) {
+                Ok(s) => s.trim_end_matches('\r').to_string(),
+                Err(_) => {
+                    // Matches the old BufRead::lines behavior: a
+                    // non-UTF-8 line ends the stream.
+                    conn.rbuf.clear();
+                    conn.rpos = 0;
+                    conn.read_eof = true;
+                    return;
+                }
+            };
+            conn.rpos = end + 1;
+            if line.trim().is_empty() {
+                continue;
+            }
+            self.handle_line(conn, &line);
+            if conn.dead || conn.closing {
+                return;
+            }
+        }
+    }
+
+    fn handle_line(&mut self, conn: &mut Conn, line: &str) {
+        match protocol::parse_request(line) {
+            Err(e) => conn.push_ordered(protocol::error_reply(None, &e.to_string())),
+            Ok(WireRequest::Cmd(c)) => {
+                let reply = run_cmd(&c, &self.registry, &self.stats)
+                    .map(|j| protocol::with_id(j, c.id.as_ref()))
+                    .unwrap_or_else(|e| protocol::error_reply(c.id.as_ref(), &e.to_string()));
+                conn.push_ordered(reply);
+            }
+            Ok(WireRequest::Infer(req)) => self.start_infer(conn, req),
+        }
+    }
+
+    /// Resolve the model, validate dimensions, and submit every image
+    /// non-blockingly.  Nothing here waits: the reply materializes when
+    /// the completions arrive (or immediately, on validation/shed).
+    fn start_infer(&mut self, conn: &mut Conn, mut req: InferRequest) {
+        let ordered = req.id.is_none();
+        let reply_now = |conn: &mut Conn, reply: Json| {
+            if ordered {
+                conn.push_ordered(reply);
+            } else {
+                conn.push_direct(&reply);
+            }
         };
-        let woke =
-            TcpStream::connect_timeout(&wake, std::time::Duration::from_secs(1)).is_ok();
-        if woke {
-            if let Some(t) = self.accept_thread.take() {
-                let _ = t.join();
-            }
-        }
-        let (streams, handles) = {
-            let mut t = self.conns.lock().unwrap();
-            let streams: Vec<TcpStream> = std::mem::take(&mut t.live).into_values().collect();
-            let handles = std::mem::take(&mut t.handles);
-            (streams, handles)
-        };
-        for s in &streams {
-            let _ = s.shutdown(Shutdown::Both);
-        }
-        for (_, h) in handles {
-            let _ = h.join();
-        }
-    }
-}
-
-fn accept_one(
-    stream: TcpStream,
-    registry: &Arc<ModelRegistry>,
-    conns: &Arc<Mutex<ConnTable>>,
-    max_conns: usize,
-) {
-    let mut t = conns.lock().unwrap();
-    t.reap();
-    if t.live.len() >= max_conns {
-        // One error line, then close (drop).
-        let mut s = stream;
-        let line = protocol::error_reply(None, "server at connection capacity").to_string();
-        let _ = s.write_all(line.as_bytes());
-        let _ = s.write_all(b"\n");
-        return;
-    }
-    let Ok(tracked) = stream.try_clone() else { return };
-    let id = t.next_id;
-    t.next_id += 1;
-    t.live.insert(id, tracked);
-    let registry = Arc::clone(registry);
-    let conns2 = Arc::clone(conns);
-    let spawned = std::thread::Builder::new()
-        .name(format!("nullanet-conn-{id}"))
-        .spawn(move || {
-            let _ = handle_conn(stream, registry);
-            conns2.lock().unwrap().live.remove(&id);
-        });
-    match spawned {
-        Ok(h) => t.handles.push((id, h)),
-        Err(_) => {
-            t.live.remove(&id);
-        }
-    }
-}
-
-/// Bound on the per-connection reply queue.  The writer thread drains it
-/// onto the socket; when a client stops reading, the queue fills, sends
-/// block, and the backpressure reaches the reader — same throttling the
-/// old inline `write_all` provided, without letting replies pile up in
-/// memory.
-const REPLY_QUEUE_DEPTH: usize = 256;
-
-/// Reap finished waiter threads once this many are outstanding…
-const WAITER_REAP_THRESHOLD: usize = 64;
-/// …and block on the oldest beyond this hard cap, so a pipelining client
-/// can't hold an unbounded number of OS threads on one connection.
-const MAX_PENDING_REPLIES: usize = 256;
-
-fn handle_conn(stream: TcpStream, registry: Arc<ModelRegistry>) -> Result<()> {
-    stream.set_nodelay(true).ok();
-    let writer = stream.try_clone()?;
-    let (out_tx, out_rx) = sync_channel::<String>(REPLY_QUEUE_DEPTH);
-    let writer_thread = std::thread::Builder::new()
-        .name("nullanet-conn-writer".into())
-        .spawn(move || writer_loop(writer, out_rx))?;
-    let reader = BufReader::new(stream);
-    let mut waiters: Vec<JoinHandle<()>> = Vec::new();
-    for line in reader.lines() {
-        let Ok(line) = line else { break };
-        if line.trim().is_empty() {
-            continue;
-        }
-        handle_line(&line, &registry, &out_tx, &mut waiters);
-        if waiters.len() >= WAITER_REAP_THRESHOLD {
-            let (done, pending): (Vec<_>, Vec<_>) =
-                waiters.drain(..).partition(|h| h.is_finished());
-            for h in done {
-                let _ = h.join();
-            }
-            waiters = pending;
-            while waiters.len() >= MAX_PENDING_REPLIES {
-                let oldest = waiters.remove(0);
-                let _ = oldest.join();
-            }
-        }
-    }
-    // Connection closed: let in-flight replies finish, then retire the
-    // writer by dropping the last sender.
-    for w in waiters {
-        let _ = w.join();
-    }
-    drop(out_tx);
-    let _ = writer_thread.join();
-    Ok(())
-}
-
-fn writer_loop(mut writer: TcpStream, rx: Receiver<String>) {
-    while let Ok(line) = rx.recv() {
-        if writer.write_all(line.as_bytes()).is_err() || writer.write_all(b"\n").is_err() {
-            // Peer gone: keep draining the bounded channel so blocked
-            // senders (reader/waiters) wake up instead of sticking on a
-            // full queue forever.
-            while rx.recv().is_ok() {}
+        if conn.inflight() >= MAX_PENDING_REPLIES {
+            self.stats.shed_requests.fetch_add(1, Ordering::Relaxed);
+            let reply = protocol::shed_reply(
+                req.id.as_ref(),
+                "overloaded: too many requests in flight on this connection",
+            );
+            reply_now(conn, reply);
             return;
         }
-    }
-}
-
-fn send(out: &SyncSender<String>, reply: Json) {
-    let _ = out.send(reply.to_string());
-}
-
-fn handle_line(
-    line: &str,
-    registry: &Arc<ModelRegistry>,
-    out: &SyncSender<String>,
-    waiters: &mut Vec<JoinHandle<()>>,
-) {
-    match protocol::parse_request(line) {
-        Err(e) => send(out, protocol::error_reply(None, &e.to_string())),
-        Ok(WireRequest::Cmd(c)) => {
-            let reply = run_cmd(&c, registry)
-                .map(|j| protocol::with_id(j, c.id.as_ref()))
-                .unwrap_or_else(|e| protocol::error_reply(c.id.as_ref(), &e.to_string()));
-            send(out, reply);
+        // Resolve under the registry's read lock, clone the Arc, drop
+        // the lock — it is never held across a submit or socket I/O.
+        let entry = match self.registry.get(req.model.as_deref()) {
+            Ok(e) => e,
+            Err(e) => {
+                let reply = protocol::error_reply(req.id.as_ref(), &e.to_string());
+                reply_now(conn, reply);
+                return;
+            }
+        };
+        // Validate every dimension before submitting anything, so a bad
+        // batch is rejected whole.
+        if let Some(dim) = entry.meta.input_dim {
+            for (i, img) in req.images.iter().enumerate() {
+                if img.len() != dim {
+                    let msg = if req.batched {
+                        format!("images[{i}] has {} values, expected {dim}", img.len())
+                    } else {
+                        format!("image has {} values, expected {dim}", img.len())
+                    };
+                    let reply = protocol::error_reply(req.id.as_ref(), &msg);
+                    reply_now(conn, reply);
+                    return;
+                }
+            }
         }
-        Ok(WireRequest::Infer(mut req)) => match submit_infer(registry, &mut req) {
-            Err(e) => send(out, protocol::error_reply(req.id.as_ref(), &e.to_string())),
-            Ok((entry, rxs)) => {
-                if req.id.is_some() {
-                    // Pipelined: answer out of order as it completes.
-                    // The waiter holds the entry Arc, so a concurrent
-                    // hot-swap cannot fail this request.  One spawn per
-                    // id-tagged request is a deliberate tradeoff (capped
-                    // by MAX_PENDING_REPLIES per connection); if a
-                    // pipelined hot path ever needs to shed the ~tens of
-                    // microseconds of spawn cost, the next step is one
-                    // demux thread per connection selecting over the
-                    // outstanding receivers.
-                    let out2 = out.clone();
-                    let id = req.id.clone();
-                    let spawned = std::thread::Builder::new()
-                        .name("nullanet-waiter".into())
-                        .spawn(move || {
-                            let reply = collect_reply(&req, &entry, rxs);
-                            send(&out2, reply);
-                        });
-                    match spawned {
-                        Ok(h) => waiters.push(h),
-                        Err(e) => send(
-                            out,
-                            protocol::error_reply(id.as_ref(), &format!("spawn failed: {e}")),
-                        ),
+        let images = std::mem::take(&mut req.images);
+        let req_tok = conn.next_req;
+        conn.next_req += 1;
+        if ordered {
+            conn.fifo.push_back(Slot::Waiting(req_tok));
+        }
+        let mut pend = PendingReq {
+            id: req.id.clone(),
+            batched: req.batched,
+            ordered,
+            responses: vec![None; images.len()],
+            remaining: 0,
+            failed: None,
+            shed: false,
+            _entry: Arc::clone(&entry),
+        };
+        let mut submitted = 0usize;
+        for (index, img) in images.into_iter().enumerate() {
+            let handle = CompletionHandle::new(
+                self.completions_tx.clone(),
+                self.wake.waker(),
+                conn.token,
+                req_tok,
+                index,
+            );
+            match entry.coordinator.try_submit(img, handle) {
+                Ok(()) => submitted += 1,
+                Err((why, handle)) => {
+                    // The rejection is reported here, not via the
+                    // ticket: cancel it so no spurious completion fires.
+                    handle.cancel();
+                    match why {
+                        SubmitRejection::QueueFull => {
+                            self.stats.shed_requests.fetch_add(1, Ordering::Relaxed);
+                            pend.shed = true;
+                            pend.failed = Some(format!(
+                                "overloaded: model {} queue is full; request shed",
+                                entry.meta.model
+                            ));
+                        }
+                        SubmitRejection::Stopped => {
+                            pend.failed = Some("coordinator stopped".to_string());
+                        }
                     }
-                } else {
-                    // v1: strict in-order request/reply on the reader.
-                    let reply = collect_reply(&req, &entry, rxs);
-                    send(out, reply);
+                    break;
                 }
             }
-        },
+        }
+        pend.remaining = submitted;
+        if submitted == 0 {
+            // Nothing in flight (empty batch, or the first submit was
+            // rejected): the reply is already decided.
+            let reply = encode_reply(&pend);
+            conn.finish_request(req_tok, reply, ordered);
+        } else {
+            conn.pending.insert(req_tok, pend);
+        }
     }
-}
 
-type PendingResponses = Vec<std::sync::mpsc::Receiver<crate::coordinator::Response>>;
-
-/// Resolve the model, validate dimensions, and submit every image.
-/// Takes the images out of `req` (the reply only needs id/batched), so
-/// the hot path moves each buffer into the coordinator instead of
-/// cloning it.
-fn submit_infer(
-    registry: &ModelRegistry,
-    req: &mut InferRequest,
-) -> Result<(Arc<ModelEntry>, PendingResponses)> {
-    let entry = registry.get(req.model.as_deref())?;
-    // Validate every dimension before submitting anything, so a bad
-    // batch is rejected whole.
-    if let Some(dim) = entry.meta.input_dim {
-        for (i, img) in req.images.iter().enumerate() {
-            if img.len() != dim {
-                if req.batched {
-                    crate::bail!("images[{i}] has {} values, expected {dim}", img.len());
+    /// Collect every completion the workers have delivered, then
+    /// re-evaluate the connections that produced output.
+    fn drain_completions(&mut self) {
+        let mut batch = Vec::new();
+        while let Ok(c) = self.completions_rx.try_recv() {
+            batch.push(c);
+        }
+        if batch.is_empty() {
+            return;
+        }
+        let mut touched: Vec<u64> = Vec::new();
+        for c in batch {
+            if let Some(token) = self.apply_completion(c) {
+                if !touched.contains(&token) {
+                    touched.push(token);
                 }
-                crate::bail!("image has {} values, expected {dim}", img.len());
+            }
+        }
+        for token in touched {
+            if let Some(conn) = self.conns.remove(&token) {
+                self.finish_conn(conn);
             }
         }
     }
-    let images = std::mem::take(&mut req.images);
-    let mut rxs = Vec::with_capacity(images.len());
-    for img in images {
-        rxs.push(entry.coordinator.submit(img)?);
-    }
-    Ok((entry, rxs))
-}
 
-/// Wait for all of a request's responses and encode the reply.  `_entry`
-/// keeps the model alive (hot-swap drain guarantee) until the reply is
-/// built.
-fn collect_reply(req: &InferRequest, _entry: &ModelEntry, rxs: PendingResponses) -> Json {
-    let mut responses = Vec::with_capacity(rxs.len());
-    for rx in rxs {
-        match rx.recv() {
-            Ok(r) => responses.push(r),
-            Err(_) => {
-                return protocol::error_reply(req.id.as_ref(), "coordinator stopped");
+    /// Record one completion; returns the connection token when it
+    /// finished a request (so the caller knows to flush).
+    fn apply_completion(&mut self, c: Completion) -> Option<u64> {
+        // A completion for a connection (or request) that closed while
+        // the work was in flight is simply dropped.
+        let conn = self.conns.get_mut(&c.conn)?;
+        let pend = conn.pending.get_mut(&c.req)?;
+        match c.result {
+            Ok(resp) => {
+                if let Some(slot) = pend.responses.get_mut(c.index) {
+                    *slot = Some(resp);
+                }
+            }
+            Err(msg) => {
+                if pend.failed.is_none() {
+                    pend.failed = Some(msg);
+                }
+            }
+        }
+        pend.remaining = pend.remaining.saturating_sub(1);
+        if pend.remaining > 0 {
+            return None;
+        }
+        let pend = conn.pending.remove(&c.req)?;
+        let reply = encode_reply(&pend);
+        conn.finish_request(c.req, reply, pend.ordered);
+        Some(c.conn)
+    }
+
+    /// Flush, decide close-vs-keep, recompute poller interest, and put
+    /// the connection back in the table (or drop it).
+    fn finish_conn(&mut self, mut conn: Conn) {
+        if !conn.dead {
+            conn.flush();
+        }
+        let drained = conn.pending.is_empty() && conn.fifo.is_empty() && conn.out_len() == 0;
+        let close = conn.dead
+            || (conn.read_eof && drained)
+            || (conn.closing && conn.out_len() == 0)
+            || (self.draining_since.is_some() && drained);
+        if close {
+            let _ = self.poller.deregister(conn.stream.as_raw_fd());
+            self.stats.open_conns.fetch_sub(1, Ordering::Relaxed);
+            return; // drop closes the socket
+        }
+        let allow_read = !conn.read_eof && !conn.closing && self.draining_since.is_none();
+        // Hysteresis: once paused (no READ registered), stay paused
+        // until the buffer falls to the low water mark.
+        let below_water = if conn.registered.readable() {
+            conn.out_len() <= OUT_HIGH_WATER
+        } else {
+            conn.out_len() <= OUT_LOW_WATER
+        };
+        let mut want = Interest::NONE;
+        if allow_read && below_water {
+            want = want.or(Interest::READ);
+        }
+        if conn.out_len() > 0 {
+            want = want.or(Interest::WRITE);
+        }
+        if want != conn.registered {
+            if self.poller.modify(conn.stream.as_raw_fd(), conn.token, want).is_err() {
+                let _ = self.poller.deregister(conn.stream.as_raw_fd());
+                self.stats.open_conns.fetch_sub(1, Ordering::Relaxed);
+                return;
+            }
+            conn.registered = want;
+        }
+        self.conns.insert(conn.token, conn);
+    }
+
+    /// Accept until the backlog is empty, applying admission control.
+    fn accept_new(&mut self) {
+        loop {
+            let stream = match self.listener.accept() {
+                Ok((s, _)) => s,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    std::thread::sleep(ACCEPT_BACKOFF);
+                    break;
+                }
+            };
+            if self.conns.len() >= self.max_conns {
+                // One structured shed line, then close.  The accepted
+                // socket is still blocking (accept doesn't inherit the
+                // listener's nonblocking flag on Linux), so this small
+                // write delivers without loop machinery.
+                self.stats.shed_conns.fetch_add(1, Ordering::Relaxed);
+                let mut s = stream;
+                let line =
+                    protocol::shed_reply(None, "server at connection capacity").to_string();
+                let _ = s.write_all(line.as_bytes());
+                let _ = s.write_all(b"\n");
+                continue;
+            }
+            if stream.set_nonblocking(true).is_err() {
+                continue;
+            }
+            stream.set_nodelay(true).ok();
+            let token = self.next_token;
+            self.next_token += 1;
+            if self.poller.register(stream.as_raw_fd(), token, Interest::READ).is_err() {
+                continue;
+            }
+            self.stats.open_conns.fetch_add(1, Ordering::Relaxed);
+            self.conns.insert(token, Conn::new(stream, token));
+        }
+    }
+
+    /// Enter drain mode: stop accepting, stop reading, finish in-flight
+    /// work, flush, close.  Idle connections close immediately.
+    fn begin_drain(&mut self) {
+        self.draining_since = Some(Instant::now());
+        let _ = self.poller.deregister(self.listener.as_raw_fd());
+        let tokens: Vec<u64> = self.conns.keys().copied().collect();
+        for token in tokens {
+            if let Some(conn) = self.conns.remove(&token) {
+                self.finish_conn(conn);
             }
         }
     }
-    if req.batched {
-        protocol::batch_reply(req.id.as_ref(), &responses)
+}
+
+/// Encode a finished request's reply from its accumulated state.
+fn encode_reply(pend: &PendingReq) -> Json {
+    if let Some(msg) = &pend.failed {
+        return if pend.shed {
+            protocol::shed_reply(pend.id.as_ref(), msg)
+        } else {
+            protocol::error_reply(pend.id.as_ref(), msg)
+        };
+    }
+    let mut responses = Vec::with_capacity(pend.responses.len());
+    for r in &pend.responses {
+        match r {
+            Some(r) => responses.push(r.clone()),
+            // Can't happen while remaining-counting is correct, but a
+            // hole must never panic the loop thread.
+            None => return protocol::error_reply(pend.id.as_ref(), "coordinator stopped"),
+        }
+    }
+    if pend.batched {
+        protocol::batch_reply(pend.id.as_ref(), &responses)
     } else {
-        protocol::infer_reply(req.id.as_ref(), &responses[0])
+        protocol::infer_reply(pend.id.as_ref(), &responses[0])
     }
 }
 
 /// Execute a command against the registry (the admin surface shares the
 /// request socket).
-fn run_cmd(c: &CmdRequest, registry: &ModelRegistry) -> Result<Json> {
+fn run_cmd(c: &CmdRequest, registry: &ModelRegistry, stats: &ServerStats) -> Result<Json> {
     Ok(match &c.cmd {
         Cmd::Ping => obj(vec![("ok", Json::Bool(true))]),
         Cmd::Info => {
-            let entry = registry.get(c.model.as_deref())?;
-            let (_, default) = registry.list();
-            let is_default = default.as_deref() == Some(entry.meta.model.as_str());
+            let (entry, is_default) = registry.get_with_default(c.model.as_deref())?;
             entry.meta.to_json(is_default)
         }
         Cmd::List => {
@@ -393,14 +859,11 @@ fn run_cmd(c: &CmdRequest, registry: &ModelRegistry) -> Result<Json> {
                 })
                 .collect();
             obj(vec![
-                (
-                    "default",
-                    default.map(Json::Str).unwrap_or(Json::Null),
-                ),
+                ("default", default.map(Json::Str).unwrap_or(Json::Null)),
                 ("models", Json::Arr(models)),
             ])
         }
-        Cmd::Metrics => metrics_json(registry, c.model.as_deref())?,
+        Cmd::Metrics => metrics_json(registry, c.model.as_deref(), stats)?,
         Cmd::Load { name, artifact, width } => {
             let stored = registry.load_artifact(name.as_deref(), artifact, *width)?;
             obj(vec![("loaded", Json::Str(stored))])
@@ -420,12 +883,17 @@ fn run_cmd(c: &CmdRequest, registry: &ModelRegistry) -> Result<Json> {
 }
 
 /// `{"cmd":"metrics"}`: aggregate counters + latency percentiles (p50 /
-/// p90 / p99 over the merged histograms), total inference microseconds,
-/// current queue depth, and per-model request counts plus — for logic
-/// engines — the tape-schedule gauges (`tape_ops`, `ops_stripped`,
-/// `max_live`, `scratch_planes`, `planes_unscheduled`).  With
-/// `"model"`, scoped to that model alone.
-fn metrics_json(registry: &ModelRegistry, model: Option<&str>) -> Result<Json> {
+/// p90 / p99 / p999 over the merged histograms), total inference
+/// microseconds, current queue depth, the server's overload gauges
+/// (`open_conns`, `shed_total`), and per-model request/shed counts plus
+/// — for logic engines — the tape-schedule gauges (`tape_ops`,
+/// `ops_stripped`, `max_live`, `scratch_planes`, `planes_unscheduled`).
+/// With `"model"`, scoped to that model alone.
+fn metrics_json(
+    registry: &ModelRegistry,
+    model: Option<&str>,
+    stats: &ServerStats,
+) -> Result<Json> {
     let entries = match model {
         Some(_) => vec![registry.get(model)?],
         None => registry.list().0,
@@ -450,6 +918,7 @@ fn metrics_json(registry: &ModelRegistry, model: Option<&str>) -> Result<Json> {
         let mut fields = vec![
             ("requests", num(m.requests() as f64)),
             ("queue_depth", num(m.queue_depth() as f64)),
+            ("shed", num(m.sheds() as f64)),
         ];
         // Logic engines expose their tape-schedule gauges: how many ops
         // the dead-strip removed and how small the liveness-compacted
@@ -472,12 +941,12 @@ fn metrics_json(registry: &ModelRegistry, model: Option<&str>) -> Result<Json> {
         ("p50_us", num(percentile_from_hist(&hist, 0.5) as f64)),
         ("p90_us", num(percentile_from_hist(&hist, 0.9) as f64)),
         ("p99_us", num(percentile_from_hist(&hist, 0.99) as f64)),
+        ("p999_us", num(percentile_from_hist(&hist, 0.999) as f64)),
         ("infer_us", num(infer_us as f64)),
         ("queue_depth", num(queue_depth as f64)),
-        (
-            "models",
-            Json::Obj(per_model.into_iter().collect()),
-        ),
+        ("open_conns", num(stats.open_conns() as f64)),
+        ("shed_total", num(stats.shed_total() as f64)),
+        ("models", Json::Obj(per_model.into_iter().collect())),
     ]))
 }
 
@@ -487,6 +956,7 @@ mod tests {
     use crate::coordinator::engine::InferenceEngine;
     use crate::coordinator::CoordinatorConfig;
     use crate::registry::ModelMeta;
+    use std::io::{BufRead, BufReader};
 
     struct Echo;
     impl InferenceEngine for Echo {
@@ -635,6 +1105,9 @@ mod tests {
         assert_eq!(j.get("requests").and_then(Json::as_usize), Some(3));
         assert_eq!(j.get("queue_depth").and_then(Json::as_usize), Some(0));
         assert!(j.get("p90_us").is_some() && j.get("infer_us").is_some());
+        assert!(j.get("p999_us").is_some(), "p999 gauge missing: {j:?}");
+        assert_eq!(j.get("shed_total").and_then(Json::as_usize), Some(0));
+        assert_eq!(j.get("open_conns").and_then(Json::as_usize), Some(1));
         assert_eq!(
             j.at(&["models", "a", "requests"]).and_then(Json::as_usize),
             Some(2)
@@ -643,6 +1116,7 @@ mod tests {
             j.at(&["models", "b", "requests"]).and_then(Json::as_usize),
             Some(1)
         );
+        assert_eq!(j.at(&["models", "a", "shed"]).and_then(Json::as_usize), Some(0));
         line.clear();
         reader.read_line(&mut line).unwrap();
         let j = Json::parse(line.trim()).unwrap();
@@ -708,7 +1182,8 @@ mod tests {
         reader.read_line(&mut line).unwrap();
         assert!(line.contains("\"ok\":true"));
         // Shutdown with the connection still open: must return promptly
-        // (blocking accept woken, handler joined) and close our stream.
+        // (the wake pipe rings the loop, the drain closes idle
+        // connections) and close our stream.
         let t0 = std::time::Instant::now();
         server.shutdown();
         assert!(
@@ -722,6 +1197,30 @@ mod tests {
     }
 
     #[test]
+    fn wildcard_bind_shuts_down_without_a_self_connect() {
+        // The old design woke a blocking accept() by connecting to its
+        // own address, which a wildcard bind made fragile.  The wake
+        // pipe makes shutdown address-independent.
+        let reg = registry_with(&[("echo", None)]);
+        let server = Server::start("0.0.0.0:0", Arc::clone(&reg)).unwrap();
+        let addr = std::net::SocketAddr::from(([127, 0, 0, 1], server.addr.port()));
+        let (mut conn, mut reader) = connect(addr);
+        conn.write_all(b"{\"cmd\": \"ping\"}\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"ok\":true"));
+        let t0 = std::time::Instant::now();
+        server.shutdown();
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(2),
+            "shutdown stalled for {:?} on a wildcard bind",
+            t0.elapsed()
+        );
+        line.clear();
+        assert_eq!(reader.read_line(&mut line).unwrap_or(0), 0);
+    }
+
+    #[test]
     fn connection_cap_sheds_with_error_line() {
         let reg = registry_with(&[("echo", None)]);
         let server = Server::start_with("127.0.0.1:0", Arc::clone(&reg), 1).unwrap();
@@ -730,13 +1229,15 @@ mod tests {
         let mut line = String::new();
         r1.read_line(&mut line).unwrap();
         assert!(line.contains("\"ok\":true"));
-        // Second connection: one error line, then EOF.
+        // Second connection: one structured shed line, then EOF.
         let (_c2, mut r2) = connect(server.addr);
         line.clear();
         r2.read_line(&mut line).unwrap();
         assert!(line.contains("connection capacity"), "{line}");
+        assert!(line.contains("\"shed\":true"), "shed marker missing: {line}");
         line.clear();
         assert_eq!(r2.read_line(&mut line).unwrap_or(0), 0);
+        assert!(server.stats().shed_conns() >= 1);
         drop(c1);
         server.shutdown();
     }

@@ -1,0 +1,10 @@
+//! Platform substrate for the event-loop server: nonblocking I/O
+//! readiness ([`Poller`]: epoll on Linux, portable `poll(2)` fallback)
+//! and cross-thread wakeups ([`WakePipe`]/[`Waker`]).
+//!
+//! Unix-only (the serving environment); everything else in the crate
+//! stays platform-neutral.  See [`poll`] for the backend details.
+
+pub mod poll;
+
+pub use poll::{Event, Interest, Poller, WakePipe, Waker};

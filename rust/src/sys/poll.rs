@@ -1,0 +1,686 @@
+//! Zero-dependency readiness polling: epoll on Linux with a portable
+//! `poll(2)` fallback, plus the self-pipe wakeup ([`WakePipe`] /
+//! [`Waker`]) the event loop uses to be interrupted from other threads.
+//!
+//! The repo has no crates.io access, so this talks to the platform the
+//! same way `std` does: `extern "C"` declarations against the libc that
+//! std already links.  Only the calls the event loop needs are declared
+//! (`epoll_*`, `poll`, `pipe`, `fcntl`, `read`, `write`, `close`).
+//!
+//! Both backends are **level-triggered**: an event keeps firing while
+//! the condition holds, so the owner must either drain (read/write to
+//! `WouldBlock`) or mask (drop the interest via [`Poller::modify`]) to
+//! make progress.  The `poll(2)` backend compiles on every unix and can
+//! be forced on Linux with `NULLANET_POLL_BACKEND=poll`, which is how CI
+//! exercises the fallback without a second OS.
+//!
+//! Tokens are caller-chosen `u64`s carried back verbatim in [`Event`];
+//! the server uses monotonically increasing tokens so a stale event for
+//! a closed connection can never alias a live one.
+
+use std::collections::BTreeMap;
+use std::io;
+use std::os::unix::io::RawFd;
+use std::sync::Arc;
+use std::time::Duration;
+
+mod ffi {
+    use std::os::raw::{c_int, c_void};
+
+    pub const F_SETFD: c_int = 2;
+    pub const FD_CLOEXEC: c_int = 1;
+    pub const F_GETFL: c_int = 3;
+    pub const F_SETFL: c_int = 4;
+    #[cfg(target_os = "linux")]
+    pub const O_NONBLOCK: c_int = 0o4000;
+    #[cfg(not(target_os = "linux"))]
+    pub const O_NONBLOCK: c_int = 0x0004;
+
+    pub const POLLIN: i16 = 0x001;
+    pub const POLLOUT: i16 = 0x004;
+    pub const POLLERR: i16 = 0x008;
+    pub const POLLHUP: i16 = 0x010;
+    pub const POLLNVAL: i16 = 0x020;
+
+    /// `struct pollfd` — identical layout on every unix.
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct PollFd {
+        pub fd: c_int,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    #[cfg(target_os = "linux")]
+    pub type NfdsT = std::os::raw::c_ulong;
+    #[cfg(not(target_os = "linux"))]
+    pub type NfdsT = std::os::raw::c_uint;
+
+    extern "C" {
+        pub fn pipe(fds: *mut c_int) -> c_int;
+        pub fn fcntl(fd: c_int, cmd: c_int, ...) -> c_int;
+        pub fn close(fd: c_int) -> c_int;
+        pub fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+        pub fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
+        pub fn poll(fds: *mut PollFd, nfds: NfdsT, timeout: c_int) -> c_int;
+    }
+
+    #[cfg(target_os = "linux")]
+    pub mod ep {
+        use std::os::raw::c_int;
+
+        pub const EPOLL_CLOEXEC: c_int = 0o2000000;
+        pub const EPOLL_CTL_ADD: c_int = 1;
+        pub const EPOLL_CTL_DEL: c_int = 2;
+        pub const EPOLL_CTL_MOD: c_int = 3;
+        pub const EPOLLIN: u32 = 0x001;
+        pub const EPOLLOUT: u32 = 0x004;
+        pub const EPOLLERR: u32 = 0x008;
+        pub const EPOLLHUP: u32 = 0x010;
+
+        /// `struct epoll_event`: packed on x86-64 (the kernel ABI), the
+        /// natural repr(C) everywhere else.  Fields must only ever be
+        /// *copied* out — taking a reference into a packed struct is UB.
+        #[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+        #[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+        #[derive(Clone, Copy)]
+        pub struct EpollEvent {
+            pub events: u32,
+            pub data: u64,
+        }
+
+        extern "C" {
+            pub fn epoll_create1(flags: c_int) -> c_int;
+            pub fn epoll_ctl(
+                epfd: c_int,
+                op: c_int,
+                fd: c_int,
+                event: *mut EpollEvent,
+            ) -> c_int;
+            pub fn epoll_wait(
+                epfd: c_int,
+                events: *mut EpollEvent,
+                maxevents: c_int,
+                timeout: c_int,
+            ) -> c_int;
+        }
+    }
+}
+
+fn cvt(ret: i32) -> io::Result<i32> {
+    if ret < 0 {
+        Err(io::Error::last_os_error())
+    } else {
+        Ok(ret)
+    }
+}
+
+/// Round a timeout up to whole milliseconds (`None` = block forever).
+/// Rounding *up* matters: a 100 µs timeout truncated to 0 ms would turn
+/// a short wait into a busy spin.
+fn timeout_ms(timeout: Option<Duration>) -> i32 {
+    match timeout {
+        None => -1,
+        Some(d) => d.as_micros().div_ceil(1000).min(i32::MAX as u128) as i32,
+    }
+}
+
+fn set_cloexec(fd: RawFd) -> io::Result<()> {
+    cvt(unsafe { ffi::fcntl(fd, ffi::F_SETFD, ffi::FD_CLOEXEC) })?;
+    Ok(())
+}
+
+fn set_nonblocking(fd: RawFd) -> io::Result<()> {
+    let flags = cvt(unsafe { ffi::fcntl(fd, ffi::F_GETFL) })?;
+    cvt(unsafe { ffi::fcntl(fd, ffi::F_SETFL, flags | ffi::O_NONBLOCK) })?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Interest / Event
+// ---------------------------------------------------------------------
+
+/// What readiness a registration wants.  Empty interest is legal: the
+/// fd stays registered (so errors/hangups are still observable on the
+/// poll backend) but produces no read/write events — the server uses
+/// this to park a backpressured connection.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct Interest(u8);
+
+impl Interest {
+    pub const NONE: Interest = Interest(0);
+    pub const READ: Interest = Interest(1);
+    pub const WRITE: Interest = Interest(2);
+    pub const READ_WRITE: Interest = Interest(3);
+
+    pub fn readable(self) -> bool {
+        self.0 & 1 != 0
+    }
+
+    pub fn writable(self) -> bool {
+        self.0 & 2 != 0
+    }
+
+    pub fn or(self, other: Interest) -> Interest {
+        Interest(self.0 | other.0)
+    }
+}
+
+/// One readiness report.  Error/hangup conditions are folded into
+/// `readable`/`writable`: the owner's next read or write surfaces the
+/// actual `io::Error` (or EOF), which is the single place connection
+/// teardown is decided.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+}
+
+// ---------------------------------------------------------------------
+// epoll backend (Linux)
+// ---------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+struct Epoll {
+    epfd: RawFd,
+    buf: Vec<ffi::ep::EpollEvent>,
+}
+
+#[cfg(target_os = "linux")]
+impl Epoll {
+    fn new() -> io::Result<Epoll> {
+        let epfd = cvt(unsafe { ffi::ep::epoll_create1(ffi::ep::EPOLL_CLOEXEC) })?;
+        Ok(Epoll {
+            epfd,
+            buf: vec![ffi::ep::EpollEvent { events: 0, data: 0 }; 1024],
+        })
+    }
+
+    fn mask(interest: Interest) -> u32 {
+        let mut m = 0;
+        if interest.readable() {
+            m |= ffi::ep::EPOLLIN;
+        }
+        if interest.writable() {
+            m |= ffi::ep::EPOLLOUT;
+        }
+        m
+    }
+
+    fn ctl(&mut self, op: i32, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+        let mut ev = ffi::ep::EpollEvent {
+            events: Self::mask(interest),
+            data: token,
+        };
+        cvt(unsafe { ffi::ep::epoll_ctl(self.epfd, op, fd, &mut ev) })?;
+        Ok(())
+    }
+
+    fn wait(&mut self, events: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+        let n = unsafe {
+            ffi::ep::epoll_wait(
+                self.epfd,
+                self.buf.as_mut_ptr(),
+                self.buf.len() as i32,
+                timeout_ms(timeout),
+            )
+        };
+        if n < 0 {
+            let err = io::Error::last_os_error();
+            if err.kind() == io::ErrorKind::Interrupted {
+                return Ok(());
+            }
+            return Err(err);
+        }
+        for i in 0..n as usize {
+            // Copy fields out of the (possibly packed) struct; never
+            // take references into it.
+            let raw = self.buf[i].events;
+            let token = self.buf[i].data;
+            let errlike = raw & (ffi::ep::EPOLLERR | ffi::ep::EPOLLHUP) != 0;
+            events.push(Event {
+                token,
+                readable: raw & ffi::ep::EPOLLIN != 0 || errlike,
+                writable: raw & ffi::ep::EPOLLOUT != 0 || errlike,
+            });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(target_os = "linux")]
+impl Drop for Epoll {
+    fn drop(&mut self) {
+        unsafe {
+            ffi::close(self.epfd);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// poll(2) backend (portable)
+// ---------------------------------------------------------------------
+
+struct PollTable {
+    fds: Vec<ffi::PollFd>,
+    tokens: Vec<u64>,
+    by_fd: BTreeMap<RawFd, usize>,
+}
+
+impl PollTable {
+    fn new() -> PollTable {
+        PollTable {
+            fds: Vec::new(),
+            tokens: Vec::new(),
+            by_fd: BTreeMap::new(),
+        }
+    }
+
+    fn mask(interest: Interest) -> i16 {
+        let mut m = 0;
+        if interest.readable() {
+            m |= ffi::POLLIN;
+        }
+        if interest.writable() {
+            m |= ffi::POLLOUT;
+        }
+        m
+    }
+
+    fn register(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+        if self.by_fd.contains_key(&fd) {
+            return Err(io::Error::new(
+                io::ErrorKind::AlreadyExists,
+                "fd already registered",
+            ));
+        }
+        self.by_fd.insert(fd, self.fds.len());
+        self.fds.push(ffi::PollFd {
+            fd,
+            events: Self::mask(interest),
+            revents: 0,
+        });
+        self.tokens.push(token);
+        Ok(())
+    }
+
+    fn modify(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+        let &idx = self
+            .by_fd
+            .get(&fd)
+            .ok_or_else(|| io::Error::new(io::ErrorKind::NotFound, "fd not registered"))?;
+        self.fds[idx].events = Self::mask(interest);
+        self.tokens[idx] = token;
+        Ok(())
+    }
+
+    fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+        let idx = self
+            .by_fd
+            .remove(&fd)
+            .ok_or_else(|| io::Error::new(io::ErrorKind::NotFound, "fd not registered"))?;
+        self.fds.swap_remove(idx);
+        self.tokens.swap_remove(idx);
+        if idx < self.fds.len() {
+            self.by_fd.insert(self.fds[idx].fd, idx);
+        }
+        Ok(())
+    }
+
+    fn wait(&mut self, events: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+        for f in &mut self.fds {
+            f.revents = 0;
+        }
+        let n = unsafe {
+            ffi::poll(
+                self.fds.as_mut_ptr(),
+                self.fds.len() as ffi::NfdsT,
+                timeout_ms(timeout),
+            )
+        };
+        if n < 0 {
+            let err = io::Error::last_os_error();
+            if err.kind() == io::ErrorKind::Interrupted {
+                return Ok(());
+            }
+            return Err(err);
+        }
+        for (f, &token) in self.fds.iter().zip(&self.tokens) {
+            if f.revents == 0 {
+                continue;
+            }
+            let errlike = f.revents & (ffi::POLLERR | ffi::POLLHUP | ffi::POLLNVAL) != 0;
+            events.push(Event {
+                token,
+                readable: f.revents & ffi::POLLIN != 0 || errlike,
+                writable: f.revents & ffi::POLLOUT != 0 || errlike,
+            });
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Poller
+// ---------------------------------------------------------------------
+
+enum Backend {
+    #[cfg(target_os = "linux")]
+    Epoll(Epoll),
+    Poll(PollTable),
+}
+
+/// Readiness poller over the platform's best available mechanism.
+pub struct Poller {
+    backend: Backend,
+}
+
+impl Poller {
+    /// The default backend for this platform: epoll on Linux (unless
+    /// `NULLANET_POLL_BACKEND=poll` forces the fallback), `poll(2)`
+    /// elsewhere.
+    pub fn new() -> io::Result<Poller> {
+        #[cfg(target_os = "linux")]
+        {
+            let forced = std::env::var("NULLANET_POLL_BACKEND")
+                .map(|v| v == "poll")
+                .unwrap_or(false);
+            if !forced {
+                return Ok(Poller {
+                    backend: Backend::Epoll(Epoll::new()?),
+                });
+            }
+        }
+        Ok(Poller::poll_backend())
+    }
+
+    /// The portable `poll(2)` backend, explicitly (used by tests to
+    /// cover the fallback on Linux).
+    pub fn poll_backend() -> Poller {
+        Poller {
+            backend: Backend::Poll(PollTable::new()),
+        }
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        match &self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll(_) => "epoll",
+            Backend::Poll(_) => "poll",
+        }
+    }
+
+    pub fn register(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+        match &mut self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll(ep) => ep.ctl(ffi::ep::EPOLL_CTL_ADD, fd, token, interest),
+            Backend::Poll(pt) => pt.register(fd, token, interest),
+        }
+    }
+
+    pub fn modify(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+        match &mut self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll(ep) => ep.ctl(ffi::ep::EPOLL_CTL_MOD, fd, token, interest),
+            Backend::Poll(pt) => pt.modify(fd, token, interest),
+        }
+    }
+
+    pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+        match &mut self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll(ep) => ep.ctl(ffi::ep::EPOLL_CTL_DEL, fd, 0, Interest::NONE),
+            Backend::Poll(pt) => pt.deregister(fd),
+        }
+    }
+
+    /// Block until readiness or timeout, appending to `events` (which
+    /// the caller clears and reuses — no per-tick allocation).  EINTR is
+    /// reported as an empty wait, not an error.
+    pub fn wait(&mut self, events: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+        match &mut self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll(ep) => ep.wait(events, timeout),
+            Backend::Poll(pt) => pt.wait(events, timeout),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Wake pipe
+// ---------------------------------------------------------------------
+
+/// A raw fd that closes on drop.
+struct OwnedFd(RawFd);
+
+impl Drop for OwnedFd {
+    fn drop(&mut self) {
+        unsafe {
+            ffi::close(self.0);
+        }
+    }
+}
+
+/// The read side of a self-pipe.  Register [`WakePipe::fd`] for READ in
+/// the poller; any thread holding a [`Waker`] can interrupt the wait.
+/// Replaces the old self-connect shutdown trick, which required being
+/// able to dial our own listen address.
+pub struct WakePipe {
+    read_fd: OwnedFd,
+    waker: Waker,
+}
+
+/// Clonable, thread-safe handle that wakes the event loop.
+#[derive(Clone)]
+pub struct Waker {
+    write_fd: Arc<OwnedFd>,
+}
+
+impl WakePipe {
+    pub fn new() -> io::Result<WakePipe> {
+        let mut fds = [0i32; 2];
+        cvt(unsafe { ffi::pipe(fds.as_mut_ptr()) })?;
+        let read_fd = OwnedFd(fds[0]);
+        let write_fd = OwnedFd(fds[1]);
+        for fd in [fds[0], fds[1]] {
+            set_cloexec(fd)?;
+            set_nonblocking(fd)?;
+        }
+        Ok(WakePipe {
+            read_fd,
+            waker: Waker {
+                write_fd: Arc::new(write_fd),
+            },
+        })
+    }
+
+    pub fn fd(&self) -> RawFd {
+        self.read_fd.0
+    }
+
+    pub fn waker(&self) -> Waker {
+        self.waker.clone()
+    }
+
+    /// Consume all pending wake bytes (level-triggered: an undrained
+    /// pipe would fire forever).
+    pub fn drain(&self) {
+        let mut buf = [0u8; 64];
+        loop {
+            let n = unsafe {
+                ffi::read(
+                    self.read_fd.0,
+                    buf.as_mut_ptr() as *mut std::os::raw::c_void,
+                    buf.len(),
+                )
+            };
+            if n <= 0 {
+                break;
+            }
+        }
+    }
+}
+
+impl Waker {
+    /// Wake the poller.  If the pipe is already full a byte is already
+    /// pending, so the wakeup is not lost — EAGAIN is deliberately
+    /// ignored.
+    pub fn wake(&self) {
+        let b = [1u8];
+        unsafe {
+            ffi::write(
+                self.write_fd.0,
+                b.as_ptr() as *const std::os::raw::c_void,
+                1,
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::os::unix::io::AsRawFd;
+    use std::time::Instant;
+
+    /// Every backend available on this platform (epoll + poll fallback
+    /// on Linux, just poll elsewhere).
+    fn backends() -> Vec<Poller> {
+        let default = Poller::new().unwrap();
+        let mut out = Vec::new();
+        if default.backend_name() != "poll" {
+            out.push(default);
+            out.push(Poller::poll_backend());
+        } else {
+            out.push(default);
+        }
+        out
+    }
+
+    #[test]
+    fn wake_pipe_wakes_a_blocked_wait_and_drains() {
+        for mut p in backends() {
+            let wake = WakePipe::new().unwrap();
+            p.register(wake.fd(), 7, Interest::READ).unwrap();
+
+            // Timed wait with no wake: no events.
+            let mut events = Vec::new();
+            p.wait(&mut events, Some(Duration::from_millis(10))).unwrap();
+            assert!(events.is_empty(), "{}: spurious event", p.backend_name());
+
+            // Wake from another thread interrupts an indefinite wait.
+            let waker = wake.waker();
+            let t = std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(20));
+                waker.wake();
+            });
+            p.wait(&mut events, None).unwrap();
+            t.join().unwrap();
+            assert_eq!(events.len(), 1, "{}", p.backend_name());
+            assert_eq!(events[0].token, 7);
+            assert!(events[0].readable);
+
+            // Drained pipe stops firing (level-triggered check).
+            wake.drain();
+            events.clear();
+            p.wait(&mut events, Some(Duration::from_millis(5))).unwrap();
+            assert!(events.is_empty(), "{}: wake not drained", p.backend_name());
+        }
+    }
+
+    #[test]
+    fn socket_readiness_and_interest_modification() {
+        for mut p in backends() {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let mut client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+            let (server, _) = listener.accept().unwrap();
+            server.set_nonblocking(true).unwrap();
+
+            // Fresh socket with empty send buffer: writable, not readable.
+            p.register(server.as_raw_fd(), 42, Interest::READ_WRITE)
+                .unwrap();
+            let mut events = Vec::new();
+            p.wait(&mut events, Some(Duration::from_millis(100))).unwrap();
+            assert_eq!(events.len(), 1, "{}", p.backend_name());
+            assert!(events[0].writable && !events[0].readable);
+
+            // Mask writes: silence until the peer sends.
+            p.modify(server.as_raw_fd(), 42, Interest::READ).unwrap();
+            events.clear();
+            p.wait(&mut events, Some(Duration::from_millis(10))).unwrap();
+            assert!(events.is_empty(), "{}: READ-only yet no data", p.backend_name());
+
+            client.write_all(b"x").unwrap();
+            events.clear();
+            p.wait(&mut events, Some(Duration::from_millis(500))).unwrap();
+            assert_eq!(events.len(), 1, "{}", p.backend_name());
+            assert!(events[0].readable);
+            assert_eq!(events[0].token, 42);
+
+            // Level-triggered: still readable until drained.
+            events.clear();
+            p.wait(&mut events, Some(Duration::from_millis(10))).unwrap();
+            assert_eq!(events.len(), 1, "{}: should re-fire", p.backend_name());
+            let mut server = server;
+            let mut buf = [0u8; 8];
+            assert_eq!(server.read(&mut buf).unwrap(), 1);
+
+            // Deregister: no events even with data pending.
+            client.write_all(b"y").unwrap();
+            p.deregister(server.as_raw_fd()).unwrap();
+            events.clear();
+            p.wait(&mut events, Some(Duration::from_millis(10))).unwrap();
+            assert!(events.is_empty(), "{}: deregistered fd fired", p.backend_name());
+        }
+    }
+
+    #[test]
+    fn empty_interest_parks_a_connection() {
+        for mut p in backends() {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let mut client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+            let (server, _) = listener.accept().unwrap();
+            server.set_nonblocking(true).unwrap();
+            p.register(server.as_raw_fd(), 1, Interest::NONE).unwrap();
+            client.write_all(b"pending").unwrap();
+            let mut events = Vec::new();
+            p.wait(&mut events, Some(Duration::from_millis(10))).unwrap();
+            assert!(events.is_empty(), "{}: parked fd fired", p.backend_name());
+            // Unpark: the pending data fires immediately.
+            p.modify(server.as_raw_fd(), 1, Interest::READ).unwrap();
+            p.wait(&mut events, Some(Duration::from_millis(500))).unwrap();
+            assert_eq!(events.len(), 1, "{}", p.backend_name());
+            drop(server);
+        }
+    }
+
+    #[test]
+    fn zero_timeout_polls_without_blocking() {
+        for mut p in backends() {
+            let wake = WakePipe::new().unwrap();
+            p.register(wake.fd(), 1, Interest::READ).unwrap();
+            let start = Instant::now();
+            let mut events = Vec::new();
+            p.wait(&mut events, Some(Duration::ZERO)).unwrap();
+            assert!(events.is_empty());
+            assert!(
+                start.elapsed() < Duration::from_millis(100),
+                "{}: zero-timeout wait blocked",
+                p.backend_name()
+            );
+        }
+    }
+
+    #[test]
+    fn sub_millisecond_timeouts_round_up() {
+        // 100 µs must become 1 ms, not 0 ms (which poll treats as
+        // "return immediately" — a busy spin for the caller).
+        assert_eq!(timeout_ms(Some(Duration::from_micros(100))), 1);
+        assert_eq!(timeout_ms(Some(Duration::ZERO)), 0);
+        assert_eq!(timeout_ms(Some(Duration::from_millis(250))), 250);
+        assert_eq!(timeout_ms(None), -1);
+    }
+}
