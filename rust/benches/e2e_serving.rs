@@ -12,11 +12,14 @@
 //!
 //! Run: cargo bench --bench e2e_serving
 //! Emits BENCH_serving.json (machine-readable medians: per-width batch
-//! latency, amortized per-image latency, imgs/sec, and the
-//! scheduled-vs-pre-PR speedups) — the serving half of the perf
-//! trajectory, mirroring
+//! latency, amortized per-image latency, imgs/sec, the
+//! scheduled-vs-pre-PR speedups, and a SIMD backend x width sweep with
+//! generic-vs-avx2-vs-avx512 rows + `simd_speedup_*` ratios) — the
+//! serving half of the perf trajectory, mirroring
 //! BENCH_compile.json.  Cargo runs benches with CWD = the package root,
-//! so the file lands at rust/BENCH_serving.json.
+//! so the file lands at rust/BENCH_serving.json.  Set
+//! NULLANET_BENCH_WRITE_BASELINE=<path> to also write the run as a
+//! baseline candidate for rust/BENCH_serving.baseline.json.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -28,6 +31,7 @@ use nullanet::isf::{extract, IsfConfig, LayerObservations};
 use nullanet::jsonio::{num, obj, s, Json};
 use nullanet::model::{Arch, NetArtifacts, Tensor, ThresholdLayer};
 use nullanet::netlist::LogicTape;
+use nullanet::simd;
 use nullanet::synth::{optimize_layer, SynthConfig};
 use nullanet::util::{transpose_to_planes, BitVec, BitWord, SplitMix64, W256, W512};
 
@@ -231,6 +235,36 @@ fn main() {
     assert_eq!(logic256.infer_batch(&image_refs), want, "w256 scheduled != pre-PR path");
     assert_eq!(logic512.infer_batch(&image_refs), want, "w512 scheduled != pre-PR path");
 
+    // Per-backend engines for the SIMD sweep.  Every backend the CPU
+    // offers must be bit-identical to the pre-PR path as well — the
+    // sweep is only meaningful if all rows compute the same function.
+    let backends = simd::available_backends();
+    println!("simd sweep: {}", simd::describe(simd::select()));
+    struct BackendEngines {
+        backend: simd::Backend,
+        e64: engine::LogicEngine<u64>,
+        e256: engine::LogicEngine<W256>,
+        e512: engine::LogicEngine<W512>,
+    }
+    let backend_engines: Vec<BackendEngines> = backends
+        .iter()
+        .map(|&backend| BackendEngines {
+            backend,
+            e64: engine::LogicEngine::<u64>::with_backend(net.clone(), tapes.clone(), backend)
+                .unwrap(),
+            e256: engine::LogicEngine::<W256>::with_backend(net.clone(), tapes.clone(), backend)
+                .unwrap(),
+            e512: engine::LogicEngine::<W512>::with_backend(net.clone(), tapes.clone(), backend)
+                .unwrap(),
+        })
+        .collect();
+    for be in &backend_engines {
+        let bn = be.backend.name();
+        assert_eq!(be.e64.infer_batch(&image_refs), want, "simd:{bn} w64 != pre-PR path");
+        assert_eq!(be.e256.infer_batch(&image_refs), want, "simd:{bn} w256 != pre-PR path");
+        assert_eq!(be.e512.infer_batch(&image_refs), want, "simd:{bn} w512 != pre-PR path");
+    }
+
     let stats = logic64.schedule_stats().expect("logic engine stats");
     println!(
         "schedule: {} ops ({} stripped), max_live {} vs {} unscheduled planes \
@@ -243,16 +277,16 @@ fn main() {
     );
 
     let budget = Duration::from_millis(700);
-    let mut results: Vec<(String, usize, BenchResult)> = Vec::new();
+    let mut results: Vec<(String, usize, Option<String>, BenchResult)> = Vec::new();
     {
-        let mut run = |name: &str, width: usize, f: &mut dyn FnMut()| {
+        let mut run = |name: &str, width: usize, backend: Option<&str>, f: &mut dyn FnMut()| {
             let r = bench(name, budget, f);
-            results.push((name.to_string(), width, r));
+            results.push((name.to_string(), width, backend.map(str::to_string), r));
         };
-        run("logic w64 scheduled+pooled", 64, &mut || {
+        run("logic w64 scheduled+pooled", 64, None, &mut || {
             std::hint::black_box(logic64.infer_batch(std::hint::black_box(&image_refs)));
         });
-        run("logic w64 pre-PR path", 64, &mut || {
+        run("logic w64 pre-PR path", 64, None, &mut || {
             std::hint::black_box(naive_infer_batch::<u64>(
                 &net,
                 &tapes,
@@ -260,10 +294,10 @@ fn main() {
                 std::hint::black_box(&image_refs),
             ));
         });
-        run("logic w256 scheduled+pooled", 256, &mut || {
+        run("logic w256 scheduled+pooled", 256, None, &mut || {
             std::hint::black_box(logic256.infer_batch(std::hint::black_box(&image_refs)));
         });
-        run("logic w256 pre-PR path", 256, &mut || {
+        run("logic w256 pre-PR path", 256, None, &mut || {
             std::hint::black_box(naive_infer_batch::<W256>(
                 &net,
                 &tapes,
@@ -271,10 +305,10 @@ fn main() {
                 std::hint::black_box(&image_refs),
             ));
         });
-        run("logic w512 scheduled+pooled", 512, &mut || {
+        run("logic w512 scheduled+pooled", 512, None, &mut || {
             std::hint::black_box(logic512.infer_batch(std::hint::black_box(&image_refs)));
         });
-        run("logic w512 pre-PR path", 512, &mut || {
+        run("logic w512 pre-PR path", 512, None, &mut || {
             std::hint::black_box(naive_infer_batch::<W512>(
                 &net,
                 &tapes,
@@ -282,16 +316,31 @@ fn main() {
                 std::hint::black_box(&image_refs),
             ));
         });
-        run("threshold (Eq.1 dot products)", 64, &mut || {
+        run("threshold (Eq.1 dot products)", 64, None, &mut || {
             std::hint::black_box(thresh.infer_batch(std::hint::black_box(&image_refs)));
         });
+        // The SIMD backend x width sweep: one row per (backend, width).
+        // "logic w{w} scheduled+pooled" above runs whatever NULLANET_
+        // SIMD_BACKEND / detection selected; these rows pin the backend.
+        for be in &backend_engines {
+            let bn = be.backend.name();
+            run(&format!("logic w64 simd:{bn}"), 64, Some(bn), &mut || {
+                std::hint::black_box(be.e64.infer_batch(std::hint::black_box(&image_refs)));
+            });
+            run(&format!("logic w256 simd:{bn}"), 256, Some(bn), &mut || {
+                std::hint::black_box(be.e256.infer_batch(std::hint::black_box(&image_refs)));
+            });
+            run(&format!("logic w512 simd:{bn}"), 512, Some(bn), &mut || {
+                std::hint::black_box(be.e512.infer_batch(std::hint::black_box(&image_refs)));
+            });
+        }
     }
 
     let mut table = Table::new(
         &format!("End-to-end inference engines (batch = {BATCH})"),
         &["Engine", "batch latency", "per image", "images/s"],
     );
-    for (name, _width, r) in &results {
+    for (name, _width, _backend, r) in &results {
         table.row(&[
             name.clone(),
             nullanet::bench_util::format_ns(r.median_ns),
@@ -305,8 +354,8 @@ fn main() {
     let median = |name: &str| {
         results
             .iter()
-            .find(|(n, _, _)| n == name)
-            .map(|(_, _, r)| r.median_ns)
+            .find(|(n, _, _, _)| n == name)
+            .map(|(_, _, _, r)| r.median_ns)
             .unwrap()
     };
     let mut speedups: Vec<(&str, f64)> = Vec::new();
@@ -320,6 +369,22 @@ fn main() {
             256 => ("speedup_w256", ratio),
             _ => ("speedup_w512", ratio),
         });
+    }
+
+    // SIMD-backend-vs-generic deltas at each width (the tentpole's
+    // acceptance evidence; generic is the 1.0x reference row).
+    let mut simd_speedups: Vec<(String, f64)> = Vec::new();
+    for width in [64usize, 256, 512] {
+        let generic = median(&format!("logic w{width} simd:generic"));
+        for &backend in &backends {
+            if backend == simd::Backend::Generic {
+                continue;
+            }
+            let bn = backend.name();
+            let ratio = generic / median(&format!("logic w{width} simd:{bn}"));
+            println!("w{width}: simd:{bn} is {ratio:.2}x generic");
+            simd_speedups.push((format!("simd_speedup_w{width}_{bn}"), ratio));
+        }
     }
 
     // Coordinator throughput under concurrent load: big batches sharded
@@ -358,10 +423,14 @@ fn main() {
     }
 
     // Machine-readable trajectory, mirroring BENCH_compile.json.
+    let cpu = simd::cpu_features();
     let mut pairs = vec![
         ("bench", s("e2e_serving")),
         ("batch", num(BATCH as f64)),
         ("isf_cap", num(cap as f64)),
+        ("simd_selected", s(simd::select().name())),
+        ("cpu_avx2", Json::Bool(cpu.avx2)),
+        ("cpu_avx512f", Json::Bool(cpu.avx512f)),
         ("tape_ops", num(stats.n_ops as f64)),
         ("ops_stripped", num(stats.ops_stripped as f64)),
         ("max_live", num(stats.max_live as f64)),
@@ -372,8 +441,8 @@ fn main() {
             Json::Arr(
                 results
                     .iter()
-                    .map(|(name, width, r)| {
-                        obj(vec![
+                    .map(|(name, width, backend, r)| {
+                        let mut row = vec![
                             ("name", s(name)),
                             ("width", num(*width as f64)),
                             ("median_ns", num(r.median_ns)),
@@ -383,7 +452,11 @@ fn main() {
                             ("image_ns", num(r.median_ns / BATCH as f64)),
                             ("imgs_per_s", num(r.throughput(BATCH as f64))),
                             ("iters", num(r.iters as f64)),
-                        ])
+                        ];
+                        if let Some(b) = backend {
+                            row.push(("backend", s(b)));
+                        }
+                        obj(row)
                     })
                     .collect(),
             ),
@@ -392,7 +465,32 @@ fn main() {
     for (k, v) in speedups {
         pairs.push((k, num(v)));
     }
-    let json = obj(pairs);
+    let mut json = obj(pairs);
+    if let Json::Obj(map) = &mut json {
+        for (k, v) in simd_speedups {
+            map.insert(k, num(v));
+        }
+    }
     std::fs::write("BENCH_serving.json", json.to_string()).unwrap();
     println!("wrote BENCH_serving.json");
+
+    // NULLANET_BENCH_WRITE_BASELINE=<path>: also emit this run as a
+    // measured baseline candidate (same schema plus a provenance note),
+    // so refreshing rust/BENCH_serving.baseline.json is one command:
+    //   NULLANET_BENCH_WRITE_BASELINE=BENCH_serving.baseline.json \
+    //     cargo bench --bench e2e_serving
+    if let Ok(path) = std::env::var("NULLANET_BENCH_WRITE_BASELINE") {
+        if !path.is_empty() {
+            if let Json::Obj(map) = &mut json {
+                map.insert(
+                    "note".to_string(),
+                    s("Measured baseline: written by cargo bench --bench e2e_serving \
+                       with NULLANET_BENCH_WRITE_BASELINE set; regenerate the same \
+                       way on a quiet runner."),
+                );
+            }
+            std::fs::write(&path, json.to_string()).unwrap();
+            println!("wrote baseline candidate {path}");
+        }
+    }
 }

@@ -6,10 +6,11 @@
 use std::time::Duration;
 
 use nullanet::aig::{self, Aig};
-use nullanet::bench_util::{bench, bench_tape_width};
+use nullanet::bench_util::{bench, bench_sched_backend, bench_tape_width};
 use nullanet::isf::{extract, IsfConfig, LayerObservations};
 use nullanet::logic::{minimize, EspressoConfig};
-use nullanet::netlist::LogicTape;
+use nullanet::netlist::{LogicTape, ScheduledTape};
+use nullanet::simd;
 use nullanet::synth::{optimize_layer, SynthConfig};
 use nullanet::util::{SplitMix64, W256, W512};
 
@@ -121,6 +122,32 @@ fn main() {
         b256 / b64,
         b512 / b64
     );
+
+    // --- SIMD backend sweep: scheduled tape through each plane-kernel
+    // backend the CPU offers, at every width.  generic is the scalar
+    // reference; avx2/avx512 rows only appear where detected.
+    let sched = ScheduledTape::new(&tape);
+    println!(
+        "\n=== simd backend sweep: scheduled layer tape ({} ops), batch = 512 ===",
+        sched.n_ops()
+    );
+    println!("({})", simd::describe(simd::select()));
+    let mut rng = SplitMix64::new(6);
+    for backend in simd::available_backends() {
+        let s64 = bench_sched_backend::<u64>(&sched, backend, batch, budget, &mut rng);
+        let s256 = bench_sched_backend::<W256>(&sched, backend, batch, budget, &mut rng);
+        let s512 = bench_sched_backend::<W512>(&sched, backend, batch, budget, &mut rng);
+        println!(
+            "simd:{:<7} {:.0} / {:.0} / {:.0} blocks64/s | speedup vs 64-lane: \
+             x{:.2} (256), x{:.2} (512)",
+            backend.name(),
+            s64,
+            s256,
+            s512,
+            s256 / s64,
+            s512 / s64
+        );
+    }
 
     // --- random AIG scaling + width sweep at each size ---------------------
     let mut rng = SplitMix64::new(4);

@@ -1,0 +1,48 @@
+//! Build probe for the SIMD backends (`src/simd/`).
+//!
+//! The AVX-512 intrinsics this crate uses (`_mm512_*` in
+//! `core::arch::x86_64`) were stabilized in Rust 1.89.  Older stable
+//! toolchains must still build the crate (zero-dependency rule: we
+//! cannot pull in a version-detect crate), so the `avx512.rs` backend is
+//! compiled only when the probe proves the compiler is new enough, via
+//! the custom cfg `nullanet_avx512`.  Runtime availability is a separate
+//! question answered by `is_x86_feature_detected!` at engine
+//! construction; this gate is purely "can the compiler parse the
+//! intrinsics".  On probe failure we conservatively leave AVX-512 out —
+//! the AVX2 and generic backends carry the load.
+
+use std::process::Command;
+
+fn main() {
+    // Declare the cfg so `-D warnings` builds don't trip
+    // `unexpected_cfgs` on `cfg(nullanet_avx512)`.
+    println!("cargo::rustc-check-cfg=cfg(nullanet_avx512)");
+    if rustc_at_least(1, 89) {
+        println!("cargo:rustc-cfg=nullanet_avx512");
+    }
+    println!("cargo:rerun-if-changed=build.rs");
+}
+
+/// True iff `$RUSTC --version` reports `major.minor` >= the given pair.
+/// Any parse failure (exotic toolchain banner, missing rustc) returns
+/// false: missing a backend is safe, compiling unparseable intrinsics is
+/// not.
+fn rustc_at_least(major: u32, minor: u32) -> bool {
+    let rustc = std::env::var("RUSTC").unwrap_or_else(|_| "rustc".to_string());
+    let Ok(out) = Command::new(rustc).arg("--version").output() else {
+        return false;
+    };
+    let text = String::from_utf8_lossy(&out.stdout);
+    // "rustc 1.89.0 (abc 2025-07-01)" / "rustc 1.91.0-nightly (...)"
+    let Some(ver) = text.split_whitespace().nth(1) else {
+        return false;
+    };
+    let mut parts = ver.split(['.', '-']);
+    let (Some(maj), Some(min)) = (parts.next(), parts.next()) else {
+        return false;
+    };
+    match (maj.parse::<u32>(), min.parse::<u32>()) {
+        (Ok(maj), Ok(min)) => (maj, min) >= (major, minor),
+        _ => false,
+    }
+}

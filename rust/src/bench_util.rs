@@ -124,6 +124,53 @@ pub fn bench_tape_width<W: BitWord>(
     r.throughput(batch as f64 / 64.0)
 }
 
+/// Measure scheduled-tape evaluation throughput at plane width `W`
+/// through one SIMD backend's plane kernels — same workload shape and
+/// units as [`bench_tape_width`] (blocks-of-64 per second), so rows are
+/// comparable across both widths and backends.  Falls back to the
+/// generic kernels when `backend` is unavailable on this CPU (the
+/// printed row name reports the backend that actually ran).
+pub fn bench_sched_backend<W: BitWord>(
+    sched: &crate::netlist::ScheduledTape,
+    backend: crate::simd::Backend,
+    batch: usize,
+    budget: Duration,
+    rng: &mut SplitMix64,
+) -> f64 {
+    assert_eq!(batch % W::LANES, 0, "batch must be a multiple of the lane count");
+    let kern = backend.kernels();
+    let passes = batch / W::LANES;
+    let inputs: Vec<Vec<W>> = (0..passes)
+        .map(|_| {
+            (0..sched.n_inputs())
+                .map(|_| W::from_lanes(|_| rng.bool(0.5)))
+                .collect()
+        })
+        .collect();
+    let mut out = vec![W::ZERO; sched.n_outputs()];
+    let mut scratch = sched.make_scratch::<W>();
+    let r = bench(
+        &format!(
+            "sched eval {} ops, batch {batch} @ {:>3} lanes, simd:{}",
+            sched.n_ops(),
+            W::LANES,
+            kern.backend().name()
+        ),
+        budget,
+        || {
+            for ins in &inputs {
+                sched.eval_into_kern(
+                    kern,
+                    std::hint::black_box(ins.as_slice()),
+                    std::hint::black_box(&mut out),
+                    &mut scratch,
+                );
+            }
+        },
+    );
+    r.throughput(batch as f64 / 64.0)
+}
+
 /// Simple markdown-ish table printer for paper-table reproduction.
 pub struct Table {
     pub title: String,
@@ -220,6 +267,26 @@ mod tests {
         let t64 = bench_tape_width::<u64>(&tape, 512, budget, &mut rng);
         let t512 = bench_tape_width::<W512>(&tape, 512, budget, &mut rng);
         assert!(t64 > 0.0 && t512 > 0.0);
+    }
+
+    #[test]
+    fn sched_backend_probe_runs_on_every_backend() {
+        use crate::aig::Aig;
+        use crate::netlist::ScheduledTape;
+        use crate::simd;
+        use crate::util::W256;
+
+        let mut g = Aig::new(4);
+        let (a, b) = (g.pi(0), g.pi(1));
+        let x = g.xor(a, b);
+        g.add_output(x);
+        let sched = ScheduledTape::new(&LogicTape::from_aig(&g));
+        let mut rng = SplitMix64::new(2);
+        let budget = Duration::from_millis(5);
+        for backend in simd::available_backends() {
+            let t = bench_sched_backend::<W256>(&sched, backend, 512, budget, &mut rng);
+            assert!(t > 0.0, "{} probe produced no throughput", backend.name());
+        }
     }
 
     #[test]

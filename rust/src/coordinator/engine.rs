@@ -17,6 +17,7 @@ use crate::artifact::{required_params, CompiledModel};
 use crate::format_err;
 use crate::model::{Arch, NetArtifacts, ThresholdLayer};
 use crate::netlist::{LogicTape, ScheduleStats, ScheduledTape};
+use crate::simd::{self, PlaneKernels};
 use crate::util::error::Result;
 use crate::util::{BitVec, BitWord, W256, W512};
 
@@ -47,6 +48,14 @@ pub trait InferenceEngine: Send + Sync {
     /// liveness-compacted scratch size.  Surfaced per model by
     /// `{"cmd":"metrics"}`; None for non-logic engines.
     fn schedule_stats(&self) -> Option<ScheduleStats> {
+        None
+    }
+    /// Name of the SIMD backend this engine's plane kernels run on
+    /// (`"generic"`/`"avx2"`/`"avx512"`), for engines on the
+    /// bit-parallel path.  Surfaced in `{"cmd":"info"}` and
+    /// `{"cmd":"metrics"}`; None for engines that don't use the plane
+    /// kernels.
+    fn simd_backend(&self) -> Option<&'static str> {
         None
     }
 }
@@ -135,24 +144,14 @@ pub fn engine_from_artifact(
 // ---------------------------------------------------------------------
 
 /// Zero-skipping first-layer pre-activation accumulate for one image:
-/// `z[j] = Σ_i x_i · w1[i][j]`.  One definition shared by the per-image
-/// and block paths, so the threshold reference and the logic engines
-/// can never diverge in f32 accumulation order (the bench's bit-identity
-/// assertion depends on this).
+/// `z[j] = Σ_i x_i · w1[i][j]`.  Runs the *generic* SIMD backend's GEMM
+/// kernel — the reference semantics every backend is bit-identical to —
+/// so the threshold reference and the logic engines can never diverge
+/// in f32 accumulation order (the bench's bit-identity assertion
+/// depends on this).
 fn first_layer_preact(net: &NetArtifacts, img: &[f32], z: &mut [f32]) {
     let w = &net.tensors["w1"];
-    let (n_in, n_out) = (w.shape[0], w.shape[1]);
-    debug_assert_eq!(z.len(), n_out);
-    z.fill(0.0);
-    for (i, &x) in img.iter().enumerate().take(n_in) {
-        if x == 0.0 {
-            continue;
-        }
-        let row = &w.f32s[i * n_out..(i + 1) * n_out];
-        for (j, &wv) in row.iter().enumerate() {
-            z[j] += x * wv;
-        }
-    }
+    simd::Backend::Generic.kernels().gemm_zero_skip(img, &w.f32s, w.shape[1], z);
 }
 
 /// First MLP layer: bits_j = [ (x·w_j)·s_j + b_j >= 0 ].
@@ -174,10 +173,12 @@ fn mlp_first_layer(net: &NetArtifacts, img: &[f32]) -> BitVec {
 /// the call allocates nothing.  Lanes `images.len()..` are left clear.
 fn first_layer_block<W: BitWord>(
     net: &NetArtifacts,
+    kern: &dyn PlaneKernels,
     images: &[&[f32]],
     z: &mut [f32],
     planes: &mut [W],
 ) {
+    let w = &net.tensors["w1"];
     let s = &net.tensors["scale1"];
     let b = &net.tensors["bias1"];
     debug_assert!(images.len() <= W::LANES);
@@ -185,13 +186,13 @@ fn first_layer_block<W: BitWord>(
     for p in planes.iter_mut() {
         *p = W::ZERO;
     }
+    // Planes are viewed as one flat limb slice (plane j at j*LIMBS..)
+    // so the sign-bit scatter runs in the limb-slice kernels regardless
+    // of width; `sign_planes` only ORs bits into the cleared buffer.
+    let flat = W::flatten_mut(planes);
     for (samp, img) in images.iter().enumerate() {
-        first_layer_preact(net, img, z);
-        for (j, &zj) in z.iter().enumerate() {
-            if zj * s.f32s[j] + b.f32s[j] >= 0.0 {
-                planes[j].set_lane(samp, true);
-            }
-        }
+        kern.gemm_zero_skip(img, &w.f32s, w.shape[1], z);
+        kern.sign_planes(z, &s.f32s, &b.f32s, samp, flat, W::LIMBS);
     }
 }
 
@@ -239,34 +240,26 @@ impl PopcountLast {
 
     /// Plane-parallel last layer: consume `n` samples straight off the
     /// lane-planes (plane `i`, lane `s` = bit `i` of sample `s`) with no
-    /// per-sample `BitVec` rebuild.  Set lanes are walked limb-by-limb
-    /// with `trailing_zeros`; `acc` (`W::LANES * n_out`, pooled) is the
-    /// only intermediate, so nothing but the returned logits allocates.
+    /// per-sample `BitVec` rebuild.  Each plane is one
+    /// `PlaneKernels::popcount_rows` call (walk set lanes, `acc[s] +=
+    /// w_eff_row`); `acc` (`W::LANES * n_out`, pooled) is the only
+    /// intermediate, so nothing but the returned logits allocates.
     /// Lanes `>= n` may hold garbage (complemented tape ops set them)
-    /// and are ignored.
-    fn logits_block<W: BitWord>(&self, planes: &[W], n: usize, acc: &mut [f32]) -> Vec<Vec<f32>> {
+    /// and are ignored by the kernels.
+    fn logits_block<W: BitWord>(
+        &self,
+        kern: &dyn PlaneKernels,
+        planes: &[W],
+        n: usize,
+        acc: &mut [f32],
+    ) -> Vec<Vec<f32>> {
         debug_assert_eq!(planes.len(), self.n_in);
         debug_assert!(n <= W::LANES);
         let acc = &mut acc[..n * self.n_out];
         acc.fill(0.0);
-        // Lanes >= n never contribute; skip their whole limbs outright.
-        let n_limbs = n.div_ceil(64);
         for (i, plane) in planes.iter().enumerate() {
             let row = &self.w_eff[i * self.n_out..(i + 1) * self.n_out];
-            for (li, &limb) in plane.limbs().iter().take(n_limbs).enumerate() {
-                let mut bits = limb;
-                while bits != 0 {
-                    let s = li * 64 + bits.trailing_zeros() as usize;
-                    if s >= n {
-                        break; // lanes are ascending within a limb
-                    }
-                    bits &= bits - 1;
-                    let a = &mut acc[s * self.n_out..(s + 1) * self.n_out];
-                    for (av, &wv) in a.iter_mut().zip(row) {
-                        *av += wv;
-                    }
-                }
-            }
+            kern.popcount_rows(plane.limbs(), n, row, acc, self.n_out);
         }
         (0..n)
             .map(|s| {
@@ -294,6 +287,10 @@ pub struct LogicEngine<W: BitWord = u64> {
     stats: ScheduleStats,
     /// First-layer output width (= tape 0's input plane count).
     n_first_out: usize,
+    /// SIMD kernel vtable, resolved once at construction (runtime CPU
+    /// detection or the `NULLANET_SIMD_BACKEND` override); every plane
+    /// kernel on the hot path dispatches through it.
+    kern: &'static dyn PlaneKernels,
     /// Reusable per-block scratch: checked out at `infer_block` entry,
     /// returned at exit.  Grows to the number of concurrently executing
     /// blocks (≤ worker count) and is then stable.
@@ -317,9 +314,22 @@ struct MlpScratch<W: BitWord> {
 
 impl<W: BitWord> LogicEngine<W> {
     /// Build from artifacts + the synthesized hidden-layer tapes
-    /// (ordered: layer2, layer3, ...).  Each tape is dead-stripped and
-    /// liveness-scheduled here, once.
+    /// (ordered: layer2, layer3, ...), on the SIMD backend chosen by
+    /// runtime CPU detection (or the `NULLANET_SIMD_BACKEND` override).
     pub fn new(net: NetArtifacts, tapes: Vec<LogicTape>) -> Result<LogicEngine<W>> {
+        Self::with_backend(net, tapes, simd::select())
+    }
+
+    /// [`LogicEngine::new`] pinned to a specific SIMD backend (bench
+    /// sweeps and equivalence tests).  Falls back to generic kernels if
+    /// the requested backend can't run on this CPU — an unavailable
+    /// backend must never be dispatched.  Each tape is dead-stripped
+    /// and liveness-scheduled here, once.
+    pub fn with_backend(
+        net: NetArtifacts,
+        tapes: Vec<LogicTape>,
+        backend: simd::Backend,
+    ) -> Result<LogicEngine<W>> {
         let Arch::Mlp { ref sizes } = net.arch else {
             crate::bail!("LogicEngine::new expects an MLP; use new_cnn");
         };
@@ -336,6 +346,7 @@ impl<W: BitWord> LogicEngine<W> {
             last,
             stats,
             n_first_out,
+            kern: backend.kernels(),
             pool: Mutex::new(Vec::new()),
             name,
         })
@@ -362,19 +373,19 @@ impl<W: BitWord> LogicEngine<W> {
         let popped = self.pool.lock().unwrap().pop();
         let mut scratch = popped.unwrap_or_else(|| self.fresh_scratch());
         // First layer for the whole block, straight into bit planes.
-        first_layer_block(&self.net, images, &mut scratch.z, &mut scratch.planes);
+        first_layer_block(&self.net, self.kern, images, &mut scratch.z, &mut scratch.planes);
         // Hidden layers: scheduled tape after scheduled tape.
         for k in 0..self.tapes.len() {
             let (prev, rest) = scratch.tape_out.split_at_mut(k);
             let cur: &[W] = if k == 0 { &scratch.planes } else { &prev[k - 1] };
-            self.tapes[k].eval_into(cur, &mut rest[0], &mut scratch.tape_scratch[k]);
+            self.tapes[k].eval_into_kern(self.kern, cur, &mut rest[0], &mut scratch.tape_scratch[k]);
         }
         // Last layer, plane-parallel.
         let final_planes: &[W] = match scratch.tape_out.last() {
             Some(out) => out,
             None => &scratch.planes,
         };
-        let logits = self.last.logits_block(final_planes, n, &mut scratch.acc);
+        let logits = self.last.logits_block(self.kern, final_planes, n, &mut scratch.acc);
         self.pool.lock().unwrap().push(scratch);
         logits
     }
@@ -412,6 +423,10 @@ impl<W: BitWord> InferenceEngine for LogicEngine<W> {
 
     fn schedule_stats(&self) -> Option<ScheduleStats> {
         Some(self.stats)
+    }
+
+    fn simd_backend(&self) -> Option<&'static str> {
+        Some(self.kern.backend().name())
     }
 }
 
@@ -709,6 +724,35 @@ mod tests {
     }
 
     #[test]
+    fn logic_engine_backends_bit_identical() {
+        // Every backend the host can run must produce byte-identical
+        // logits (exact ==, not approx) on recycled scratch.
+        let net = tiny_net();
+        let reference = LogicEngine::<W256>::with_backend(
+            net.clone(),
+            vec![swap_tape()],
+            crate::simd::Backend::Generic,
+        )
+        .unwrap();
+        assert_eq!(reference.simd_backend(), Some("generic"));
+        let images: Vec<Vec<f32>> = (0..300)
+            .map(|i| vec![(i % 2) as f32, ((i / 3) % 2) as f32])
+            .collect();
+        let refs: Vec<&[f32]> = images.iter().map(|v| v.as_slice()).collect();
+        let want = reference.infer_batch(&refs);
+        for b in crate::simd::available_backends() {
+            let eng =
+                LogicEngine::<W256>::with_backend(net.clone(), vec![swap_tape()], b).unwrap();
+            assert_eq!(eng.simd_backend(), Some(b.name()));
+            assert_eq!(eng.infer_batch(&refs), want, "backend {}", b.name());
+            // Second pass on recycled scratch must not drift.
+            assert_eq!(eng.infer_batch(&refs), want, "backend {} (reuse)", b.name());
+        }
+        // Non-plane engines report no backend.
+        assert!(ThresholdEngine::new(net).unwrap().simd_backend().is_none());
+    }
+
+    #[test]
     fn logic_engine_reports_schedule_stats() {
         let net = tiny_net();
         let logic = LogicEngine::<u64>::new(net.clone(), vec![swap_tape()]).unwrap();
@@ -739,6 +783,9 @@ pub struct CnnLogicEngine<W: BitWord = u64> {
     c1: usize,
     c2: usize,
     stats: ScheduleStats,
+    /// SIMD kernel vtable (runs the conv2 tape; the f32 first stage and
+    /// the per-image pooled last layer are outside the plane kernels).
+    kern: &'static dyn PlaneKernels,
     pool: Mutex<Vec<CnnScratch<W>>>,
     name: String,
 }
@@ -764,6 +811,16 @@ struct CnnScratch<W: BitWord> {
 
 impl<W: BitWord> CnnLogicEngine<W> {
     pub fn new(net: NetArtifacts, conv2_tape: LogicTape) -> Result<CnnLogicEngine<W>> {
+        Self::with_backend(net, conv2_tape, simd::select())
+    }
+
+    /// [`CnnLogicEngine::new`] pinned to a specific SIMD backend (falls
+    /// back to generic if the CPU can't run it).
+    pub fn with_backend(
+        net: NetArtifacts,
+        conv2_tape: LogicTape,
+        backend: simd::Backend,
+    ) -> Result<CnnLogicEngine<W>> {
         let Arch::Cnn { c1, c2, .. } = net.arch else {
             crate::bail!("CnnLogicEngine expects a CNN");
         };
@@ -778,6 +835,7 @@ impl<W: BitWord> CnnLogicEngine<W> {
             c1,
             c2,
             stats,
+            kern: backend.kernels(),
             pool: Mutex::new(Vec::new()),
             name,
         })
@@ -857,8 +915,12 @@ impl<W: BitWord> CnnLogicEngine<W> {
                     }
                 }
             }
-            self.conv2
-                .eval_into(&scratch.inputs, &mut scratch.out_words, &mut scratch.tape_scratch);
+            self.conv2.eval_into_kern(
+                self.kern,
+                &scratch.inputs,
+                &mut scratch.out_words,
+                &mut scratch.tape_scratch,
+            );
             for s in 0..block_len {
                 for j in 0..c2 {
                     scratch.out_bits[(p0 + s) * c2 + j] = scratch.out_words[j].get_lane(s);
@@ -913,5 +975,9 @@ impl<W: BitWord> InferenceEngine for CnnLogicEngine<W> {
 
     fn schedule_stats(&self) -> Option<ScheduleStats> {
         Some(self.stats)
+    }
+
+    fn simd_backend(&self) -> Option<&'static str> {
+        Some(self.kern.backend().name())
     }
 }

@@ -48,6 +48,10 @@
 //! * [`server`] — TCP JSON-lines front-end: a single-threaded event
 //!   loop of per-connection state machines over [`protocol`] +
 //!   [`registry`], with admission control and load shedding
+//! * [`simd`] — explicit SIMD backends (generic scalar / AVX2 /
+//!   AVX-512) for the three plane kernels on the serving hot path,
+//!   selected once per engine by runtime CPU detection and overridable
+//!   with `NULLANET_SIMD_BACKEND`
 //! * [`cli`], [`jsonio`], [`logging`], [`bench_util`], [`prop`],
 //!   [`util::error`] — offline substrates (no crates.io access in this
 //!   environment, so there are zero external dependencies)
@@ -74,6 +78,7 @@ pub mod protocol;
 pub mod registry;
 pub mod runtime;
 pub mod server;
+pub mod simd;
 pub mod synth;
 pub mod sys;
 pub mod util;

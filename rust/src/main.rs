@@ -249,6 +249,7 @@ fn engine_from_cli(p: &Parsed, art: Option<&model::Artifacts>) -> Result<EngineH
             artifact: Some(apath.to_string()),
             artifact_version: Some(artifact::ARTIFACT_VERSION),
             generation: 0,
+            simd: eng.simd_backend().map(str::to_string),
         };
         return Ok(EngineHandle {
             eng,

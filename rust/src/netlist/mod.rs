@@ -22,5 +22,5 @@ mod schedule;
 mod tape;
 
 pub use codegen::tape_to_rust_source;
-pub use schedule::{ScheduleStats, ScheduledTape};
+pub use schedule::{SchedOp, ScheduleStats, ScheduledTape};
 pub use tape::{LogicTape, TapeOp};

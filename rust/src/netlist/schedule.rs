@@ -260,6 +260,39 @@ impl ScheduledTape {
             *o = scratch[idx as usize].xor_mask(compl);
         }
     }
+
+    /// [`ScheduledTape::eval_into`] routed through an explicit SIMD
+    /// backend: the op loop runs as one [`PlaneKernels::tape_ops`] call
+    /// over the flattened limb buffer (plane `p` at `p * W::LIMBS ..`).
+    /// Semantically identical to `eval_into` at every width — that is
+    /// the backends' equivalence contract, property-tested in
+    /// `tests/props.rs` — and `eval_into` remains as the
+    /// backend-independent reference.
+    ///
+    /// [`PlaneKernels::tape_ops`]: crate::simd::PlaneKernels::tape_ops
+    pub fn eval_into_kern<W: BitWord>(
+        &self,
+        kern: &dyn crate::simd::PlaneKernels,
+        inputs: &[W],
+        outputs: &mut [W],
+        scratch: &mut [W],
+    ) {
+        // Hard (release-mode) length check: together with the op-index
+        // invariant `a/b/dst < scratch_planes` established by
+        // `ScheduledTape::new`, it discharges `tape_ops`' safety
+        // contract that every `(idx+1) * n_limbs <= flat.len()`.
+        assert_eq!(scratch.len(), self.stats.scratch_planes, "scratch from make_scratch()");
+        debug_assert_eq!(inputs.len(), self.n_inputs);
+        debug_assert_eq!(outputs.len(), self.outputs.len());
+        scratch[0] = W::ZERO;
+        scratch[1..=self.n_inputs].copy_from_slice(inputs);
+        // SAFETY: see the assert above — all op indices address planes
+        // inside the flattened buffer.
+        unsafe { kern.tape_ops(&self.ops, W::flatten_mut(scratch), W::LIMBS) };
+        for (o, &(idx, compl)) in outputs.iter_mut().zip(&self.outputs) {
+            *o = scratch[idx as usize].xor_mask(compl);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -422,6 +455,28 @@ mod tests {
         tape.eval_into(&inputs, &mut want, &mut tape.make_scratch());
         sched.eval_into(&inputs, &mut got, &mut sched.make_scratch());
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn eval_into_kern_matches_eval_into_on_all_backends() {
+        let mut rng = SplitMix64::new(77);
+        for _ in 0..10 {
+            let n = rng.range(2, 10);
+            let n_ands = rng.range(1, 120);
+            let n_outs = rng.range(1, 5);
+            let g = random_aig(&mut rng, n, n_ands, n_outs);
+            let tape = LogicTape::from_aig(&g);
+            let sched = ScheduledTape::new(&tape);
+            let inputs: Vec<W512> =
+                (0..n).map(|_| W512::from_lanes(|_| rng.bool(0.5))).collect();
+            let mut want = vec![W512::ZERO; sched.n_outputs()];
+            sched.eval_into(&inputs, &mut want, &mut sched.make_scratch());
+            for b in crate::simd::available_backends() {
+                let mut got = vec![W512::ZERO; sched.n_outputs()];
+                sched.eval_into_kern(b.kernels(), &inputs, &mut got, &mut sched.make_scratch());
+                assert_eq!(got, want, "backend {}", b.name());
+            }
+        }
     }
 
     #[test]

@@ -57,6 +57,10 @@ pub struct ModelMeta {
     /// Bumped on every load/swap of this name; lets clients observe
     /// which incarnation answered.
     pub generation: u64,
+    /// SIMD backend the engine's plane kernels run on
+    /// (`"generic"`/`"avx2"`/`"avx512"`); None for engines off the
+    /// bit-parallel path.
+    pub simd: Option<String>,
 }
 
 impl ModelMeta {
@@ -71,6 +75,7 @@ impl ModelMeta {
             artifact: None,
             artifact_version: None,
             generation: 0,
+            simd: eng.simd_backend().map(str::to_string),
         }
     }
 
@@ -95,6 +100,9 @@ impl ModelMeta {
         }
         if let Some(v) = self.artifact_version {
             pairs.push(("artifact_version", num(v as f64)));
+        }
+        if let Some(simd) = &self.simd {
+            pairs.push(("simd", Json::Str(simd.clone())));
         }
         obj(pairs)
     }
@@ -320,6 +328,7 @@ impl ModelRegistry {
             // The caller stamps the generation: `register` (load path) or
             // `swap_artifact` — never both.
             generation: 0,
+            simd: eng.simd_backend().map(str::to_string),
         };
         Ok((meta, eng))
     }
@@ -453,6 +462,7 @@ mod tests {
             artifact: Some("m.nnc".into()),
             artifact_version: Some(1),
             generation: 5,
+            simd: Some("avx2".into()),
         };
         let j = meta.to_json(true);
         assert_eq!(j.get("model").and_then(Json::as_str), Some("net11"));
@@ -462,6 +472,11 @@ mod tests {
         assert_eq!(j.get("default").and_then(Json::as_bool), Some(true));
         assert_eq!(j.get("input_dim").and_then(Json::as_usize), Some(784));
         assert_eq!(j.get("artifact_version").and_then(Json::as_usize), Some(1));
+        assert_eq!(j.get("simd").and_then(Json::as_str), Some("avx2"));
+        // Engines without plane kernels omit the field entirely.
+        let meta = ModelMeta::for_engine("c", &ConstEngine(0), 64);
+        assert!(meta.simd.is_none());
+        assert!(meta.to_json(false).get("simd").is_none());
     }
 
     #[test]

@@ -163,6 +163,10 @@ impl Server {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
+        // One-line deployment fingerprint: which plane kernels this
+        // process serves with (engines may individually differ if built
+        // with an explicit backend; this is the process-wide selection).
+        crate::info!("serving on {local} — simd {}", crate::simd::describe(crate::simd::select()));
         let stop = Arc::new(AtomicBool::new(false));
         let stats = Arc::new(ServerStats::default());
         let mut el = EventLoop::new(
@@ -888,7 +892,10 @@ fn run_cmd(c: &CmdRequest, registry: &ModelRegistry, stats: &ServerStats) -> Res
 /// (`open_conns`, `shed_total`), and per-model request/shed counts plus
 /// — for logic engines — the tape-schedule gauges (`tape_ops`,
 /// `ops_stripped`, `max_live`, `scratch_planes`, `planes_unscheduled`).
-/// With `"model"`, scoped to that model alone.
+/// With `"model"`, scoped to that model alone.  Also reports the SIMD
+/// selection: a top-level `simd` object (`selected`, `cpu_avx2`,
+/// `cpu_avx512f`) and a per-model `simd` backend name for engines on
+/// the bit-parallel path.
 fn metrics_json(
     registry: &ModelRegistry,
     model: Option<&str>,
@@ -931,9 +938,15 @@ fn metrics_json(
             fields.push(("scratch_planes", num(st.scratch_planes as f64)));
             fields.push(("planes_unscheduled", num(st.planes_unscheduled as f64)));
         }
+        // Which SIMD backend this model's plane kernels dispatch to
+        // (absent for engines off the bit-parallel path).
+        if let Some(simd) = e.coordinator.engine().simd_backend() {
+            fields.push(("simd", Json::Str(simd.to_string())));
+        }
         per_model.push((e.meta.model.clone(), obj(fields)));
     }
     let mean_block = if blocks == 0 { 0.0 } else { items / blocks as f64 };
+    let cpu = crate::simd::cpu_features();
     Ok(obj(vec![
         ("requests", num(requests as f64)),
         ("blocks", num(blocks as f64)),
@@ -946,6 +959,17 @@ fn metrics_json(
         ("queue_depth", num(queue_depth as f64)),
         ("open_conns", num(stats.open_conns() as f64)),
         ("shed_total", num(stats.shed_total() as f64)),
+        // Process-wide SIMD selection + detected CPU features, so an
+        // operator can tell which kernels a deployment runs without
+        // shell access to the host.
+        (
+            "simd",
+            obj(vec![
+                ("selected", Json::Str(crate::simd::select().name().to_string())),
+                ("cpu_avx2", Json::Bool(cpu.avx2)),
+                ("cpu_avx512f", Json::Bool(cpu.avx512f)),
+            ]),
+        ),
         ("models", Json::Obj(per_model.into_iter().collect())),
     ]))
 }
@@ -1147,6 +1171,9 @@ mod tests {
                     scratch_planes: 9,
                 })
             }
+            fn simd_backend(&self) -> Option<&'static str> {
+                Some("generic")
+            }
         }
 
         let reg = registry_with(&[("plain", None)]);
@@ -1168,6 +1195,15 @@ mod tests {
         );
         // Engines without tapes don't grow the gauges.
         assert!(j.at(&["models", "plain", "max_live"]).is_none());
+        // Per-model SIMD backend + the process-wide selection block.
+        assert_eq!(j.at(&["models", "tape", "simd"]).and_then(Json::as_str), Some("generic"));
+        assert!(j.at(&["models", "plain", "simd"]).is_none());
+        assert_eq!(
+            j.at(&["simd", "selected"]).and_then(Json::as_str),
+            Some(crate::simd::select().name())
+        );
+        assert!(j.at(&["simd", "cpu_avx2"]).and_then(Json::as_bool).is_some());
+        assert!(j.at(&["simd", "cpu_avx512f"]).and_then(Json::as_bool).is_some());
         drop(conn);
         server.shutdown();
     }

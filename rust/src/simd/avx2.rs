@@ -1,0 +1,216 @@
+//! AVX2 (256-bit) plane kernels.
+//!
+//! # Safety model
+//!
+//! Every `#[target_feature(enable = "avx2")]` function here is only
+//! reachable through [`Backend::kernels`], which returns this vtable
+//! solely when `is_x86_feature_detected!("avx2")` is true — so the
+//! CPU-support precondition of calling a target-feature function holds
+//! at every call site.  Pointer arithmetic stays inside bounds
+//! established from safe slices (asserted by the `PlaneKernels` safe
+//! wrappers, or — for `tape_ops` — guaranteed by the scheduled tape's
+//! construction invariant and documented as the method's safety
+//! contract).
+//!
+//! # Bit-identity with the generic backend
+//!
+//! * Integer kernels: limb-wise XOR/AND is the same function whether
+//!   done 1 or 4 limbs at a time.
+//! * `gemm`/`sign`: f32 lanes are processed with *separate*
+//!   `_mm256_mul_ps` + `_mm256_add_ps` (never `_mm256_fmadd_ps`, whose
+//!   fused single rounding would diverge from the scalar `a*b + c`
+//!   two-rounding result), in the same per-element order as the scalar
+//!   loops, so each lane computes the identical IEEE-754 value.
+//! * Sign tests use `_CMP_GE_OQ` (ordered, quiet), which matches Rust's
+//!   scalar `>=` on every input including NaN (false) and -0.0 (>= 0.0
+//!   is true).
+
+use std::arch::x86_64::*;
+
+use super::{Backend, PlaneKernels};
+use crate::netlist::SchedOp;
+
+pub(super) struct Avx2Kernels;
+
+pub(super) static AVX2: Avx2Kernels = Avx2Kernels;
+
+impl PlaneKernels for Avx2Kernels {
+    fn backend(&self) -> Backend {
+        Backend::Avx2
+    }
+
+    unsafe fn tape_ops(&self, ops: &[SchedOp], scratch: &mut [u64], n_limbs: usize) {
+        // SAFETY: vtable only handed out when avx2 is detected; index
+        // bounds are the caller's contract (see trait docs).
+        unsafe { tape_ops(ops, scratch, n_limbs) }
+    }
+
+    unsafe fn gemm_zero_skip_raw(&self, img: &[f32], w: &[f32], n_out: usize, z: &mut [f32]) {
+        // SAFETY: avx2 detected; bounds validated by the safe wrapper.
+        unsafe { gemm_zero_skip(img, w, n_out, z) }
+    }
+
+    unsafe fn sign_planes_raw(
+        &self,
+        z: &[f32],
+        scale: &[f32],
+        bias: &[f32],
+        lane: usize,
+        planes: &mut [u64],
+        n_limbs: usize,
+    ) {
+        // SAFETY: avx2 detected; bounds validated by the safe wrapper.
+        unsafe { sign_planes(z, scale, bias, lane, planes, n_limbs) }
+    }
+
+    unsafe fn popcount_rows_raw(
+        &self,
+        limbs: &[u64],
+        n: usize,
+        row: &[f32],
+        acc: &mut [f32],
+        n_out: usize,
+    ) {
+        // SAFETY: avx2 detected; bounds validated by the safe wrapper.
+        unsafe { popcount_rows(limbs, n, row, acc, n_out) }
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn tape_ops(ops: &[SchedOp], scratch: &mut [u64], n_limbs: usize) {
+    // One base pointer for the whole buffer (single provenance): a, b,
+    // and dst planes may alias exactly, and each chunk loads both
+    // operands before storing dst, so exact aliasing is well-defined.
+    let base = scratch.as_mut_ptr();
+    for op in ops {
+        // SAFETY (whole body): every plane index i satisfies
+        // (i+1)*n_limbs <= scratch.len() per the tape_ops contract, so
+        // all reads/writes below stay inside `scratch`.
+        unsafe {
+            let pa = base.add(op.a as usize * n_limbs);
+            let pb = base.add(op.b as usize * n_limbs);
+            let pd = base.add(op.dst as usize * n_limbs);
+            let ca = _mm256_set1_epi64x(op.ca as i64);
+            let cb = _mm256_set1_epi64x(op.cb as i64);
+            let mut l = 0;
+            while l + 4 <= n_limbs {
+                let va = _mm256_loadu_si256(pa.add(l) as *const __m256i);
+                let vb = _mm256_loadu_si256(pb.add(l) as *const __m256i);
+                let r = _mm256_and_si256(_mm256_xor_si256(va, ca), _mm256_xor_si256(vb, cb));
+                _mm256_storeu_si256(pd.add(l) as *mut __m256i, r);
+                l += 4;
+            }
+            while l < n_limbs {
+                let av = *pa.add(l) ^ op.ca;
+                let bv = *pb.add(l) ^ op.cb;
+                *pd.add(l) = av & bv;
+                l += 1;
+            }
+        }
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn gemm_zero_skip(img: &[f32], w: &[f32], n_out: usize, z: &mut [f32]) {
+    let n_in = w.len() / n_out;
+    z.fill(0.0);
+    let zp = z.as_mut_ptr();
+    for (i, &x) in img.iter().enumerate().take(n_in) {
+        if x == 0.0 {
+            continue;
+        }
+        let row = &w[i * n_out..(i + 1) * n_out];
+        // SAFETY: j stays < n_out == z.len() == row.len().
+        unsafe {
+            let vx = _mm256_set1_ps(x);
+            let rp = row.as_ptr();
+            let mut j = 0;
+            while j + 8 <= n_out {
+                let vw = _mm256_loadu_ps(rp.add(j));
+                let vz = _mm256_loadu_ps(zp.add(j));
+                // mul then add — NOT fmadd — to stay bit-identical to
+                // the scalar `z[j] += x * w`.
+                let r = _mm256_add_ps(vz, _mm256_mul_ps(vx, vw));
+                _mm256_storeu_ps(zp.add(j), r);
+                j += 8;
+            }
+            while j < n_out {
+                *zp.add(j) += x * *rp.add(j);
+                j += 1;
+            }
+        }
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn sign_planes(
+    z: &[f32],
+    scale: &[f32],
+    bias: &[f32],
+    lane: usize,
+    planes: &mut [u64],
+    n_limbs: usize,
+) {
+    let (li, bit) = (lane / 64, 1u64 << (lane % 64));
+    let n = z.len();
+    let zero = _mm256_setzero_ps();
+    let mut j = 0;
+    // SAFETY: reads bounded by j+8 <= n (<= scale/bias lengths per the
+    // safe wrapper); writes at (j+k)*n_limbs + li with j+k < n, li <
+    // n_limbs, and planes.len() >= n * n_limbs.
+    unsafe {
+        while j + 8 <= n {
+            let vz = _mm256_loadu_ps(z.as_ptr().add(j));
+            let vs = _mm256_loadu_ps(scale.as_ptr().add(j));
+            let vb = _mm256_loadu_ps(bias.as_ptr().add(j));
+            let v = _mm256_add_ps(_mm256_mul_ps(vz, vs), vb);
+            let ge = _mm256_cmp_ps::<_CMP_GE_OQ>(v, zero);
+            let mut m = _mm256_movemask_ps(ge) as u32 & 0xff;
+            while m != 0 {
+                let k = m.trailing_zeros() as usize;
+                m &= m - 1;
+                *planes.get_unchecked_mut((j + k) * n_limbs + li) |= bit;
+            }
+            j += 8;
+        }
+    }
+    while j < n {
+        if z[j] * scale[j] + bias[j] >= 0.0 {
+            planes[j * n_limbs + li] |= bit;
+        }
+        j += 1;
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn popcount_rows(limbs: &[u64], n: usize, row: &[f32], acc: &mut [f32], n_out: usize) {
+    let n_limbs = n.div_ceil(64);
+    let rp = row.as_ptr();
+    for (li, &limb) in limbs.iter().take(n_limbs).enumerate() {
+        let mut bits = limb;
+        while bits != 0 {
+            let s = li * 64 + bits.trailing_zeros() as usize;
+            if s >= n {
+                break; // lanes ascend within a limb
+            }
+            bits &= bits - 1;
+            // SAFETY: s < n and acc.len() >= n * n_out (safe wrapper),
+            // so [s*n_out, (s+1)*n_out) is in-bounds; j < n_out <=
+            // row.len().
+            unsafe {
+                let ap = acc.as_mut_ptr().add(s * n_out);
+                let mut j = 0;
+                while j + 8 <= n_out {
+                    let va = _mm256_loadu_ps(ap.add(j));
+                    let vr = _mm256_loadu_ps(rp.add(j));
+                    _mm256_storeu_ps(ap.add(j), _mm256_add_ps(va, vr));
+                    j += 8;
+                }
+                while j < n_out {
+                    *ap.add(j) += *rp.add(j);
+                    j += 1;
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,224 @@
+//! AVX-512F (512-bit) plane kernels.
+//!
+//! Same safety model and bit-identity rules as `avx2.rs` (reachable
+//! only via detection, mul-then-add instead of FMA, `_CMP_GE_OQ`), plus
+//! two AVX-512-specific points:
+//!
+//! * **Masked tails.**  Partial chunks use `_mm512_maskz_loadu_*` /
+//!   `_mm512_mask_storeu_*`, which architecturally never fault or write
+//!   on masked-off elements — so a 10-float logits row or a 4-limb
+//!   `W256` plane is one masked op, no scalar tail loop.
+//! * **Masked compares.**  Sign tests on partial chunks use
+//!   `_mm512_mask_cmp_ps_mask` with the tail mask as the zeroing
+//!   predicate: a masked-off lane loaded as 0.0 would otherwise compare
+//!   `0.0 >= 0.0` = true and set a phantom bit.
+//!
+//! This file only compiles when build.rs proves the toolchain has
+//! stable AVX-512 intrinsics (rustc >= 1.89, cfg `nullanet_avx512`);
+//! at runtime the vtable is additionally gated on
+//! `is_x86_feature_detected!("avx512f")`.
+
+use std::arch::x86_64::*;
+
+use super::{Backend, PlaneKernels};
+use crate::netlist::SchedOp;
+
+pub(super) struct Avx512Kernels;
+
+pub(super) static AVX512: Avx512Kernels = Avx512Kernels;
+
+impl PlaneKernels for Avx512Kernels {
+    fn backend(&self) -> Backend {
+        Backend::Avx512
+    }
+
+    unsafe fn tape_ops(&self, ops: &[SchedOp], scratch: &mut [u64], n_limbs: usize) {
+        // SAFETY: vtable only handed out when avx512f is detected;
+        // index bounds are the caller's contract (see trait docs).
+        unsafe { tape_ops(ops, scratch, n_limbs) }
+    }
+
+    unsafe fn gemm_zero_skip_raw(&self, img: &[f32], w: &[f32], n_out: usize, z: &mut [f32]) {
+        // SAFETY: avx512f detected; bounds validated by the safe wrapper.
+        unsafe { gemm_zero_skip(img, w, n_out, z) }
+    }
+
+    unsafe fn sign_planes_raw(
+        &self,
+        z: &[f32],
+        scale: &[f32],
+        bias: &[f32],
+        lane: usize,
+        planes: &mut [u64],
+        n_limbs: usize,
+    ) {
+        // SAFETY: avx512f detected; bounds validated by the safe wrapper.
+        unsafe { sign_planes(z, scale, bias, lane, planes, n_limbs) }
+    }
+
+    unsafe fn popcount_rows_raw(
+        &self,
+        limbs: &[u64],
+        n: usize,
+        row: &[f32],
+        acc: &mut [f32],
+        n_out: usize,
+    ) {
+        // SAFETY: avx512f detected; bounds validated by the safe wrapper.
+        unsafe { popcount_rows(limbs, n, row, acc, n_out) }
+    }
+}
+
+#[target_feature(enable = "avx512f")]
+unsafe fn tape_ops(ops: &[SchedOp], scratch: &mut [u64], n_limbs: usize) {
+    let base = scratch.as_mut_ptr();
+    for op in ops {
+        // SAFETY (whole body): every plane index i satisfies
+        // (i+1)*n_limbs <= scratch.len() per the tape_ops contract;
+        // masked lanes beyond the tail are never loaded or stored.
+        // Operands load before dst stores, so exact aliasing is fine.
+        unsafe {
+            let pa = base.add(op.a as usize * n_limbs);
+            let pb = base.add(op.b as usize * n_limbs);
+            let pd = base.add(op.dst as usize * n_limbs);
+            let ca = _mm512_set1_epi64(op.ca as i64);
+            let cb = _mm512_set1_epi64(op.cb as i64);
+            let mut l = 0;
+            while l + 8 <= n_limbs {
+                let va = _mm512_loadu_epi64(pa.add(l) as *const i64);
+                let vb = _mm512_loadu_epi64(pb.add(l) as *const i64);
+                let r = _mm512_and_si512(_mm512_xor_si512(va, ca), _mm512_xor_si512(vb, cb));
+                _mm512_storeu_epi64(pd.add(l) as *mut i64, r);
+                l += 8;
+            }
+            let rem = n_limbs - l;
+            if rem > 0 {
+                let k = ((1u16 << rem) - 1) as __mmask8;
+                let va = _mm512_maskz_loadu_epi64(k, pa.add(l) as *const i64);
+                let vb = _mm512_maskz_loadu_epi64(k, pb.add(l) as *const i64);
+                let r = _mm512_and_si512(_mm512_xor_si512(va, ca), _mm512_xor_si512(vb, cb));
+                _mm512_mask_storeu_epi64(pd.add(l) as *mut i64, k, r);
+            }
+        }
+    }
+}
+
+#[target_feature(enable = "avx512f")]
+unsafe fn gemm_zero_skip(img: &[f32], w: &[f32], n_out: usize, z: &mut [f32]) {
+    let n_in = w.len() / n_out;
+    z.fill(0.0);
+    let zp = z.as_mut_ptr();
+    for (i, &x) in img.iter().enumerate().take(n_in) {
+        if x == 0.0 {
+            continue;
+        }
+        let row = &w[i * n_out..(i + 1) * n_out];
+        // SAFETY: loads/stores cover z[..n_out] / row[..n_out] only;
+        // masked tail lanes are never touched in memory.
+        unsafe {
+            let vx = _mm512_set1_ps(x);
+            let rp = row.as_ptr();
+            let mut j = 0;
+            while j + 16 <= n_out {
+                let vw = _mm512_loadu_ps(rp.add(j));
+                let vz = _mm512_loadu_ps(zp.add(j));
+                // mul then add — NOT fmadd — for scalar bit-identity.
+                let r = _mm512_add_ps(vz, _mm512_mul_ps(vx, vw));
+                _mm512_storeu_ps(zp.add(j), r);
+                j += 16;
+            }
+            let rem = n_out - j;
+            if rem > 0 {
+                let k = ((1u32 << rem) - 1) as __mmask16;
+                let vw = _mm512_maskz_loadu_ps(k, rp.add(j));
+                let vz = _mm512_maskz_loadu_ps(k, zp.add(j));
+                let r = _mm512_add_ps(vz, _mm512_mul_ps(vx, vw));
+                _mm512_mask_storeu_ps(zp.add(j), k, r);
+            }
+        }
+    }
+}
+
+#[target_feature(enable = "avx512f")]
+unsafe fn sign_planes(
+    z: &[f32],
+    scale: &[f32],
+    bias: &[f32],
+    lane: usize,
+    planes: &mut [u64],
+    n_limbs: usize,
+) {
+    let (li, bit) = (lane / 64, 1u64 << (lane % 64));
+    let n = z.len();
+    let zero = _mm512_setzero_ps();
+    let mut j = 0;
+    // SAFETY: full chunks read z/scale/bias[j..j+16] with j+16 <= n;
+    // the tail reads via zero-masked loads only.  Writes land at
+    // (j+k)*n_limbs + li with j+k < n, in-bounds per the safe wrapper.
+    unsafe {
+        while j + 16 <= n {
+            let vz = _mm512_loadu_ps(z.as_ptr().add(j));
+            let vs = _mm512_loadu_ps(scale.as_ptr().add(j));
+            let vb = _mm512_loadu_ps(bias.as_ptr().add(j));
+            let v = _mm512_add_ps(_mm512_mul_ps(vz, vs), vb);
+            let mut m = _mm512_cmp_ps_mask::<_CMP_GE_OQ>(v, zero);
+            while m != 0 {
+                let k = m.trailing_zeros() as usize;
+                m &= m - 1;
+                *planes.get_unchecked_mut((j + k) * n_limbs + li) |= bit;
+            }
+            j += 16;
+        }
+        let rem = n - j;
+        if rem > 0 {
+            let tail = ((1u32 << rem) - 1) as __mmask16;
+            let vz = _mm512_maskz_loadu_ps(tail, z.as_ptr().add(j));
+            let vs = _mm512_maskz_loadu_ps(tail, scale.as_ptr().add(j));
+            let vb = _mm512_maskz_loadu_ps(tail, bias.as_ptr().add(j));
+            let v = _mm512_add_ps(_mm512_mul_ps(vz, vs), vb);
+            // Predicated compare: a masked-off lane is 0.0*0.0 + 0.0,
+            // which would pass a plain `>= 0` and set a phantom bit.
+            let mut m = _mm512_mask_cmp_ps_mask::<_CMP_GE_OQ>(tail, v, zero);
+            while m != 0 {
+                let k = m.trailing_zeros() as usize;
+                m &= m - 1;
+                *planes.get_unchecked_mut((j + k) * n_limbs + li) |= bit;
+            }
+        }
+    }
+}
+
+#[target_feature(enable = "avx512f")]
+unsafe fn popcount_rows(limbs: &[u64], n: usize, row: &[f32], acc: &mut [f32], n_out: usize) {
+    let n_limbs = n.div_ceil(64);
+    let rp = row.as_ptr();
+    for (li, &limb) in limbs.iter().take(n_limbs).enumerate() {
+        let mut bits = limb;
+        while bits != 0 {
+            let s = li * 64 + bits.trailing_zeros() as usize;
+            if s >= n {
+                break; // lanes ascend within a limb
+            }
+            bits &= bits - 1;
+            // SAFETY: s < n, acc.len() >= n*n_out, row.len() >= n_out
+            // (safe wrapper); tail lanes only touched via masked ops.
+            unsafe {
+                let ap = acc.as_mut_ptr().add(s * n_out);
+                let mut j = 0;
+                while j + 16 <= n_out {
+                    let va = _mm512_loadu_ps(ap.add(j));
+                    let vr = _mm512_loadu_ps(rp.add(j));
+                    _mm512_storeu_ps(ap.add(j), _mm512_add_ps(va, vr));
+                    j += 16;
+                }
+                let rem = n_out - j;
+                if rem > 0 {
+                    let k = ((1u32 << rem) - 1) as __mmask16;
+                    let va = _mm512_maskz_loadu_ps(k, ap.add(j));
+                    let vr = _mm512_maskz_loadu_ps(k, rp.add(j));
+                    _mm512_mask_storeu_ps(ap.add(j), k, _mm512_add_ps(va, vr));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,93 @@
+//! The scalar limb-loop backend: always available on every
+//! architecture, and the *reference semantics* — AVX2/AVX-512 must be
+//! bit-identical to these loops, which are verbatim the pre-SIMD hot
+//! paths (so `NULLANET_SIMD_BACKEND=generic` is also the "old code"
+//! escape hatch).  LLVM still autovectorizes what it can here; the
+//! intrinsic backends exist to stop *relying* on that.
+
+use super::{Backend, PlaneKernels};
+use crate::netlist::SchedOp;
+
+pub(super) struct GenericKernels;
+
+pub(super) static GENERIC: GenericKernels = GenericKernels;
+
+impl PlaneKernels for GenericKernels {
+    fn backend(&self) -> Backend {
+        Backend::Generic
+    }
+
+    unsafe fn tape_ops(&self, ops: &[SchedOp], scratch: &mut [u64], n_limbs: usize) {
+        // All indexing is bounds-checked: the generic backend upholds
+        // the safety contract trivially (a bad op panics, never UB).
+        for op in ops {
+            let (a, b, d) = (
+                op.a as usize * n_limbs,
+                op.b as usize * n_limbs,
+                op.dst as usize * n_limbs,
+            );
+            for l in 0..n_limbs {
+                let av = scratch[a + l] ^ op.ca;
+                let bv = scratch[b + l] ^ op.cb;
+                scratch[d + l] = av & bv;
+            }
+        }
+    }
+
+    unsafe fn gemm_zero_skip_raw(&self, img: &[f32], w: &[f32], n_out: usize, z: &mut [f32]) {
+        let n_in = w.len() / n_out;
+        z.fill(0.0);
+        for (i, &x) in img.iter().enumerate().take(n_in) {
+            if x == 0.0 {
+                continue;
+            }
+            let row = &w[i * n_out..(i + 1) * n_out];
+            for (zj, &wv) in z.iter_mut().zip(row) {
+                *zj += x * wv;
+            }
+        }
+    }
+
+    unsafe fn sign_planes_raw(
+        &self,
+        z: &[f32],
+        scale: &[f32],
+        bias: &[f32],
+        lane: usize,
+        planes: &mut [u64],
+        n_limbs: usize,
+    ) {
+        let (li, bit) = (lane / 64, 1u64 << (lane % 64));
+        for (j, &zj) in z.iter().enumerate() {
+            if zj * scale[j] + bias[j] >= 0.0 {
+                planes[j * n_limbs + li] |= bit;
+            }
+        }
+    }
+
+    unsafe fn popcount_rows_raw(
+        &self,
+        limbs: &[u64],
+        n: usize,
+        row: &[f32],
+        acc: &mut [f32],
+        n_out: usize,
+    ) {
+        // Lanes >= n never contribute; skip their whole limbs outright.
+        let n_limbs = n.div_ceil(64);
+        for (li, &limb) in limbs.iter().take(n_limbs).enumerate() {
+            let mut bits = limb;
+            while bits != 0 {
+                let s = li * 64 + bits.trailing_zeros() as usize;
+                if s >= n {
+                    break; // lanes are ascending within a limb
+                }
+                bits &= bits - 1;
+                let a = &mut acc[s * n_out..(s + 1) * n_out];
+                for (av, &wv) in a.iter_mut().zip(&row[..n_out]) {
+                    *av += wv;
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,479 @@
+//! Explicit SIMD backends for the bit-parallel serving hot path, with
+//! runtime CPU dispatch.
+//!
+//! Three kernels dominate every serving cycle (see DESIGN.md "SIMD plane
+//! kernels + runtime dispatch"):
+//!
+//! 1. **Scheduled-tape plane ops** — `buf[dst] = (buf[a]^ca) & (buf[b]^cb)`
+//!    over `n_limbs`-limb planes ([`crate::netlist::ScheduledTape`]).
+//! 2. **First-layer sign-bit writes** — the zero-skipping GEMM's
+//!    per-sample `z·scale + bias >= 0` comparisons, scattered into lane
+//!    planes (`coordinator::engine::first_layer_block`).
+//! 3. **Popcount last layer** — for every set lane `s` of an activation
+//!    plane, `acc[s] += w_eff_row` (`PopcountLast::logits_block`).
+//!
+//! Until this module existed those were scalar limb loops trusted to the
+//! autovectorizer.  Now each is a method on the [`PlaneKernels`] vtable
+//! with three implementations: [`generic`] (the scalar loops, always
+//! available, the reference semantics), [`avx2`] and [`avx512`]
+//! (`core::arch::x86_64` intrinsics, compiled unconditionally on x86-64
+//! but only *selected* when `is_x86_feature_detected!` proves the CPU
+//! has them).  Selection happens once at engine construction
+//! ([`select`]); `NULLANET_SIMD_BACKEND=generic|avx2|avx512` overrides
+//! it for testing and A/B benching.
+//!
+//! **Equivalence contract:** every backend is lane-for-lane
+//! *bit-identical* to [`generic`] — including the f32 kernels, which
+//! perform the same operations in the same per-element order (vector
+//! mul-then-add, never FMA; `_CMP_GE_OQ` compares, which match scalar
+//! `>=` exactly, NaN included).  Property-tested in `tests/props.rs` at
+//! widths 64/256/512 on every backend the host CPU can run.
+//!
+//! All widths route through the same limb-slice kernels: a `&[W]` plane
+//! slice is viewed as a flat `&[u64]` via [`BitWord::flatten_mut`], with
+//! plane `p`'s limbs at `p * n_limbs ..`.
+//!
+//! [`BitWord::flatten_mut`]: crate::util::BitWord::flatten_mut
+
+use crate::netlist::SchedOp;
+
+mod generic;
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+
+// `nullanet_avx512` is emitted by build.rs iff the compiler is new
+// enough to have stable AVX-512 intrinsics (rustc >= 1.89); runtime CPU
+// support is a separate, dynamic check.
+#[cfg(all(target_arch = "x86_64", nullanet_avx512))]
+mod avx512;
+
+/// Environment variable that forces a specific backend (for testing and
+/// A/B benchmarks): `generic`, `avx2`, or `avx512`.
+pub const BACKEND_ENV: &str = "NULLANET_SIMD_BACKEND";
+
+/// The limb-slice kernel vtable one of the [`Backend`]s implements.
+/// Engines resolve it once at construction ([`Backend::kernels`]) and
+/// call through `&'static dyn PlaneKernels` on the hot path (one
+/// indirect call per kernel invocation, amortized over a whole plane
+/// block).
+pub trait PlaneKernels: Send + Sync {
+    /// Which backend this vtable is.
+    fn backend(&self) -> Backend;
+
+    /// Run a scheduled tape's op list over a flattened plane buffer:
+    /// for each op, `buf[dst] = (buf[a]^ca) & (buf[b]^cb)` limb-wise,
+    /// where plane `p` occupies `scratch[p * n_limbs .. (p+1) * n_limbs]`.
+    /// `dst` may alias `a` or `b` *exactly* (never partially): operand
+    /// limbs are loaded before the destination chunk is stored.
+    ///
+    /// # Safety
+    ///
+    /// Every op's `a`, `b`, and `dst` must satisfy
+    /// `(idx as usize + 1) * n_limbs <= scratch.len()`.  This is not
+    /// re-validated per call (it would cost an O(ops) scan per eval);
+    /// [`crate::netlist::ScheduledTape`] guarantees it by construction
+    /// and `eval_into_kern` asserts the buffer length.
+    unsafe fn tape_ops(&self, ops: &[SchedOp], scratch: &mut [u64], n_limbs: usize);
+
+    /// Zero-skipping first-layer pre-activation accumulate:
+    /// `z[j] = Σ_i img[i] · w[i*n_out + j]` over `i < w.len()/n_out`,
+    /// skipping `img[i] == 0.0` rows entirely (`z` is fully
+    /// overwritten).  Bit-identical to the scalar loop: same row order,
+    /// per-element multiply then add (no FMA contraction).
+    fn gemm_zero_skip(&self, img: &[f32], w: &[f32], n_out: usize, z: &mut [f32]) {
+        assert_eq!(z.len(), n_out, "z holds one pre-activation per output");
+        // SAFETY: slice bounds validated above; impls stay within
+        // `w[i*n_out..(i+1)*n_out]` for `i < w.len()/n_out` and `z[..n_out]`.
+        unsafe { self.gemm_zero_skip_raw(img, w, n_out, z) }
+    }
+
+    /// Batched sign test writing one *lane* across a plane stack: for
+    /// every neuron `j`, set bit `lane` of plane `j` iff
+    /// `z[j]*scale[j] + bias[j] >= 0.0`.  Only ORs bits in — the caller
+    /// clears the planes once per block.  Plane `j`'s limbs live at
+    /// `planes[j*n_limbs .. (j+1)*n_limbs]`.
+    fn sign_planes(
+        &self,
+        z: &[f32],
+        scale: &[f32],
+        bias: &[f32],
+        lane: usize,
+        planes: &mut [u64],
+        n_limbs: usize,
+    ) {
+        assert!(scale.len() >= z.len() && bias.len() >= z.len());
+        assert!(lane / 64 < n_limbs, "lane {lane} outside {n_limbs}-limb planes");
+        assert!(planes.len() >= z.len() * n_limbs);
+        // SAFETY: all writes land at `j*n_limbs + lane/64` for
+        // `j < z.len()`, in-bounds by the asserts above.
+        unsafe { self.sign_planes_raw(z, scale, bias, lane, planes, n_limbs) }
+    }
+
+    /// Popcount last-layer accumulate for one activation plane: for
+    /// every set lane `s < n` in `limbs`, `acc[s*n_out..][..n_out] +=
+    /// row`.  Lanes `>= n` are ignored (tape complements can set them).
+    fn popcount_rows(&self, limbs: &[u64], n: usize, row: &[f32], acc: &mut [f32], n_out: usize) {
+        assert!(row.len() >= n_out);
+        assert!(acc.len() >= n * n_out);
+        // SAFETY: every accumulate targets `acc[s*n_out..(s+1)*n_out]`
+        // with `s < n` and reads `row[..n_out]`, in-bounds per above.
+        unsafe { self.popcount_rows_raw(limbs, n, row, acc, n_out) }
+    }
+
+    /// # Safety
+    /// Called only through [`PlaneKernels::gemm_zero_skip`], which
+    /// validates `z.len() == n_out`.
+    unsafe fn gemm_zero_skip_raw(&self, img: &[f32], w: &[f32], n_out: usize, z: &mut [f32]);
+
+    /// # Safety
+    /// Called only through [`PlaneKernels::sign_planes`], which
+    /// validates slice lengths and `lane / 64 < n_limbs`.
+    unsafe fn sign_planes_raw(
+        &self,
+        z: &[f32],
+        scale: &[f32],
+        bias: &[f32],
+        lane: usize,
+        planes: &mut [u64],
+        n_limbs: usize,
+    );
+
+    /// # Safety
+    /// Called only through [`PlaneKernels::popcount_rows`], which
+    /// validates `row.len() >= n_out` and `acc.len() >= n * n_out`.
+    unsafe fn popcount_rows_raw(
+        &self,
+        limbs: &[u64],
+        n: usize,
+        row: &[f32],
+        acc: &mut [f32],
+        n_out: usize,
+    );
+}
+
+/// The SIMD backends.  All three variants exist on every architecture —
+/// what varies is [`Backend::available`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Scalar limb loops (the pre-SIMD reference path).  Always
+    /// available; defines the bit-exact semantics the others must match.
+    Generic,
+    /// 256-bit `core::arch::x86_64` kernels behind
+    /// `is_x86_feature_detected!("avx2")`.
+    Avx2,
+    /// 512-bit kernels behind `avx512f` detection; additionally needs a
+    /// compiler with stable AVX-512 intrinsics (rustc >= 1.89 — see
+    /// build.rs).
+    Avx512,
+}
+
+impl Backend {
+    /// All variants, strongest first (the [`detect`] preference order).
+    pub const ALL: [Backend; 3] = [Backend::Avx512, Backend::Avx2, Backend::Generic];
+
+    /// Stable lowercase name (env-var value, metrics/info field, bench
+    /// row tag).
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Generic => "generic",
+            Backend::Avx2 => "avx2",
+            Backend::Avx512 => "avx512",
+        }
+    }
+
+    /// Can this backend run on the current CPU *and* was it compiled in?
+    pub fn available(self) -> bool {
+        match self {
+            Backend::Generic => true,
+            Backend::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    is_x86_feature_detected!("avx2")
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    false
+                }
+            }
+            Backend::Avx512 => {
+                #[cfg(all(target_arch = "x86_64", nullanet_avx512))]
+                {
+                    is_x86_feature_detected!("avx512f")
+                }
+                #[cfg(not(all(target_arch = "x86_64", nullanet_avx512)))]
+                {
+                    false
+                }
+            }
+        }
+    }
+
+    /// The kernel vtable for this backend.  If the backend is not
+    /// available on this CPU the *generic* kernels are returned instead:
+    /// executing an intrinsic the CPU lacks is undefined behavior, so an
+    /// unavailable vtable must be unreachable no matter what a caller
+    /// asked for.
+    pub fn kernels(self) -> &'static dyn PlaneKernels {
+        if !self.available() {
+            return &generic::GENERIC;
+        }
+        match self {
+            Backend::Generic => &generic::GENERIC,
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 => &avx2::AVX2,
+            #[cfg(all(target_arch = "x86_64", nullanet_avx512))]
+            Backend::Avx512 => &avx512::AVX512,
+            // Unavailable on this build; unreachable thanks to the
+            // guard above, but keep the match total.
+            #[allow(unreachable_patterns)]
+            _ => &generic::GENERIC,
+        }
+    }
+}
+
+/// Detected CPU capability bits relevant to the backends (surfaced by
+/// `{"cmd":"metrics"}` and the startup log).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CpuFeatures {
+    pub avx2: bool,
+    pub avx512f: bool,
+}
+
+/// Probe the CPU once (cheap: `is_x86_feature_detected!` caches).
+pub fn cpu_features() -> CpuFeatures {
+    CpuFeatures {
+        avx2: Backend::Avx2.available(),
+        #[cfg(target_arch = "x86_64")]
+        avx512f: is_x86_feature_detected!("avx512f"),
+        #[cfg(not(target_arch = "x86_64"))]
+        avx512f: false,
+    }
+}
+
+/// Best backend the current CPU supports (avx512 > avx2 > generic).
+pub fn detect() -> Backend {
+    *Backend::ALL
+        .iter()
+        .find(|b| b.available())
+        .expect("generic backend is always available")
+}
+
+/// Resolve a backend from an optional override string (the parsed value
+/// of [`BACKEND_ENV`]).  `None`/empty → [`detect`].  Unknown names and
+/// backends this host cannot run fall back to [`detect`] with a logged
+/// warning — a typo'd override must not silently change semantics, only
+/// speed, so the fallback is the same bit-exact kernels selection would
+/// have picked anyway.
+///
+/// Takes the override as an argument (rather than reading the
+/// environment itself) so tests can exercise every branch without the
+/// process-global, thread-unsafe `set_var`.
+pub fn select_from(request: Option<&str>) -> Backend {
+    let Some(raw) = request else {
+        return detect();
+    };
+    let req = raw.trim().to_ascii_lowercase();
+    if req.is_empty() {
+        return detect();
+    }
+    let Some(&backend) = Backend::ALL.iter().find(|b| b.name() == req) else {
+        crate::warnlog!(
+            "{BACKEND_ENV}={raw}: unknown backend (expected generic|avx2|avx512); using {}",
+            detect().name()
+        );
+        return detect();
+    };
+    if !backend.available() {
+        crate::warnlog!(
+            "{BACKEND_ENV}={raw}: backend unavailable on this host; using {}",
+            detect().name()
+        );
+        return detect();
+    }
+    backend
+}
+
+/// Select the serving backend: [`BACKEND_ENV`] override if set, else the
+/// best the CPU supports.  Called once per engine construction.
+pub fn select() -> Backend {
+    select_from(std::env::var(BACKEND_ENV).ok().as_deref())
+}
+
+/// Backends that can actually run on this host, strongest first (the
+/// bench sweep and the property tests iterate this).
+pub fn available_backends() -> Vec<Backend> {
+    Backend::ALL.iter().copied().filter(|b| b.available()).collect()
+}
+
+/// One-line human description for the startup log:
+/// `backend=avx2 cpu[avx2=true avx512f=false]`.
+pub fn describe(selected: Backend) -> String {
+    let cpu = cpu_features();
+    format!(
+        "backend={} cpu[avx2={} avx512f={}]",
+        selected.name(),
+        cpu.avx2,
+        cpu.avx512f
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn generic_always_available_and_detect_returns_available() {
+        assert!(Backend::Generic.available());
+        assert!(detect().available());
+        let avail = available_backends();
+        assert!(avail.contains(&Backend::Generic));
+        assert_eq!(avail.first().copied(), Some(detect()));
+    }
+
+    #[test]
+    fn kernels_never_return_unavailable_backend() {
+        for b in Backend::ALL {
+            let k = b.kernels();
+            assert!(k.backend().available());
+            if b.available() {
+                assert_eq!(k.backend(), b);
+            } else {
+                assert_eq!(k.backend(), Backend::Generic);
+            }
+        }
+    }
+
+    #[test]
+    fn select_from_parses_and_falls_back() {
+        assert_eq!(select_from(None), detect());
+        assert_eq!(select_from(Some("")), detect());
+        assert_eq!(select_from(Some("  ")), detect());
+        assert_eq!(select_from(Some("generic")), Backend::Generic);
+        assert_eq!(select_from(Some("GENERIC ")), Backend::Generic);
+        // Unknown names fall back to detection, never panic.
+        assert_eq!(select_from(Some("neon")), detect());
+        // Requesting a real backend yields it iff available, else the
+        // detected one.
+        for b in [Backend::Avx2, Backend::Avx512] {
+            let got = select_from(Some(b.name()));
+            if b.available() {
+                assert_eq!(got, b);
+            } else {
+                assert_eq!(got, detect());
+            }
+        }
+    }
+
+    #[test]
+    fn names_round_trip() {
+        for b in Backend::ALL {
+            assert_eq!(select_from(Some(b.name())).name(), if b.available() { b.name() } else { detect().name() });
+        }
+        assert_eq!(Backend::Generic.name(), "generic");
+        assert_eq!(Backend::Avx2.name(), "avx2");
+        assert_eq!(Backend::Avx512.name(), "avx512");
+    }
+
+    #[test]
+    fn describe_mentions_backend() {
+        let d = describe(detect());
+        assert!(d.contains(detect().name()));
+        assert!(d.contains("avx512f="));
+    }
+
+    // Cross-backend equivalence smoke tests.  The heavyweight randomized
+    // versions (all widths, dirty scratch, engine-level logits) live in
+    // tests/props.rs; these catch kernel bugs in `cargo test` even if
+    // the prop suite is filtered out.
+
+    #[test]
+    fn backends_agree_on_gemm_and_sign() {
+        let mut rng = SplitMix64::new(0xD15);
+        let n_out = 37; // not a multiple of 8 or 16: exercises tails
+        let n_in = 19;
+        let img: Vec<f32> = (0..n_in)
+            .map(|_| {
+                if rng.bool(0.3) {
+                    0.0
+                } else {
+                    (rng.next_u64() % 1000) as f32 / 250.0 - 2.0
+                }
+            })
+            .collect();
+        let w: Vec<f32> = (0..n_in * n_out)
+            .map(|_| (rng.next_u64() % 2000) as f32 / 500.0 - 2.0)
+            .collect();
+        let scale: Vec<f32> = (0..n_out).map(|_| (rng.next_u64() % 100) as f32 / 50.0 - 1.0).collect();
+        let bias: Vec<f32> = (0..n_out).map(|_| (rng.next_u64() % 100) as f32 / 50.0 - 1.0).collect();
+
+        let gk = Backend::Generic.kernels();
+        let mut z_ref = vec![0f32; n_out];
+        gk.gemm_zero_skip(&img, &w, n_out, &mut z_ref);
+        let n_limbs = 8;
+        let mut planes_ref = vec![0u64; n_out * n_limbs];
+        gk.sign_planes(&z_ref, &scale, &bias, 77, &mut planes_ref, n_limbs);
+
+        for b in available_backends() {
+            let k = b.kernels();
+            let mut z = vec![f32::NAN; n_out]; // dirty: kernel must overwrite
+            k.gemm_zero_skip(&img, &w, n_out, &mut z);
+            assert!(
+                z.iter().zip(&z_ref).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "{}: gemm differs from generic",
+                b.name()
+            );
+            let mut planes = vec![0u64; n_out * n_limbs];
+            k.sign_planes(&z, &scale, &bias, 77, &mut planes, n_limbs);
+            assert_eq!(planes, planes_ref, "{}: sign planes differ", b.name());
+        }
+    }
+
+    #[test]
+    fn backends_agree_on_popcount_rows() {
+        let mut rng = SplitMix64::new(0xACC);
+        let n = 130; // straddles limb 2, partial limb 3 ignored region
+        let n_out = 10;
+        let limbs: Vec<u64> = (0..8).map(|_| rng.next_u64()).collect();
+        let row: Vec<f32> = (0..n_out).map(|_| (rng.next_u64() % 300) as f32 / 100.0 - 1.5).collect();
+        let mut acc_ref = vec![0.25f32; 512 * n_out];
+        Backend::Generic.kernels().popcount_rows(&limbs, n, &row, &mut acc_ref, n_out);
+        for b in available_backends() {
+            let mut acc = vec![0.25f32; 512 * n_out];
+            b.kernels().popcount_rows(&limbs, n, &row, &mut acc, n_out);
+            assert!(
+                acc.iter().zip(&acc_ref).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "{}: popcount acc differs",
+                b.name()
+            );
+        }
+    }
+
+    #[test]
+    fn backends_agree_on_tape_ops_with_aliasing_dst() {
+        use crate::netlist::SchedOp;
+        let mut rng = SplitMix64::new(0x7A9E);
+        for n_limbs in [1usize, 4, 8, 3] {
+            let n_planes = 6;
+            let init: Vec<u64> = (0..n_planes * n_limbs).map(|_| rng.next_u64()).collect();
+            // dst == a (op 2) and dst == b (op 3) exercise exact aliasing.
+            let ops = vec![
+                SchedOp { a: 0, b: 1, dst: 4, ca: 0, cb: !0 },
+                SchedOp { a: 2, b: 4, dst: 5, ca: !0, cb: 0 },
+                SchedOp { a: 5, b: 3, dst: 5, ca: 0, cb: 0 },
+                SchedOp { a: 1, b: 5, dst: 5, ca: !0, cb: !0 },
+            ];
+            let mut want = init.clone();
+            // SAFETY: all op indices < n_planes and the buffer holds
+            // n_planes * n_limbs limbs.
+            unsafe { Backend::Generic.kernels().tape_ops(&ops, &mut want, n_limbs) };
+            for b in available_backends() {
+                let mut got = init.clone();
+                // SAFETY: as above.
+                unsafe { b.kernels().tape_ops(&ops, &mut got, n_limbs) };
+                assert_eq!(got, want, "{} n_limbs={n_limbs}", b.name());
+            }
+        }
+    }
+}

@@ -18,6 +18,8 @@ pub trait BitWord:
 {
     /// Number of sample lanes (64 × limbs).
     const LANES: usize;
+    /// Number of `u64` limbs per word (`LANES / 64`).
+    const LIMBS: usize;
     /// All lanes clear.
     const ZERO: Self;
     /// All lanes set.
@@ -41,6 +43,24 @@ pub trait BitWord:
     /// consumers iterate set lanes with `trailing_zeros` instead of
     /// probing `get_lane` per lane (the popcount last layer's hot loop).
     fn limbs(&self) -> &[u64];
+
+    /// Mutable limb view of the word — the write side of [`limbs`],
+    /// letting limb-slice kernels (the SIMD backends) produce planes in
+    /// place without a lane-by-lane `set_lane` loop.
+    ///
+    /// [`limbs`]: BitWord::limbs
+    fn limbs_mut(&mut self) -> &mut [u64];
+
+    /// View a slice of plane words as one contiguous `u64` limb slice
+    /// (plane `p`'s limbs at `p * LIMBS ..`).  This is what lets every
+    /// width (64/256/512 lanes) route through the same limb-slice SIMD
+    /// kernels.
+    fn flatten(planes: &[Self]) -> &[u64];
+
+    /// Mutable form of [`flatten`].
+    ///
+    /// [`flatten`]: BitWord::flatten
+    fn flatten_mut(planes: &mut [Self]) -> &mut [u64];
 
     /// All-zeros or all-ones from a bool.
     #[inline]
@@ -66,6 +86,7 @@ pub trait BitWord:
 
 impl BitWord for u64 {
     const LANES: usize = 64;
+    const LIMBS: usize = 1;
     const ZERO: u64 = 0;
     const ONES: u64 = !0;
 
@@ -117,10 +138,26 @@ impl BitWord for u64 {
     fn limbs(&self) -> &[u64] {
         std::slice::from_ref(self)
     }
+
+    #[inline(always)]
+    fn limbs_mut(&mut self) -> &mut [u64] {
+        std::slice::from_mut(self)
+    }
+
+    #[inline(always)]
+    fn flatten(planes: &[u64]) -> &[u64] {
+        planes
+    }
+
+    #[inline(always)]
+    fn flatten_mut(planes: &mut [u64]) -> &mut [u64] {
+        planes
+    }
 }
 
 impl<const N: usize> BitWord for [u64; N] {
     const LANES: usize = 64 * N;
+    const LIMBS: usize = N;
     const ZERO: [u64; N] = [0; N];
     const ONES: [u64; N] = [!0; N];
 
@@ -192,6 +229,28 @@ impl<const N: usize> BitWord for [u64; N] {
     fn limbs(&self) -> &[u64] {
         &self[..]
     }
+
+    #[inline(always)]
+    fn limbs_mut(&mut self) -> &mut [u64] {
+        &mut self[..]
+    }
+
+    #[inline(always)]
+    fn flatten(planes: &[[u64; N]]) -> &[u64] {
+        // SAFETY: `[u64; N]` has the same alignment as `u64`, no
+        // padding, and size `N * 8`, so a slice of M arrays is
+        // layout-identical to a slice of `M * N` u64s.
+        unsafe { std::slice::from_raw_parts(planes.as_ptr().cast::<u64>(), planes.len() * N) }
+    }
+
+    #[inline(always)]
+    fn flatten_mut(planes: &mut [[u64; N]]) -> &mut [u64] {
+        // SAFETY: same layout argument as `flatten`; the borrow is
+        // exclusive so no aliasing is introduced.
+        unsafe {
+            std::slice::from_raw_parts_mut(planes.as_mut_ptr().cast::<u64>(), planes.len() * N)
+        }
+    }
 }
 
 /// 64-lane plane (one sample word — the original substrate).
@@ -239,8 +298,28 @@ mod tests {
         // limbs() exposes the same bits, LSB-first per 64-lane limb.
         let limbs = a.limbs();
         assert_eq!(limbs.len() * 64, W::LANES);
+        assert_eq!(limbs.len(), W::LIMBS);
         for lane in 0..W::LANES {
             assert_eq!((limbs[lane / 64] >> (lane % 64)) & 1 == 1, a.get_lane(lane));
+        }
+
+        // limbs_mut() writes are visible through get_lane.
+        let mut w = W::ZERO;
+        w.limbs_mut()[0] = 0b101;
+        assert!(w.get_lane(0) && !w.get_lane(1) && w.get_lane(2));
+
+        // flatten/flatten_mut: plane p's limbs at p * LIMBS.., writes
+        // land in the right plane.
+        let mut planes = vec![W::ZERO; 3];
+        planes[1] = a;
+        let flat = W::flatten(&planes);
+        assert_eq!(flat.len(), 3 * W::LIMBS);
+        assert_eq!(&flat[W::LIMBS..2 * W::LIMBS], a.limbs());
+        assert!(flat[..W::LIMBS].iter().all(|&l| l == 0));
+        let flat = W::flatten_mut(&mut planes);
+        flat[2 * W::LIMBS] = !0;
+        for lane in 0..64.min(W::LANES) {
+            assert!(planes[2].get_lane(lane));
         }
     }
 

@@ -4,6 +4,7 @@ use nullanet::aig::{self, Aig, Lit};
 use nullanet::logic::{minimize, Cover, Cube, EspressoConfig, IsfFunction, TruthTable};
 use nullanet::netlist::{LogicTape, ScheduledTape};
 use nullanet::prop::check;
+use nullanet::simd::{self, PlaneKernels};
 use nullanet::util::{BitVec, BitWord, SplitMix64, W128, W256, W512};
 
 fn random_isf(rng: &mut SplitMix64, max_vars: usize, max_pats: usize) -> IsfFunction {
@@ -270,6 +271,129 @@ fn scheduled_tape_strips_exactly_the_dead_cone() {
         sched.eval_into(&inputs, &mut got, &mut sched.make_scratch());
         assert_eq!(got, want);
     });
+}
+
+#[test]
+fn simd_backends_lane_identical_on_scheduled_tapes() {
+    // Every plane-kernel backend this CPU offers must be lane-for-lane
+    // identical to ScheduledTape::eval_into (the scalar reference) at
+    // every serving width — including a second pass over the same dirty
+    // scratch buffer, which is exactly how the engine pools reuse it.
+    fn random_aig(rng: &mut SplitMix64) -> Aig {
+        let n = rng.range(2, 12);
+        let mut g = Aig::new(n);
+        let mut lits: Vec<Lit> = (0..n).map(|i| g.pi(i)).collect();
+        for _ in 0..rng.range(1, 160) {
+            let a = lits[rng.range(0, lits.len())];
+            let b = lits[rng.range(0, lits.len())];
+            lits.push(g.and(
+                if rng.bool(0.5) { a.not() } else { a },
+                if rng.bool(0.5) { b.not() } else { b },
+            ));
+        }
+        for _ in 0..rng.range(1, 6) {
+            let o = lits[rng.range(0, lits.len())];
+            g.add_output(if rng.bool(0.5) { o.not() } else { o });
+        }
+        g
+    }
+
+    fn agree_at_width<W: BitWord>(
+        sched: &ScheduledTape,
+        kern: &dyn PlaneKernels,
+        rng: &mut SplitMix64,
+    ) {
+        let inputs: Vec<W> = (0..sched.n_inputs())
+            .map(|_| W::from_lanes(|_| rng.bool(0.5)))
+            .collect();
+        let mut want = vec![W::ZERO; sched.n_outputs()];
+        let mut got = vec![W::ZERO; sched.n_outputs()];
+        sched.eval_into(&inputs, &mut want, &mut sched.make_scratch());
+        let mut scratch = sched.make_scratch::<W>();
+        sched.eval_into_kern(kern, &inputs, &mut got, &mut scratch);
+        let bn = kern.backend().name();
+        assert_eq!(got, want, "simd:{bn} width {}", W::LANES);
+        // Scratch is reusable: a second pass on the same (dirty) buffer
+        // must not change the answer.
+        sched.eval_into_kern(kern, &inputs, &mut got, &mut scratch);
+        assert_eq!(got, want, "simd:{bn} width {} (reused dirty scratch)", W::LANES);
+    }
+
+    check("simd-lane-identical-all-backends", 20, |rng| {
+        let g = random_aig(rng);
+        let sched = ScheduledTape::new(&LogicTape::from_aig(&g));
+        for backend in simd::available_backends() {
+            let kern = backend.kernels();
+            agree_at_width::<u64>(&sched, kern, rng);
+            agree_at_width::<W256>(&sched, kern, rng);
+            agree_at_width::<W512>(&sched, kern, rng);
+        }
+    });
+}
+
+#[test]
+fn simd_f32_kernels_bit_identical_across_backends() {
+    // The first-layer GEMM, sign-bit plane writer and popcount last
+    // layer must produce bit-identical f32s/planes on every backend —
+    // same accumulation order, no FMA contraction, same `>= 0.0`
+    // semantics — for random shapes including ragged SIMD tails.
+    check("simd-f32-kernels-bit-identical", 20, |rng| {
+        let n_in = rng.range(1, 40);
+        let n_out = rng.range(1, 40);
+        let n_limbs = rng.range(1, 9);
+        let img: Vec<f32> = (0..n_in)
+            .map(|_| if rng.bool(0.3) { 0.0 } else { rng.normal() as f32 })
+            .collect();
+        let w: Vec<f32> = (0..n_in * n_out).map(|_| rng.normal() as f32).collect();
+        let scale: Vec<f32> = (0..n_out).map(|_| rng.normal() as f32).collect();
+        let bias: Vec<f32> = (0..n_out).map(|_| rng.normal() as f32).collect();
+        let lane = rng.range(0, n_limbs * 64);
+        let n = rng.range(1, 129);
+        let limbs: Vec<u64> = (0..n.div_ceil(64)).map(|_| rng.next_u64()).collect();
+        let row: Vec<f32> = (0..n_out).map(|_| rng.normal() as f32).collect();
+
+        let generic = simd::Backend::Generic.kernels();
+        let mut z_ref = vec![f32::NAN; n_out];
+        generic.gemm_zero_skip(&img, &w, n_out, &mut z_ref);
+        let mut planes_ref = vec![0u64; n_out * n_limbs];
+        generic.sign_planes(&z_ref, &scale, &bias, lane, &mut planes_ref, n_limbs);
+        let mut acc_ref = vec![0.5f32; n * n_out];
+        generic.popcount_rows(&limbs, n, &row, &mut acc_ref, n_out);
+
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+        for backend in simd::available_backends() {
+            let kern = backend.kernels();
+            let bn = backend.name();
+            let mut z = vec![f32::NAN; n_out];
+            kern.gemm_zero_skip(&img, &w, n_out, &mut z);
+            assert_eq!(bits(&z), bits(&z_ref), "gemm_zero_skip simd:{bn}");
+            let mut planes = vec![0u64; n_out * n_limbs];
+            kern.sign_planes(&z, &scale, &bias, lane, &mut planes, n_limbs);
+            assert_eq!(planes, planes_ref, "sign_planes simd:{bn}");
+            let mut acc = vec![0.5f32; n * n_out];
+            kern.popcount_rows(&limbs, n, &row, &mut acc, n_out);
+            assert_eq!(bits(&acc), bits(&acc_ref), "popcount_rows simd:{bn}");
+        }
+    });
+}
+
+#[test]
+fn simd_selection_honors_override_and_falls_back() {
+    // Every available backend is selectable by name, case- and
+    // whitespace-insensitively (the NULLANET_SIMD_BACKEND parse path);
+    // unknown names fall back to detection; the selected backend is
+    // always one this CPU can actually execute.
+    for backend in simd::available_backends() {
+        let name = backend.name();
+        assert_eq!(simd::select_from(Some(name)), backend);
+        assert_eq!(simd::select_from(Some(&name.to_uppercase())), backend);
+        assert_eq!(simd::select_from(Some(&format!("  {name} "))), backend);
+    }
+    assert_eq!(simd::select_from(Some("generic")), simd::Backend::Generic);
+    assert_eq!(simd::select_from(None), simd::detect());
+    assert_eq!(simd::select_from(Some("")), simd::detect());
+    assert_eq!(simd::select_from(Some("quantum")), simd::detect());
+    assert!(simd::select().available(), "selected backend must be executable");
 }
 
 #[test]
