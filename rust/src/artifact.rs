@@ -38,7 +38,7 @@ use std::path::Path;
 use crate::isf::LayerIsf;
 use crate::jsonio::{num, obj, s, Json};
 use crate::model::{Arch, NetArtifacts, Tensor};
-use crate::netlist::{LogicTape, TapeOp};
+use crate::netlist::{verify, LogicTape, TapeOp};
 use crate::util::error::{Context, Result};
 use crate::{bail, format_err};
 
@@ -276,6 +276,44 @@ impl CompiledModel {
         let CompiledModel { name, arch, accuracy_test, layers, params } = self;
         let net = NetArtifacts::detached(name, arch, params, accuracy_test);
         (net, layers.into_iter().map(|l| l.tape).collect())
+    }
+
+    /// Statically verify every layer: tape dataflow analysis plus the
+    /// schedule lifetime check on the [`crate::netlist::ScheduledTape`]
+    /// the serving engines will build (see [`crate::netlist::verify`]
+    /// for the diagnostic-code table).  Digest/structure checks already
+    /// ran in [`CompiledModel::load`]; this catches programs that are
+    /// well-formed on disk but unsound to execute.
+    pub fn verify(&self) -> verify::Report {
+        let mut report = verify::Report::default();
+        for layer in &self.layers {
+            let r = verify::verify_tape_and_schedule(&layer.tape);
+            report.absorb(&format!("layer {}", layer.name), r);
+        }
+        report
+    }
+}
+
+/// Load `path` and statically verify it, folding load failures into the
+/// same diagnostic report: digest mismatches become `NL021`, every other
+/// structural failure (parse error, truncation, bad version, section
+/// count) becomes `NL020`.  This is the whole-file pass behind
+/// `nullanet verify`, `--verify-on-load` / `NULLANET_VERIFY=1`, the
+/// registry's load/swap gate and the `{"cmd":"verify"}` admin command.
+pub fn verify_artifact(path: &Path) -> verify::Report {
+    match CompiledModel::load(path) {
+        Ok(model) => model.verify(),
+        Err(e) => {
+            let mut report = verify::Report::default();
+            let msg = format!("{e:#}");
+            let code = if msg.contains("digest mismatch") {
+                verify::code::ARTIFACT_DIGEST
+            } else {
+                verify::code::ARTIFACT_STRUCTURE
+            };
+            report.error(code, path.display().to_string(), msg);
+            report
+        }
     }
 }
 
@@ -709,5 +747,45 @@ mod tests {
         assert_eq!(back.layers[0].stats, cm.layers[0].stats);
         assert_eq!(tape_digest(&back.layers[0].tape), tape_digest(&cm.layers[0].tape));
         assert!((back.accuracy_test - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn verify_artifact_classifies_failures() {
+        let dir = std::env::temp_dir().join("nullanet_artifact_verify_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v.nnc");
+        let cm = CompiledModel {
+            name: "v".into(),
+            arch: Arch::Mlp { sizes: vec![2, 2, 2, 2] },
+            accuracy_test: 0.5,
+            layers: vec![CompiledLayer {
+                name: "layer2".into(),
+                tape: swap_tape(),
+                stats: LayerStats::default(),
+            }],
+            params: BTreeMap::new(),
+        };
+        cm.save(&path).unwrap();
+        // Clean artifact verifies clean.
+        let r = verify_artifact(&path);
+        assert!(r.ok(), "{r}");
+        assert_eq!(r.diags.len(), 0, "{r}");
+        // Tamper a tape op inside the layer section: the per-section
+        // digest catches it, classified NL021.
+        let text = std::fs::read_to_string(&path).unwrap();
+        let tampered = text.replacen("\"ops\":[[1,2,", "\"ops\":[[2,2,", 1);
+        assert_ne!(text, tampered, "tamper target not found");
+        let bad = dir.join("bad.nnc");
+        std::fs::write(&bad, tampered).unwrap();
+        let r = verify_artifact(&bad);
+        assert!(!r.ok());
+        assert!(r.has(verify::code::ARTIFACT_DIGEST), "{r}");
+        // Truncation (footer gone) is structural, classified NL020.
+        let footer_at = text.rfind("{\"digest\"").unwrap();
+        let trunc = dir.join("trunc.nnc");
+        std::fs::write(&trunc, &text[..footer_at]).unwrap();
+        let r = verify_artifact(&trunc);
+        assert!(!r.ok());
+        assert!(r.has(verify::code::ARTIFACT_STRUCTURE), "{r}");
     }
 }

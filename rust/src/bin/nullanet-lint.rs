@@ -1,0 +1,561 @@
+//! nullanet-lint — repo-rule lint driver, run as blocking CI.
+//!
+//! Three rules that `rustc`/`clippy` cannot express, enforced over the
+//! whole `rust/` tree:
+//!
+//! 1. **Unsafe audit.**  Every `unsafe` block and `unsafe impl` must be
+//!    preceded by a `// SAFETY:` comment (within a few lines); every
+//!    `unsafe fn` must carry a `# Safety` doc section or a `// SAFETY:`
+//!    comment in its body.  Together with the crate-wide
+//!    `#![deny(unsafe_op_in_unsafe_fn)]` this means every unsafe
+//!    *operation* sits next to its written justification.
+//! 2. **Zero-dependency rule.**  No `[dependencies]`-style section in
+//!    any `Cargo.toml` may name a crates.io package (local `path`
+//!    dependencies are exempt: vendoring is the sanctioned escape
+//!    hatch, see the `pjrt` feature).
+//! 3. **No `unwrap()`/`expect()` on the server request path.**  In
+//!    `server.rs` and `protocol.rs` (outside `#[cfg(test)]`), a panic
+//!    is a denial of service: every error must flow back as a protocol
+//!    error reply.
+//!
+//! The scanner works on a comment/string-stripped view of each file, so
+//! `unsafe` inside a doc comment or a string literal never counts —
+//! while the SAFETY text itself is searched in the *original* lines.
+//!
+//! Usage: `nullanet-lint [repo-root]` (default: the parent of this
+//! crate's manifest directory).  Exit code 0 iff no violations.
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+fn main() {
+    let root = std::env::args()
+        .nth(1)
+        .map(PathBuf::from)
+        .unwrap_or_else(|| {
+            Path::new(env!("CARGO_MANIFEST_DIR"))
+                .parent()
+                .map(Path::to_path_buf)
+                .unwrap_or_else(|| PathBuf::from("."))
+        });
+    match run(&root) {
+        Ok(violations) => {
+            for v in &violations {
+                println!("{v}");
+            }
+            if violations.is_empty() {
+                println!("nullanet-lint: ok");
+                std::process::exit(0);
+            }
+            println!("nullanet-lint: {} violation(s)", violations.len());
+            std::process::exit(1);
+        }
+        Err(e) => {
+            eprintln!("nullanet-lint: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+struct Violation {
+    file: PathBuf,
+    line: usize,
+    rule: &'static str,
+    message: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.file.display(),
+            self.line,
+            self.rule,
+            self.message
+        )
+    }
+}
+
+fn run(root: &Path) -> Result<Vec<Violation>, String> {
+    let rust_dir = root.join("rust");
+    if !rust_dir.is_dir() {
+        return Err(format!("{} has no rust/ directory", root.display()));
+    }
+    let mut rs_files = Vec::new();
+    let mut manifests = Vec::new();
+    if root.join("Cargo.toml").is_file() {
+        manifests.push(root.join("Cargo.toml"));
+    }
+    walk(&rust_dir, &mut rs_files, &mut manifests)?;
+    rs_files.sort();
+    manifests.sort();
+    if rs_files.is_empty() {
+        return Err(format!("no .rs files under {}", rust_dir.display()));
+    }
+    let mut out = Vec::new();
+    for path in &manifests {
+        let text = read(path)?;
+        lint_manifest(path, &text, &mut out);
+    }
+    for path in &rs_files {
+        let text = read(path)?;
+        let stripped = strip_code(&text);
+        let orig: Vec<&str> = text.lines().collect();
+        let code: Vec<&str> = stripped.lines().collect();
+        lint_unsafe(path, &orig, &code, &mut out);
+        let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if (name == "server.rs" || name == "protocol.rs") && path_in_src(path) {
+            lint_request_path(path, &code, &mut out);
+        }
+    }
+    Ok(out)
+}
+
+fn read(path: &Path) -> Result<String, String> {
+    std::fs::read_to_string(path).map_err(|e| format!("read {}: {e}", path.display()))
+}
+
+fn path_in_src(path: &Path) -> bool {
+    path.components()
+        .any(|c| c.as_os_str().to_str() == Some("src"))
+}
+
+/// Collect `.rs` files and `Cargo.toml`s, skipping build output.
+fn walk(
+    dir: &Path,
+    rs_files: &mut Vec<PathBuf>,
+    manifests: &mut Vec<PathBuf>,
+) -> Result<(), String> {
+    let entries =
+        std::fs::read_dir(dir).map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+        let path = entry.path();
+        let name = entry.file_name();
+        let name = name.to_str().unwrap_or("");
+        if path.is_dir() {
+            if name == "target" || name.starts_with('.') {
+                continue;
+            }
+            walk(&path, rs_files, manifests)?;
+        } else if name == "Cargo.toml" {
+            manifests.push(path);
+        } else if name.ends_with(".rs") {
+            rs_files.push(path);
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Comment/string stripping
+// ---------------------------------------------------------------------
+
+/// Replace comments, string/char literal *contents*, and the literals'
+/// delimiters with spaces, preserving line structure.  The result is a
+/// "code-only" view where token searches cannot be fooled by prose.
+fn strip_code(src: &str) -> String {
+    let chars: Vec<char> = src.chars().collect();
+    let mut out = String::with_capacity(src.len());
+    let mut i = 0;
+    let blank = |c: char| if c == '\n' { '\n' } else { ' ' };
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '/' && chars.get(i + 1) == Some(&'/') {
+            while i < chars.len() && chars[i] != '\n' {
+                out.push(' ');
+                i += 1;
+            }
+        } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+            let mut depth = 0usize;
+            while i < chars.len() {
+                if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    out.push_str("  ");
+                    i += 2;
+                } else if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    out.push_str("  ");
+                    i += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    out.push(blank(chars[i]));
+                    i += 1;
+                }
+            }
+        } else if c == '"' {
+            // Normal or raw string; raw-ness is decided by the prefix
+            // already emitted (r/br + hashes), which we re-examine here.
+            let mut hashes = 0usize;
+            let mut j = i;
+            while j > 0 && chars[j - 1] == '#' {
+                hashes += 1;
+                j -= 1;
+            }
+            let raw = j > 0 && (chars[j - 1] == 'r');
+            out.push(' ');
+            i += 1;
+            while i < chars.len() {
+                if !raw && chars[i] == '\\' {
+                    out.push(' ');
+                    out.push(blank(*chars.get(i + 1).unwrap_or(&' ')));
+                    i += 2;
+                } else if chars[i] == '"' {
+                    let closing = !raw
+                        || (i + hashes < chars.len()
+                            && chars[i + 1..=i + hashes].iter().all(|&h| h == '#'));
+                    out.push(' ');
+                    i += 1;
+                    if closing {
+                        for _ in 0..hashes {
+                            out.push(' ');
+                            i += 1;
+                        }
+                        break;
+                    }
+                } else {
+                    out.push(blank(chars[i]));
+                    i += 1;
+                }
+            }
+        } else if c == '\'' {
+            // Char literal vs lifetime: a literal is 'x' or starts with
+            // an escape; a lifetime tick is followed by an identifier
+            // with no closing quote right after.
+            let is_char = chars.get(i + 1) == Some(&'\\') || chars.get(i + 2) == Some(&'\'');
+            if is_char {
+                out.push(' ');
+                i += 1;
+                while i < chars.len() && chars[i] != '\'' {
+                    if chars[i] == '\\' {
+                        out.push(' ');
+                        i += 1;
+                    }
+                    if i < chars.len() {
+                        out.push(blank(chars[i]));
+                        i += 1;
+                    }
+                }
+                if i < chars.len() {
+                    out.push(' ');
+                    i += 1;
+                }
+            } else {
+                out.push(c);
+                i += 1;
+            }
+        } else {
+            out.push(c);
+            i += 1;
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Rule 1: unsafe audit
+// ---------------------------------------------------------------------
+
+/// How far back a `// SAFETY:` comment may sit from its `unsafe` block
+/// or `unsafe impl` (multi-line comments + the statement's own lines).
+const SAFETY_BACK_LINES: usize = 6;
+/// How far back a `# Safety` doc section may sit from an `unsafe fn`
+/// signature (attributes + a doc paragraph in between).
+const DOC_BACK_LINES: usize = 20;
+
+fn lint_unsafe(path: &Path, orig: &[&str], code: &[&str], out: &mut Vec<Violation>) {
+    for (li, line) in code.iter().enumerate() {
+        let mut start = 0;
+        while let Some(col) = find_word(line, "unsafe", start) {
+            start = col + "unsafe".len();
+            match next_word(code, li, start) {
+                Some(w) if w == "fn" => {
+                    if !unsafe_fn_is_documented(orig, code, li, start) {
+                        out.push(Violation {
+                            file: path.to_path_buf(),
+                            line: li + 1,
+                            rule: "safety-comment",
+                            message: "unsafe fn without a `# Safety` doc section or a \
+                                      `// SAFETY:` comment in its body"
+                                .into(),
+                        });
+                    }
+                }
+                _ => {
+                    // `unsafe {` block, `unsafe impl`, `unsafe trait`:
+                    // justification reads best immediately above.
+                    if !has_safety_above(orig, li, SAFETY_BACK_LINES) {
+                        out.push(Violation {
+                            file: path.to_path_buf(),
+                            line: li + 1,
+                            rule: "safety-comment",
+                            message: "unsafe without a preceding `// SAFETY:` comment".into(),
+                        });
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Position of `word` in `line` at or after `from`, whole-word matches
+/// only (so `unsafe_op_in_unsafe_fn` never matches `unsafe`).
+fn find_word(line: &str, word: &str, from: usize) -> Option<usize> {
+    let bytes = line.as_bytes();
+    let is_ident = |b: u8| b == b'_' || b.is_ascii_alphanumeric();
+    let mut at = from;
+    while let Some(rel) = line.get(at..).and_then(|s| s.find(word)) {
+        let col = at + rel;
+        let before_ok = col == 0 || !is_ident(bytes[col - 1]);
+        let after = col + word.len();
+        let after_ok = after >= bytes.len() || !is_ident(bytes[after]);
+        if before_ok && after_ok {
+            return Some(col);
+        }
+        at = col + 1;
+    }
+    None
+}
+
+/// The next code word at/after (line `li`, column `col`), looking past
+/// line breaks.
+fn next_word(code: &[&str], li: usize, col: usize) -> Option<String> {
+    let mut line = li;
+    let mut at = col;
+    while line < code.len() {
+        let rest: String = code[line].chars().skip(at).collect();
+        let trimmed = rest.trim_start();
+        if !trimmed.is_empty() {
+            let w: String = trimmed
+                .chars()
+                .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+                .collect();
+            return Some(if w.is_empty() {
+                trimmed.chars().take(1).collect()
+            } else {
+                w
+            });
+        }
+        line += 1;
+        at = 0;
+    }
+    None
+}
+
+fn has_safety_above(orig: &[&str], li: usize, window: usize) -> bool {
+    orig[li.saturating_sub(window)..=li]
+        .iter()
+        .any(|l| l.contains("SAFETY"))
+}
+
+/// An `unsafe fn` passes if a `# Safety` doc section precedes the
+/// signature, or (for private helpers whose contract is local) a
+/// `// SAFETY:` comment sits in the body or just above.
+fn unsafe_fn_is_documented(orig: &[&str], code: &[&str], li: usize, col: usize) -> bool {
+    let lo = li.saturating_sub(DOC_BACK_LINES);
+    if orig[lo..=li].iter().any(|l| l.contains("# Safety")) {
+        return true;
+    }
+    if has_safety_above(orig, li, SAFETY_BACK_LINES) {
+        return true;
+    }
+    // Scan the signature for its body `{` (or `;` for a bodyless trait
+    // method, which required the doc section above), then search the
+    // brace-matched body for a SAFETY comment.
+    let (mut line, mut at) = (li, col);
+    let mut depth = 0usize;
+    let mut in_body = false;
+    while line < code.len() {
+        for c in code[line].chars().skip(at) {
+            match c {
+                ';' if !in_body => return false,
+                '{' => {
+                    depth += 1;
+                    in_body = true;
+                }
+                '}' => {
+                    depth = depth.saturating_sub(1);
+                    if in_body && depth == 0 {
+                        return orig[li..=line].iter().any(|l| l.contains("SAFETY"));
+                    }
+                }
+                _ => {}
+            }
+        }
+        line += 1;
+        at = 0;
+    }
+    false
+}
+
+// ---------------------------------------------------------------------
+// Rule 2: zero crates.io dependencies
+// ---------------------------------------------------------------------
+
+fn lint_manifest(path: &Path, text: &str, out: &mut Vec<Violation>) {
+    let mut in_dep_section = false;
+    for (li, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.starts_with('[') {
+            let section = line.trim_matches(|c| c == '[' || c == ']');
+            let last = section.rsplit('.').next().unwrap_or(section);
+            in_dep_section = matches!(
+                last,
+                "dependencies" | "dev-dependencies" | "build-dependencies"
+            );
+            continue;
+        }
+        if !in_dep_section || line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some((name, value)) = line.split_once('=') {
+            // Local path dependencies are the sanctioned vendoring
+            // route; anything else would need the network.
+            if value.contains("path") && !value.contains("version") {
+                continue;
+            }
+            out.push(Violation {
+                file: path.to_path_buf(),
+                line: li + 1,
+                rule: "no-deps",
+                message: format!(
+                    "crates.io dependency `{}` (this tree builds offline with zero \
+                     external dependencies; vendor as a `path` dependency if unavoidable)",
+                    name.trim()
+                ),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Rule 3: no unwrap/expect on the server request path
+// ---------------------------------------------------------------------
+
+fn lint_request_path(path: &Path, code: &[&str], out: &mut Vec<Violation>) {
+    for (li, line) in code.iter().enumerate() {
+        if line.contains("#[cfg(test)]") {
+            // Everything below is the test module: panics are fine.
+            break;
+        }
+        for pat in [".unwrap()", ".expect("] {
+            if line.contains(pat) {
+                out.push(Violation {
+                    file: path.to_path_buf(),
+                    line: li + 1,
+                    rule: "request-path-panic",
+                    message: format!(
+                        "`{pat}` on the server request path — a panic here is a \
+                         denial of service; surface the error as a protocol reply"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lines(s: &str) -> Vec<&str> {
+        s.lines().collect()
+    }
+
+    #[test]
+    fn stripper_blanks_comments_strings_and_chars() {
+        let src = "let x = \"unsafe\"; // unsafe\nlet c = 'u'; /* unsafe */ let l: &'a str;";
+        let code = strip_code(src);
+        assert!(!code.contains("unsafe"), "{code}");
+        // Line structure and the lifetime tick survive.
+        assert_eq!(code.lines().count(), src.lines().count());
+        assert!(code.contains("&'a str"));
+    }
+
+    #[test]
+    fn stripper_handles_raw_strings() {
+        let src = "let r = r#\"has \"unsafe\" inside\"#; unsafe { x() }";
+        let code = strip_code(src);
+        assert_eq!(code.matches("unsafe").count(), 1);
+        assert!(code.contains("unsafe {"));
+    }
+
+    #[test]
+    fn unsafe_block_needs_safety_comment() {
+        let src = "fn f() {\n    unsafe { g() }\n}\n";
+        let code_owned = strip_code(src);
+        let mut out = Vec::new();
+        lint_unsafe(Path::new("t.rs"), &lines(src), &lines(&code_owned), &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].line, 2);
+
+        let ok = "fn f() {\n    // SAFETY: g has no preconditions.\n    unsafe { g() }\n}\n";
+        let code_owned = strip_code(ok);
+        let mut out = Vec::new();
+        lint_unsafe(Path::new("t.rs"), &lines(ok), &lines(&code_owned), &mut out);
+        assert!(out.is_empty(), "{:?}", out.iter().map(|v| v.to_string()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn unsafe_fn_accepts_doc_section_or_body_comment() {
+        let doc = "/// # Safety\n/// Caller checks bounds.\nunsafe fn f(p: *const u8) {}\n";
+        let body = "unsafe fn f() {\n    // SAFETY: safe body.\n    let _ = 0;\n}\n";
+        let bad = "unsafe fn f(p: *const u8) {\n    let _ = p;\n}\n";
+        for (src, want) in [(doc, 0), (body, 0), (bad, 1)] {
+            let code_owned = strip_code(src);
+            let mut out = Vec::new();
+            lint_unsafe(Path::new("t.rs"), &lines(src), &lines(&code_owned), &mut out);
+            assert_eq!(out.len(), want, "{src}");
+        }
+    }
+
+    #[test]
+    fn prose_and_deny_attr_are_not_flagged() {
+        let src = "#![deny(unsafe_op_in_unsafe_fn)]\n// thread-unsafe set_var\nlet s = \"unsafe\";\n";
+        let code_owned = strip_code(src);
+        let mut out = Vec::new();
+        lint_unsafe(Path::new("t.rs"), &lines(src), &lines(&code_owned), &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn manifest_dependencies_are_flagged_except_path() {
+        let toml = "[package]\nname = \"x\"\n\n[dependencies]\nserde = \"1\"\nxla = { path = \"../xla\" }\n";
+        let mut out = Vec::new();
+        lint_manifest(Path::new("Cargo.toml"), toml, &mut out);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].message.contains("serde"));
+    }
+
+    #[test]
+    fn request_path_rule_stops_at_test_module() {
+        let src = "fn f() {\n    x.unwrap();\n}\n#[cfg(test)]\nmod tests {\n    fn g() { y.unwrap(); }\n}\n";
+        let code_owned = strip_code(src);
+        let mut out = Vec::new();
+        lint_request_path(Path::new("server.rs"), &lines(&code_owned), &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].line, 2);
+    }
+
+    #[test]
+    fn the_tree_passes_its_own_lint() {
+        // The real repo root: this binary's manifest dir is rust/.
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .map(Path::to_path_buf)
+            .unwrap_or_default();
+        let violations = run(&root).expect("lint run");
+        assert!(
+            violations.is_empty(),
+            "repo-rule violations:\n{}",
+            violations
+                .iter()
+                .map(|v| v.to_string())
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+    }
+}

@@ -26,7 +26,10 @@
 //!   (generic over [`util::BitWord`]: 64/128/256/512 samples per pass),
 //!   plus the post-load optimizer ([`netlist::ScheduledTape`]):
 //!   dead-stripping + liveness-compacted scratch slots, so the serving
-//!   eval working set is `max_live` words instead of one per plane
+//!   eval working set is `max_live` words instead of one per plane —
+//!   and [`netlist::verify`], the static analyzer over both forms
+//!   (dataflow checks on tapes, symbolic lifetime replay on schedules)
+//!   behind `nullanet verify` and the registry's load/swap gate
 //! * [`isf`] — ON/OFF/DC-set extraction from training activations
 //! * [`synth`] — Algorithm 2 (OptimizeNeuron / OptimizeLayer / OptimizeNetwork)
 //! * [`pipeline`] — macro/micro pipelining (Section 3.2.2, OptimizeNetwork)
@@ -55,6 +58,11 @@
 //! * [`cli`], [`jsonio`], [`logging`], [`bench_util`], [`prop`],
 //!   [`util::error`] — offline substrates (no crates.io access in this
 //!   environment, so there are zero external dependencies)
+
+// Every unsafe operation must sit in an explicit `unsafe {}` block even
+// inside `unsafe fn`, so each one is forced to carry its own
+// `// SAFETY:` justification (enforced by src/bin/nullanet-lint.rs).
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod aig;
 pub mod arith;

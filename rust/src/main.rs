@@ -6,6 +6,7 @@
 //!   compile              run the staged pipeline, emit a .nnc artifact
 //!   eval                 accuracy of an engine on the test set
 //!   serve                run the TCP serving front-end
+//!   verify               statically verify a compiled .nnc artifact
 //!
 //! `compile` is the "compile once" half of compile-once/serve-many:
 //! `eval`/`serve --artifact model.nnc` load its output in milliseconds
@@ -36,10 +37,11 @@ fn main() {
         "eval" => run_eval(&rest),
         "serve" => run_serve(&rest),
         "codegen" => run_codegen(&rest),
+        "verify" => run_verify(&rest),
         _ => {
             eprintln!(
                 "nullanet — reduced-memory-access inference via Boolean logic\n\n\
-                 usage: nullanet <tables|synth|compile|eval|serve|codegen> [--help]"
+                 usage: nullanet <tables|synth|compile|eval|serve|codegen|verify> [--help]"
             );
             Ok(())
         }
@@ -216,6 +218,12 @@ struct EngineHandle {
     ref_accuracy: f64,
 }
 
+/// `--verify-on-load` or `NULLANET_VERIFY=1`: run the static verifier
+/// on every artifact before it becomes an engine.
+fn verify_on_load(p: &Parsed) -> bool {
+    p.bool("verify-on-load") || std::env::var("NULLANET_VERIFY").as_deref() == Ok("1")
+}
+
 /// Resolve the serving engine for `eval`/`serve`: `--artifact` loads a
 /// compiled model in milliseconds; otherwise Algorithm 2 synthesizes
 /// from `artifacts/` (seconds to minutes).  Pass an already-loaded
@@ -233,6 +241,19 @@ fn engine_from_cli(p: &Parsed, art: Option<&model::Artifacts>) -> Result<EngineH
         }
         let t0 = std::time::Instant::now();
         let compiled = artifact::CompiledModel::load(std::path::Path::new(apath))?;
+        if verify_on_load(p) {
+            let report = compiled.verify();
+            for d in &report.diags {
+                nullanet::info!("verify {apath}: {d}");
+            }
+            if !report.ok() {
+                return Err(format_err!(
+                    "artifact {apath} rejected by verifier ({})",
+                    report.summary()
+                ));
+            }
+            nullanet::info!("verify {apath}: {}", report.summary());
+        }
         let (name, n_layers, ref_accuracy) =
             (compiled.name.clone(), compiled.layers.len(), compiled.accuracy_test);
         // Consumes the artifact: tapes/tensors move into the engine.
@@ -336,6 +357,7 @@ fn run_eval(args: &[String]) -> Result<()> {
         .opt("artifact", "", "evaluate a compiled .nnc artifact (skips synthesis)")
         .opt("limit", "0", "evaluate only the first N test samples (0 = all)")
         .opt("width", "64", "bit-parallel plane width for the logic engine (64|256|512)")
+        .flag("verify-on-load", "run the static verifier on the artifact before eval")
         .parse(args)
         .map_err(|h| format_err!("{h}"))?;
     let art = model::Artifacts::load(&nullanet::artifacts_dir())?;
@@ -419,6 +441,28 @@ fn run_codegen(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn run_verify(args: &[String]) -> Result<()> {
+    // Static analysis only: no engine is built, no dataset is read.  The
+    // exit code is the CI contract — 0 iff every layer tape passes
+    // dataflow checks and every derived schedule passes the symbolic
+    // lifetime replay (warnings alone do not fail the run).
+    let p = Cli::new("nullanet verify", "statically verify a compiled .nnc artifact")
+        .parse(args)
+        .map_err(|h| format_err!("{h}"))?;
+    let path = match p.positionals.first() {
+        Some(path) => path,
+        None => return Err(format_err!("usage: nullanet verify <model.nnc>")),
+    };
+    let report = artifact::verify_artifact(std::path::Path::new(path));
+    println!("{path}:");
+    println!("{report}");
+    if report.ok() {
+        Ok(())
+    } else {
+        Err(format_err!("{path}: verification failed ({})", report.summary()))
+    }
+}
+
 fn run_serve(args: &[String]) -> Result<()> {
     let p = Cli::new("nullanet serve", "TCP JSON-lines multi-model inference server")
         .opt("net", "net11", "network (synthesis fallback when no --artifact)")
@@ -429,6 +473,7 @@ fn run_serve(args: &[String]) -> Result<()> {
         .opt("max-conns", "1024", "live-connection admission cap (beyond it, shed)")
         .opt("workers", "2", "coordinator worker threads per model")
         .opt("width", "64", "bit-parallel plane width for logic engines (64|256|512)")
+        .flag("verify-on-load", "run the static verifier on artifacts before serving")
         .parse(args)
         .map_err(|h| format_err!("{h}"))?;
     let width = p.usize("width");

@@ -16,10 +16,17 @@
 //! stripped and scratch planes are liveness-compacted into reusable
 //! slots, shrinking the eval working set from `n_planes` words to
 //! `1 + n_inputs + max_live` (see `schedule.rs`).
+//!
+//! Both program forms are statically checkable: [`verify`] runs
+//! dataflow analysis over tapes (def-before-use, bounds, dead cones)
+//! and a symbolic lifetime/aliasing replay over schedules, emitting
+//! stable `NL***` diagnostics used by `nullanet verify`, the registry
+//! and CI.
 
 mod codegen;
 mod schedule;
 mod tape;
+pub mod verify;
 
 pub use codegen::tape_to_rust_source;
 pub use schedule::{SchedOp, ScheduleStats, ScheduledTape};

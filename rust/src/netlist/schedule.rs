@@ -224,6 +224,31 @@ impl ScheduledTape {
         self.ops.len()
     }
 
+    /// Scheduled ops in execution order (read-only; the static verifier
+    /// re-derives liveness over these).
+    pub fn ops(&self) -> &[SchedOp] {
+        &self.ops
+    }
+
+    /// `(buffer index, complement mask)` per output, in source-tape
+    /// output order (read-only, for the static verifier).
+    pub fn outputs(&self) -> &[(u32, u64)] {
+        &self.outputs
+    }
+
+    /// Assemble a schedule from raw parts without deriving it from a
+    /// tape.  Only for the verifier's self-tests, which need to seed
+    /// lifetime violations that `new` can never produce.
+    #[cfg(test)]
+    pub(crate) fn from_raw(
+        n_inputs: usize,
+        ops: Vec<SchedOp>,
+        outputs: Vec<(u32, u64)>,
+        stats: ScheduleStats,
+    ) -> ScheduledTape {
+        ScheduledTape { n_inputs, ops, outputs, stats }
+    }
+
     /// Scheduling statistics (compaction evidence for metrics/DESIGN.md).
     pub fn stats(&self) -> &ScheduleStats {
         &self.stats

@@ -1,0 +1,792 @@
+//! Static verification of compiled logic programs.
+//!
+//! A trained NullaNet model is a fixed Boolean program, so the
+//! correctness of everything downstream of synthesis reduces to static
+//! properties of that program.  This module proves (or refutes) them
+//! without evaluating a single plane:
+//!
+//! * **Tape dataflow** ([`verify_tape`]) — a single forward walk over a
+//!   [`LogicTape`] checks def-before-use (fanins precede the op's own
+//!   plane), fanin/output index bounds, and broadcast complement masks;
+//!   when the structure is sound, two linear passes add semantic
+//!   warnings: a backward cone walk finds ops outside every output cone
+//!   (dead code), and a forward input-reachability pass finds outputs
+//!   whose cone touches no input plane (constant outputs) plus ops that
+//!   AND the uncomplemented constant-FALSE plane (pinned-zero results).
+//! * **Schedule lifetimes** ([`verify_schedule`]) — an independent
+//!   re-derivation of what the linear-scan allocator in `schedule.rs`
+//!   promised.  The checker replays a [`ScheduledTape`] *symbolically*:
+//!   each buffer word tracks which source plane it currently holds, and
+//!   every scheduled op must find its source op's fanin planes in the
+//!   slots it reads.  A scratch slot reassigned while its old value was
+//!   still live surfaces as a symbolic mismatch — a static race
+//!   detector for the register-allocated tape.
+//!
+//! Diagnostics carry stable codes (used by tests, CI and the
+//! `{"cmd":"verify"}` admin command; table mirrored in DESIGN.md):
+//!
+//! | code  | severity | meaning                                         |
+//! |-------|----------|-------------------------------------------------|
+//! | NL001 | error    | op fanin forward reference (def-before-use)     |
+//! | NL002 | error    | op fanin plane out of range                     |
+//! | NL003 | error    | op complement mask not broadcast (0 / !0)       |
+//! | NL004 | error    | output plane out of range                       |
+//! | NL005 | error    | output complement mask not broadcast            |
+//! | NL006 | warning  | ops outside every output cone (dead code)       |
+//! | NL007 | warning  | output cone reaches no input (constant output)  |
+//! | NL008 | warning  | tape has no outputs                             |
+//! | NL009 | warning  | op ANDs uncomplemented const plane (pinned 0)   |
+//! | NL010 | error    | scheduled op addresses outside scratch buffer   |
+//! | NL011 | error    | scheduled op writes the const/input region      |
+//! | NL012 | error    | stale scratch read (slot lifetime violation)    |
+//! | NL013 | error    | scheduled output resolves to the wrong plane    |
+//! | NL014 | error    | schedule shape deviates from source tape        |
+//! | NL020 | error    | artifact structure (parse/truncation/version)   |
+//! | NL021 | error    | artifact digest mismatch                        |
+//!
+//! Artifact-level verification (`NL020`/`NL021`, per-layer reports for a
+//! whole `.nnc`) lives in `artifact.rs` ([`CompiledModel::verify`],
+//! `verify_artifact`), which layers on top of the two checkers here.
+//!
+//! [`CompiledModel::verify`]: crate::artifact::CompiledModel::verify
+
+use std::fmt;
+
+use super::{LogicTape, ScheduledTape, TapeOp};
+use crate::jsonio::{self, Json};
+
+/// Stable diagnostic codes (see the module-level table).
+pub mod code {
+    pub const FANIN_FORWARD: &str = "NL001";
+    pub const FANIN_RANGE: &str = "NL002";
+    pub const OP_MASK: &str = "NL003";
+    pub const OUTPUT_RANGE: &str = "NL004";
+    pub const OUTPUT_MASK: &str = "NL005";
+    pub const DEAD_CONE: &str = "NL006";
+    pub const CONST_OUTPUT: &str = "NL007";
+    pub const NO_OUTPUTS: &str = "NL008";
+    pub const CONST_AND: &str = "NL009";
+    pub const SCHED_RANGE: &str = "NL010";
+    pub const SCHED_PINNED_WRITE: &str = "NL011";
+    pub const SCHED_STALE_READ: &str = "NL012";
+    pub const SCHED_OUTPUT: &str = "NL013";
+    pub const SCHED_SHAPE: &str = "NL014";
+    pub const ARTIFACT_STRUCTURE: &str = "NL020";
+    pub const ARTIFACT_DIGEST: &str = "NL021";
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl Severity {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// One finding: stable code, severity, where (`site`) and what
+/// (`message`).  Sites are human-oriented ("op 3", "layer h1: output 0")
+/// and not part of the stable contract; codes are.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    pub code: &'static str,
+    pub severity: Severity,
+    pub site: String,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}[{}] {}: {}",
+            self.severity.as_str(),
+            self.code,
+            self.site,
+            self.message
+        )
+    }
+}
+
+/// The result of a verification pass: every diagnostic, in discovery
+/// order.  `ok()` means *no errors* — warnings (dead cones, constant
+/// outputs) don't fail verification.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    pub diags: Vec<Diagnostic>,
+}
+
+impl Report {
+    pub fn ok(&self) -> bool {
+        self.n_errors() == 0
+    }
+
+    pub fn n_errors(&self) -> usize {
+        self.diags.iter().filter(|d| d.severity == Severity::Error).count()
+    }
+
+    pub fn n_warnings(&self) -> usize {
+        self.diags.iter().filter(|d| d.severity == Severity::Warning).count()
+    }
+
+    /// True if any diagnostic carries `code`.
+    pub fn has(&self, code: &str) -> bool {
+        self.diags.iter().any(|d| d.code == code)
+    }
+
+    pub fn error(&mut self, code: &'static str, site: String, message: String) {
+        self.diags.push(Diagnostic { code, severity: Severity::Error, site, message });
+    }
+
+    pub fn warn(&mut self, code: &'static str, site: String, message: String) {
+        self.diags.push(Diagnostic { code, severity: Severity::Warning, site, message });
+    }
+
+    /// Append `other`'s diagnostics with every site prefixed by
+    /// `prefix` (per-layer context in whole-model reports).
+    pub fn absorb(&mut self, prefix: &str, other: Report) {
+        for mut d in other.diags {
+            d.site = format!("{prefix}: {}", d.site);
+            self.diags.push(d);
+        }
+    }
+
+    /// One-line summary: `ok`, `ok (2 warnings)`, or
+    /// `3 errors, 1 warning`.
+    pub fn summary(&self) -> String {
+        let (e, w) = (self.n_errors(), self.n_warnings());
+        match (e, w) {
+            (0, 0) => "ok".to_string(),
+            (0, w) => format!("ok ({w} warning{})", if w == 1 { "" } else { "s" }),
+            (e, w) => format!(
+                "{e} error{}, {w} warning{}",
+                if e == 1 { "" } else { "s" },
+                if w == 1 { "" } else { "s" }
+            ),
+        }
+    }
+
+    /// JSON shape used by `nullanet verify`, the `{"cmd":"verify"}`
+    /// admin command, and the per-model `verify` block in metrics.
+    pub fn to_json(&self) -> Json {
+        let diags: Vec<Json> = self
+            .diags
+            .iter()
+            .map(|d| {
+                jsonio::obj(vec![
+                    ("code", jsonio::s(d.code)),
+                    ("severity", jsonio::s(d.severity.as_str())),
+                    ("site", jsonio::s(&d.site)),
+                    ("message", jsonio::s(&d.message)),
+                ])
+            })
+            .collect();
+        jsonio::obj(vec![
+            ("ok", Json::Bool(self.ok())),
+            ("errors", jsonio::num(self.n_errors() as f64)),
+            ("warnings", jsonio::num(self.n_warnings() as f64)),
+            ("diags", Json::Arr(diags)),
+        ])
+    }
+}
+
+impl fmt::Display for Report {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for d in &self.diags {
+            writeln!(f, "{d}")?;
+        }
+        write!(f, "verify: {}", self.summary())
+    }
+}
+
+/// Mark the ops reachable from any in-range output (the live cone).
+/// Shared by the dead-code warning and the schedule checker, which
+/// re-derives the scheduler's strip set from it.
+fn live_cone(base: usize, ops: &[TapeOp], outputs: &[(u32, u64)]) -> Vec<bool> {
+    let mut live = vec![false; ops.len()];
+    let mut stack: Vec<usize> = outputs
+        .iter()
+        .filter_map(|&(p, _)| (p as usize).checked_sub(base))
+        .filter(|&i| i < ops.len())
+        .collect();
+    while let Some(i) = stack.pop() {
+        if live[i] {
+            continue;
+        }
+        live[i] = true;
+        let op = &ops[i];
+        if op.a as usize >= base {
+            stack.push(op.a as usize - base);
+        }
+        if op.b as usize >= base {
+            stack.push(op.b as usize - base);
+        }
+    }
+    live
+}
+
+/// Does this op's result ignore its fanins?  `x & 0 == 0` regardless of
+/// the other operand, so ANDing the uncomplemented constant-FALSE plane
+/// pins the result (ANDing the *complemented* const plane is the
+/// legitimate copy/buffer idiom and is not flagged).
+fn pinned_false(op: &TapeOp) -> bool {
+    (op.a == 0 && op.ca == 0) || (op.b == 0 && op.cb == 0)
+}
+
+/// Dataflow-verify raw tape parts *before* they become a [`LogicTape`]
+/// (same inputs as [`LogicTape::from_parts`], which this strictly
+/// subsumes: every `from_parts` rejection maps to an `NL001`–`NL005`
+/// error here, and the semantic warnings have no `from_parts`
+/// counterpart).
+pub fn verify_tape_parts(n_inputs: usize, ops: &[TapeOp], outputs: &[(u32, u64)]) -> Report {
+    let mut r = Report::default();
+    let base = n_inputs + 1;
+    let total = base + ops.len();
+
+    // Pass 1: structural dataflow (def-before-use, bounds, masks).
+    let mut structural_ok = true;
+    for (i, op) in ops.iter().enumerate() {
+        let limit = base + i;
+        for (name, fanin) in [("a", op.a), ("b", op.b)] {
+            let f = fanin as usize;
+            if f >= total {
+                structural_ok = false;
+                r.error(
+                    code::FANIN_RANGE,
+                    format!("op {i}"),
+                    format!("fanin {name} reads plane {fanin}, but the tape defines only {total} planes"),
+                );
+            } else if f >= limit {
+                structural_ok = false;
+                r.error(
+                    code::FANIN_FORWARD,
+                    format!("op {i}"),
+                    format!("fanin {name} reads plane {fanin} before it is defined ({limit} planes defined at op {i})"),
+                );
+            }
+        }
+        for (name, mask) in [("ca", op.ca), ("cb", op.cb)] {
+            if mask != 0 && mask != !0 {
+                r.error(
+                    code::OP_MASK,
+                    format!("op {i}"),
+                    format!("complement mask {name} = {mask:#x} is not broadcast (must be 0 or !0)"),
+                );
+            }
+        }
+        if pinned_false(op) {
+            r.warn(
+                code::CONST_AND,
+                format!("op {i}"),
+                "ANDs the uncomplemented constant-FALSE plane; the result is pinned to 0".to_string(),
+            );
+        }
+    }
+    for (k, &(plane, mask)) in outputs.iter().enumerate() {
+        if plane as usize >= total {
+            structural_ok = false;
+            r.error(
+                code::OUTPUT_RANGE,
+                format!("output {k}"),
+                format!("reads plane {plane}, but the tape defines only {total} planes"),
+            );
+        }
+        if mask != 0 && mask != !0 {
+            r.error(
+                code::OUTPUT_MASK,
+                format!("output {k}"),
+                format!("complement mask {mask:#x} is not broadcast (must be 0 or !0)"),
+            );
+        }
+    }
+    if outputs.is_empty() {
+        r.warn(
+            code::NO_OUTPUTS,
+            "tape".to_string(),
+            "tape has no outputs (every op is dead code)".to_string(),
+        );
+    }
+
+    // Pass 2 (only on structurally sound tapes — the walks below index
+    // by plane): dead cones and constant outputs.
+    if structural_ok {
+        let live = live_cone(base, ops, outputs);
+        let dead = live.iter().filter(|&&l| !l).count();
+        if dead > 0 {
+            r.warn(
+                code::DEAD_CONE,
+                "tape".to_string(),
+                format!(
+                    "{dead} of {} ops are outside every output cone (dead code; the scheduler strips them)",
+                    ops.len()
+                ),
+            );
+        }
+        let mut depends = vec![false; total];
+        for d in depends.iter_mut().take(base).skip(1) {
+            *d = true;
+        }
+        for (i, op) in ops.iter().enumerate() {
+            depends[base + i] =
+                !pinned_false(op) && (depends[op.a as usize] || depends[op.b as usize]);
+        }
+        for (k, &(plane, _)) in outputs.iter().enumerate() {
+            if !depends[plane as usize] {
+                r.warn(
+                    code::CONST_OUTPUT,
+                    format!("output {k}"),
+                    format!("cone of plane {plane} reaches no input plane; the output is constant"),
+                );
+            }
+        }
+    }
+    r
+}
+
+/// Dataflow-verify a constructed [`LogicTape`].
+pub fn verify_tape(tape: &LogicTape) -> Report {
+    verify_tape_parts(tape.n_inputs, &tape.ops, &tape.outputs)
+}
+
+/// Lifetime/aliasing-check a [`ScheduledTape`] against its source tape.
+///
+/// The checker re-derives the live set with its own cone walk, then
+/// replays the schedule symbolically: `sym[j]` records which source
+/// plane buffer word `j` currently holds (`0..base` are pinned to the
+/// const/input planes; scratch slots start undefined).  Scheduled op
+/// `k` must implement the `k`-th live source op, so the slots it reads
+/// must hold exactly that op's fanin planes — if the allocator (or a
+/// corrupted schedule) reassigned a slot while its old value still had
+/// readers, the replay finds the *new* plane where the old one was
+/// expected and reports `NL012`.  End state: every scheduled output
+/// must resolve to its source output plane with the source mask.
+pub fn verify_schedule(tape: &LogicTape, sched: &ScheduledTape) -> Report {
+    const UNDEF: u32 = u32::MAX;
+    let mut r = Report::default();
+    let base = tape.n_inputs + 1;
+    if sched.n_inputs() != tape.n_inputs {
+        r.error(
+            code::SCHED_SHAPE,
+            "schedule".to_string(),
+            format!("schedule has {} inputs, source tape has {}", sched.n_inputs(), tape.n_inputs),
+        );
+        return r;
+    }
+    let live = live_cone(base, &tape.ops, &tape.outputs);
+    let live_idx: Vec<usize> =
+        live.iter().enumerate().filter_map(|(i, &l)| l.then_some(i)).collect();
+    if sched.n_ops() != live_idx.len() {
+        r.error(
+            code::SCHED_SHAPE,
+            "schedule".to_string(),
+            format!(
+                "{} scheduled ops, but the output cone holds {} live source ops (dead-strip mismatch)",
+                sched.n_ops(),
+                live_idx.len()
+            ),
+        );
+        return r;
+    }
+    let n_buf = sched.scratch_planes();
+    let mut sym: Vec<u32> =
+        (0..n_buf).map(|j| if j < base { j as u32 } else { UNDEF }).collect();
+    for (k, (op, &src_i)) in sched.ops().iter().zip(&live_idx).enumerate() {
+        let src = &tape.ops[src_i];
+        if src.ca != op.ca || src.cb != op.cb {
+            r.error(
+                code::SCHED_SHAPE,
+                format!("sched op {k}"),
+                format!("complement masks differ from source op {src_i}"),
+            );
+        }
+        for (name, idx, want) in [("a", op.a, src.a), ("b", op.b, src.b)] {
+            let j = idx as usize;
+            if j >= n_buf {
+                r.error(
+                    code::SCHED_RANGE,
+                    format!("sched op {k}"),
+                    format!("operand {name} reads buffer word {idx}, but the scratch buffer has {n_buf} words"),
+                );
+                continue;
+            }
+            let held = sym[j];
+            if held == UNDEF {
+                r.error(
+                    code::SCHED_STALE_READ,
+                    format!("sched op {k}"),
+                    format!("operand {name} reads scratch word {idx} before any op has written it"),
+                );
+            } else if held != want {
+                r.error(
+                    code::SCHED_STALE_READ,
+                    format!("sched op {k}"),
+                    format!(
+                        "operand {name} reads buffer word {idx} expecting source plane {want}, but the word holds plane {held} (slot reassigned while the value was live)"
+                    ),
+                );
+            }
+        }
+        let d = op.dst as usize;
+        if d >= n_buf {
+            r.error(
+                code::SCHED_RANGE,
+                format!("sched op {k}"),
+                format!("dst writes buffer word {d}, but the scratch buffer has {n_buf} words"),
+            );
+        } else if d < base {
+            r.error(
+                code::SCHED_PINNED_WRITE,
+                format!("sched op {k}"),
+                format!("dst writes word {d} inside the pinned const/input region (words 0..{base})"),
+            );
+        } else {
+            sym[d] = (base + src_i) as u32;
+        }
+    }
+    if sched.outputs().len() != tape.outputs.len() {
+        r.error(
+            code::SCHED_OUTPUT,
+            "schedule".to_string(),
+            format!(
+                "{} scheduled outputs, source tape has {}",
+                sched.outputs().len(),
+                tape.outputs.len()
+            ),
+        );
+        return r;
+    }
+    for (k, (&(idx, mask), &(want_p, want_mask))) in
+        sched.outputs().iter().zip(&tape.outputs).enumerate()
+    {
+        let j = idx as usize;
+        if j >= n_buf {
+            r.error(
+                code::SCHED_RANGE,
+                format!("output {k}"),
+                format!("reads buffer word {idx}, but the scratch buffer has {n_buf} words"),
+            );
+            continue;
+        }
+        if mask != want_mask {
+            r.error(
+                code::SCHED_OUTPUT,
+                format!("output {k}"),
+                format!("complement mask {mask:#x} differs from source mask {want_mask:#x}"),
+            );
+        }
+        if sym[j] != want_p {
+            let held = if sym[j] == UNDEF { "nothing".to_string() } else { format!("plane {}", sym[j]) };
+            r.error(
+                code::SCHED_OUTPUT,
+                format!("output {k}"),
+                format!("buffer word {idx} holds {held} at end of tape, expected source plane {want_p}"),
+            );
+        }
+    }
+    r
+}
+
+/// Verify a tape *and* the schedule the serving engine would build from
+/// it — the per-layer pass `CompiledModel::verify` runs for every layer
+/// of an artifact.  Schedule checks only run when the tape itself is
+/// structurally sound (the scheduler's cone walk indexes by plane).
+pub fn verify_tape_and_schedule(tape: &LogicTape) -> Report {
+    let mut r = verify_tape(tape);
+    if r.ok() {
+        let sched = ScheduledTape::new(tape);
+        let sr = verify_schedule(tape, &sched);
+        r.diags.extend(sr.diags);
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::{SchedOp, ScheduleStats};
+
+    fn op(a: u32, b: u32, ca: u64, cb: u64) -> TapeOp {
+        TapeOp { a, b, ca, cb }
+    }
+
+    #[test]
+    fn clean_tape_is_ok() {
+        // plane 3 = p1 & p2, plane 4 = t3 & !p1, outputs both.
+        let ops = vec![op(1, 2, 0, 0), op(3, 1, 0, !0)];
+        let r = verify_tape_parts(2, &ops, &[(3, 0), (4, !0)]);
+        assert!(r.ok(), "{r}");
+        assert_eq!(r.diags.len(), 0, "{r}");
+    }
+
+    #[test]
+    fn forward_reference_is_nl001() {
+        // op 0 reads plane 4, which op 1 defines.
+        let ops = vec![op(4, 1, 0, 0), op(1, 2, 0, 0)];
+        let r = verify_tape_parts(2, &ops, &[(3, 0)]);
+        assert!(!r.ok());
+        assert!(r.has(code::FANIN_FORWARD), "{r}");
+        assert!(!r.has(code::FANIN_RANGE), "{r}");
+    }
+
+    #[test]
+    fn fanin_out_of_range_is_nl002() {
+        let ops = vec![op(1, 99, 0, 0)];
+        let r = verify_tape_parts(2, &ops, &[(3, 0)]);
+        assert!(r.has(code::FANIN_RANGE), "{r}");
+    }
+
+    #[test]
+    fn bad_masks_are_nl003_nl005() {
+        let ops = vec![op(1, 2, 5, 0)];
+        let r = verify_tape_parts(2, &ops, &[(3, 7)]);
+        assert!(r.has(code::OP_MASK), "{r}");
+        assert!(r.has(code::OUTPUT_MASK), "{r}");
+    }
+
+    #[test]
+    fn output_out_of_range_is_nl004() {
+        let r = verify_tape_parts(2, &[], &[(3, 0)]);
+        assert!(r.has(code::OUTPUT_RANGE), "{r}");
+    }
+
+    #[test]
+    fn dead_cone_is_nl006_warning() {
+        // op 1 feeds nothing.
+        let ops = vec![op(1, 2, 0, 0), op(1, 2, !0, 0)];
+        let r = verify_tape_parts(2, &ops, &[(3, 0)]);
+        assert!(r.ok(), "warnings must not fail verification: {r}");
+        assert!(r.has(code::DEAD_CONE), "{r}");
+        assert_eq!(r.n_warnings(), 1);
+    }
+
+    #[test]
+    fn constant_output_is_nl007() {
+        // Output reads the const plane directly; another reads an op
+        // pinned to FALSE by ANDing plane 0.
+        let ops = vec![op(0, 1, 0, 0)];
+        let r = verify_tape_parts(2, &ops, &[(0, !0), (3, 0)]);
+        assert!(r.ok(), "{r}");
+        assert!(r.has(code::CONST_OUTPUT), "{r}");
+        assert!(r.has(code::CONST_AND), "{r}");
+        assert_eq!(
+            r.diags.iter().filter(|d| d.code == code::CONST_OUTPUT).count(),
+            2,
+            "{r}"
+        );
+    }
+
+    #[test]
+    fn no_outputs_is_nl008() {
+        let r = verify_tape_parts(2, &[op(1, 2, 0, 0)], &[]);
+        assert!(r.ok());
+        assert!(r.has(code::NO_OUTPUTS), "{r}");
+    }
+
+    #[test]
+    fn copy_idiom_is_not_flagged() {
+        // plane 3 = !const & p1 = p1: the copy/buffer idiom.
+        let ops = vec![op(0, 1, !0, 0)];
+        let r = verify_tape_parts(2, &ops, &[(3, 0)]);
+        assert!(r.ok(), "{r}");
+        assert!(!r.has(code::CONST_AND), "{r}");
+        assert!(!r.has(code::CONST_OUTPUT), "{r}");
+    }
+
+    #[test]
+    fn derived_schedules_always_verify() {
+        use crate::util::SplitMix64;
+        let mut rng = SplitMix64::new(41);
+        for _ in 0..40 {
+            let n = rng.range(2, 10);
+            let n_ops = rng.range(1, 80);
+            // Random *valid* tape: fanins always drawn from defined planes.
+            let mut ops = Vec::new();
+            for i in 0..n_ops {
+                let limit = n + 1 + i;
+                ops.push(op(
+                    rng.range(0, limit) as u32,
+                    rng.range(0, limit) as u32,
+                    if rng.bool(0.5) { !0 } else { 0 },
+                    if rng.bool(0.5) { !0 } else { 0 },
+                ));
+            }
+            let n_outs = rng.range(1, 5);
+            let outputs: Vec<(u32, u64)> = (0..n_outs)
+                .map(|_| {
+                    (rng.range(0, n + 1 + n_ops) as u32, if rng.bool(0.5) { !0 } else { 0 })
+                })
+                .collect();
+            let tape = LogicTape::from_parts(n, ops, outputs).unwrap();
+            assert!(verify_tape(&tape).ok());
+            let sched = ScheduledTape::new(&tape);
+            let r = verify_schedule(&tape, &sched);
+            assert!(r.ok(), "{r}");
+        }
+    }
+
+    /// Tape used by the seeded-defect schedule tests:
+    /// plane 3 = p1 & p2, plane 4 = p2 & p2, plane 5 = t3 & t4, out 5.
+    fn diamond_tape() -> LogicTape {
+        LogicTape::from_parts(
+            2,
+            vec![op(1, 2, 0, 0), op(2, 2, 0, 0), op(3, 4, 0, 0)],
+            vec![(5, 0)],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn clobbered_live_slot_is_nl012() {
+        let tape = diamond_tape();
+        // A correct schedule needs two slots (t3 and t4 both live when
+        // op 2 runs).  Seed the lifetime violation: op 1 writes t4 over
+        // t3's slot (word 3) while t3 still has a reader.
+        let base = 3u32;
+        let ops = vec![
+            SchedOp { a: 1, b: 2, dst: base, ca: 0, cb: 0 },
+            SchedOp { a: 2, b: 2, dst: base, ca: 0, cb: 0 }, // clobbers live t3
+            SchedOp { a: base, b: base, dst: base + 1, ca: 0, cb: 0 },
+        ];
+        let stats = ScheduleStats {
+            n_ops: 3,
+            ops_stripped: 0,
+            max_live: 2,
+            planes_unscheduled: 6,
+            scratch_planes: 5,
+        };
+        let sched = ScheduledTape::from_raw(2, ops, vec![(base + 1, 0)], stats);
+        let r = verify_schedule(&tape, &sched);
+        assert!(!r.ok());
+        assert!(r.has(code::SCHED_STALE_READ), "{r}");
+    }
+
+    #[test]
+    fn uninitialized_scratch_read_is_nl012() {
+        let tape = diamond_tape();
+        let ops = vec![
+            SchedOp { a: 1, b: 2, dst: 3, ca: 0, cb: 0 },
+            SchedOp { a: 2, b: 2, dst: 4, ca: 0, cb: 0 },
+            // Operand b reads scratch word 5, which no op has written.
+            SchedOp { a: 3, b: 5, dst: 3, ca: 0, cb: 0 },
+        ];
+        let stats = ScheduleStats {
+            n_ops: 3,
+            ops_stripped: 0,
+            max_live: 3,
+            planes_unscheduled: 6,
+            scratch_planes: 6,
+        };
+        let sched = ScheduledTape::from_raw(2, ops, vec![(3, 0)], stats);
+        let r = verify_schedule(&tape, &sched);
+        assert!(!r.ok());
+        assert!(r.has(code::SCHED_STALE_READ), "{r}");
+        assert!(r.diags.iter().any(|d| d.message.contains("before any op")), "{r}");
+    }
+
+    #[test]
+    fn stale_output_is_nl013() {
+        let tape = diamond_tape();
+        // Structurally fine schedule, but the output points at an input
+        // word instead of the final op's result.
+        let ops = vec![
+            SchedOp { a: 1, b: 2, dst: 3, ca: 0, cb: 0 },
+            SchedOp { a: 2, b: 2, dst: 4, ca: 0, cb: 0 },
+            SchedOp { a: 3, b: 4, dst: 3, ca: 0, cb: 0 },
+        ];
+        let stats = ScheduleStats {
+            n_ops: 3,
+            ops_stripped: 0,
+            max_live: 2,
+            planes_unscheduled: 6,
+            scratch_planes: 5,
+        };
+        let sched = ScheduledTape::from_raw(2, ops, vec![(4, 0)], stats);
+        let r = verify_schedule(&tape, &sched);
+        assert!(r.has(code::SCHED_OUTPUT), "{r}");
+    }
+
+    #[test]
+    fn out_of_buffer_index_is_nl010() {
+        let tape = diamond_tape();
+        let ops = vec![
+            SchedOp { a: 1, b: 2, dst: 3, ca: 0, cb: 0 },
+            SchedOp { a: 2, b: 2, dst: 99, ca: 0, cb: 0 },
+            SchedOp { a: 3, b: 4, dst: 4, ca: 0, cb: 0 },
+        ];
+        let stats = ScheduleStats {
+            n_ops: 3,
+            ops_stripped: 0,
+            max_live: 2,
+            planes_unscheduled: 6,
+            scratch_planes: 5,
+        };
+        let sched = ScheduledTape::from_raw(2, ops, vec![(4, 0)], stats);
+        let r = verify_schedule(&tape, &sched);
+        assert!(r.has(code::SCHED_RANGE), "{r}");
+    }
+
+    #[test]
+    fn pinned_region_write_is_nl011() {
+        let tape = diamond_tape();
+        let ops = vec![
+            SchedOp { a: 1, b: 2, dst: 1, ca: 0, cb: 0 }, // overwrites input p1
+            SchedOp { a: 2, b: 2, dst: 3, ca: 0, cb: 0 },
+            SchedOp { a: 1, b: 3, dst: 4, ca: 0, cb: 0 },
+        ];
+        let stats = ScheduleStats {
+            n_ops: 3,
+            ops_stripped: 0,
+            max_live: 2,
+            planes_unscheduled: 6,
+            scratch_planes: 5,
+        };
+        let sched = ScheduledTape::from_raw(2, ops, vec![(4, 0)], stats);
+        let r = verify_schedule(&tape, &sched);
+        assert!(r.has(code::SCHED_PINNED_WRITE), "{r}");
+    }
+
+    #[test]
+    fn dropped_op_is_nl014() {
+        let tape = diamond_tape();
+        let ops = vec![SchedOp { a: 1, b: 2, dst: 3, ca: 0, cb: 0 }];
+        let stats = ScheduleStats {
+            n_ops: 1,
+            ops_stripped: 2,
+            max_live: 1,
+            planes_unscheduled: 6,
+            scratch_planes: 4,
+        };
+        let sched = ScheduledTape::from_raw(2, ops, vec![(3, 0)], stats);
+        let r = verify_schedule(&tape, &sched);
+        assert!(r.has(code::SCHED_SHAPE), "{r}");
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let ops = vec![op(4, 1, 0, 0), op(1, 2, 0, 0)];
+        let r = verify_tape_parts(2, &ops, &[(3, 0)]);
+        let j = r.to_json();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(j.get("errors").unwrap().as_usize(), Some(1));
+        let diags = j.get("diags").unwrap().as_arr().unwrap();
+        assert_eq!(diags[0].get("code").unwrap().as_str(), Some("NL001"));
+        assert_eq!(diags[0].get("severity").unwrap().as_str(), Some("error"));
+    }
+
+    #[test]
+    fn summary_strings() {
+        let mut r = Report::default();
+        assert_eq!(r.summary(), "ok");
+        r.warn(code::DEAD_CONE, "tape".into(), "w".into());
+        assert_eq!(r.summary(), "ok (1 warning)");
+        r.error(code::FANIN_FORWARD, "op 0".into(), "e".into());
+        r.error(code::FANIN_RANGE, "op 1".into(), "e".into());
+        assert_eq!(r.summary(), "2 errors, 1 warning");
+    }
+}

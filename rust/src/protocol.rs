@@ -7,7 +7,7 @@
 //! {"image":  [f32; D]}                      single inference (v1 shape)
 //! {"images": [[f32; D], ...]}               client-side batch, one line
 //! {"cmd": "ping"|"info"|"metrics"|"list"
-//!        |"load"|"unload"|"swap", ...}      commands / admin surface
+//!        |"load"|"unload"|"swap"|"verify", ...}  commands / admin surface
 //! ```
 //!
 //! Every request may additionally carry
@@ -78,6 +78,11 @@ pub enum Cmd {
     Load { name: Option<String>, artifact: String, width: Option<usize> },
     Unload { name: String },
     Swap { name: String, artifact: String, width: Option<usize> },
+    /// Static verification without mutating the registry: an explicit
+    /// `"artifact"` path verifies that file; otherwise the request's
+    /// `"model"` scope (or the default model) re-verifies the artifact
+    /// the resident model was loaded from.
+    Verify { artifact: Option<String> },
 }
 
 /// Any well-formed request line.
@@ -169,6 +174,9 @@ fn parse_cmd(cmd: &str, j: &Json) -> Result<Cmd> {
             name: name(j).ok_or_else(|| format_err!("swap needs a \"name\""))?,
             artifact: artifact(j, "swap")?,
             width: width(j),
+        },
+        "verify" => Cmd::Verify {
+            artifact: j.get("artifact").and_then(Json::as_str).map(str::to_string),
         },
         other => return Err(format_err!("unknown cmd {other}")),
     })
@@ -317,6 +325,19 @@ mod tests {
         };
         assert_eq!(c.cmd, Cmd::List);
         assert_eq!(c.id, Some(Json::Num(1.0)));
+    }
+
+    #[test]
+    fn verify_cmd_parses_with_and_without_artifact() {
+        let WireRequest::Cmd(c) = parse(r#"{"cmd": "verify", "artifact": "m.nnc"}"#) else {
+            panic!("not cmd")
+        };
+        assert_eq!(c.cmd, Cmd::Verify { artifact: Some("m.nnc".into()) });
+        let WireRequest::Cmd(c) = parse(r#"{"cmd": "verify", "model": "net11"}"#) else {
+            panic!("not cmd")
+        };
+        assert_eq!(c.cmd, Cmd::Verify { artifact: None });
+        assert_eq!(c.model.as_deref(), Some("net11"));
     }
 
     #[test]

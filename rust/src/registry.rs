@@ -37,6 +37,7 @@ use crate::artifact::{self, CompiledModel};
 use crate::coordinator::engine::{engine_from_artifact, InferenceEngine};
 use crate::coordinator::{Coordinator, CoordinatorConfig};
 use crate::jsonio::{num, obj, Json};
+use crate::netlist::verify;
 use crate::util::error::Result;
 use crate::{bail, format_err};
 
@@ -61,6 +62,11 @@ pub struct ModelMeta {
     /// (`"generic"`/`"avx2"`/`"avx512"`); None for engines off the
     /// bit-parallel path.
     pub simd: Option<String>,
+    /// Warning count from the static verifier at load time.  `None` for
+    /// directly registered engines (no artifact to verify); resident
+    /// artifact models always verified with zero errors, because a
+    /// failing report rejects the artifact before registration.
+    pub verify_warnings: Option<usize>,
 }
 
 impl ModelMeta {
@@ -76,6 +82,7 @@ impl ModelMeta {
             artifact_version: None,
             generation: 0,
             simd: eng.simd_backend().map(str::to_string),
+            verify_warnings: None,
         }
     }
 
@@ -103,6 +110,16 @@ impl ModelMeta {
         }
         if let Some(simd) = &self.simd {
             pairs.push(("simd", Json::Str(simd.clone())));
+        }
+        if let Some(w) = self.verify_warnings {
+            pairs.push((
+                "verify",
+                obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("errors", num(0.0)),
+                    ("warnings", num(w as f64)),
+                ]),
+            ));
         }
         obj(pairs)
     }
@@ -313,7 +330,33 @@ impl ModelRegistry {
         width: Option<usize>,
     ) -> Result<(ModelMeta, Arc<dyn InferenceEngine>)> {
         let width = width.unwrap_or(self.default_width);
-        let compiled = CompiledModel::load(std::path::Path::new(path))?;
+        // Load + static verification both run here, *before* engine
+        // construction and before either caller's write-lock critical
+        // section: a rejected artifact never reaches a coordinator and
+        // never displaces a live entry.  Failures carry the stable
+        // `NL***` code so admin error replies are machine-matchable.
+        let compiled = CompiledModel::load(std::path::Path::new(path)).map_err(|e| {
+            let msg = format!("{e:#}");
+            let code = if msg.contains("digest mismatch") {
+                verify::code::ARTIFACT_DIGEST
+            } else {
+                verify::code::ARTIFACT_STRUCTURE
+            };
+            format_err!("artifact rejected [{code}]: {msg}")
+        })?;
+        let report = compiled.verify();
+        if !report.ok() {
+            let first = report
+                .diags
+                .iter()
+                .find(|d| d.severity == verify::Severity::Error)
+                .map(|d| d.to_string())
+                .unwrap_or_else(|| "unknown error".to_string());
+            bail!(
+                "artifact rejected by verifier ({}): {first}",
+                report.summary()
+            );
+        }
         let model = name.unwrap_or(&compiled.name).to_string();
         // The artifact is consumed: tapes and tensors move into the
         // engine rather than being cloned.
@@ -329,6 +372,7 @@ impl ModelRegistry {
             // `swap_artifact` — never both.
             generation: 0,
             simd: eng.simd_backend().map(str::to_string),
+            verify_warnings: Some(report.n_warnings()),
         };
         Ok((meta, eng))
     }
@@ -463,6 +507,7 @@ mod tests {
             artifact_version: Some(1),
             generation: 5,
             simd: Some("avx2".into()),
+            verify_warnings: Some(2),
         };
         let j = meta.to_json(true);
         assert_eq!(j.get("model").and_then(Json::as_str), Some("net11"));
@@ -473,6 +518,8 @@ mod tests {
         assert_eq!(j.get("input_dim").and_then(Json::as_usize), Some(784));
         assert_eq!(j.get("artifact_version").and_then(Json::as_usize), Some(1));
         assert_eq!(j.get("simd").and_then(Json::as_str), Some("avx2"));
+        assert_eq!(j.at(&["verify", "ok"]).and_then(Json::as_bool), Some(true));
+        assert_eq!(j.at(&["verify", "warnings"]).and_then(Json::as_usize), Some(2));
         // Engines without plane kernels omit the field entirely.
         let meta = ModelMeta::for_engine("c", &ConstEngine(0), 64);
         assert!(meta.simd.is_none());
@@ -482,7 +529,53 @@ mod tests {
     #[test]
     fn load_artifact_missing_file_errors() {
         let reg = registry();
-        assert!(reg.load_artifact(None, "/nonexistent/x.nnc", None).is_err());
+        let err = reg.load_artifact(None, "/nonexistent/x.nnc", None).unwrap_err().to_string();
+        assert!(err.contains("NL020"), "structural rejection carries its code: {err}");
         assert!(reg.swap_artifact("m", "/nonexistent/x.nnc", None).is_err());
+    }
+
+    #[test]
+    fn corrupt_artifact_is_rejected_with_stable_code() {
+        use crate::artifact::{CompiledLayer, LayerStats};
+        use crate::model::Arch;
+        let dir = std::env::temp_dir().join("nullanet_registry_verify_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let good = dir.join("good.nnc");
+        let mut g = crate::aig::Aig::new(2);
+        let (a, b) = (g.pi(0), g.pi(1));
+        let x = g.and(a, b);
+        g.add_output(x);
+        let cm = CompiledModel {
+            name: "m".into(),
+            arch: Arch::Mlp { sizes: vec![2, 2, 2, 2] },
+            accuracy_test: f64::NAN,
+            layers: vec![CompiledLayer {
+                name: "layer2".into(),
+                tape: crate::netlist::LogicTape::from_aig(&g),
+                stats: LayerStats::default(),
+            }],
+            params: BTreeMap::new(),
+        };
+        cm.save(&good).unwrap();
+        // Flip one tape fanin inside the layer section; the per-section
+        // digest no longer matches.
+        let text = std::fs::read_to_string(&good).unwrap();
+        let tampered = text.replacen("\"ops\":[[1,2,", "\"ops\":[[2,2,", 1);
+        assert_ne!(text, tampered, "tamper target not found");
+        let bad = dir.join("bad.nnc");
+        std::fs::write(&bad, tampered).unwrap();
+        let bad = bad.to_str().unwrap();
+
+        let reg = registry();
+        let err = reg.load_artifact(None, bad, None).unwrap_err().to_string();
+        assert!(err.contains("NL021"), "{err}");
+        assert_eq!(reg.len(), 0, "rejected artifact must not register");
+        // The swap path rejects before the write-lock critical section:
+        // the live model keeps serving, untouched.
+        add(&reg, "m", 1);
+        let err = reg.swap_artifact("m", bad, None).unwrap_err().to_string();
+        assert!(err.contains("NL021"), "{err}");
+        let r = reg.get(Some("m")).unwrap().coordinator.infer(vec![0.0]).unwrap();
+        assert_eq!(r.class, 1);
     }
 }

@@ -27,7 +27,11 @@ mod pjrt_impl {
     /// Mutex and never hand out unguarded clones, which makes the wrapper
     /// sound in practice.
     struct ClientCell(Mutex<xla::PjRtClient>);
+    // SAFETY: the inner Rc is never cloned out of the cell and every
+    // access is serialized by the Mutex, so the non-atomic refcount is
+    // never touched from two threads at once (see doc comment above).
     unsafe impl Send for ClientCell {}
+    // SAFETY: same argument — `&ClientCell` only exposes the Mutex.
     unsafe impl Sync for ClientCell {}
 
     /// Process-wide PJRT CPU client (PJRT clients are heavyweight).
@@ -54,7 +58,10 @@ mod pjrt_impl {
     }
 
     // The PJRT executable is used behind the coordinator's worker threads.
+    // SAFETY: the executable's Rc wrapper never escapes the Mutex, so
+    // its refcount is only ever manipulated under the lock.
     unsafe impl Send for CompiledModel {}
+    // SAFETY: same argument — shared access goes through the Mutex.
     unsafe impl Sync for CompiledModel {}
 
     impl CompiledModel {

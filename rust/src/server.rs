@@ -883,6 +883,38 @@ fn run_cmd(c: &CmdRequest, registry: &ModelRegistry, stats: &ServerStats) -> Res
                 ("generation", num(generation as f64)),
             ])
         }
+        // Static verification without touching the registry: an explicit
+        // artifact path verifies that file; otherwise the model scope
+        // (or default model) re-verifies its recorded artifact.  Like
+        // load/swap, this runs inline on the loop — admin traffic is
+        // rare and verification is milliseconds.
+        Cmd::Verify { artifact } => {
+            let (path, model_name) = match artifact {
+                Some(p) => (p.clone(), None),
+                None => {
+                    let (entry, _) = registry.get_with_default(c.model.as_deref())?;
+                    match &entry.meta.artifact {
+                        Some(p) => (p.clone(), Some(entry.meta.model.clone())),
+                        None => {
+                            return Err(crate::format_err!(
+                                "model {} was not loaded from an artifact; pass \
+                                 an \"artifact\" path to verify a file",
+                                entry.meta.model
+                            ))
+                        }
+                    }
+                }
+            };
+            let report = crate::artifact::verify_artifact(std::path::Path::new(&path));
+            let mut reply = report.to_json();
+            if let Json::Obj(m) = &mut reply {
+                m.insert("artifact".to_string(), Json::Str(path));
+                if let Some(name) = model_name {
+                    m.insert("model".to_string(), Json::Str(name));
+                }
+            }
+            reply
+        }
     })
 }
 
@@ -895,7 +927,8 @@ fn run_cmd(c: &CmdRequest, registry: &ModelRegistry, stats: &ServerStats) -> Res
 /// With `"model"`, scoped to that model alone.  Also reports the SIMD
 /// selection: a top-level `simd` object (`selected`, `cpu_avx2`,
 /// `cpu_avx512f`) and a per-model `simd` backend name for engines on
-/// the bit-parallel path.
+/// the bit-parallel path, plus a per-model `verify` summary (static
+/// verifier result recorded when the artifact was loaded).
 fn metrics_json(
     registry: &ModelRegistry,
     model: Option<&str>,
@@ -942,6 +975,19 @@ fn metrics_json(
         // (absent for engines off the bit-parallel path).
         if let Some(simd) = e.coordinator.engine().simd_backend() {
             fields.push(("simd", Json::Str(simd.to_string())));
+        }
+        // Static-verifier result recorded at load time (absent for
+        // directly registered engines; resident artifact models always
+        // verified clean, or they would have been rejected).
+        if let Some(w) = e.meta.verify_warnings {
+            fields.push((
+                "verify",
+                obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("errors", num(0.0)),
+                    ("warnings", num(w as f64)),
+                ]),
+            ));
         }
         per_model.push((e.meta.model.clone(), obj(fields)));
     }

@@ -153,12 +153,12 @@ unsafe fn sign_planes(
 ) {
     let (li, bit) = (lane / 64, 1u64 << (lane % 64));
     let n = z.len();
-    let zero = _mm256_setzero_ps();
     let mut j = 0;
     // SAFETY: reads bounded by j+8 <= n (<= scale/bias lengths per the
     // safe wrapper); writes at (j+k)*n_limbs + li with j+k < n, li <
     // n_limbs, and planes.len() >= n * n_limbs.
     unsafe {
+        let zero = _mm256_setzero_ps();
         while j + 8 <= n {
             let vz = _mm256_loadu_ps(z.as_ptr().add(j));
             let vs = _mm256_loadu_ps(scale.as_ptr().add(j));

@@ -150,12 +150,12 @@ unsafe fn sign_planes(
 ) {
     let (li, bit) = (lane / 64, 1u64 << (lane % 64));
     let n = z.len();
-    let zero = _mm512_setzero_ps();
     let mut j = 0;
     // SAFETY: full chunks read z/scale/bias[j..j+16] with j+16 <= n;
     // the tail reads via zero-masked loads only.  Writes land at
     // (j+k)*n_limbs + li with j+k < n, in-bounds per the safe wrapper.
     unsafe {
+        let zero = _mm512_setzero_ps();
         while j + 16 <= n {
             let vz = _mm512_loadu_ps(z.as_ptr().add(j));
             let vs = _mm512_loadu_ps(scale.as_ptr().add(j));

@@ -18,8 +18,9 @@ impl PlaneKernels for GenericKernels {
     }
 
     unsafe fn tape_ops(&self, ops: &[SchedOp], scratch: &mut [u64], n_limbs: usize) {
-        // All indexing is bounds-checked: the generic backend upholds
-        // the safety contract trivially (a bad op panics, never UB).
+        // SAFETY: all indexing is bounds-checked — the generic backend
+        // upholds the trait contract trivially (a bad op panics, never
+        // UB), so no unsafe operations appear in the body.
         for op in ops {
             let (a, b, d) = (
                 op.a as usize * n_limbs,
@@ -35,6 +36,7 @@ impl PlaneKernels for GenericKernels {
     }
 
     unsafe fn gemm_zero_skip_raw(&self, img: &[f32], w: &[f32], n_out: usize, z: &mut [f32]) {
+        // SAFETY: safe body — slice indexing stays bounds-checked here.
         let n_in = w.len() / n_out;
         z.fill(0.0);
         for (i, &x) in img.iter().enumerate().take(n_in) {
@@ -57,6 +59,7 @@ impl PlaneKernels for GenericKernels {
         planes: &mut [u64],
         n_limbs: usize,
     ) {
+        // SAFETY: safe body — slice indexing stays bounds-checked here.
         let (li, bit) = (lane / 64, 1u64 << (lane % 64));
         for (j, &zj) in z.iter().enumerate() {
             if zj * scale[j] + bias[j] >= 0.0 {
@@ -73,6 +76,7 @@ impl PlaneKernels for GenericKernels {
         acc: &mut [f32],
         n_out: usize,
     ) {
+        // SAFETY: safe body — slice indexing stays bounds-checked here.
         // Lanes >= n never contribute; skip their whole limbs outright.
         let n_limbs = n.div_ceil(64);
         for (li, &limb) in limbs.iter().take(n_limbs).enumerate() {

@@ -126,11 +126,15 @@ fn timeout_ms(timeout: Option<Duration>) -> i32 {
 }
 
 fn set_cloexec(fd: RawFd) -> io::Result<()> {
+    // SAFETY: fcntl(F_SETFD) takes no pointers; the fd is owned by the
+    // caller and any error comes back through cvt.
     cvt(unsafe { ffi::fcntl(fd, ffi::F_SETFD, ffi::FD_CLOEXEC) })?;
     Ok(())
 }
 
 fn set_nonblocking(fd: RawFd) -> io::Result<()> {
+    // SAFETY: fcntl(F_GETFL/F_SETFL) takes no pointers; a bad fd is an
+    // EBADF error, not UB.
     let flags = cvt(unsafe { ffi::fcntl(fd, ffi::F_GETFL) })?;
     cvt(unsafe { ffi::fcntl(fd, ffi::F_SETFL, flags | ffi::O_NONBLOCK) })?;
     Ok(())
@@ -190,6 +194,8 @@ struct Epoll {
 #[cfg(target_os = "linux")]
 impl Epoll {
     fn new() -> io::Result<Epoll> {
+        // SAFETY: epoll_create1 takes no pointers; failure is reported
+        // through the return value.
         let epfd = cvt(unsafe { ffi::ep::epoll_create1(ffi::ep::EPOLL_CLOEXEC) })?;
         Ok(Epoll {
             epfd,
@@ -213,11 +219,17 @@ impl Epoll {
             events: Self::mask(interest),
             data: token,
         };
+        // SAFETY: `ev` is a live, properly laid out (repr(C)) local for
+        // the duration of the call; the kernel copies it and keeps no
+        // reference past return.
         cvt(unsafe { ffi::ep::epoll_ctl(self.epfd, op, fd, &mut ev) })?;
         Ok(())
     }
 
     fn wait(&mut self, events: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+        // SAFETY: `buf` is a live Vec whose pointer/length pair bounds
+        // what the kernel may write; epoll_wait fills at most
+        // `buf.len()` entries and returns how many.
         let n = unsafe {
             ffi::ep::epoll_wait(
                 self.epfd,
@@ -252,6 +264,8 @@ impl Epoll {
 #[cfg(target_os = "linux")]
 impl Drop for Epoll {
     fn drop(&mut self) {
+        // SAFETY: epfd is owned by this struct and closed exactly once
+        // (Epoll is neither Clone nor Copy).
         unsafe {
             ffi::close(self.epfd);
         }
@@ -332,6 +346,9 @@ impl PollTable {
         for f in &mut self.fds {
             f.revents = 0;
         }
+        // SAFETY: `fds` is a live Vec of repr(C) PollFd; poll reads and
+        // writes exactly `fds.len()` entries and keeps no pointer past
+        // return.
         let n = unsafe {
             ffi::poll(
                 self.fds.as_mut_ptr(),
@@ -456,6 +473,8 @@ struct OwnedFd(RawFd);
 
 impl Drop for OwnedFd {
     fn drop(&mut self) {
+        // SAFETY: the fd is owned by this struct and closed exactly once
+        // (OwnedFd is neither Clone nor Copy).
         unsafe {
             ffi::close(self.0);
         }
@@ -480,6 +499,8 @@ pub struct Waker {
 impl WakePipe {
     pub fn new() -> io::Result<WakePipe> {
         let mut fds = [0i32; 2];
+        // SAFETY: pipe(2) writes exactly two c_ints into the array it is
+        // handed; `fds` is a live [i32; 2] on the stack.
         cvt(unsafe { ffi::pipe(fds.as_mut_ptr()) })?;
         let read_fd = OwnedFd(fds[0]);
         let write_fd = OwnedFd(fds[1]);
@@ -508,6 +529,8 @@ impl WakePipe {
     pub fn drain(&self) {
         let mut buf = [0u8; 64];
         loop {
+            // SAFETY: read(2) writes at most `buf.len()` bytes into the
+            // live stack buffer; the fd is owned by self.
             let n = unsafe {
                 ffi::read(
                     self.read_fd.0,
@@ -528,6 +551,8 @@ impl Waker {
     /// ignored.
     pub fn wake(&self) {
         let b = [1u8];
+        // SAFETY: write(2) reads exactly 1 byte from the live stack
+        // buffer; the fd is kept alive by the Arc in self.
         unsafe {
             ffi::write(
                 self.write_fd.0,

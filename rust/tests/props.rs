@@ -2,7 +2,8 @@
 
 use nullanet::aig::{self, Aig, Lit};
 use nullanet::logic::{minimize, Cover, Cube, EspressoConfig, IsfFunction, TruthTable};
-use nullanet::netlist::{LogicTape, ScheduledTape};
+use nullanet::netlist::verify::{self, code};
+use nullanet::netlist::{LogicTape, ScheduledTape, TapeOp};
 use nullanet::prop::check;
 use nullanet::simd::{self, PlaneKernels};
 use nullanet::util::{BitVec, BitWord, SplitMix64, W128, W256, W512};
@@ -473,6 +474,149 @@ fn f16_conversion_roundtrip_prop() {
         if !f.is_nan() {
             assert_eq!(nullanet::arith::F16::from_f32(f).0, h.0);
         }
+    });
+}
+
+#[test]
+fn verifier_agrees_with_from_parts_on_arbitrary_tapes() {
+    // The static verifier strictly subsumes the constructor: for ANY
+    // raw parts — mostly invalid here — `LogicTape::from_parts`
+    // succeeds iff `verify_tape_parts` reports zero errors (semantic
+    // warnings never block construction).  This is the guarantee that
+    // lets the loader verify *before* building: nothing the verifier
+    // passes can make `from_parts` fail, and nothing it rejects is
+    // ever constructed.
+    check("verify-agrees-from-parts", 200, |rng| {
+        let n_inputs = rng.range(1, 10);
+        let base = n_inputs + 1;
+        let n_ops = rng.range(0, 40);
+        let total = base + n_ops;
+        fn mask(rng: &mut SplitMix64) -> u64 {
+            match rng.range(0, 4) {
+                0 => 0,
+                1 => !0,
+                2 => rng.next_u64(),
+                _ => 1, // guaranteed non-broadcast
+            }
+        }
+        let ops: Vec<TapeOp> = (0..n_ops)
+            .map(|_| TapeOp {
+                a: rng.range(0, total + 3) as u32,
+                b: rng.range(0, total + 3) as u32,
+                ca: mask(rng),
+                cb: mask(rng),
+            })
+            .collect();
+        let outputs: Vec<(u32, u64)> = (0..rng.range(0, 4))
+            .map(|_| (rng.range(0, total + 3) as u32, mask(rng)))
+            .collect();
+        let report = verify::verify_tape_parts(n_inputs, &ops, &outputs);
+        let built = LogicTape::from_parts(n_inputs, ops, outputs);
+        assert_eq!(
+            report.ok(),
+            built.is_ok(),
+            "verifier and constructor disagree:\n{report}"
+        );
+    });
+}
+
+#[test]
+fn seeded_tape_defects_get_the_matching_stable_code() {
+    // Start from a provably clean random tape, seed exactly one defect
+    // of a random class, and the verifier must report that class's
+    // stable NL code — and the constructor must reject the same parts.
+    check("verify-seeded-defects", 120, |rng| {
+        let n_inputs = rng.range(2, 10);
+        let base = n_inputs + 1;
+        let n_ops = rng.range(2, 50);
+        let total = base + n_ops;
+        fn bit(rng: &mut SplitMix64) -> u64 {
+            if rng.bool(0.5) { 0 } else { !0 }
+        }
+        let mut ops: Vec<TapeOp> = (0..n_ops)
+            .map(|i| {
+                let limit = base + i;
+                TapeOp {
+                    a: rng.range(1, limit) as u32,
+                    b: rng.range(1, limit) as u32,
+                    ca: bit(rng),
+                    cb: bit(rng),
+                }
+            })
+            .collect();
+        let mut outputs: Vec<(u32, u64)> = (0..rng.range(1, 4))
+            .map(|_| (rng.range(1, total) as u32, bit(rng)))
+            .collect();
+        let clean = verify::verify_tape_parts(n_inputs, &ops, &outputs);
+        assert_eq!(clean.n_errors(), 0, "generator seeded a defect:\n{clean}");
+
+        let bad_mask = {
+            let mut m = rng.next_u64();
+            while m == 0 || m == !0 {
+                m = rng.next_u64();
+            }
+            m
+        };
+        let want = match rng.range(0, 5) {
+            0 => {
+                // Forward reference: read a plane at or past this op's
+                // own destination.
+                let i = rng.range(0, n_ops);
+                ops[i].a = rng.range(base + i, total) as u32;
+                code::FANIN_FORWARD
+            }
+            1 => {
+                ops[rng.range(0, n_ops)].b = (total + rng.range(0, 9)) as u32;
+                code::FANIN_RANGE
+            }
+            2 => {
+                ops[rng.range(0, n_ops)].ca = bad_mask;
+                code::OP_MASK
+            }
+            3 => {
+                outputs[0].0 = (total + rng.range(0, 9)) as u32;
+                code::OUTPUT_RANGE
+            }
+            _ => {
+                outputs[0].1 = bad_mask;
+                code::OUTPUT_MASK
+            }
+        };
+        let report = verify::verify_tape_parts(n_inputs, &ops, &outputs);
+        assert!(!report.ok(), "seeded {want}, verifier saw nothing");
+        assert!(report.has(want), "seeded {want}, got:\n{report}");
+        assert!(
+            LogicTape::from_parts(n_inputs, ops, outputs).is_err(),
+            "constructor accepted a tape the verifier rejects ({want})"
+        );
+    });
+}
+
+#[test]
+fn pipeline_tapes_and_schedules_verify_clean() {
+    // Every tape the synthesis pipeline emits — and the liveness
+    // schedule the engine derives from it — must pass the static
+    // verifier with zero errors (dead-cone warnings are fine:
+    // `from_aig` keeps dead ops, the scheduler strips them).
+    check("verify-clean-pipeline", 40, |rng| {
+        let n = rng.range(2, 10);
+        let mut g = Aig::new(n);
+        let mut lits: Vec<Lit> = (0..n).map(|i| g.pi(i)).collect();
+        for _ in 0..rng.range(1, 100) {
+            let a = lits[rng.range(0, lits.len())];
+            let b = lits[rng.range(0, lits.len())];
+            lits.push(g.and(
+                if rng.bool(0.5) { a.not() } else { a },
+                if rng.bool(0.5) { b.not() } else { b },
+            ));
+        }
+        for _ in 0..rng.range(1, 4) {
+            let o = lits[rng.range(0, lits.len())];
+            g.add_output(if rng.bool(0.5) { o.not() } else { o });
+        }
+        let tape = LogicTape::from_aig(&g);
+        let report = verify::verify_tape_and_schedule(&tape);
+        assert_eq!(report.n_errors(), 0, "{report}");
     });
 }
 

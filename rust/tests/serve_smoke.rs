@@ -4,6 +4,8 @@
 //! * two compiled models resident in one process, served concurrently,
 //! * runtime load/unload over the admin surface,
 //! * hot-swap with zero failed in-flight requests,
+//! * a structurally invalid artifact refused at swap time (stable
+//!   `NL021` code, zero dropped requests, live model untouched),
 //! * a pipelined connection whose replies complete out of order and
 //!   reassemble by `"id"`.
 //!
@@ -264,6 +266,106 @@ fn hot_swap_has_zero_failed_in_flight_requests() {
     assert_eq!(class_of(&j), 1, "swap did not take effect: {j:?}");
     let j = request(&mut admin, &mut admin_reader, "{\"cmd\": \"info\"}");
     assert_eq!(j.get("model").and_then(Json::as_str), Some("hot"));
+    drop(admin);
+    server.shutdown();
+}
+
+#[test]
+fn invalid_artifact_swap_is_rejected_under_load_with_zero_failures() {
+    let dir = tmp("bad_swap");
+    let ident = tiny_artifact(&dir, "ident", false);
+    let swap = tiny_artifact(&dir, "swapm", true);
+    // Corrupt the replacement: rename its layer section, so every line
+    // still parses but the section digest cannot match (NL021) — the
+    // structurally-subtle kind of damage only the verifier catches.
+    let corrupt = dir.join("corrupt.nnc");
+    let text = std::fs::read_to_string(&swap).unwrap();
+    let bad = text.replacen("\"name\":\"layer2\"", "\"name\":\"layerX\"", 1);
+    assert_ne!(bad, text, "corruption was a no-op");
+    std::fs::write(&corrupt, bad).unwrap();
+
+    let reg = registry(2);
+    reg.load_artifact(Some("hot"), ident.to_str().unwrap(), None).unwrap();
+    let server = Server::start("127.0.0.1:0", Arc::clone(&reg)).unwrap();
+
+    // Hammer threads: the rejected swap must never surface to serving
+    // traffic — every reply stays class 0 (the resident incarnation),
+    // never an error, with requests in flight across the attempt.
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let mut handles = vec![];
+    for _ in 0..4 {
+        let addr = server.addr;
+        let stop = Arc::clone(&stop);
+        handles.push(std::thread::spawn(move || {
+            let (mut conn, mut reader) = connect(addr);
+            let mut served = 0usize;
+            while !stop.load(std::sync::atomic::Ordering::SeqCst) {
+                let j = request(&mut conn, &mut reader, "{\"image\": [0.9, 0.1]}");
+                assert!(
+                    j.get("error").is_none(),
+                    "in-flight request failed during rejected swap: {j:?}"
+                );
+                assert_eq!(class_of(&j), 0, "rejected artifact leaked into serving");
+                served += 1;
+            }
+            served
+        }));
+    }
+
+    std::thread::sleep(Duration::from_millis(100));
+    let (mut admin, mut admin_reader) = connect(server.addr);
+
+    // The admin verify command sees the damage without touching the
+    // registry, and names it with the stable code.
+    let j = request(
+        &mut admin,
+        &mut admin_reader,
+        &format!("{{\"cmd\": \"verify\", \"artifact\": {:?}}}", corrupt.to_str().unwrap()),
+    );
+    assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false), "{j:?}");
+    let diag_codes: Vec<&str> = j
+        .get("diags")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .filter_map(|d| d.get("code").and_then(Json::as_str))
+        .collect();
+    assert!(diag_codes.contains(&"NL021"), "{j:?}");
+
+    // The swap itself is refused, with the code in the error reply.
+    let j = request(
+        &mut admin,
+        &mut admin_reader,
+        &format!(
+            "{{\"cmd\": \"swap\", \"name\": \"hot\", \"artifact\": {:?}}}",
+            corrupt.to_str().unwrap()
+        ),
+    );
+    let err = j.get("error").and_then(Json::as_str).unwrap_or("");
+    assert!(err.contains("NL021"), "swap of corrupt artifact not refused: {j:?}");
+
+    // Traffic keeps flowing; nothing was dropped or reclassified.
+    std::thread::sleep(Duration::from_millis(100));
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    let served: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert!(served > 20, "hammer barely ran ({served} requests)");
+
+    // The live incarnation is untouched...
+    let j = request(&mut admin, &mut admin_reader, "{\"image\": [0.9, 0.1]}");
+    assert_eq!(class_of(&j), 0, "live model displaced by a rejected artifact: {j:?}");
+    // ...and the registry is not wedged: a good swap still goes through.
+    let j = request(
+        &mut admin,
+        &mut admin_reader,
+        &format!(
+            "{{\"cmd\": \"swap\", \"name\": \"hot\", \"artifact\": {:?}}}",
+            swap.to_str().unwrap()
+        ),
+    );
+    assert_eq!(j.get("swapped").and_then(Json::as_str), Some("hot"), "{j:?}");
+    let j = request(&mut admin, &mut admin_reader, "{\"image\": [0.9, 0.1]}");
+    assert_eq!(class_of(&j), 1, "good swap after rejection did not take: {j:?}");
+
     drop(admin);
     server.shutdown();
 }

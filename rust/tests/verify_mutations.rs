@@ -1,0 +1,240 @@
+//! Mutation tests for the static artifact verifier: splice or bit-flip
+//! every `.nnc` section (header, layer, param, footer, tape ops) and
+//! assert that `verify_artifact` reports the *right* stable `NL***`
+//! code — `NL021` wherever a digest catches the damage, `NL020` for
+//! structural failures (bad magic, version, truncation), and dead-cone
+//! warnings (`NL006`) on artifacts that are damaged only in spirit.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use nullanet::aig::{Aig, Lit};
+use nullanet::artifact::{verify_artifact, CompiledLayer, CompiledModel, LayerStats};
+use nullanet::model::Arch;
+use nullanet::netlist::verify::code;
+use nullanet::netlist::{LogicTape, TapeOp};
+use nullanet::util::SplitMix64;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("nullanet_verify_mut_{tag}"));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn random_tape(rng: &mut SplitMix64, n_pis: usize, n_ands: usize, n_outs: usize) -> LogicTape {
+    let mut g = Aig::new(n_pis);
+    let mut lits: Vec<Lit> = (0..n_pis).map(|i| g.pi(i)).collect();
+    for _ in 0..n_ands {
+        let a = lits[rng.range(0, lits.len())];
+        let b = lits[rng.range(0, lits.len())];
+        let a = if rng.bool(0.5) { a.not() } else { a };
+        let b = if rng.bool(0.5) { b.not() } else { b };
+        lits.push(g.and(a, b));
+    }
+    for _ in 0..n_outs {
+        let o = lits[rng.range(0, lits.len())];
+        g.add_output(if rng.bool(0.5) { o.not() } else { o });
+    }
+    LogicTape::from_aig(&g)
+}
+
+fn model_with(name: &str, tapes: Vec<LogicTape>) -> CompiledModel {
+    let n = tapes[0].n_inputs;
+    CompiledModel {
+        name: name.into(),
+        arch: Arch::Mlp { sizes: vec![n, n, n, n] },
+        accuracy_test: f64::NAN,
+        layers: tapes
+            .into_iter()
+            .enumerate()
+            .map(|(i, tape)| CompiledLayer {
+                name: format!("layer{}", i + 2),
+                tape,
+                stats: LayerStats { n_distinct: 1 + i, ..Default::default() },
+            })
+            .collect(),
+        params: BTreeMap::new(),
+    }
+}
+
+/// Save a one-layer model (with one parameter tensor so the param
+/// section exists) and return (path, file text).
+fn saved_artifact(dir: &Path, file: &str, seed: u64) -> (PathBuf, String) {
+    let mut rng = SplitMix64::new(seed);
+    let tape = random_tape(&mut rng, 5, 40, 3);
+    let mut cm = model_with("mut", vec![tape]);
+    cm.params.insert(
+        "w1".to_string(),
+        nullanet::model::Tensor { shape: vec![2, 2], f32s: vec![1.0, 0.5, -0.25, 0.0] },
+    );
+    let path = dir.join(file);
+    cm.save(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    (path, text)
+}
+
+#[test]
+fn clean_artifact_verifies_ok() {
+    let dir = tmpdir("clean");
+    let (path, _) = saved_artifact(&dir, "ok.nnc", 1);
+    let report = verify_artifact(&path);
+    assert!(report.ok(), "{report}");
+    assert_eq!(report.n_errors(), 0);
+}
+
+#[test]
+fn every_section_mutation_yields_the_right_code() {
+    let dir = tmpdir("sections");
+    let (_, text) = saved_artifact(&dir, "base.nnc", 2);
+    // (what is damaged, how, which code must come back)
+    let cases: Vec<(&str, Box<dyn Fn(&str) -> String>, &str)> = vec![
+        (
+            "header model name (footer chain catches it)",
+            Box::new(|t: &str| t.replacen("\"name\":\"mut\"", "\"name\":\"evil\"", 1)),
+            code::ARTIFACT_DIGEST,
+        ),
+        (
+            "header version (rejected before any digest)",
+            Box::new(|t: &str| t.replacen("\"version\":1", "\"version\":99", 1)),
+            code::ARTIFACT_STRUCTURE,
+        ),
+        (
+            "header magic",
+            Box::new(|t: &str| t.replacen("\"magic\":\"", "\"magic\":\"x", 1)),
+            code::ARTIFACT_STRUCTURE,
+        ),
+        (
+            // The layer digest covers the name, tape ops, and stats; a
+            // renamed layer decodes fine but can't match its digest.
+            "layer section content (section digest catches it)",
+            Box::new(|t: &str| t.replacen("\"name\":\"layer2\"", "\"name\":\"layerX\"", 1)),
+            code::ARTIFACT_DIGEST,
+        ),
+        (
+            "param section content (section digest catches it)",
+            Box::new(|t: &str| t.replacen("\"name\":\"w1\"", "\"name\":\"wX\"", 1)),
+            code::ARTIFACT_DIGEST,
+        ),
+        (
+            "footer chain digest",
+            Box::new(|t: &str| {
+                let at = t.rfind("\"digest\":\"").unwrap() + "\"digest\":\"".len();
+                let mut s = t.to_string();
+                let old = s.as_bytes()[at];
+                let new = if old == b'0' { b'1' } else { b'0' };
+                // Replace the first hex char of the footer digest.
+                s.replace_range(at..at + 1, std::str::from_utf8(&[new]).unwrap());
+                s
+            }),
+            code::ARTIFACT_DIGEST,
+        ),
+        (
+            "footer removed entirely (truncation)",
+            Box::new(|t: &str| t[..t.rfind("{\"digest\"").unwrap()].to_string()),
+            code::ARTIFACT_STRUCTURE,
+        ),
+    ];
+    let bad = dir.join("bad.nnc");
+    for (what, mutate, want_code) in cases {
+        let mutated = mutate(&text);
+        assert_ne!(mutated, text, "mutation for {what} was a no-op");
+        std::fs::write(&bad, &mutated).unwrap();
+        let report = verify_artifact(&bad);
+        assert!(!report.ok(), "{what}: damaged artifact verified clean");
+        assert!(
+            report.has(want_code),
+            "{what}: expected {want_code}, got:\n{report}"
+        );
+    }
+}
+
+#[test]
+fn tape_op_rewiring_is_caught_by_the_layer_digest() {
+    let dir = tmpdir("opswap");
+    // Known tape so the serialized op is exactly [1,2,0,0]: plane 3 =
+    // p1 & p2, output plane 3.
+    let tape = LogicTape::from_parts(2, vec![TapeOp { a: 1, b: 2, ca: 0, cb: 0 }], vec![(3, 0)])
+        .unwrap();
+    let cm = model_with("opswap", vec![tape]);
+    let path = dir.join("ok.nnc");
+    cm.save(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.contains("\"ops\":[[1,2,0,0]]"), "{text}");
+    // Rewire fanin a: 1 -> 2.  Still a structurally valid tape (plane 2
+    // is input b), so only the layer digest can tell it is not the tape
+    // that was compiled.
+    let bad = dir.join("bad.nnc");
+    std::fs::write(&bad, text.replacen("\"ops\":[[1,2,0,0]]", "\"ops\":[[2,2,0,0]]", 1)).unwrap();
+    let report = verify_artifact(&bad);
+    assert!(!report.ok(), "rewired tape verified clean:\n{report}");
+    assert!(report.has(code::ARTIFACT_DIGEST), "{report}");
+}
+
+#[test]
+fn spliced_layer_section_is_rejected_by_the_chain_digest() {
+    let dir = tmpdir("splice");
+    let (_, text_a) = saved_artifact(&dir, "a.nnc", 3);
+    let (_, text_b) = saved_artifact(&dir, "b.nnc", 4);
+    let layer_of = |t: &str| {
+        t.lines()
+            .find(|l| l.contains("\"section\":\"layer\""))
+            .unwrap()
+            .to_string()
+    };
+    let (la, lb) = (layer_of(&text_a), layer_of(&text_b));
+    assert_ne!(la, lb, "seeds produced identical layers");
+    // Each spliced line has a self-consistent section digest; only the
+    // footer chain digest can catch the cross-file transplant.
+    let spliced = text_b.replacen(&lb, &la, 1);
+    let bad = dir.join("spliced.nnc");
+    std::fs::write(&bad, spliced).unwrap();
+    let report = verify_artifact(&bad);
+    assert!(!report.ok(), "spliced artifact verified clean:\n{report}");
+    assert!(report.has(code::ARTIFACT_DIGEST), "{report}");
+}
+
+#[test]
+fn random_bit_flips_are_never_accepted() {
+    let dir = tmpdir("bitflip");
+    let (_, text) = saved_artifact(&dir, "base.nnc", 5);
+    let bytes = text.as_bytes();
+    let bad = dir.join("flipped.nnc");
+    let mut rng = SplitMix64::new(99);
+    for case in 0..60 {
+        let pos = rng.range(0, bytes.len());
+        let bit = rng.range(0, 8) as u32;
+        let mut mutated = bytes.to_vec();
+        mutated[pos] ^= 1 << bit;
+        // Flipping a newline can only merge/split lines; anything else
+        // changes section content.  Either way the verifier must object.
+        std::fs::write(&bad, &mutated).unwrap();
+        let report = verify_artifact(&bad);
+        assert!(
+            !report.ok(),
+            "case {case}: flip of bit {bit} at byte {pos} (0x{:02x}) accepted",
+            bytes[pos]
+        );
+        let coded = report.has(code::ARTIFACT_DIGEST) || report.has(code::ARTIFACT_STRUCTURE);
+        assert!(coded, "case {case}: error without a stable NL code:\n{report}");
+    }
+}
+
+#[test]
+fn dead_cone_in_a_loadable_artifact_is_a_warning_not_an_error() {
+    let dir = tmpdir("deadcone");
+    // Hand-build a tape with an op outside every output cone: plane 3 =
+    // p1&p2 (live, output), plane 4 = p1&p1 (dead).
+    let tape = LogicTape::from_parts(
+        2,
+        vec![TapeOp { a: 1, b: 2, ca: 0, cb: 0 }, TapeOp { a: 1, b: 1, ca: 0, cb: 0 }],
+        vec![(3, 0)],
+    )
+    .unwrap();
+    let cm = model_with("deadcone", vec![tape]);
+    let path = dir.join("dead.nnc");
+    cm.save(&path).unwrap();
+    let report = verify_artifact(&path);
+    assert!(report.ok(), "warnings must not fail verification:\n{report}");
+    assert!(report.has(code::DEAD_CONE), "{report}");
+    assert_eq!(report.n_warnings(), 1, "{report}");
+}
