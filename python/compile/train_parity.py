@@ -1,0 +1,369 @@
+"""Bit-exact NumPy mirror of the Rust trainer (rust/src/train/mod.rs).
+
+Generates rust/tests/fixtures/train_parity.json: the expected final
+weight/bias bit patterns and accuracies for a tiny seeded training run,
+which the Rust test `train_e2e::parity_fixture_replays_bit_exact`
+replays and compares bit-for-bit.
+
+Why this can be exact at all: the Rust trainer deliberately keeps every
+arithmetic operation inside IEEE-754 binary32 +, -, *, /, sqrt (MSE
+loss, no transcendentals), performs no reordered accumulations, and
+draws all randomness from one SplitMix64 stream.  NumPy float32 scalar
+ops are the same correctly-rounded binary32 ops, so transcribing the
+trainer operation-for-operation (same op order, same rounding points)
+reproduces every bit.  Vectorized np.dot would NOT work here -- BLAS
+reorders accumulation -- so the MAC chains below are explicit loops, in
+the exact k-ascending order of `gemv_rowmajor`.
+
+Stdlib + numpy only (no JAX): run from the repo root with
+    python3 -m python.compile.train_parity
+or  python3 python/compile/train_parity.py
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+F32 = np.float32
+MASK64 = (1 << 64) - 1
+
+# ---------------------------------------------------------------------------
+# SplitMix64 (rust/src/util/rng.rs), on masked Python ints.
+# ---------------------------------------------------------------------------
+
+
+class SplitMix64:
+    def __init__(self, seed: int):
+        self.state = seed & MASK64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return z ^ (z >> 31)
+
+    def below(self, n: int) -> int:
+        # Lemire multiply-shift, exact in big ints.
+        return (self.next_u64() * n) >> 64
+
+    def f64(self) -> float:
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def f32_range(self, lo: F32, hi: F32) -> F32:
+        # Rust: lo + (self.f64() as f32) * (hi - lo), every op in f32.
+        return lo + F32(self.f64()) * (hi - lo)
+
+    def bool_(self, p: float) -> bool:
+        return self.f64() < p
+
+    def shuffle(self, xs: list) -> None:
+        for i in range(len(xs) - 1, 0, -1):
+            j = self.below(i + 1)
+            xs[i], xs[j] = xs[j], xs[i]
+
+
+# ---------------------------------------------------------------------------
+# FNV-1a 64 dataset digest (rust/src/artifact.rs dataset_digest).
+# ---------------------------------------------------------------------------
+
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x100000001B3
+
+
+def fnv_u64(h: int, v: int) -> int:
+    for b in int(v).to_bytes(8, "little"):
+        h ^= b
+        h = (h * FNV_PRIME) & MASK64
+    return h
+
+
+def f32_bits(v: F32) -> int:
+    return int(np.frombuffer(F32(v).tobytes(), dtype="<u4")[0])
+
+
+def dataset_digest(x: np.ndarray, y: np.ndarray, dim: int) -> int:
+    h = fnv_u64(FNV_OFFSET, len(y))
+    h = fnv_u64(h, dim)
+    for v in x:
+        h = fnv_u64(h, f32_bits(v))
+    for yv in y:
+        h = fnv_u64(h, int(yv))
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Synthetic dataset (rust train::synthetic_digits), identical draw order.
+# ---------------------------------------------------------------------------
+
+
+def synthetic_digits(n: int, dim: int, n_classes: int, seed: int):
+    rng = SplitMix64(seed)
+    protos = [rng.bool_(0.5) for _ in range(n_classes * dim)]
+    x = np.zeros(n * dim, dtype=np.float32)
+    y = np.zeros(n, dtype=np.uint8)
+    for s in range(n):
+        c = s % n_classes
+        y[s] = c
+        for k in range(dim):
+            u = F32(rng.f64())
+            flip = rng.bool_(0.1)
+            hot = protos[c * dim + k] ^ flip
+            x[s * dim + k] = F32(0.75) + F32(0.25) * u if hot else F32(0.25) * u
+    return x, y
+
+
+# ---------------------------------------------------------------------------
+# The trainer (rust train::train), operation for operation.
+# Weights are flat row-major float32 arrays indexed k * n_out + j, like Rust.
+# ---------------------------------------------------------------------------
+
+
+def holdout_split(n: int, val_frac: float):
+    if val_frac <= 0.0 or n < 2:
+        n_val = 0
+    else:
+        n_val = min(max(int(n * val_frac), 1), n - 1)
+    cut = n - n_val
+    return list(range(cut)), list(range(cut, n))
+
+
+def gemv_rowmajor(a, w, n_in, n_out, z):
+    # z[j] += a[k] * w[k*n_out+j], k ascending per element: the exact
+    # sequential MAC chain of the Rust forward pass.
+    for j in range(n_out):
+        acc = z[j]
+        for k in range(n_in):
+            acc = acc + a[k] * w[k * n_out + j]
+        z[j] = acc
+
+
+def argmax_first(xs) -> int:
+    best = 0
+    for j in range(1, len(xs)):
+        if xs[j] > xs[best]:
+            best = j
+    return best
+
+
+def forward_logits(sizes, weights, biases, scales, a0):
+    nl = len(sizes) - 1
+    a = a0
+    for li in range(nl):
+        n_in, n_out = sizes[li], sizes[li + 1]
+        z = np.zeros(n_out, dtype=np.float32)
+        gemv_rowmajor(a, weights[li], n_in, n_out, z)
+        c = scales[li]
+        for j in range(n_out):
+            zj = z[j] * c + biases[li][j]
+            if li + 1 < nl:
+                z[j] = F32(1.0) if zj >= F32(0.0) else F32(-1.0)
+            else:
+                z[j] = zj
+        a = z
+    return a
+
+
+def eval_accuracy(sizes, weights, biases, scales, x, y, dim, idx) -> float:
+    if not idx:
+        return float("nan")
+    hits = 0
+    for i in idx:
+        logits = forward_logits(sizes, weights, biases, scales, x[i * dim : (i + 1) * dim])
+        if argmax_first(logits) == int(y[i]):
+            hits += 1
+    return hits / len(idx)
+
+
+def sign_f32(g: F32) -> F32:
+    if g > F32(0.0):
+        return F32(1.0)
+    if g < F32(0.0):
+        return F32(-1.0)
+    return F32(0.0)
+
+
+def train(x, y, dim, sizes, epochs, batch, lr0, lr_decay, seed, rule, val_frac):
+    n = len(y)
+    nl = len(sizes) - 1
+    rng = SplitMix64(seed)
+
+    # Glorot init: flat row-major draw order, biases zero (no draws).
+    weights, scales = [], []
+    for li in range(nl):
+        n_in, n_out = sizes[li], sizes[li + 1]
+        lim = F32(np.sqrt(6.0 / float(n_in + n_out)))  # f64 sqrt, then f32 cast
+        w = np.zeros(n_in * n_out, dtype=np.float32)
+        for i in range(n_in * n_out):
+            w[i] = rng.f32_range(-lim, lim)
+        weights.append(w)
+        scales.append(F32(1.0) / np.sqrt(F32(n_in)))
+    biases = [np.zeros(sizes[li + 1], dtype=np.float32) for li in range(nl)]
+
+    train_idx, val_idx = holdout_split(n, val_frac)
+    acts = [np.zeros(s, dtype=np.float32) for s in sizes]
+    zs = [np.zeros(sizes[li + 1], dtype=np.float32) for li in range(nl)]
+    dzs = [np.zeros(sizes[li + 1], dtype=np.float32) for li in range(nl)]
+    gw = [np.zeros(sizes[li] * sizes[li + 1], dtype=np.float32) for li in range(nl)]
+    gb = [np.zeros(sizes[li + 1], dtype=np.float32) for li in range(nl)]
+
+    lr = F32(lr0)
+    history = []
+    for epoch in range(1, epochs + 1):
+        rng.shuffle(train_idx)
+        loss_sum = 0.0  # f64 accumulator, like Rust
+        for b0 in range(0, len(train_idx), batch):
+            bidx = train_idx[b0 : b0 + batch]
+            for g in gw:
+                g.fill(0.0)
+            for g in gb:
+                g.fill(0.0)
+            invb = F32(1.0) / F32(len(bidx))
+            for si in bidx:
+                acts[0][:] = x[si * dim : (si + 1) * dim]
+                for li in range(nl):
+                    n_in, n_out = sizes[li], sizes[li + 1]
+                    zs[li].fill(0.0)
+                    gemv_rowmajor(acts[li], weights[li], n_in, n_out, zs[li])
+                    c = scales[li]
+                    for j in range(n_out):
+                        zj = zs[li][j] * c + biases[li][j]
+                        zs[li][j] = zj
+                        if li + 1 < nl:
+                            acts[li + 1][j] = F32(1.0) if zj >= F32(0.0) else F32(-1.0)
+                        else:
+                            acts[li + 1][j] = zj
+                yv = int(y[si])
+                for j in range(sizes[nl]):
+                    t = F32(1.0) if j == yv else F32(0.0)
+                    e = zs[nl - 1][j] - t
+                    loss_sum += float(e * e)
+                    dzs[nl - 1][j] = e * invb
+                for li in range(nl - 1, -1, -1):
+                    n_in, n_out = sizes[li], sizes[li + 1]
+                    for k in range(n_in):
+                        a = acts[li][k]
+                        base = k * n_out
+                        for j in range(n_out):
+                            gw[li][base + j] = gw[li][base + j] + a * dzs[li][j]
+                    for j in range(n_out):
+                        gb[li][j] = gb[li][j] + dzs[li][j]
+                    if li > 0:
+                        c = scales[li]
+                        for k in range(sizes[li]):
+                            sm = F32(0.0)
+                            for j in range(n_out):
+                                sm = sm + weights[li][k * n_out + j] * dzs[li][j]
+                            da = sm * c
+                            dzs[li - 1][k] = da if abs(zs[li - 1][k]) <= F32(1.0) else F32(0.0)
+            for li in range(nl):
+                if rule == "ste":
+                    lrc = lr * scales[li]
+                    for i in range(len(weights[li])):
+                        weights[li][i] = weights[li][i] - lrc * gw[li][i]
+                    for j in range(len(biases[li])):
+                        biases[li][j] = biases[li][j] - lr * gb[li][j]
+                elif rule == "bold":
+                    for i in range(len(weights[li])):
+                        weights[li][i] = weights[li][i] - lr * sign_f32(gw[li][i])
+                    for j in range(len(biases[li])):
+                        biases[li][j] = biases[li][j] - lr * sign_f32(gb[li][j])
+                else:
+                    raise ValueError(f"unknown rule {rule}")
+        lr = lr * F32(lr_decay)
+        train_acc = eval_accuracy(sizes, weights, biases, scales, x, y, dim, train_idx)
+        val_acc = eval_accuracy(sizes, weights, biases, scales, x, y, dim, val_idx)
+        loss = loss_sum / (2.0 * len(train_idx))
+        history.append({"epoch": epoch, "loss": loss, "train_acc": train_acc, "val_acc": val_acc})
+        print(f"epoch {epoch}: loss {loss:.6f} train_acc {train_acc:.4f} val_acc {val_acc:.4f}")
+    return weights, biases, history
+
+
+# ---------------------------------------------------------------------------
+# Fixture emission.
+# ---------------------------------------------------------------------------
+
+FIXTURE = {
+    "n": 96,
+    "dim": 16,
+    "classes": 4,
+    "data_seed": 11,
+    "sizes": [16, 12, 10, 4],
+    "epochs": 2,
+    "batch": 16,
+    "val_frac": 0.125,
+    "train_seed": 7,
+}
+
+CASES = [
+    {"rule": "ste", "lr0": 0.1, "lr_decay": 0.85},
+    {"rule": "bold", "lr0": 0.01, "lr_decay": 0.85},
+]
+
+
+def main():
+    fx = FIXTURE
+    x, y = synthetic_digits(fx["n"], fx["dim"], fx["classes"], fx["data_seed"])
+    digest = dataset_digest(x, y, fx["dim"])
+    print(f"dataset digest {digest:016x}")
+    cases = []
+    for case in CASES:
+        print(f"-- rule {case['rule']} (lr0 {case['lr0']})")
+        weights, biases, history = train(
+            x,
+            y,
+            fx["dim"],
+            fx["sizes"],
+            fx["epochs"],
+            fx["batch"],
+            case["lr0"],
+            case["lr_decay"],
+            fx["train_seed"],
+            case["rule"],
+            fx["val_frac"],
+        )
+        last = history[-1]
+        cases.append(
+            {
+                "rule": case["rule"],
+                "lr0": case["lr0"],
+                "lr_decay": case["lr_decay"],
+                "train_acc": last["train_acc"],
+                "val_acc": last["val_acc"],
+                "loss": last["loss"],
+                "weights_bits": [[f32_bits(v) for v in w] for w in weights],
+                "biases_bits": [[f32_bits(v) for v in b] for b in biases],
+            }
+        )
+    out = {
+        "note": "Generated by python/compile/train_parity.py — a bit-exact NumPy "
+        "mirror of rust/src/train. Regenerate with: python3 python/compile/train_parity.py",
+        "dataset": {
+            "n": fx["n"],
+            "dim": fx["dim"],
+            "classes": fx["classes"],
+            "seed": str(fx["data_seed"]),
+            "digest": f"{digest:016x}",
+        },
+        "sizes": fx["sizes"],
+        "epochs": fx["epochs"],
+        "batch": fx["batch"],
+        "val_frac": fx["val_frac"],
+        "train_seed": str(fx["train_seed"]),
+        "cases": cases,
+    }
+    here = os.path.dirname(os.path.abspath(__file__))
+    path = os.path.join(here, "..", "..", "rust", "tests", "fixtures", "train_parity.json")
+    path = os.path.normpath(path)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+        f.write("\n")
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

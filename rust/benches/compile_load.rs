@@ -112,6 +112,7 @@ fn main() {
         accuracy_test: f64::NAN,
         layers: vec![CompiledLayer { name: "hidden2".into(), tape: synth.tape.clone(), stats }],
         params,
+        provenance: None,
     };
     let dir = std::env::temp_dir().join("nullanet_bench_compile");
     std::fs::create_dir_all(&dir).unwrap();

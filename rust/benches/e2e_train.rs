@@ -1,0 +1,174 @@
+//! Bench: the in-Rust training + distillation loop — dataset → STE
+//! trainer → Algorithm 2 → `.nnc` → engine construction, the exact path
+//! `nullanet train` and `nullanet distill` run in one invocation.
+//!
+//! Self-contained on the synthetic stand-in dataset (no `make
+//! artifacts` needed), so this runs in CI.  `NULLANET_BENCH_CAP` caps
+//! the training sample count (default 256).  Before timing anything the
+//! bench asserts the determinism contract (same seed → bit-identical
+//! weights) and that the trained artifact passes the static verifier.
+//!
+//! Run: cargo bench --bench e2e_train
+//! Emits BENCH_train.json (machine-readable medians + the per-epoch
+//! training trajectory) — the training third of the perf record,
+//! mirroring BENCH_compile.json / BENCH_serving.json.  Cargo runs
+//! benches with CWD = the package root, so the file lands at
+//! rust/BENCH_train.json.  Set NULLANET_BENCH_WRITE_BASELINE=<path> to
+//! also write the run as a baseline candidate for
+//! rust/BENCH_train.baseline.json.
+
+use std::time::Duration;
+
+use nullanet::artifact::{self, CompiledModel};
+use nullanet::bench_util::{bench, format_ns, BenchResult, Table};
+use nullanet::coordinator::engine;
+use nullanet::jsonio::{num, obj, s, Json};
+use nullanet::synth::SynthConfig;
+use nullanet::train::{self, Rule, TrainConfig};
+
+const DIM: usize = 16;
+const CLASSES: usize = 4;
+const ISF_CAP: usize = 1000;
+
+/// Finite numbers as numbers, NaN as JSON null (NaN is not a JSON
+/// token).
+fn fnum(v: f64) -> Json {
+    if v.is_finite() {
+        num(v)
+    } else {
+        Json::Null
+    }
+}
+
+fn main() {
+    let n: usize = std::env::var("NULLANET_BENCH_CAP")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(256);
+    let ds = train::synthetic_digits(n, DIM, CLASSES, 11);
+    let cfg = TrainConfig {
+        epochs: 2,
+        batch: 32,
+        seed: 7,
+        val_frac: 0.125,
+        ..TrainConfig::new(vec![DIM, 16, 12, CLASSES])
+    };
+
+    // Correctness gates before any timing: the determinism contract and
+    // a verifier-clean artifact.
+    let trained = train::train(&ds, &cfg).unwrap();
+    let again = train::train(&ds, &cfg).unwrap();
+    assert_eq!(
+        trained.weights.iter().flatten().map(|w| w.to_bits()).collect::<Vec<_>>(),
+        again.weights.iter().flatten().map(|w| w.to_bits()).collect::<Vec<_>>(),
+        "same seed must give bit-identical weights"
+    );
+    let scfg = SynthConfig::default();
+    let (compiled, _) =
+        train::compile_trained("bench-train", &trained, &cfg, &ds, ISF_CAP, &scfg).unwrap();
+    let dir = std::env::temp_dir().join("nullanet_bench_train");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("bench-train.nnc");
+    compiled.save(&path).unwrap();
+    let report = artifact::verify_artifact(&path);
+    assert!(report.ok(), "trained artifact failed verification: {}", report.summary());
+
+    let budget = Duration::from_millis(600);
+    let mut results: Vec<BenchResult> = Vec::new();
+    results.push(bench("train 2 epochs (ste)", budget, || {
+        std::hint::black_box(train::train(&ds, &cfg).unwrap());
+    }));
+    let bold = TrainConfig { rule: Rule::Bold, lr0: 0.01, ..cfg.clone() };
+    results.push(bench("train 2 epochs (bold)", budget, || {
+        std::hint::black_box(train::train(&ds, &bold).unwrap());
+    }));
+    results.push(bench("observe + synthesize (Algorithm 2)", budget, || {
+        std::hint::black_box(
+            train::compile_trained("bench-train", &trained, &cfg, &ds, ISF_CAP, &scfg).unwrap(),
+        );
+    }));
+    results.push(bench("artifact save", budget, || {
+        compiled.save(&path).unwrap();
+    }));
+    results.push(bench("hot-swap build: load + engine construct (w256)", budget, || {
+        let cm = CompiledModel::load(&path).unwrap();
+        std::hint::black_box(engine::engine_from_artifact(cm, 256).unwrap());
+    }));
+
+    let mut table = Table::new(
+        &format!("Train → artifact loop ({n} samples, sizes {:?})", cfg.sizes),
+        &["Stage", "median", "iters"],
+    );
+    for r in &results {
+        table.row(&[r.name.clone(), format_ns(r.median_ns), r.iters.to_string()]);
+    }
+    table.print();
+    println!(
+        "\ntrain acc {:.4}, val acc {:.4} after {} epochs",
+        trained.train_acc, trained.val_acc, cfg.epochs
+    );
+
+    let history: Vec<Json> = trained
+        .history
+        .iter()
+        .map(|e| {
+            obj(vec![
+                ("epoch", num(e.epoch as f64)),
+                ("loss", fnum(e.loss)),
+                ("train_acc", fnum(e.train_acc)),
+                ("val_acc", fnum(e.val_acc)),
+            ])
+        })
+        .collect();
+    let mut json = obj(vec![
+        ("bench", s("train")),
+        ("samples", num(n as f64)),
+        ("isf_cap", num(ISF_CAP as f64)),
+        ("sizes", Json::Arr(cfg.sizes.iter().map(|&v| num(v as f64)).collect())),
+        ("rule", s(cfg.rule.as_str())),
+        // u64 seeds don't survive f64: strings, like the artifact footer.
+        ("seed", Json::Str(cfg.seed.to_string())),
+        ("dataset_digest", Json::Str(format!("{:016x}", artifact::dataset_digest(&ds)))),
+        ("train_acc", fnum(trained.train_acc)),
+        ("val_acc", fnum(trained.val_acc)),
+        ("history", Json::Arr(history)),
+        (
+            "results",
+            Json::Arr(
+                results
+                    .iter()
+                    .map(|r| {
+                        obj(vec![
+                            ("name", s(&r.name)),
+                            ("median_ns", num(r.median_ns)),
+                            ("mean_ns", num(r.mean_ns)),
+                            ("iters", num(r.iters as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    std::fs::write("BENCH_train.json", json.to_string()).unwrap();
+    println!("wrote BENCH_train.json");
+
+    // NULLANET_BENCH_WRITE_BASELINE=<path>: also emit this run as a
+    // measured baseline candidate (same schema plus a provenance note),
+    // so refreshing rust/BENCH_train.baseline.json is one command:
+    //   NULLANET_BENCH_WRITE_BASELINE=BENCH_train.baseline.json \
+    //     cargo bench --bench e2e_train
+    if let Ok(path) = std::env::var("NULLANET_BENCH_WRITE_BASELINE") {
+        if !path.is_empty() {
+            if let Json::Obj(map) = &mut json {
+                map.insert(
+                    "note".to_string(),
+                    s("Measured baseline: written by cargo bench --bench e2e_train \
+                       with NULLANET_BENCH_WRITE_BASELINE set; regenerate the same \
+                       way on a quiet runner."),
+                );
+            }
+            std::fs::write(&path, json.to_string()).unwrap();
+            println!("wrote baseline candidate {path}");
+        }
+    }
+}

@@ -220,6 +220,19 @@ pub fn mac_dot_f32(xs: &[f32], ws: &[f32]) -> f32 {
     acc
 }
 
+/// [`mac_dot_f32`] down a column of a row-major `[n_in, stride]` weight
+/// matrix: `acc = mac(acc, xs[k], ws[k*stride + col])`, `k` ascending.
+/// This is the exact accumulation chain of the trainer's forward kernel
+/// ([`crate::train::gemv_rowmajor`]) and of the serving engines' first
+/// layer, which the training determinism contract pins bit-for-bit.
+pub fn mac_dot_col_f32(xs: &[f32], ws: &[f32], stride: usize, col: usize) -> f32 {
+    let mut acc = 0.0f32;
+    for (k, &x) in xs.iter().enumerate() {
+        acc = f32_mac(acc, x, ws[k * stride + col]);
+    }
+    acc
+}
+
 /// Same in fp16 (inputs converted once, like a half-precision layer).
 pub fn mac_dot_f16(xs: &[f32], ws: &[f32]) -> f32 {
     let mut acc = F16::ZERO;
@@ -233,6 +246,22 @@ pub fn mac_dot_f16(xs: &[f32], ws: &[f32]) -> f32 {
 mod tests {
     use super::*;
     use crate::util::SplitMix64;
+
+    #[test]
+    fn mac_dot_col_matches_gathered_column() {
+        let mut rng = SplitMix64::new(5);
+        let (n_in, stride) = (17, 9);
+        let xs: Vec<f32> = (0..n_in).map(|_| rng.f32_range(-2.0, 2.0)).collect();
+        let ws: Vec<f32> = (0..n_in * stride).map(|_| rng.f32_range(-2.0, 2.0)).collect();
+        for col in 0..stride {
+            let gathered: Vec<f32> = (0..n_in).map(|k| ws[k * stride + col]).collect();
+            assert_eq!(
+                mac_dot_col_f32(&xs, &ws, stride, col).to_bits(),
+                mac_dot_f32(&xs, &gathered).to_bits(),
+                "col {col}"
+            );
+        }
+    }
 
     #[test]
     fn f16_roundtrip_exact_values() {

@@ -77,6 +77,22 @@ pub struct CompiledLayer {
     pub stats: LayerStats,
 }
 
+/// Where a compiled model came from, when it was trained in-process by
+/// [`crate::train`]: everything needed to reproduce the run bit-for-bit
+/// (the trainer is deterministic given these plus the architecture).
+/// Stored in the artifact footer and folded into the chain digest, so
+/// provenance tampering is caught like any other corruption; artifacts
+/// without provenance (the Python-trained flow) stay valid unchanged.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Provenance {
+    pub seed: u64,
+    pub epochs: usize,
+    /// Update rule name (`"ste"` / `"bold"`).
+    pub rule: String,
+    /// [`dataset_digest`] of the training dataset.
+    pub dataset_digest: u64,
+}
+
 /// A complete compiled model: everything the serving engines need,
 /// independent of the training artifacts directory.
 #[derive(Clone, Debug)]
@@ -91,6 +107,9 @@ pub struct CompiledModel {
     /// The non-logic parameters the engines read (first/last layer
     /// weights and BN terms) — see [`required_params`].
     pub params: BTreeMap<String, Tensor>,
+    /// Training provenance, present iff the model was trained by the
+    /// in-Rust trainer (`nullanet train` / `distill`).
+    pub provenance: Option<Provenance>,
 }
 
 /// The parameter tensors the serving engines read for a given
@@ -157,11 +176,20 @@ impl CompiledModel {
             combined = fnv_u64(combined, digest);
             writeln!(out, "{}", param_to_json(name, tensor, digest))?;
         }
-        let footer = obj(vec![
+        let mut footer_pairs = vec![
             ("end", Json::Bool(true)),
             ("n_sections", num(n_sections as f64)),
-            ("digest", s(&format!("{combined:016x}"))),
-        ]);
+        ];
+        // Provenance rides in the footer and is folded into the chain
+        // digest only when present, so pre-trainer artifacts keep their
+        // digests (and old readers, which ignore unknown footer keys,
+        // keep working).
+        if let Some(p) = &self.provenance {
+            combined = fnv_u64(combined, provenance_digest(p));
+            footer_pairs.push(("provenance", provenance_to_json(p)));
+        }
+        footer_pairs.push(("digest", s(&format!("{combined:016x}"))));
+        let footer = obj(footer_pairs);
         writeln!(out, "{footer}")?;
         out.flush()?;
         drop(out);
@@ -209,6 +237,7 @@ impl CompiledModel {
         let mut params = BTreeMap::new();
         let mut combined = header_digest(&name, &arch, accuracy_test, n_sections);
         let mut seen_footer = false;
+        let mut provenance = None;
         for (i, line) in lines.enumerate() {
             let line = line?;
             if line.trim().is_empty() {
@@ -220,6 +249,11 @@ impl CompiledModel {
             if j.get("end").and_then(Json::as_bool) == Some(true) {
                 if j.get("n_sections").and_then(Json::as_usize) != Some(n_sections) {
                     bail!("artifact footer: section count mismatch (corrupt file)");
+                }
+                if let Some(pj) = j.get("provenance") {
+                    let p = provenance_from_json(pj)?;
+                    combined = fnv_u64(combined, provenance_digest(&p));
+                    provenance = Some(p);
                 }
                 if parse_digest(&j)? != combined {
                     bail!("artifact footer: chain digest mismatch (corrupt file)");
@@ -248,7 +282,7 @@ impl CompiledModel {
         if read != n_sections {
             bail!("artifact truncated: {read} of {n_sections} sections present");
         }
-        Ok(CompiledModel { name, arch, accuracy_test, layers, params })
+        Ok(CompiledModel { name, arch, accuracy_test, layers, params, provenance })
     }
 
     /// View the artifact's parameters as a [`NetArtifacts`] so the
@@ -273,7 +307,7 @@ impl CompiledModel {
     /// copies).  Layer stats are dropped here; callers that need them
     /// must read them before converting.
     pub fn into_net_and_tapes(self) -> (NetArtifacts, Vec<LogicTape>) {
-        let CompiledModel { name, arch, accuracy_test, layers, params } = self;
+        let CompiledModel { name, arch, accuracy_test, layers, params, provenance: _ } = self;
         let net = NetArtifacts::detached(name, arch, params, accuracy_test);
         (net, layers.into_iter().map(|l| l.tape).collect())
     }
@@ -442,6 +476,28 @@ fn tensor_digest(name: &str, t: &Tensor) -> u64 {
     }
     for &x in &t.f32s {
         h = fnv_u64(h, x.to_bits() as u64);
+    }
+    h
+}
+
+fn provenance_digest(p: &Provenance) -> u64 {
+    let mut h = fnv_u64(FNV_OFFSET, p.seed);
+    h = fnv_u64(h, p.epochs as u64);
+    h = fnv_str(h, &p.rule);
+    fnv_u64(h, p.dataset_digest)
+}
+
+/// Content digest of a training dataset (sample count, dim, every image
+/// bit pattern, every label) — the `dataset_digest` provenance field,
+/// mirrored by `python/compile/train_parity.py`.
+pub fn dataset_digest(ds: &crate::data::Dataset) -> u64 {
+    let mut h = fnv_u64(FNV_OFFSET, ds.n as u64);
+    h = fnv_u64(h, ds.dim as u64);
+    for &v in &ds.x {
+        h = fnv_u64(h, v.to_bits() as u64);
+    }
+    for &yv in &ds.y {
+        h = fnv_u64(h, yv as u64);
     }
     h
 }
@@ -670,6 +726,41 @@ fn param_from_json(j: &Json) -> Result<(String, Tensor, u64)> {
     Ok((name, tensor, got))
 }
 
+// Seed and dataset digest are serialized as strings: u64 values do not
+// survive a round-trip through f64 (53-bit mantissa), and digests are
+// conventionally hex anyway.
+fn provenance_to_json(p: &Provenance) -> Json {
+    obj(vec![
+        ("seed", s(&p.seed.to_string())),
+        ("epochs", num(p.epochs as f64)),
+        ("rule", s(&p.rule)),
+        ("dataset_digest", s(&format!("{:016x}", p.dataset_digest))),
+    ])
+}
+
+fn provenance_from_json(j: &Json) -> Result<Provenance> {
+    let seed = j
+        .get("seed")
+        .and_then(Json::as_str)
+        .and_then(|v| v.parse::<u64>().ok())
+        .ok_or_else(|| format_err!("artifact footer: provenance missing/bad seed"))?;
+    let epochs = j
+        .get("epochs")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| format_err!("artifact footer: provenance missing epochs"))?;
+    let rule = j
+        .get("rule")
+        .and_then(Json::as_str)
+        .ok_or_else(|| format_err!("artifact footer: provenance missing rule"))?
+        .to_string();
+    let dataset_digest = j
+        .get("dataset_digest")
+        .and_then(Json::as_str)
+        .and_then(|h| u64::from_str_radix(h, 16).ok())
+        .ok_or_else(|| format_err!("artifact footer: provenance missing/bad dataset_digest"))?;
+    Ok(Provenance { seed, epochs, rule, dataset_digest })
+}
+
 fn parse_digest(j: &Json) -> Result<u64> {
     let hex = j
         .get("digest")
@@ -738,6 +829,7 @@ mod tests {
                 stats: LayerStats { n_distinct: 4, ..Default::default() },
             }],
             params: BTreeMap::new(),
+            provenance: None,
         };
         cm.save(&path).unwrap();
         let back = CompiledModel::load(&path).unwrap();
@@ -747,6 +839,63 @@ mod tests {
         assert_eq!(back.layers[0].stats, cm.layers[0].stats);
         assert_eq!(tape_digest(&back.layers[0].tape), tape_digest(&cm.layers[0].tape));
         assert!((back.accuracy_test - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn provenance_roundtrips_and_is_digest_protected() {
+        let dir = std::env::temp_dir().join("nullanet_artifact_prov_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("prov.nnc");
+        let prov = Provenance {
+            seed: u64::MAX - 1, // exercise the >2^53 string path
+            epochs: 6,
+            rule: "ste".into(),
+            dataset_digest: 0xdead_beef_0123_4567,
+        };
+        let cm = CompiledModel {
+            name: "prov".into(),
+            arch: Arch::Mlp { sizes: vec![2, 2, 2, 2] },
+            accuracy_test: 0.5,
+            layers: vec![CompiledLayer {
+                name: "layer2".into(),
+                tape: swap_tape(),
+                stats: LayerStats::default(),
+            }],
+            params: BTreeMap::new(),
+            provenance: Some(prov.clone()),
+        };
+        cm.save(&path).unwrap();
+        let back = CompiledModel::load(&path).unwrap();
+        assert_eq!(back.provenance, Some(prov));
+        assert!(verify_artifact(&path).ok());
+        // Tampering with the provenance (seed 18446744073709551614 -> 1)
+        // breaks the footer chain digest: NL021, like any corruption.
+        let text = std::fs::read_to_string(&path).unwrap();
+        let tampered = text.replacen("\"seed\":\"18446744073709551614\"", "\"seed\":\"1\"", 1);
+        assert_ne!(text, tampered, "tamper target not found");
+        let bad = dir.join("prov_bad.nnc");
+        std::fs::write(&bad, tampered).unwrap();
+        let r = verify_artifact(&bad);
+        assert!(!r.ok());
+        assert!(r.has(verify::code::ARTIFACT_DIGEST), "{r}");
+    }
+
+    #[test]
+    fn dataset_digest_is_content_sensitive() {
+        let ds = crate::data::Dataset {
+            n: 2,
+            dim: 2,
+            x: vec![0.0, 0.5, 1.0, 0.25],
+            y: vec![0, 1],
+        };
+        let d1 = dataset_digest(&ds);
+        assert_eq!(d1, dataset_digest(&ds.clone()));
+        let mut flipped = ds.clone();
+        flipped.x[3] = 0.75;
+        assert_ne!(d1, dataset_digest(&flipped));
+        let mut relabeled = ds;
+        relabeled.y[0] = 1;
+        assert_ne!(d1, dataset_digest(&relabeled));
     }
 
     #[test]
@@ -764,6 +913,7 @@ mod tests {
                 stats: LayerStats::default(),
             }],
             params: BTreeMap::new(),
+            provenance: None,
         };
         cm.save(&path).unwrap();
         // Clean artifact verifies clean.

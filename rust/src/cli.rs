@@ -172,6 +172,12 @@ impl Parsed {
         self.get(name).and_then(|v| v.parse().ok()).unwrap_or(0.0)
     }
 
+    /// Full-range u64 (`usize` would be lossy on 32-bit targets and the
+    /// trainer's `--seed` is a 64-bit RNG state).
+    pub fn u64(&self, name: &str) -> u64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(0)
+    }
+
     pub fn bool(&self, name: &str) -> bool {
         matches!(self.get(name), Some("true") | Some("1") | Some("yes"))
     }
@@ -194,6 +200,17 @@ mod tests {
             .unwrap();
         assert_eq!(p.str("net"), "net11");
         assert_eq!(p.usize("batch"), 32);
+    }
+
+    #[test]
+    fn u64_parses_full_range() {
+        let p = Cli::new("t", "test")
+            .opt("seed", "1", "rng seed")
+            .parse(&argv(&["--seed", "18446744073709551615"]))
+            .unwrap();
+        assert_eq!(p.u64("seed"), u64::MAX);
+        let d = Cli::new("t", "test").opt("seed", "7", "").parse(&argv(&[])).unwrap();
+        assert_eq!(d.u64("seed"), 7);
     }
 
     #[test]

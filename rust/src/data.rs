@@ -57,6 +57,19 @@ impl Dataset {
             y: self.y[..k].to_vec(),
         }
     }
+
+    /// The samples at `idx`, in that order, as an owned dataset (the
+    /// trainer's split/shuffle iterators are index-based; this
+    /// materializes one).
+    pub fn subset(&self, idx: &[u32]) -> Dataset {
+        let mut x = Vec::with_capacity(idx.len() * self.dim);
+        let mut y = Vec::with_capacity(idx.len());
+        for &i in idx {
+            x.extend_from_slice(self.image(i as usize));
+            y.push(self.y[i as usize]);
+        }
+        Dataset { n: idx.len(), dim: self.dim, x, y }
+    }
 }
 
 #[cfg(test)]
@@ -89,6 +102,11 @@ mod tests {
         let t = d.take(1);
         assert_eq!(t.n, 1);
         assert_eq!(t.image(0), &[0.0, 0.5, 1.0]);
+        let s = d.subset(&[1, 0, 1]);
+        assert_eq!((s.n, s.dim), (3, 3));
+        assert_eq!(s.image(0), d.image(1));
+        assert_eq!(s.image(1), d.image(0));
+        assert_eq!(s.y, vec![3, 7, 3]);
     }
 
     #[test]

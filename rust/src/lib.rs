@@ -31,6 +31,11 @@
 //!   (dataflow checks on tapes, symbolic lifetime replay on schedules)
 //!   behind `nullanet verify` and the registry's load/swap gate
 //! * [`isf`] — ON/OFF/DC-set extraction from training activations
+//! * [`train`] — in-Rust binarized training (Algorithm 1): deterministic
+//!   minibatch SGD with straight-through-estimator gradients (plus a
+//!   BOLD-style sign-update rule), seeded shuffling/holdout iterators,
+//!   and the glue that feeds a trained net straight into [`synth`] —
+//!   `nullanet train` / `nullanet distill`
 //! * [`synth`] — Algorithm 2 (OptimizeNeuron / OptimizeLayer / OptimizeNetwork)
 //! * [`pipeline`] — macro/micro pipelining (Section 3.2.2, OptimizeNetwork)
 //! * [`arith`] — behavioural IEEE-754 FP16/FP32 add/mul/MAC (the baselines)
@@ -89,6 +94,7 @@ pub mod server;
 pub mod simd;
 pub mod synth;
 pub mod sys;
+pub mod train;
 pub mod util;
 
 /// Default location of the AOT artifacts, overridable with `NULLANET_ARTIFACTS`.

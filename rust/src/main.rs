@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   tables               print the paper's constant tables (1, 2, 3)
 //!   synth                run Algorithm 2 on a trained net, report costs
+//!   train                train a binarized net in-process, emit a .nnc
+//!   distill              retrain and hot-swap into a running server
 //!   compile              run the staged pipeline, emit a .nnc artifact
 //!   eval                 accuracy of an engine on the test set
 //!   serve                run the TCP serving front-end
@@ -10,10 +12,13 @@
 //!
 //! `compile` is the "compile once" half of compile-once/serve-many:
 //! `eval`/`serve --artifact model.nnc` load its output in milliseconds
-//! instead of re-running synthesis at every cold start.
+//! instead of re-running synthesis at every cold start.  `train` closes
+//! the other half of the loop in one binary: dataset → STE trainer →
+//! Algorithm 2 → verified artifact, no Python in the path; `distill` is
+//! `train` plus an admin-socket swap into a live server.
 //!
 //! Python is never invoked here: everything reads `artifacts/` produced
-//! once by `make artifacts`.
+//! once by `make artifacts` (or trains its own net from a dataset).
 
 use std::sync::Arc;
 
@@ -23,7 +28,7 @@ use nullanet::cost::FpgaModel;
 use nullanet::format_err;
 use nullanet::registry::{ModelMeta, ModelRegistry};
 use nullanet::util::error::Result;
-use nullanet::{artifact, bench_util, data, isf, model, synth};
+use nullanet::{artifact, bench_util, data, isf, jsonio, model, synth, train};
 
 fn main() {
     nullanet::logging::init_from_env();
@@ -33,6 +38,8 @@ fn main() {
     let code = match cmd.as_str() {
         "tables" => run_tables(),
         "synth" => run_synth(&rest),
+        "train" => run_train(&rest),
+        "distill" => run_distill(&rest),
         "compile" => run_compile(&rest),
         "eval" => run_eval(&rest),
         "serve" => run_serve(&rest),
@@ -41,7 +48,8 @@ fn main() {
         _ => {
             eprintln!(
                 "nullanet — reduced-memory-access inference via Boolean logic\n\n\
-                 usage: nullanet <tables|synth|compile|eval|serve|codegen|verify> [--help]"
+                 usage: nullanet <tables|synth|train|distill|compile|eval|serve|codegen|verify> \
+                 [--help]"
             );
             Ok(())
         }
@@ -183,6 +191,284 @@ fn run_synth(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Options shared by `train` and `distill` (everything that determines
+/// the training run and the artifact it writes).
+fn train_cli(program: &str, about: &str) -> Cli {
+    Cli::new(program, about)
+        .opt("data", "", "NDIG dataset path (empty = synthetic stand-in)")
+        .opt("synthetic", "512", "synthetic sample count when no --data")
+        .opt("dim", "64", "synthetic image dimension")
+        .opt("classes", "10", "synthetic class count")
+        .opt("data-seed", "11", "synthetic dataset RNG seed")
+        .opt("hidden", "32,32", "hidden layer sizes, comma separated (min two)")
+        .opt("epochs", "8", "training epochs")
+        .opt("batch", "32", "minibatch size")
+        .opt("lr", "0.1", "initial learning rate")
+        .opt("lr-decay", "0.9", "per-epoch learning-rate multiplier")
+        .opt("val-frac", "0.1", "held-out validation fraction (dataset tail)")
+        .opt("seed", "1", "training RNG seed (same seed = byte-identical artifact)")
+        .opt("rule", "ste", "update rule (ste|bold)")
+        .opt("cap", "4000", "max distinct ISF patterns per layer (0 = all)")
+        .opt("threads", "0", "synthesis worker threads (0 = auto)")
+        .opt("name", "trained", "model name stored in the artifact")
+}
+
+fn load_train_dataset(p: &Parsed) -> Result<data::Dataset> {
+    let path = p.str("data");
+    if !path.is_empty() {
+        return data::Dataset::load(std::path::Path::new(path));
+    }
+    Ok(train::synthetic_digits(
+        p.usize("synthetic").max(1),
+        p.usize("dim").max(1),
+        p.usize("classes").max(2),
+        p.u64("data-seed"),
+    ))
+}
+
+/// `--hidden "32,32"` → `[32, 32]`.  At least two hidden layers: the
+/// artifact format wants one logic tape per hidden layer after the
+/// first, so fewer would compile to zero tapes.
+fn parse_hidden(spec: &str) -> Result<Vec<usize>> {
+    let mut out = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let v: usize = part
+            .parse()
+            .map_err(|_| format_err!("bad --hidden entry {part:?} (want e.g. \"32,32\")"))?;
+        if v == 0 {
+            return Err(format_err!("--hidden sizes must be positive"));
+        }
+        out.push(v);
+    }
+    if out.len() < 2 {
+        return Err(format_err!(
+            "--hidden needs at least two layers (got {}); the artifact format \
+             requires at least one logic tape",
+            out.len()
+        ));
+    }
+    Ok(out)
+}
+
+/// Shared by `train` and `distill`: dataset → STE trainer → Algorithm 2
+/// → verified `.nnc` on disk, all in one invocation.  Returns the
+/// artifact path and the model name stored in it.
+fn train_to_artifact(p: &Parsed) -> Result<(std::path::PathBuf, String)> {
+    let t0 = std::time::Instant::now();
+    let ds = load_train_dataset(p)?;
+    let n_classes = ds.y.iter().map(|&v| v as usize + 1).max().unwrap_or(0);
+    let mut sizes = vec![ds.dim];
+    sizes.extend(parse_hidden(p.str("hidden"))?);
+    sizes.push(n_classes.max(2));
+    let cfg = train::TrainConfig {
+        sizes,
+        epochs: p.usize("epochs").max(1),
+        batch: p.usize("batch").max(1),
+        lr0: p.f64("lr") as f32,
+        lr_decay: p.f64("lr-decay") as f32,
+        seed: p.u64("seed"),
+        rule: train::Rule::parse(p.str("rule"))?,
+        val_frac: p.f64("val-frac"),
+    };
+    let trained = train::train(&ds, &cfg)?;
+    let mut table = bench_util::Table::new(
+        &format!("Training ({} samples, rule {}, seed {})", ds.n, cfg.rule.as_str(), cfg.seed),
+        &["Epoch", "Loss", "Train acc", "Val acc", "Seconds"],
+    );
+    for e in &trained.history {
+        table.row(&[
+            e.epoch.to_string(),
+            format!("{:.6}", e.loss),
+            format!("{:.4}", e.train_acc),
+            format!("{:.4}", e.val_acc),
+            format!("{:.3}", e.secs),
+        ]);
+    }
+    table.print();
+    let threads = if p.usize("threads") == 0 {
+        nullanet::util::default_threads()
+    } else {
+        p.usize("threads")
+    };
+    let scfg = synth::SynthConfig { threads, ..Default::default() };
+    let (compiled, _timings) =
+        train::compile_trained(p.str("name"), &trained, &cfg, &ds, p.usize("cap"), &scfg)?;
+    let out = std::path::PathBuf::from(p.str("out"));
+    compiled.save(&out)?;
+    // Close the loop in this invocation: a trainer bug that emits a
+    // malformed artifact fails here, not at first serve.
+    let report = artifact::verify_artifact(&out);
+    if !report.ok() {
+        return Err(format_err!(
+            "{}: trained artifact failed verification ({})",
+            out.display(),
+            report.summary()
+        ));
+    }
+    let bytes = std::fs::metadata(&out).map(|m| m.len()).unwrap_or(0);
+    println!(
+        "wrote {} ({} bytes, verify: {}) — train acc {:.4}, val acc {:.4}, total {:.1?}",
+        out.display(),
+        bytes,
+        report.summary(),
+        trained.train_acc,
+        trained.val_acc,
+        t0.elapsed()
+    );
+    let bj = p.str("bench-json");
+    if !bj.is_empty() {
+        write_train_bench_json(bj, &trained, &cfg, &ds)?;
+    }
+    Ok((out, p.str("name").to_string()))
+}
+
+/// Finite numbers as numbers, NaN/inf as JSON null (NaN would serialize
+/// as the invalid token `NaN`).
+fn fnum(v: f64) -> jsonio::Json {
+    if v.is_finite() {
+        jsonio::num(v)
+    } else {
+        jsonio::Json::Null
+    }
+}
+
+fn write_train_bench_json(
+    path: &str,
+    trained: &train::Trained,
+    cfg: &train::TrainConfig,
+    ds: &data::Dataset,
+) -> Result<()> {
+    use jsonio::{num, obj, s, Json};
+    let epochs: Vec<Json> = trained
+        .history
+        .iter()
+        .map(|e| {
+            obj(vec![
+                ("epoch", num(e.epoch as f64)),
+                ("loss", fnum(e.loss)),
+                ("train_acc", fnum(e.train_acc)),
+                ("val_acc", fnum(e.val_acc)),
+                ("secs", num(e.secs)),
+            ])
+        })
+        .collect();
+    let j = obj(vec![
+        ("bench", s("train")),
+        ("rule", s(cfg.rule.as_str())),
+        // Seeds/digests are u64: strings, because they don't survive f64.
+        ("seed", Json::Str(cfg.seed.to_string())),
+        ("epochs", num(cfg.epochs as f64)),
+        ("batch", num(cfg.batch as f64)),
+        ("sizes", Json::Arr(cfg.sizes.iter().map(|&v| num(v as f64)).collect())),
+        (
+            "dataset",
+            obj(vec![
+                ("n", num(ds.n as f64)),
+                ("dim", num(ds.dim as f64)),
+                ("digest", Json::Str(format!("{:016x}", artifact::dataset_digest(ds)))),
+            ]),
+        ),
+        ("train_acc", fnum(trained.train_acc)),
+        ("val_acc", fnum(trained.val_acc)),
+        ("results", Json::Arr(epochs)),
+    ]);
+    std::fs::write(path, format!("{j}\n"))?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+fn run_train(args: &[String]) -> Result<()> {
+    let p = train_cli("nullanet train", "train a binarized net, compile + verify a .nnc")
+        .opt("out", "trained.nnc", "output artifact path")
+        .opt("bench-json", "", "also write run stats as BENCH-style JSON here")
+        .parse(args)
+        .map_err(|h| format_err!("{h}"))?;
+    train_to_artifact(&p)?;
+    Ok(())
+}
+
+fn run_distill(args: &[String]) -> Result<()> {
+    let p = train_cli("nullanet distill", "retrain and hot-swap into a running server")
+        .opt("out", "distilled.nnc", "output artifact path")
+        .opt("bench-json", "", "also write run stats as BENCH-style JSON here")
+        .opt("addr", "127.0.0.1:7878", "admin address of the running server")
+        .parse(args)
+        .map_err(|h| format_err!("{h}"))?;
+    let (out, name) = train_to_artifact(&p)?;
+    let generation = swap_into_server(p.str("addr"), &name, &out)?;
+    println!(
+        "swapped {} into {} as model {name} (generation {generation})",
+        out.display(),
+        p.str("addr")
+    );
+    Ok(())
+}
+
+fn admin_roundtrip(
+    conn: &mut std::net::TcpStream,
+    reader: &mut std::io::BufReader<std::net::TcpStream>,
+    req: &jsonio::Json,
+) -> Result<jsonio::Json> {
+    use std::io::{BufRead, Write};
+    let mut line = req.to_string();
+    line.push('\n');
+    conn.write_all(line.as_bytes())?;
+    let mut reply = String::new();
+    reader.read_line(&mut reply)?;
+    if reply.is_empty() {
+        return Err(format_err!("server closed the admin connection"));
+    }
+    jsonio::Json::parse(reply.trim_end())
+        .map_err(|e| format_err!("bad admin reply {reply:?}: {e}"))
+}
+
+/// Admin-socket client for `distill`: ask the server to atomically swap
+/// `name` to the freshly trained artifact (in-flight requests on the old
+/// incarnation drain, none drop).  Falls back to `load` when the name is
+/// not resident yet, so first deployment needs no special casing.
+fn swap_into_server(addr: &str, name: &str, path: &std::path::Path) -> Result<u64> {
+    let mut conn = std::net::TcpStream::connect(addr)
+        .map_err(|e| format_err!("connect {addr}: {e} (is `nullanet serve` running?)"))?;
+    let mut reader = std::io::BufReader::new(
+        conn.try_clone().map_err(|e| format_err!("clone admin socket: {e}"))?,
+    );
+    let apath = path.to_string_lossy().to_string();
+    let req = |cmd: &str| {
+        jsonio::obj(vec![
+            ("cmd", jsonio::s(cmd)),
+            ("name", jsonio::s(name)),
+            ("artifact", jsonio::s(&apath)),
+        ])
+    };
+    let mut reply = admin_roundtrip(&mut conn, &mut reader, &req("swap"))?;
+    if let Some(msg) = reply.get("error").and_then(jsonio::Json::as_str) {
+        // The registry's swap refusal for a name that is not resident.
+        if !msg.contains("not loaded") {
+            return Err(format_err!("server refused swap: {msg}"));
+        }
+        // First deployment of this name: nothing resident to swap.
+        reply = admin_roundtrip(&mut conn, &mut reader, &req("load"))?;
+        if let Some(msg) = reply.get("error").and_then(jsonio::Json::as_str) {
+            return Err(format_err!("server refused load: {msg}"));
+        }
+        // `load` replies without a generation; read it back from info.
+        reply = admin_roundtrip(
+            &mut conn,
+            &mut reader,
+            &jsonio::obj(vec![("cmd", jsonio::s("info")), ("model", jsonio::s(name))]),
+        )?;
+    }
+    reply
+        .get("generation")
+        .and_then(jsonio::Json::as_f64)
+        .map(|g| g as u64)
+        .ok_or_else(|| format_err!("admin reply carried no generation: {reply}"))
+}
+
 fn build_engine(
     art: &model::Artifacts,
     net_name: &str,
@@ -241,6 +527,7 @@ fn engine_from_cli(p: &Parsed, art: Option<&model::Artifacts>) -> Result<EngineH
         }
         let t0 = std::time::Instant::now();
         let compiled = artifact::CompiledModel::load(std::path::Path::new(apath))?;
+        let mut verify_warnings = None;
         if verify_on_load(p) {
             let report = compiled.verify();
             for d in &report.diags {
@@ -253,9 +540,11 @@ fn engine_from_cli(p: &Parsed, art: Option<&model::Artifacts>) -> Result<EngineH
                 ));
             }
             nullanet::info!("verify {apath}: {}", report.summary());
+            verify_warnings = Some(report.n_warnings());
         }
         let (name, n_layers, ref_accuracy) =
             (compiled.name.clone(), compiled.layers.len(), compiled.accuracy_test);
+        let provenance = compiled.provenance.clone();
         // Consumes the artifact: tapes/tensors move into the engine.
         let eng = engine::engine_from_artifact(compiled, width)?;
         nullanet::info!(
@@ -271,6 +560,8 @@ fn engine_from_cli(p: &Parsed, art: Option<&model::Artifacts>) -> Result<EngineH
             artifact_version: Some(artifact::ARTIFACT_VERSION),
             generation: 0,
             simd: eng.simd_backend().map(str::to_string),
+            verify_warnings,
+            provenance,
         };
         return Ok(EngineHandle {
             eng,

@@ -26,6 +26,21 @@ impl Tensor {
     pub fn numel(&self) -> usize {
         self.shape.iter().product()
     }
+
+    /// Build a tensor from a shape and its row-major values.  Panics if
+    /// they disagree — construction sites are build-time code paths
+    /// (trainer export, tests), never the request path.
+    pub fn from_vec(shape: Vec<usize>, f32s: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), f32s.len(), "shape/data mismatch");
+        Tensor { shape, f32s }
+    }
+
+    /// A tensor with every element equal to `v` (e.g. the trainer's
+    /// fixed per-layer scale broadcast to the `scale{i}` vector).
+    pub fn filled(shape: Vec<usize>, v: f32) -> Tensor {
+        let numel = shape.iter().product();
+        Tensor { shape, f32s: vec![v; numel] }
+    }
 }
 
 /// Which architecture a net entry is.

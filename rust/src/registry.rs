@@ -67,6 +67,11 @@ pub struct ModelMeta {
     /// artifact models always verified with zero errors, because a
     /// failing report rejects the artifact before registration.
     pub verify_warnings: Option<usize>,
+    /// Training provenance from the artifact footer (seed, epochs, rule,
+    /// dataset digest), when the model was trained by the in-Rust
+    /// trainer — so `{"cmd":"info"}` answers "which run produced the
+    /// model that is serving right now".
+    pub provenance: Option<crate::artifact::Provenance>,
 }
 
 impl ModelMeta {
@@ -83,6 +88,7 @@ impl ModelMeta {
             generation: 0,
             simd: eng.simd_backend().map(str::to_string),
             verify_warnings: None,
+            provenance: None,
         }
     }
 
@@ -118,6 +124,17 @@ impl ModelMeta {
                     ("ok", Json::Bool(true)),
                     ("errors", num(0.0)),
                     ("warnings", num(w as f64)),
+                ]),
+            ));
+        }
+        if let Some(p) = &self.provenance {
+            pairs.push((
+                "provenance",
+                obj(vec![
+                    ("seed", Json::Str(p.seed.to_string())),
+                    ("epochs", num(p.epochs as f64)),
+                    ("rule", Json::Str(p.rule.clone())),
+                    ("dataset_digest", Json::Str(format!("{:016x}", p.dataset_digest))),
                 ]),
             ));
         }
@@ -358,6 +375,7 @@ impl ModelRegistry {
             );
         }
         let model = name.unwrap_or(&compiled.name).to_string();
+        let provenance = compiled.provenance.clone();
         // The artifact is consumed: tapes and tensors move into the
         // engine rather than being cloned.
         let eng = engine_from_artifact(compiled, width)?;
@@ -373,6 +391,7 @@ impl ModelRegistry {
             generation: 0,
             simd: eng.simd_backend().map(str::to_string),
             verify_warnings: Some(report.n_warnings()),
+            provenance,
         };
         Ok((meta, eng))
     }
@@ -508,6 +527,12 @@ mod tests {
             generation: 5,
             simd: Some("avx2".into()),
             verify_warnings: Some(2),
+            provenance: Some(crate::artifact::Provenance {
+                seed: 42,
+                epochs: 6,
+                rule: "ste".into(),
+                dataset_digest: 0xabcd,
+            }),
         };
         let j = meta.to_json(true);
         assert_eq!(j.get("model").and_then(Json::as_str), Some("net11"));
@@ -520,6 +545,12 @@ mod tests {
         assert_eq!(j.get("simd").and_then(Json::as_str), Some("avx2"));
         assert_eq!(j.at(&["verify", "ok"]).and_then(Json::as_bool), Some(true));
         assert_eq!(j.at(&["verify", "warnings"]).and_then(Json::as_usize), Some(2));
+        assert_eq!(j.at(&["provenance", "seed"]).and_then(Json::as_str), Some("42"));
+        assert_eq!(j.at(&["provenance", "rule"]).and_then(Json::as_str), Some("ste"));
+        assert_eq!(
+            j.at(&["provenance", "dataset_digest"]).and_then(Json::as_str),
+            Some("000000000000abcd")
+        );
         // Engines without plane kernels omit the field entirely.
         let meta = ModelMeta::for_engine("c", &ConstEngine(0), 64);
         assert!(meta.simd.is_none());
@@ -555,6 +586,7 @@ mod tests {
                 stats: LayerStats::default(),
             }],
             params: BTreeMap::new(),
+            provenance: None,
         };
         cm.save(&good).unwrap();
         // Flip one tape fanin inside the layer section; the per-section

@@ -177,9 +177,26 @@ pub fn compile_net(
     cfg: &SynthConfig,
 ) -> Result<(CompiledModel, Vec<StageTimings>)> {
     let obs = crate::isf::load_observations(&net.dir.join("activations.bin"))?;
+    compile_observations(&net.name, &net.arch, net.accuracy_test, &net.tensors, &obs, cap, cfg)
+}
+
+/// The pipeline body of [`compile_net`], over observations already in
+/// memory — the entry point for the in-Rust trainer
+/// ([`crate::train::compile_trained`]), which never touches an
+/// `activations.bin` file.  Provenance is left `None`; callers that
+/// know the training run stamp it afterwards.
+pub fn compile_observations(
+    name: &str,
+    arch: &crate::model::Arch,
+    accuracy_test: f64,
+    tensors: &BTreeMap<String, crate::model::Tensor>,
+    obs: &[crate::isf::LayerObservations],
+    cap: usize,
+    cfg: &SynthConfig,
+) -> Result<(CompiledModel, Vec<StageTimings>)> {
     let mut layers = Vec::new();
     let mut timings = Vec::new();
-    for o in &obs {
+    for o in obs {
         let t = Instant::now();
         let isf = crate::isf::extract(o, &crate::isf::IsfConfig { max_patterns: cap });
         let extract = t.elapsed();
@@ -263,20 +280,20 @@ pub fn compile_net(
     }
     // Non-logic parameters the engines need (first/last layer weights).
     let mut params = BTreeMap::new();
-    for pname in required_params(&net.arch) {
-        let t = net
-            .tensors
+    for pname in required_params(arch) {
+        let t = tensors
             .get(&pname)
-            .ok_or_else(|| format_err!("{}: tensor {pname} missing from artifacts", net.name))?;
+            .ok_or_else(|| format_err!("{name}: tensor {pname} missing from artifacts"))?;
         params.insert(pname, t.clone());
     }
     Ok((
         CompiledModel {
-            name: net.name.clone(),
-            arch: net.arch.clone(),
-            accuracy_test: net.accuracy_test,
+            name: name.to_string(),
+            arch: arch.clone(),
+            accuracy_test,
             layers,
             params,
+            provenance: None,
         },
         timings,
     ))

@@ -1,0 +1,96 @@
+//! Deterministic dataset iteration for the trainer: a held-out
+//! validation split plus per-epoch shuffled minibatches.
+//!
+//! Both are index-based (layered on [`crate::data::Dataset`] without
+//! copying images) and fully deterministic: the holdout is the dataset
+//! tail, and the epoch order is a Fisher–Yates shuffle driven by the
+//! caller's [`crate::util::SplitMix64`] — the same generator that seeds
+//! the weights, so one `--seed` fixes the entire run (see the
+//! determinism contract in DESIGN.md).
+
+/// Split `n` samples into train/validation index sets.  The validation
+/// set is the dataset *tail* — deterministic, independent of the RNG,
+/// and trivial to reproduce in the Python parity mirror: it holds
+/// `clamp(trunc(n * val_frac), 1, n - 1)` samples (0 when `val_frac <=
+/// 0` or `n < 2`).
+pub fn holdout_split(n: usize, val_frac: f64) -> (Vec<u32>, Vec<u32>) {
+    let n_val = if val_frac <= 0.0 || n < 2 {
+        0
+    } else {
+        ((n as f64 * val_frac) as usize).clamp(1, n - 1)
+    };
+    let cut = (n - n_val) as u32;
+    ((0..cut).collect(), (cut..n as u32).collect())
+}
+
+/// Iterator over minibatch index slices of a (pre-shuffled) epoch
+/// order.  The final batch may be short; every sample appears exactly
+/// once per epoch.
+pub struct Minibatches<'a> {
+    order: &'a [u32],
+    batch: usize,
+}
+
+impl<'a> Iterator for Minibatches<'a> {
+    type Item = &'a [u32];
+
+    fn next(&mut self) -> Option<&'a [u32]> {
+        if self.order.is_empty() {
+            return None;
+        }
+        let k = self.batch.min(self.order.len());
+        let (head, rest) = self.order.split_at(k);
+        self.order = rest;
+        Some(head)
+    }
+}
+
+/// Minibatches of `batch` indices over `order` (in order — shuffle
+/// first for SGD).
+pub fn minibatches(order: &[u32], batch: usize) -> Minibatches<'_> {
+    Minibatches { order, batch: batch.max(1) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn holdout_tail_is_validation() {
+        let (tr, va) = holdout_split(10, 0.2);
+        assert_eq!(tr, (0..8).collect::<Vec<u32>>());
+        assert_eq!(va, vec![8, 9]);
+    }
+
+    #[test]
+    fn holdout_clamps_to_at_least_one_and_at_most_n_minus_one() {
+        let (tr, va) = holdout_split(5, 0.01);
+        assert_eq!((tr.len(), va.len()), (4, 1));
+        let (tr, va) = holdout_split(5, 0.99);
+        assert_eq!((tr.len(), va.len()), (1, 4));
+        let (tr, va) = holdout_split(5, 0.0);
+        assert_eq!((tr.len(), va.len()), (5, 0));
+        let (tr, va) = holdout_split(1, 0.5);
+        assert_eq!((tr.len(), va.len()), (1, 0));
+    }
+
+    #[test]
+    fn minibatches_cover_every_index_once() {
+        let order: Vec<u32> = (0..10).collect();
+        let got: Vec<Vec<u32>> = minibatches(&order, 4).map(|b| b.to_vec()).collect();
+        assert_eq!(got, vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7], vec![8, 9]]);
+    }
+
+    #[test]
+    fn shuffled_epoch_is_a_permutation_and_deterministic() {
+        let mut a: Vec<u32> = (0..50).collect();
+        let mut b: Vec<u32> = (0..50).collect();
+        SplitMix64::new(9).shuffle(&mut a);
+        SplitMix64::new(9).shuffle(&mut b);
+        assert_eq!(a, b);
+        let mut sorted = a.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<u32>>());
+    }
+}

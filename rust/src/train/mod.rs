@@ -1,0 +1,704 @@
+//! In-Rust binarized training (Algorithm 1) feeding the Algorithm-2
+//! synthesis pipeline — the missing front half of the production loop
+//! retrain → synthesize → hot-swap.
+//!
+//! The network is the paper's MLP with *binary hidden activations*:
+//!
+//! ```text
+//!   z_i = (a_{i-1} · W_i) * c_i + b_i        c_i = 1/sqrt(n_in)  (fixed)
+//!   a_i = sign(z_i) ∈ {-1, +1}               hidden layers
+//!   logits = z_L                             last layer (no binarization)
+//! ```
+//!
+//! The fixed per-layer scalar `c_i` replaces batch-norm: it is exported
+//! as the artifact's `scale{i}` vector, so the serving engines
+//! ([`crate::coordinator::engine`]) evaluate *exactly* the function that
+//! was trained — the first layer's sign thresholds and the popcount
+//! last layer both compute `dot * scale + bias` with the same
+//! left-to-right accumulation order as the trainer's forward pass.
+//!
+//! Backward is the straight-through estimator (the 2018 recipe):
+//! `d sign(z)/dz := 1 when |z| <= 1, else 0`.  Two update rules are
+//! selectable: `ste` (plain minibatch SGD on the STE gradients) and
+//! `bold` (a BOLD-style Boolean/sign update, `w -= lr * sign(g)` — only
+//! the *direction* of the gradient is consulted, which is both cheaper
+//! and often better-behaved for binarized nets; see PAPERS.md).
+//!
+//! The loss is mean squared error on the logits against one-hot
+//! targets.  This is deliberate: MSE keeps the entire training
+//! computation inside IEEE-754 `+ - * / sqrt` (no transcendentals), so
+//! a NumPy mirror (`python/compile/train_parity.py`) reproduces every
+//! run **bit-for-bit** — the cross-trainer parity fixture in
+//! `rust/tests/fixtures/` is checked down to the final weight bits.
+//!
+//! Determinism contract: one [`SplitMix64`] stream seeded by
+//! `TrainConfig::seed` drives, in order, (1) Glorot-uniform weight init
+//! (layer by layer, row-major) and (2) the per-epoch Fisher–Yates
+//! shuffle of the train indices.  Nothing else is stochastic and no
+//! accumulation is reordered, so two runs with the same seed produce
+//! bit-identical weights — and byte-identical `.nnc` artifacts.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::artifact::{dataset_digest, CompiledModel, Provenance};
+use crate::data::Dataset;
+use crate::isf::LayerObservations;
+use crate::model::{Arch, Tensor};
+use crate::synth::{self, StageTimings, SynthConfig};
+use crate::util::error::Result;
+use crate::util::SplitMix64;
+use crate::{bail, format_err};
+
+pub mod batches;
+
+/// Selectable update rule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rule {
+    /// Straight-through-estimator gradients into plain minibatch SGD.
+    Ste,
+    /// BOLD-style sign update: `w -= lr * sign(grad)` — only the Boolean
+    /// direction of each STE gradient is used.
+    Bold,
+}
+
+impl Rule {
+    pub fn parse(name: &str) -> Result<Rule> {
+        match name {
+            "ste" => Ok(Rule::Ste),
+            "bold" => Ok(Rule::Bold),
+            other => Err(format_err!("unknown training rule {other:?} (ste|bold)")),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Rule::Ste => "ste",
+            Rule::Bold => "bold",
+        }
+    }
+}
+
+/// Everything that determines a training run (and therefore, via the
+/// determinism contract, the resulting artifact bytes).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Full layer sizes, input through output: `[dim, h1, .., classes]`.
+    /// At least 4 entries (two hidden layers) so the compiled artifact
+    /// has at least one logic tape.
+    pub sizes: Vec<usize>,
+    pub epochs: usize,
+    pub batch: usize,
+    /// Initial learning rate; multiplied by `lr_decay` after each epoch.
+    pub lr0: f32,
+    pub lr_decay: f32,
+    pub seed: u64,
+    pub rule: Rule,
+    /// Fraction of the dataset held out (from the tail) for validation.
+    pub val_frac: f64,
+}
+
+impl TrainConfig {
+    pub fn new(sizes: Vec<usize>) -> TrainConfig {
+        TrainConfig {
+            sizes,
+            epochs: 8,
+            batch: 32,
+            lr0: 0.1,
+            lr_decay: 0.9,
+            seed: 1,
+            rule: Rule::Ste,
+            val_frac: 0.1,
+        }
+    }
+}
+
+/// Per-epoch progress, logged as structured lines and exported by the
+/// `BENCH_train.json` emitter.
+#[derive(Clone, Debug)]
+pub struct EpochStats {
+    pub epoch: usize,
+    /// Mean squared error over the epoch's train samples (f64 accumulator;
+    /// diagnostic only — not part of the bit-determinism contract).
+    pub loss: f64,
+    pub train_acc: f64,
+    pub val_acc: f64,
+    /// Wall-clock seconds for the epoch (never serialized into artifacts).
+    pub secs: f64,
+}
+
+/// A trained binarized net: weights/biases per layer plus the fixed
+/// scales, ready to become artifact tensors + ISF observations.
+#[derive(Clone, Debug)]
+pub struct Trained {
+    pub sizes: Vec<usize>,
+    /// Row-major `[n_in, n_out]` weight matrix per layer.
+    pub weights: Vec<Vec<f32>>,
+    pub biases: Vec<Vec<f32>>,
+    /// Fixed activation scale `c_i = 1/sqrt(n_in)` per layer.
+    pub scales: Vec<f32>,
+    pub history: Vec<EpochStats>,
+    /// Final-epoch accuracy on the train split.
+    pub train_acc: f64,
+    /// Final-epoch accuracy on the held-out split (NaN when no holdout).
+    pub val_acc: f64,
+}
+
+/// The forward accumulation kernel: `z[j] += x[k] * w[k*n_out + j]`,
+/// `k` ascending for every `j` — the exact sequential MAC chain of
+/// [`crate::arith::mac_dot_col_f32`], which the unit tests cross-check
+/// bit-for-bit (the trainer side of the determinism contract).
+pub fn gemv_rowmajor(x: &[f32], w: &[f32], n_out: usize, z: &mut [f32]) {
+    for (k, &a) in x.iter().enumerate() {
+        let row = &w[k * n_out..(k + 1) * n_out];
+        for (zj, &wkj) in z.iter_mut().zip(row) {
+            *zj += a * wkj;
+        }
+    }
+}
+
+/// First maximum wins (ties broken toward the lower class index) — the
+/// NumPy `argmax` convention, used for train/val accuracy so the parity
+/// mirror matches exactly.  [`crate::model::argmax`] keeps its own
+/// convention for serving.
+pub fn argmax_first(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (j, &v) in xs.iter().enumerate().skip(1) {
+        if v > xs[best] {
+            best = j;
+        }
+    }
+    best
+}
+
+/// Binarized inference forward pass over raw layer storage (shared by
+/// [`Trained::logits`] and the mid-training evaluation, which runs
+/// before a `Trained` value exists).
+fn forward_logits(
+    sizes: &[usize],
+    weights: &[Vec<f32>],
+    biases: &[Vec<f32>],
+    scales: &[f32],
+    x: &[f32],
+) -> Vec<f32> {
+    let nl = sizes.len() - 1;
+    let mut a = x.to_vec();
+    for li in 0..nl {
+        let n_out = sizes[li + 1];
+        let mut z = vec![0.0f32; n_out];
+        gemv_rowmajor(&a, &weights[li], n_out, &mut z);
+        let c = scales[li];
+        for (zj, &bj) in z.iter_mut().zip(&biases[li]) {
+            *zj = *zj * c + bj;
+        }
+        if li + 1 < nl {
+            for zj in z.iter_mut() {
+                *zj = if *zj >= 0.0 { 1.0 } else { -1.0 };
+            }
+        }
+        a = z;
+    }
+    a
+}
+
+fn eval_accuracy(
+    sizes: &[usize],
+    weights: &[Vec<f32>],
+    biases: &[Vec<f32>],
+    scales: &[f32],
+    ds: &Dataset,
+    idx: &[u32],
+) -> f64 {
+    if idx.is_empty() {
+        return f64::NAN;
+    }
+    let hits = idx
+        .iter()
+        .filter(|&&i| {
+            let logits = forward_logits(sizes, weights, biases, scales, ds.image(i as usize));
+            argmax_first(&logits) == ds.y[i as usize] as usize
+        })
+        .count();
+    hits as f64 / idx.len() as f64
+}
+
+impl Trained {
+    fn nl(&self) -> usize {
+        self.sizes.len() - 1
+    }
+
+    /// Binarized inference forward pass: returns the logits.
+    pub fn logits(&self, x: &[f32]) -> Vec<f32> {
+        forward_logits(&self.sizes, &self.weights, &self.biases, &self.scales, x)
+    }
+
+    pub fn predict(&self, x: &[f32]) -> usize {
+        argmax_first(&self.logits(x))
+    }
+
+    /// Accuracy over the given sample indices.
+    pub fn accuracy(&self, ds: &Dataset, idx: &[u32]) -> f64 {
+        eval_accuracy(&self.sizes, &self.weights, &self.biases, &self.scales, ds, idx)
+    }
+
+    /// Export the artifact parameter tensors: `w{i}` `[n_in, n_out]`
+    /// row-major, `scale{i}` (the fixed `c_i` broadcast to a vector, the
+    /// shape the serving engines read) and `bias{i}`.
+    pub fn tensors(&self) -> BTreeMap<String, Tensor> {
+        let mut m = BTreeMap::new();
+        for li in 0..self.nl() {
+            let (n_in, n_out) = (self.sizes[li], self.sizes[li + 1]);
+            m.insert(
+                format!("w{}", li + 1),
+                Tensor::from_vec(vec![n_in, n_out], self.weights[li].clone()),
+            );
+            m.insert(format!("scale{}", li + 1), Tensor::filled(vec![n_out], self.scales[li]));
+            m.insert(
+                format!("bias{}", li + 1),
+                Tensor::from_vec(vec![n_out], self.biases[li].clone()),
+            );
+        }
+        m
+    }
+
+    /// Record the hidden-activation observations the ISF extractor
+    /// needs: for each inner layer `i` (2 ..= nl-1), the bit-packed
+    /// layer-(i-1) activations (inputs) and layer-i activations
+    /// (outputs) over every sample of `ds` — exactly the
+    /// `activations.bin` contract of [`crate::isf`], bit = 1 iff the
+    /// activation is +1.
+    pub fn observations(&self, ds: &Dataset) -> Vec<LayerObservations> {
+        let nl = self.nl();
+        let n = ds.n;
+        let strides: Vec<usize> = self.sizes.iter().map(|&s| s.div_ceil(8)).collect();
+        let mut packed: Vec<Vec<u8>> = (1..nl).map(|li| vec![0u8; n * strides[li]]).collect();
+        let mut a = Vec::new();
+        for s in 0..n {
+            a.clear();
+            a.extend_from_slice(ds.image(s));
+            for li in 0..nl - 1 {
+                let n_out = self.sizes[li + 1];
+                let mut z = vec![0.0f32; n_out];
+                gemv_rowmajor(&a, &self.weights[li], n_out, &mut z);
+                let c = self.scales[li];
+                let bits = &mut packed[li][s * strides[li + 1]..];
+                for (j, (zj, &bj)) in z.iter_mut().zip(&self.biases[li]).enumerate() {
+                    *zj = *zj * c + bj;
+                    if *zj >= 0.0 {
+                        *zj = 1.0;
+                        bits[j / 8] |= 1 << (j % 8);
+                    } else {
+                        *zj = -1.0;
+                    }
+                }
+                a = z;
+            }
+        }
+        (2..=nl - 1)
+            .map(|i| LayerObservations {
+                name: format!("layer{i}"),
+                n_in: self.sizes[i - 1],
+                n_out: self.sizes[i],
+                inputs: packed[i - 2].clone(),
+                outputs: packed[i - 1].clone(),
+                n_samples: n,
+            })
+            .collect()
+    }
+}
+
+/// Per-layer gradient buffers, reused across batches.
+struct Grads {
+    gw: Vec<Vec<f32>>,
+    gb: Vec<Vec<f32>>,
+}
+
+impl Grads {
+    fn zeroed(sizes: &[usize]) -> Grads {
+        let nl = sizes.len() - 1;
+        Grads {
+            gw: (0..nl).map(|li| vec![0.0f32; sizes[li] * sizes[li + 1]]).collect(),
+            gb: (0..nl).map(|li| vec![0.0f32; sizes[li + 1]]).collect(),
+        }
+    }
+
+    fn clear(&mut self) {
+        for g in self.gw.iter_mut().chain(self.gb.iter_mut()) {
+            g.iter_mut().for_each(|v| *v = 0.0);
+        }
+    }
+}
+
+fn sign_f32(g: f32) -> f32 {
+    if g > 0.0 {
+        1.0
+    } else if g < 0.0 {
+        -1.0
+    } else {
+        0.0
+    }
+}
+
+/// Train a binarized MLP on `ds` (see the module docs for the exact
+/// math and the determinism contract).
+pub fn train(ds: &Dataset, cfg: &TrainConfig) -> Result<Trained> {
+    let sizes = &cfg.sizes;
+    if sizes.len() < 4 {
+        bail!(
+            "train: sizes {sizes:?} too shallow — need >= 2 hidden layers so the \
+             compiled artifact has at least one logic tape"
+        );
+    }
+    if sizes[0] != ds.dim {
+        bail!("train: sizes[0] = {} but dataset dim = {}", sizes[0], ds.dim);
+    }
+    let n_classes = ds.y.iter().map(|&y| y as usize + 1).max().unwrap_or(0);
+    let n_out_last = *sizes.last().unwrap_or(&0);
+    if n_out_last < n_classes {
+        bail!("train: output size {n_out_last} < {n_classes} classes in the dataset");
+    }
+    if ds.n == 0 || cfg.epochs == 0 {
+        bail!("train: empty dataset or zero epochs");
+    }
+    let nl = sizes.len() - 1;
+    let mut rng = SplitMix64::new(cfg.seed);
+
+    // Glorot-uniform init, layer by layer, flat row-major draw order —
+    // the first section of the seed's RNG stream (mirrored by the
+    // parity script).  Biases start at zero (no draws).
+    let mut weights: Vec<Vec<f32>> = Vec::with_capacity(nl);
+    let mut scales: Vec<f32> = Vec::with_capacity(nl);
+    for li in 0..nl {
+        let (n_in, n_out) = (sizes[li], sizes[li + 1]);
+        let lim = (6.0f64 / (n_in + n_out) as f64).sqrt() as f32;
+        weights.push((0..n_in * n_out).map(|_| rng.f32_range(-lim, lim)).collect());
+        scales.push(1.0f32 / (n_in as f32).sqrt());
+    }
+    let mut biases: Vec<Vec<f32>> = (0..nl).map(|li| vec![0.0f32; sizes[li + 1]]).collect();
+
+    let (mut train_idx, val_idx) = batches::holdout_split(ds.n, cfg.val_frac);
+    let mut grads = Grads::zeroed(sizes);
+    // Per-layer forward/backward scratch: activations a[0..=nl], pre-
+    // activations z[0..nl], gradients dz[0..nl].
+    let mut acts: Vec<Vec<f32>> = sizes.iter().map(|&s| vec![0.0f32; s]).collect();
+    let mut zs: Vec<Vec<f32>> = (0..nl).map(|li| vec![0.0f32; sizes[li + 1]]).collect();
+    let mut dzs: Vec<Vec<f32>> = (0..nl).map(|li| vec![0.0f32; sizes[li + 1]]).collect();
+
+    let mut lr = cfg.lr0;
+    let mut history = Vec::with_capacity(cfg.epochs);
+    for epoch in 1..=cfg.epochs {
+        let t0 = Instant::now();
+        rng.shuffle(&mut train_idx);
+        let mut loss_sum = 0.0f64;
+        for batch in batches::minibatches(&train_idx, cfg.batch) {
+            grads.clear();
+            let invb = 1.0f32 / (batch.len() as f32);
+            for &si in batch {
+                let s = si as usize;
+                // Forward, storing z and a per layer.
+                acts[0].copy_from_slice(ds.image(s));
+                for li in 0..nl {
+                    let n_out = sizes[li + 1];
+                    let (lo, hi) = acts.split_at_mut(li + 1);
+                    let (a_in, a_out) = (&lo[li], &mut hi[0]);
+                    let z = &mut zs[li];
+                    z.iter_mut().for_each(|v| *v = 0.0);
+                    gemv_rowmajor(a_in, &weights[li], n_out, z);
+                    let c = scales[li];
+                    for ((zj, &bj), aj) in z.iter_mut().zip(&biases[li]).zip(a_out.iter_mut()) {
+                        *zj = *zj * c + bj;
+                        *aj = if li + 1 < nl {
+                            if *zj >= 0.0 {
+                                1.0
+                            } else {
+                                -1.0
+                            }
+                        } else {
+                            *zj
+                        };
+                    }
+                }
+                // Output error: MSE on logits vs one-hot, averaged over
+                // the batch via invb.
+                let y = ds.y[s] as usize;
+                for (j, dj) in dzs[nl - 1].iter_mut().enumerate() {
+                    let t = if j == y { 1.0f32 } else { 0.0f32 };
+                    let e = zs[nl - 1][j] - t;
+                    loss_sum += f64::from(e * e);
+                    *dj = e * invb;
+                }
+                // Backward: raw gradient accumulation (the fixed scale
+                // c is folded into the update step), then the STE gate
+                // |z| <= 1 into the previous layer.
+                for li in (0..nl).rev() {
+                    let n_out = sizes[li + 1];
+                    for (k, &a) in acts[li].iter().enumerate() {
+                        let grow = &mut grads.gw[li][k * n_out..(k + 1) * n_out];
+                        for (g, &d) in grow.iter_mut().zip(dzs[li].iter()) {
+                            *g += a * d;
+                        }
+                    }
+                    for (g, &d) in grads.gb[li].iter_mut().zip(dzs[li].iter()) {
+                        *g += d;
+                    }
+                    if li > 0 {
+                        let c = scales[li];
+                        let (dz_head, dz_tail) = dzs.split_at_mut(li);
+                        let dz = &dz_tail[0];
+                        let dz_prev = &mut dz_head[li - 1];
+                        for (k, dp) in dz_prev.iter_mut().enumerate() {
+                            let mut sum = 0.0f32;
+                            for (j, &d) in dz.iter().enumerate() {
+                                sum += weights[li][k * n_out + j] * d;
+                            }
+                            let da = sum * c;
+                            *dp = if zs[li - 1][k].abs() <= 1.0 { da } else { 0.0 };
+                        }
+                    }
+                }
+            }
+            // Update.  `ste`: SGD with the layer scale folded into the
+            // step (dz/dw = a * c).  `bold`: sign of the raw gradient —
+            // c > 0 never changes the sign, so folding is unnecessary.
+            for li in 0..nl {
+                match cfg.rule {
+                    Rule::Ste => {
+                        let lrc = lr * scales[li];
+                        for (w, &g) in weights[li].iter_mut().zip(&grads.gw[li]) {
+                            *w -= lrc * g;
+                        }
+                        for (b, &g) in biases[li].iter_mut().zip(&grads.gb[li]) {
+                            *b -= lr * g;
+                        }
+                    }
+                    Rule::Bold => {
+                        for (w, &g) in weights[li].iter_mut().zip(&grads.gw[li]) {
+                            *w -= lr * sign_f32(g);
+                        }
+                        for (b, &g) in biases[li].iter_mut().zip(&grads.gb[li]) {
+                            *b -= lr * sign_f32(g);
+                        }
+                    }
+                }
+            }
+        }
+        lr *= cfg.lr_decay;
+
+        let train_acc = eval_accuracy(sizes, &weights, &biases, &scales, ds, &train_idx);
+        let val_acc = eval_accuracy(sizes, &weights, &biases, &scales, ds, &val_idx);
+        let loss = loss_sum / (2.0 * train_idx.len() as f64);
+        let secs = t0.elapsed().as_secs_f64();
+        crate::info!(
+            "train epoch={epoch} loss={loss:.6} train_acc={train_acc:.4} \
+             val_acc={val_acc:.4} lr={lr:.6} secs={secs:.3}"
+        );
+        history.push(EpochStats { epoch, loss, train_acc, val_acc, secs });
+    }
+    let (train_acc, val_acc) =
+        history.last().map(|e| (e.train_acc, e.val_acc)).unwrap_or((f64::NAN, f64::NAN));
+    Ok(Trained { sizes: sizes.clone(), weights, biases, scales, history, train_acc, val_acc })
+}
+
+/// A small synthetic stand-in for the MNIST-style dataset when no NDIG
+/// file is at hand (this environment ships no datasets): `n_classes`
+/// random Boolean prototype images, each sample a prototype with 10%
+/// of its pixels flipped, "hot" pixels drawn from [0.75, 1) and cold
+/// ones from [0, 0.25).  Fully determined by `seed` (its own RNG
+/// stream, independent of the trainer's).
+pub fn synthetic_digits(n: usize, dim: usize, n_classes: usize, seed: u64) -> Dataset {
+    let mut rng = SplitMix64::new(seed);
+    let protos: Vec<bool> = (0..n_classes * dim).map(|_| rng.bool(0.5)).collect();
+    let mut x = Vec::with_capacity(n * dim);
+    let mut y = Vec::with_capacity(n);
+    for s in 0..n {
+        let c = s % n_classes;
+        y.push(c as u8);
+        for k in 0..dim {
+            let u = rng.f64() as f32;
+            let flip = rng.bool(0.1);
+            let hot = protos[c * dim + k] ^ flip;
+            x.push(if hot { 0.75 + 0.25 * u } else { 0.25 * u });
+        }
+    }
+    Dataset { n, dim, x, y }
+}
+
+/// Glue for `nullanet train`/`distill`: run the trained net over `ds`
+/// to collect ISF observations, push them through Algorithm 2
+/// ([`synth::compile_observations`]), and stamp provenance (seed,
+/// epochs, rule, dataset digest) into the artifact footer.
+pub fn compile_trained(
+    name: &str,
+    trained: &Trained,
+    cfg: &TrainConfig,
+    ds: &Dataset,
+    cap: usize,
+    scfg: &SynthConfig,
+) -> Result<(CompiledModel, Vec<StageTimings>)> {
+    let obs = trained.observations(ds);
+    let arch = Arch::Mlp { sizes: trained.sizes.clone() };
+    let tensors = trained.tensors();
+    let acc = if trained.val_acc.is_finite() { trained.val_acc } else { trained.train_acc };
+    let (mut compiled, timings) =
+        synth::compile_observations(name, &arch, acc, &tensors, &obs, cap, scfg)?;
+    compiled.provenance = Some(Provenance {
+        seed: cfg.seed,
+        epochs: cfg.epochs,
+        rule: cfg.rule.as_str().to_string(),
+        dataset_digest: dataset_digest(ds),
+    });
+    Ok((compiled, timings))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::mac_dot_col_f32;
+
+    fn tiny_cfg() -> TrainConfig {
+        TrainConfig {
+            epochs: 6,
+            batch: 16,
+            lr0: 0.1,
+            lr_decay: 0.85,
+            seed: 7,
+            val_frac: 0.125,
+            ..TrainConfig::new(vec![16, 12, 10, 4])
+        }
+    }
+
+    #[test]
+    fn synthetic_digits_deterministic_and_in_range() {
+        let a = synthetic_digits(40, 16, 4, 11);
+        let b = synthetic_digits(40, 16, 4, 11);
+        assert_eq!(
+            a.x.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            b.x.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(a.y, b.y);
+        assert!(a.x.iter().all(|&v| (0.0..1.0).contains(&v)));
+        assert_eq!(a.y[..8], [0, 1, 2, 3, 0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn forward_matches_behavioral_mac_chain() {
+        // The trainer's accumulation order IS the sequential MAC chain
+        // of the behavioral FP model — bit-for-bit (the trainer half of
+        // the determinism contract).
+        let mut rng = SplitMix64::new(3);
+        let (n_in, n_out) = (13, 7);
+        let x: Vec<f32> = (0..n_in).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+        let w: Vec<f32> = (0..n_in * n_out).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+        let mut z = vec![0.0f32; n_out];
+        gemv_rowmajor(&x, &w, n_out, &mut z);
+        for (j, &zj) in z.iter().enumerate() {
+            assert_eq!(zj.to_bits(), mac_dot_col_f32(&x, &w, n_out, j).to_bits());
+        }
+    }
+
+    #[test]
+    fn trainer_learns_and_reduces_loss() {
+        let ds = synthetic_digits(160, 16, 4, 11);
+        let t = train(&ds, &tiny_cfg()).unwrap();
+        let first = t.history.first().unwrap().loss;
+        let last = t.history.last().unwrap().loss;
+        assert!(last < first, "loss did not decrease: {first} -> {last}");
+        assert!(t.train_acc > 0.5, "train_acc {}", t.train_acc);
+    }
+
+    #[test]
+    fn same_seed_same_bits() {
+        let ds = synthetic_digits(80, 16, 4, 11);
+        let mut cfg = tiny_cfg();
+        cfg.epochs = 2;
+        let a = train(&ds, &cfg).unwrap();
+        let b = train(&ds, &cfg).unwrap();
+        for (wa, wb) in a.weights.iter().zip(&b.weights) {
+            assert_eq!(
+                wa.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                wb.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            );
+        }
+        for (ba, bb) in a.biases.iter().zip(&b.biases) {
+            assert_eq!(
+                ba.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                bb.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            );
+        }
+        // A different seed diverges.
+        cfg.seed = 8;
+        let c = train(&ds, &cfg).unwrap();
+        assert_ne!(
+            a.weights[0].iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            c.weights[0].iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn bold_rule_trains_and_differs_from_ste() {
+        let ds = synthetic_digits(80, 16, 4, 11);
+        let mut cfg = tiny_cfg();
+        cfg.epochs = 2;
+        cfg.lr0 = 0.01; // sign steps are unnormalized; keep them small
+        let ste = train(&ds, &cfg).unwrap();
+        cfg.rule = Rule::Bold;
+        let bold = train(&ds, &cfg).unwrap();
+        assert!(bold.weights.iter().flatten().all(|v| v.is_finite()));
+        assert_ne!(
+            ste.weights[0].iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            bold.weights[0].iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        assert!(bold.train_acc > 0.15, "bold train_acc {}", bold.train_acc);
+    }
+
+    #[test]
+    fn observations_match_recomputed_bits() {
+        let ds = synthetic_digits(40, 16, 4, 11);
+        let mut cfg = tiny_cfg();
+        cfg.epochs = 1;
+        let t = train(&ds, &cfg).unwrap();
+        let obs = t.observations(&ds);
+        assert_eq!(obs.len(), 1); // sizes.len() - 3
+        assert_eq!(obs[0].name, "layer2");
+        assert_eq!((obs[0].n_in, obs[0].n_out, obs[0].n_samples), (12, 10, 40));
+        assert_eq!(obs[0].inputs.len(), 40 * 2); // ceil(12/8) = 2 bytes/sample
+        assert_eq!(obs[0].outputs.len(), 40 * 2); // ceil(10/8) = 2
+        // Recompute sample 0's layer-1 bits by hand.
+        let mut z = vec![0.0f32; 12];
+        gemv_rowmajor(ds.image(0), &t.weights[0], 12, &mut z);
+        for (j, (zj, &bj)) in z.iter_mut().zip(&t.biases[0]).enumerate() {
+            *zj = *zj * t.scales[0] + bj;
+            let want = *zj >= 0.0;
+            let got = (obs[0].inputs[j / 8] >> (j % 8)) & 1 == 1;
+            assert_eq!(got, want, "bit {j}");
+        }
+    }
+
+    #[test]
+    fn tensors_have_engine_shapes() {
+        let ds = synthetic_digits(40, 16, 4, 11);
+        let mut cfg = tiny_cfg();
+        cfg.epochs = 1;
+        let t = train(&ds, &cfg).unwrap();
+        let m = t.tensors();
+        assert_eq!(m["w1"].shape, vec![16, 12]);
+        assert_eq!(m["scale1"].shape, vec![12]);
+        assert_eq!(m["bias3"].shape, vec![4]);
+        assert!(m["scale2"].f32s.iter().all(|&v| v == t.scales[1]));
+        // Every required param for the MLP arch is present.
+        let arch = Arch::Mlp { sizes: t.sizes.clone() };
+        for p in crate::artifact::required_params(&arch) {
+            assert!(m.contains_key(&p), "missing {p}");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        let ds = synthetic_digits(20, 16, 4, 11);
+        assert!(train(&ds, &TrainConfig::new(vec![16, 8, 4])).is_err()); // too shallow
+        assert!(train(&ds, &TrainConfig::new(vec![8, 8, 8, 4])).is_err()); // dim mismatch
+        assert!(train(&ds, &TrainConfig::new(vec![16, 8, 8, 2])).is_err()); // classes
+        assert!(Rule::parse("adam").is_err());
+        assert_eq!(Rule::parse("bold").unwrap(), Rule::Bold);
+    }
+}

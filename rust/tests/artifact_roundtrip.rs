@@ -57,6 +57,7 @@ fn model_with(
             })
             .collect(),
         params,
+        provenance: None,
     }
 }
 

@@ -4,6 +4,9 @@
 //! * two compiled models resident in one process, served concurrently,
 //! * runtime load/unload over the admin surface,
 //! * hot-swap with zero failed in-flight requests,
+//! * the distillation loop: an in-Rust-trained artifact retrained and
+//!   swapped under hammering traffic (zero failures, new generation and
+//!   provenance visible over `info`),
 //! * a structurally invalid artifact refused at swap time (stable
 //!   `NL021` code, zero dropped requests, live model untouched),
 //! * a pipelined connection whose replies complete out of order and
@@ -65,6 +68,7 @@ fn tiny_artifact(dir: &Path, name: &str, swap: bool) -> PathBuf {
             stats: LayerStats::default(),
         }],
         params,
+        provenance: None,
     };
     std::fs::create_dir_all(dir).unwrap();
     let path = dir.join(format!("{name}.nnc"));
@@ -266,6 +270,104 @@ fn hot_swap_has_zero_failed_in_flight_requests() {
     assert_eq!(class_of(&j), 1, "swap did not take effect: {j:?}");
     let j = request(&mut admin, &mut admin_reader, "{\"cmd\": \"info\"}");
     assert_eq!(j.get("model").and_then(Json::as_str), Some("hot"));
+    drop(admin);
+    server.shutdown();
+}
+
+/// Train a tiny net with the in-Rust trainer and save it as a `.nnc` —
+/// the exact pipeline behind `nullanet train`, shrunk to smoke size.
+fn trained_artifact(dir: &Path, name: &str, ds: &nullanet::data::Dataset, seed: u64) -> PathBuf {
+    use nullanet::train::{self, TrainConfig};
+    let cfg = TrainConfig {
+        epochs: 2,
+        batch: 16,
+        seed,
+        val_frac: 0.125,
+        ..TrainConfig::new(vec![8, 6, 6, 2])
+    };
+    let trained = train::train(ds, &cfg).unwrap();
+    let scfg = nullanet::synth::SynthConfig { threads: 1, ..Default::default() };
+    let (cm, _) = train::compile_trained(name, &trained, &cfg, ds, 1000, &scfg).unwrap();
+    std::fs::create_dir_all(dir).unwrap();
+    let path = dir.join(format!("{name}-{seed}.nnc"));
+    cm.save(&path).unwrap();
+    path
+}
+
+#[test]
+fn distill_retrain_then_swap_under_traffic_drops_nothing() {
+    use nullanet::train;
+
+    let dir = tmp("distill");
+    let ds = train::synthetic_digits(96, 8, 2, 3);
+    let v1 = trained_artifact(&dir, "distilled", &ds, 5);
+    let reg = registry(2);
+    reg.load_artifact(None, v1.to_str().unwrap(), None).unwrap();
+    let server = Server::start("127.0.0.1:0", Arc::clone(&reg)).unwrap();
+
+    // Hammer threads against the trained model while the retrained
+    // incarnation swaps in: every reply must be a class, never an error.
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let mut handles = vec![];
+    for _ in 0..4 {
+        let addr = server.addr;
+        let stop = Arc::clone(&stop);
+        handles.push(std::thread::spawn(move || {
+            let (mut conn, mut reader) = connect(addr);
+            let mut served = 0usize;
+            while !stop.load(std::sync::atomic::Ordering::SeqCst) {
+                let j = request(
+                    &mut conn,
+                    &mut reader,
+                    "{\"image\": [0.9, 0.1, 0.8, 0.2, 0.7, 0.3, 0.6, 0.4]}",
+                );
+                assert!(
+                    j.get("error").is_none(),
+                    "in-flight request failed during distill swap: {j:?}"
+                );
+                assert!(class_of(&j) < 2, "nonsense class in {j:?}");
+                served += 1;
+            }
+            served
+        }));
+    }
+
+    // Retrain with a different seed while traffic runs (the distill
+    // path: new training run → new artifact → swap over the admin
+    // socket), then swap it in.
+    std::thread::sleep(Duration::from_millis(50));
+    let v2 = trained_artifact(&dir, "distilled", &ds, 6);
+    let (mut admin, mut admin_reader) = connect(server.addr);
+    let j = request(
+        &mut admin,
+        &mut admin_reader,
+        &format!(
+            "{{\"cmd\": \"swap\", \"name\": \"distilled\", \"artifact\": {:?}}}",
+            v2.to_str().unwrap()
+        ),
+    );
+    assert_eq!(j.get("swapped").and_then(Json::as_str), Some("distilled"), "{j:?}");
+    let generation = j.get("generation").and_then(Json::as_usize).unwrap();
+    assert!(generation >= 2, "swap did not bump the generation: {j:?}");
+
+    // Traffic keeps flowing across the swap boundary.
+    std::thread::sleep(Duration::from_millis(100));
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    let served: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert!(served > 20, "hammer barely ran ({served} requests)");
+
+    // `info` reports the new generation and the retrained provenance.
+    let j = request(&mut admin, &mut admin_reader, "{\"cmd\": \"info\", \"model\": \"distilled\"}");
+    assert_eq!(j.get("generation").and_then(Json::as_usize), Some(generation), "{j:?}");
+    let prov = j.get("provenance").unwrap_or_else(|| panic!("no provenance in {j:?}"));
+    assert_eq!(prov.get("seed").and_then(Json::as_str), Some("6"), "{j:?}");
+    assert_eq!(prov.get("rule").and_then(Json::as_str), Some("ste"), "{j:?}");
+    assert_eq!(
+        prov.get("dataset_digest").and_then(Json::as_str),
+        Some(format!("{:016x}", nullanet::artifact::dataset_digest(&ds)).as_str()),
+        "{j:?}"
+    );
+
     drop(admin);
     server.shutdown();
 }

@@ -54,6 +54,7 @@ fn model_with(name: &str, tapes: Vec<LogicTape>) -> CompiledModel {
             })
             .collect(),
         params: BTreeMap::new(),
+        provenance: None,
     }
 }
 
