@@ -193,6 +193,20 @@ impl CompiledModel {
         writeln!(out, "{footer}")?;
         out.flush()?;
         drop(out);
+        // Deterministic fault injection (`artifact_write` site):
+        // simulate a crash mid-save — truncate the temp file to a short
+        // write and fail before the rename, leaving the orphan
+        // `.nnc.tmp` for [`sweep_stale_tmp`] to reclaim.  The
+        // destination artifact is never touched, exactly as in a real
+        // crash.
+        if let Some(e) = crate::fault::maybe_write_error(&self.name) {
+            if let Ok(meta) = std::fs::metadata(&tmp) {
+                if let Ok(f) = std::fs::OpenOptions::new().write(true).open(&tmp) {
+                    let _ = f.set_len(meta.len() / 2);
+                }
+            }
+            return Err(e).with_context(|| format!("write artifact {}", tmp.display()));
+        }
         std::fs::rename(&tmp, path)
             .with_context(|| format!("rename {} -> {}", tmp.display(), path.display()))?;
         Ok(())
@@ -349,6 +363,29 @@ pub fn verify_artifact(path: &Path) -> verify::Report {
             report
         }
     }
+}
+
+/// Delete orphaned `*.nnc.tmp` files in `dir` — the debris of a save
+/// that crashed (or was fault-injected) between writing the temp file
+/// and the atomic rename.  Finished artifacts are untouched: the
+/// rename protocol guarantees a `.nnc` is either the old complete file
+/// or the new complete file, never a partial.  Best-effort (unreadable
+/// entries are skipped); returns the number of files removed.
+/// `nullanet serve` runs this over every artifact's directory at
+/// startup.
+pub fn sweep_stale_tmp(dir: &Path) -> usize {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return 0;
+    };
+    let mut removed = 0;
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let stale = name.to_str().is_some_and(|n| n.ends_with(".nnc.tmp"));
+        if stale && std::fs::remove_file(entry.path()).is_ok() {
+            removed += 1;
+        }
+    }
+    removed
 }
 
 // ---------------------------------------------------------------------
@@ -878,6 +915,61 @@ mod tests {
         let r = verify_artifact(&bad);
         assert!(!r.ok());
         assert!(r.has(verify::code::ARTIFACT_DIGEST), "{r}");
+    }
+
+    fn tiny_model(name: &str) -> CompiledModel {
+        CompiledModel {
+            name: name.into(),
+            arch: Arch::Mlp { sizes: vec![2, 2, 2, 2] },
+            accuracy_test: 0.5,
+            layers: vec![CompiledLayer {
+                name: "layer2".into(),
+                tape: swap_tape(),
+                stats: LayerStats::default(),
+            }],
+            params: BTreeMap::new(),
+            provenance: None,
+        }
+    }
+
+    #[test]
+    fn stale_tmp_sweep_removes_debris_but_not_artifacts() {
+        let dir = std::env::temp_dir().join("nullanet_artifact_sweep_unit");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("good.nnc");
+        tiny_model("good").save(&path).unwrap();
+        // Plant an orphaned temp file, as left by a crash mid-save.
+        let stale = dir.join("dead.nnc.tmp");
+        std::fs::write(&stale, "{\"magic\":\"nullanet-nnc\"").unwrap();
+        assert_eq!(sweep_stale_tmp(&dir), 1);
+        assert!(!stale.exists());
+        // The real artifact survives the sweep and still loads clean.
+        assert!(CompiledModel::load(&path).is_ok());
+        // A second sweep (and a missing directory) removes nothing.
+        assert_eq!(sweep_stale_tmp(&dir), 0);
+        assert_eq!(sweep_stale_tmp(&dir.join("no-such-subdir")), 0);
+    }
+
+    #[test]
+    fn injected_write_fault_fails_save_and_leaves_only_tmp_debris() {
+        let dir = std::env::temp_dir().join("nullanet_artifact_fault_unit");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("flaky-unit.nnc");
+        let cm = tiny_model("flaky-unit");
+        // Scoped to this model's name so the (process-global) plan
+        // cannot perturb other tests running in this binary.
+        crate::fault::install(3, "artifact_write@flaky-unit=1").unwrap();
+        let err = cm.save(&path).unwrap_err();
+        crate::fault::install(3, "").unwrap();
+        assert!(format!("{err:#}").contains("no space left"), "{err:#}");
+        assert!(!path.exists(), "a failed save must never touch the destination");
+        assert!(path.with_extension("nnc.tmp").exists(), "orphan tmp expected");
+        assert_eq!(sweep_stale_tmp(&dir), 1);
+        // With the plan cleared, the same save goes through and loads.
+        cm.save(&path).unwrap();
+        assert!(CompiledModel::load(&path).is_ok());
     }
 
     #[test]

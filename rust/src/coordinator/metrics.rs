@@ -27,6 +27,12 @@ pub struct Metrics {
     /// Requests refused by `try_submit` because the bounded queue was
     /// full (load shedding — the event loop never blocks on a queue).
     sheds: AtomicU64,
+    /// Requests answered with a deadline-exceeded reply by the server's
+    /// timeout sweep (the work may still complete and be dropped late).
+    timeouts: AtomicU64,
+    /// Worker-loop restarts after a caught panic (the supervisor
+    /// re-enters the loop with backoff instead of losing the thread).
+    worker_restarts: AtomicU64,
     /// log2-scaled latency histogram: bucket i counts latencies in
     /// [2^i, 2^{i+1}) microseconds.
     latency_hist: [AtomicU64; BUCKETS],
@@ -41,6 +47,8 @@ impl Metrics {
             infer_us_total: AtomicU64::new(0),
             in_flight: AtomicU64::new(0),
             sheds: AtomicU64::new(0),
+            timeouts: AtomicU64::new(0),
+            worker_restarts: AtomicU64::new(0),
             latency_hist: std::array::from_fn(|_| AtomicU64::new(0)),
         }
     }
@@ -68,6 +76,26 @@ impl Metrics {
     /// Requests shed at this coordinator's queue.
     pub fn sheds(&self) -> u64 {
         self.sheds.load(Ordering::Relaxed)
+    }
+
+    /// A request's per-request deadline expired before its completion.
+    pub fn record_timeout(&self) {
+        self.timeouts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Requests answered with a deadline-exceeded reply.
+    pub fn timeouts(&self) -> u64 {
+        self.timeouts.load(Ordering::Relaxed)
+    }
+
+    /// A worker caught a panic and restarted its loop.
+    pub fn record_worker_restart(&self) {
+        self.worker_restarts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Worker restarts after caught panics.
+    pub fn worker_restarts(&self) -> u64 {
+        self.worker_restarts.load(Ordering::Relaxed)
     }
 
     pub fn record_batch(&self, n: usize, infer_us: u64) {
@@ -203,6 +231,18 @@ mod tests {
         assert_eq!(m.sheds(), 2);
         // Sheds are not requests: the request counter only moves on
         // completed work.
+        assert_eq!(m.requests(), 0);
+    }
+
+    #[test]
+    fn timeout_and_restart_counters() {
+        let m = Metrics::new();
+        assert_eq!((m.timeouts(), m.worker_restarts()), (0, 0));
+        m.record_timeout();
+        m.record_worker_restart();
+        m.record_worker_restart();
+        assert_eq!((m.timeouts(), m.worker_restarts()), (1, 2));
+        // Neither moves the request counter: only completed work does.
         assert_eq!(m.requests(), 0);
     }
 

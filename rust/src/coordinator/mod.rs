@@ -70,7 +70,23 @@ impl ReplyTo {
             ReplyTo::Completion(h) => h.deliver(resp),
         }
     }
+
+    /// Deliver a structured failure.  On the completion path the event
+    /// loop receives `Err(msg)`; on the blocking path dropping the
+    /// sender unblocks the waiting caller with a recv error.
+    fn fail(self, msg: &str) {
+        match self {
+            ReplyTo::Oneshot(_) => {}
+            ReplyTo::Completion(h) => h.fail(msg.to_string()),
+        }
+    }
 }
+
+/// The structured failure a panicking worker delivers for every request
+/// in its in-flight block.  The server maps completions carrying exactly
+/// this string to a shed-style reply (`{"error":"worker panic",
+/// "shed":true}`) — the request did not execute and is safe to retry.
+pub const WORKER_PANIC_ERROR: &str = "worker panic";
 
 /// A finished (or failed) unit of work, routed back to the event loop.
 /// `conn`/`req`/`index` are caller-chosen coordinates: which connection,
@@ -131,6 +147,10 @@ impl CompletionHandle {
 
     fn deliver(mut self, resp: Response) {
         self.send(Ok(resp));
+    }
+
+    fn fail(mut self, msg: String) {
+        self.send(Err(msg));
     }
 
     /// Suppress the ticket without delivering anything — used by the
@@ -397,28 +417,67 @@ fn batcher_loop(
     }
 }
 
+/// Longest supervisor backoff after consecutive worker panics.
+const WORKER_BACKOFF_CAP: Duration = Duration::from_millis(250);
+
+/// One supervised worker.  The outer loop is the supervisor: each block
+/// executes under `catch_unwind`, so a panicking engine (or an injected
+/// `fault::WORKER_PANIC`) fails only its own block — every request in
+/// that block gets a structured [`WORKER_PANIC_ERROR`] completion
+/// instead of a hung handle, the restart is counted in
+/// [`Metrics::worker_restarts`], and the loop re-enters after an
+/// exponential backoff (reset by the next healthy block) instead of
+/// taking the thread down.
 fn worker_loop(
     rx: Arc<Mutex<Receiver<Block>>>,
     engine: Arc<dyn InferenceEngine>,
     metrics: Arc<Metrics>,
 ) {
+    let mut backoff = Duration::from_millis(1);
     loop {
         // Hold the lock only while waiting for one block; the batcher
-        // dropping its sender is the shutdown signal.
+        // dropping its sender is the shutdown signal.  A poisoned lock
+        // (another worker panicked mid-recv, which the guard scope makes
+        // impossible today) must not cascade — take the guard anyway.
         let block = {
-            let guard = rx.lock().unwrap();
+            let guard = rx.lock().unwrap_or_else(|e| e.into_inner());
             guard.recv()
         };
         let Ok(block) = block else { return };
         let n = block.reqs.len();
+        let reqs = block.reqs;
         let t0 = Instant::now();
-        let images: Vec<&[f32]> = block.reqs.iter().map(|r| r.image.as_slice()).collect();
-        let outputs = engine.infer_batch(&images);
+        // The closure borrows `reqs` immutably and the borrow ends with
+        // the call, so on a panic the requests are still ours to answer.
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            crate::fault::maybe_panic(engine.name());
+            crate::fault::maybe_delay(engine.name());
+            let images: Vec<&[f32]> = reqs.iter().map(|r| r.image.as_slice()).collect();
+            engine.infer_batch(&images)
+        }));
+        let outputs = match outcome {
+            Ok(outputs) => outputs,
+            Err(_) => {
+                // Convert the whole in-flight block to structured
+                // failures, then restart (= re-enter the loop) after a
+                // backoff so a persistently panicking engine cannot spin
+                // the pool at 100% CPU.
+                for req in reqs {
+                    metrics.queue_exit();
+                    req.reply.fail(WORKER_PANIC_ERROR);
+                }
+                metrics.record_worker_restart();
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2).min(WORKER_BACKOFF_CAP);
+                continue;
+            }
+        };
+        backoff = Duration::from_millis(1);
         let infer_us = t0.elapsed().as_micros() as u64;
         metrics.record_batch(n, infer_us);
         debug_assert_eq!(outputs.len(), n, "engine {} returned wrong output count", engine.name());
         let mut outputs = outputs.into_iter();
-        for req in block.reqs {
+        for req in reqs {
             // Exit the gauge for every request in the block — including
             // any left unanswered by a buggy engine that returned too few
             // outputs (their reply is dropped below, which surfaces an
@@ -661,6 +720,47 @@ mod tests {
         let (ctx, crx) = std::sync::mpsc::channel();
         CompletionHandle::new(ctx, wake.waker(), 0, 0, 0).cancel();
         assert!(crx.try_recv().is_err(), "cancelled handle must stay silent");
+    }
+
+    #[test]
+    fn worker_panic_is_isolated_and_the_pool_recovers() {
+        /// Panics on any image whose first value is negative.
+        struct PanicEngine;
+        impl InferenceEngine for PanicEngine {
+            fn infer_batch(&self, images: &[&[f32]]) -> Vec<Vec<f32>> {
+                assert!(!images.iter().any(|i| i[0] < 0.0), "poison image");
+                EchoEngine.infer_batch(images)
+            }
+            fn name(&self) -> &str {
+                "panic-on-negative"
+            }
+        }
+
+        let c = Coordinator::start(
+            Arc::new(PanicEngine),
+            CoordinatorConfig {
+                workers: 1,
+                max_wait: Duration::from_millis(1),
+                ..Default::default()
+            },
+        );
+        // A poisoned block answers with a structured worker-panic error
+        // instead of a hung handle...
+        let wake = crate::sys::WakePipe::new().unwrap();
+        let (ctx, crx) = std::sync::mpsc::channel();
+        let h = CompletionHandle::new(ctx, wake.waker(), 1, 1, 0);
+        assert!(c.try_submit(vec![-1.0], h).is_ok());
+        let comp = crx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(comp.result.unwrap_err(), WORKER_PANIC_ERROR);
+        assert_eq!(c.metrics.worker_restarts(), 1);
+        // ...the blocking path surfaces an error rather than hanging...
+        assert!(c.infer(vec![-2.0]).is_err());
+        assert_eq!(c.metrics.worker_restarts(), 2);
+        // ...and the supervised pool keeps serving afterwards.
+        let r = c.infer(vec![4.0]).expect("pool must survive the panics");
+        assert_eq!(r.class, 4);
+        assert_eq!(c.metrics.queue_depth(), 0);
+        c.shutdown();
     }
 
     #[test]

@@ -1,0 +1,258 @@
+//! Deterministic fault injection for the serving runtime.
+//!
+//! The chaos harness behind `tests/chaos_soak.rs`: a zero-dependency
+//! registry of *fault sites* compiled into the binary always, fully
+//! inert unless a plan is installed — either from the environment
+//! (`NULLANET_FAULT=<seed>:<spec>`, parsed once on first use) or
+//! programmatically via [`install`].  With no plan, every hook is one
+//! relaxed atomic load and an early return, so the serving path is
+//! byte-identical in behavior to a build without the module.
+//!
+//! Spec grammar:
+//!
+//! ```text
+//! NULLANET_FAULT=<seed>:<clause>[,<clause>...]
+//! clause        = <site>[@<scope>]=<prob>[:<param>]
+//! ```
+//!
+//! `<seed>` seeds one shared [`SplitMix64`] stream; `<prob>` is a
+//! per-trigger Bernoulli probability in `[0, 1]`; `<param>` is a
+//! site-specific integer (default 0).  A clause with no `@<scope>`
+//! matches every scope; a scoped clause fires only where the caller's
+//! scope string matches exactly.  Sites:
+//!
+//! * `worker_panic` — panic a coordinator worker just before it runs a
+//!   block (scope: engine name).  Exercises `catch_unwind` isolation
+//!   and the supervisor's restart/backoff path.
+//! * `infer_delay` — sleep `<param>` milliseconds before inference
+//!   (scope: engine name).  Exercises request deadlines and the
+//!   timeout sweep.
+//! * `artifact_write` — fail a `.nnc` save with an ENOSPC-style error
+//!   after truncating the temp file to a short write (scope: model
+//!   name).  Exercises the crash-safe save/recovery path.
+//!
+//! Determinism is per-stream: a fixed seed fixes the random draw
+//! sequence, so single-threaded call sites replay exactly; across
+//! worker threads the interleaving (not the stream) varies, which is
+//! what a chaos soak wants — reproducible pressure, not a fixed script.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, Once, RwLock};
+use std::time::Duration;
+
+use crate::util::SplitMix64;
+
+/// Fault site: panic a coordinator worker before it runs a block.
+pub const WORKER_PANIC: &str = "worker_panic";
+/// Fault site: sleep `<param>` ms before running inference on a block.
+pub const INFER_DELAY: &str = "infer_delay";
+/// Fault site: fail an artifact save after a short write.
+pub const ARTIFACT_WRITE: &str = "artifact_write";
+
+const SITES: [&str; 3] = [WORKER_PANIC, INFER_DELAY, ARTIFACT_WRITE];
+
+#[derive(Clone, Debug, PartialEq)]
+struct Clause {
+    site: String,
+    scope: Option<String>,
+    prob: f64,
+    param: u64,
+}
+
+struct Plan {
+    clauses: Vec<Clause>,
+    rng: Mutex<SplitMix64>,
+}
+
+impl Plan {
+    fn new(seed: u64, clauses: Vec<Clause>) -> Self {
+        Plan { clauses, rng: Mutex::new(SplitMix64::new(seed)) }
+    }
+
+    /// Draw for every clause matching `(site, scope)`; the last one
+    /// that fires wins (so a scoped clause can sharpen a global one).
+    fn fire(&self, site: &str, scope: &str) -> Option<u64> {
+        let mut hit = None;
+        for c in self.clauses.iter().filter(|c| c.site == site) {
+            if c.scope.as_deref().is_some_and(|s| s != scope) {
+                continue;
+            }
+            let fired = {
+                let mut rng = self.rng.lock().unwrap_or_else(|e| e.into_inner());
+                rng.bool(c.prob)
+            };
+            if fired {
+                hit = Some(c.param);
+            }
+        }
+        hit
+    }
+}
+
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+static PLAN: RwLock<Option<Plan>> = RwLock::new(None);
+static ENV_INIT: Once = Once::new();
+
+/// Install a fault plan from the `<seed>:<spec>` env-var form.
+pub fn install_str(v: &str) -> Result<(), String> {
+    let (seed, spec) =
+        v.split_once(':').ok_or_else(|| format!("expected <seed>:<spec>, got {v:?}"))?;
+    let seed: u64 = seed.trim().parse().map_err(|_| format!("bad seed {seed:?}"))?;
+    install(seed, spec)
+}
+
+/// Install a fault plan programmatically, replacing any existing one.
+/// The chaos tests use this when `NULLANET_FAULT` is unset; an empty
+/// spec installs an empty plan (every site inert again).
+pub fn install(seed: u64, spec: &str) -> Result<(), String> {
+    let clauses = parse_spec(spec)?;
+    let plan = Plan::new(seed, clauses);
+    *PLAN.write().unwrap_or_else(|e| e.into_inner()) = Some(plan);
+    ACTIVE.store(true, Ordering::Release);
+    Ok(())
+}
+
+fn parse_spec(spec: &str) -> Result<Vec<Clause>, String> {
+    let mut clauses = Vec::new();
+    for raw in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let (head, rhs) = raw
+            .split_once('=')
+            .ok_or_else(|| format!("clause {raw:?}: expected site[@scope]=prob[:param]"))?;
+        let (site, scope) = match head.split_once('@') {
+            Some((s, sc)) => (s.trim(), Some(sc.trim().to_string())),
+            None => (head.trim(), None),
+        };
+        if !SITES.contains(&site) {
+            return Err(format!("clause {raw:?}: unknown site {site:?} (known: {SITES:?})"));
+        }
+        let (prob_str, param) = match rhs.split_once(':') {
+            Some((p, q)) => {
+                let param = q
+                    .trim()
+                    .parse::<u64>()
+                    .map_err(|_| format!("clause {raw:?}: bad param {q:?}"))?;
+                (p, param)
+            }
+            None => (rhs, 0),
+        };
+        let prob: f64 = prob_str
+            .trim()
+            .parse()
+            .map_err(|_| format!("clause {raw:?}: bad probability {prob_str:?}"))?;
+        if !(0.0..=1.0).contains(&prob) {
+            return Err(format!("clause {raw:?}: probability {prob} outside [0, 1]"));
+        }
+        clauses.push(Clause { site: site.to_string(), scope, prob, param });
+    }
+    Ok(clauses)
+}
+
+/// One draw at a fault site.  Returns the matching clause's param if a
+/// fault fires, `None` otherwise — and `None` unconditionally (without
+/// touching the RNG) when no plan is installed.
+fn fire(site: &str, scope: &str) -> Option<u64> {
+    if !ACTIVE.load(Ordering::Acquire) {
+        // First call (or no plan): give the env var one chance to
+        // install a plan, then stay on the cheap inert path forever.
+        ENV_INIT.call_once(|| {
+            if let Ok(v) = std::env::var("NULLANET_FAULT") {
+                if let Err(e) = install_str(&v) {
+                    eprintln!("warning: ignoring NULLANET_FAULT: {e}");
+                }
+            }
+        });
+        if !ACTIVE.load(Ordering::Acquire) {
+            return None;
+        }
+    }
+    let guard = PLAN.read().unwrap_or_else(|e| e.into_inner());
+    guard.as_ref().and_then(|p| p.fire(site, scope))
+}
+
+/// Panic here if a `worker_panic` clause fires for `scope`.
+pub fn maybe_panic(scope: &str) {
+    if fire(WORKER_PANIC, scope).is_some() {
+        panic!("injected fault: {WORKER_PANIC}@{scope}");
+    }
+}
+
+/// Sleep the clause's param (milliseconds) if `infer_delay` fires.
+pub fn maybe_delay(scope: &str) {
+    if let Some(ms) = fire(INFER_DELAY, scope) {
+        std::thread::sleep(Duration::from_millis(ms));
+    }
+}
+
+/// An ENOSPC-style I/O error if `artifact_write` fires for `scope`.
+pub fn maybe_write_error(scope: &str) -> Option<std::io::Error> {
+    fire(ARTIFACT_WRITE, scope).map(|_| {
+        std::io::Error::other(format!(
+            "injected fault: {ARTIFACT_WRITE}@{scope} (no space left on device)"
+        ))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_full_grammar() {
+        let cs = parse_spec("worker_panic=0.25, infer_delay@logic=0.5:80 ,artifact_write=1")
+            .expect("valid spec");
+        assert_eq!(
+            cs,
+            vec![
+                Clause { site: WORKER_PANIC.into(), scope: None, prob: 0.25, param: 0 },
+                Clause {
+                    site: INFER_DELAY.into(),
+                    scope: Some("logic".into()),
+                    prob: 0.5,
+                    param: 80
+                },
+                Clause { site: ARTIFACT_WRITE.into(), scope: None, prob: 1.0, param: 0 },
+            ]
+        );
+        assert!(parse_spec("").expect("empty spec is a valid empty plan").is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in
+            ["worker_panic", "no_such_site=0.5", "worker_panic=2.0", "worker_panic=0.5:x", "=0.5"]
+        {
+            assert!(parse_spec(bad).is_err(), "accepted {bad:?}");
+        }
+        assert!(install_str("notanumber:worker_panic=1").is_err());
+        assert!(install_str("worker_panic=1").is_err(), "missing seed must be rejected");
+    }
+
+    #[test]
+    fn plan_draws_are_seeded_and_scoped() {
+        let clauses = parse_spec("worker_panic@only-here=1,infer_delay=0:9").expect("spec");
+        let plan = Plan::new(7, clauses);
+        // prob 1 fires always, but only for the matching scope.
+        assert_eq!(plan.fire(WORKER_PANIC, "only-here"), Some(0));
+        assert_eq!(plan.fire(WORKER_PANIC, "elsewhere"), None);
+        // prob 0 never fires.
+        assert_eq!(plan.fire(INFER_DELAY, "anywhere"), None);
+        // Same seed, same single-threaded draw sequence.
+        let clauses = parse_spec("worker_panic=0.5").expect("spec");
+        let a = Plan::new(42, clauses.clone());
+        let b = Plan::new(42, clauses);
+        let seq_a: Vec<bool> = (0..64).map(|_| a.fire(WORKER_PANIC, "x").is_some()).collect();
+        let seq_b: Vec<bool> = (0..64).map(|_| b.fire(WORKER_PANIC, "x").is_some()).collect();
+        assert_eq!(seq_a, seq_b);
+        assert!(seq_a.iter().any(|f| *f) && seq_a.iter().any(|f| !*f), "p=0.5 never mixed");
+    }
+
+    #[test]
+    fn install_scoped_plan_fires_only_in_scope() {
+        // Scoped to a name no other test uses, so installing the global
+        // plan cannot perturb concurrently running suites.
+        install(11, "worker_panic@fault-unit-test=1").expect("install");
+        assert_eq!(fire(WORKER_PANIC, "fault-unit-test"), Some(0));
+        assert_eq!(fire(WORKER_PANIC, "some-real-engine"), None);
+        assert!(maybe_write_error("some-real-model").is_none());
+    }
+}

@@ -56,6 +56,11 @@
 //! * [`server`] — TCP JSON-lines front-end: a single-threaded event
 //!   loop of per-connection state machines over [`protocol`] +
 //!   [`registry`], with admission control and load shedding
+//! * [`fault`] — deterministic fault injection
+//!   (`NULLANET_FAULT=<seed>:<spec>`): seeded, site-tagged worker
+//!   panics, inference delays, and artifact-write failures, compiled in
+//!   always and fully inert unless a plan is installed — the chaos
+//!   harness behind `tests/chaos_soak.rs`
 //! * [`simd`] — explicit SIMD backends (generic scalar / AVX2 /
 //!   AVX-512) for the three plane kernels on the serving hot path,
 //!   selected once per engine by runtime CPU detection and overridable
@@ -78,6 +83,7 @@ pub mod coordinator;
 pub mod cost;
 pub mod data;
 pub mod enumerate;
+pub mod fault;
 pub mod isf;
 pub mod jsonio;
 pub mod logging;

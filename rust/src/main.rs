@@ -426,13 +426,55 @@ fn admin_roundtrip(
         .map_err(|e| format_err!("bad admin reply {reply:?}: {e}"))
 }
 
+/// Connect failures that are worth retrying: the server may be
+/// mid-restart (refused), or the accept backlog momentarily full.
+fn transient_connect_error(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::ConnectionRefused
+            | std::io::ErrorKind::ConnectionReset
+            | std::io::ErrorKind::WouldBlock
+            | std::io::ErrorKind::TimedOut
+            | std::io::ErrorKind::Interrupted
+    )
+}
+
+/// Connect to the admin socket with a bounded retry: transient failures
+/// back off exponentially (50 ms doubling, 5 attempts); anything else —
+/// bad address, unreachable host — fails immediately.
+fn connect_admin(addr: &str) -> Result<std::net::TcpStream> {
+    const ATTEMPTS: u32 = 5;
+    let mut delay = std::time::Duration::from_millis(50);
+    let mut last = String::new();
+    for attempt in 1..=ATTEMPTS {
+        match std::net::TcpStream::connect(addr) {
+            Ok(conn) => return Ok(conn),
+            Err(e) if transient_connect_error(&e) => {
+                last = e.to_string();
+                if attempt < ATTEMPTS {
+                    nullanet::info!("connect {addr}: {e}; retrying in {delay:?}");
+                    std::thread::sleep(delay);
+                    delay *= 2;
+                }
+            }
+            Err(e) => {
+                return Err(format_err!("connect {addr}: {e} (is `nullanet serve` running?)"))
+            }
+        }
+    }
+    Err(format_err!(
+        "connect {addr}: {last} after {ATTEMPTS} attempts (is `nullanet serve` running?)"
+    ))
+}
+
 /// Admin-socket client for `distill`: ask the server to atomically swap
 /// `name` to the freshly trained artifact (in-flight requests on the old
 /// incarnation drain, none drop).  Falls back to `load` when the name is
 /// not resident yet, so first deployment needs no special casing.
+/// Swapping also replaces the model's circuit breaker, so a retrained
+/// artifact is the recovery path out of quarantine.
 fn swap_into_server(addr: &str, name: &str, path: &std::path::Path) -> Result<u64> {
-    let mut conn = std::net::TcpStream::connect(addr)
-        .map_err(|e| format_err!("connect {addr}: {e} (is `nullanet serve` running?)"))?;
+    let mut conn = connect_admin(addr)?;
     let mut reader = std::io::BufReader::new(
         conn.try_clone().map_err(|e| format_err!("clone admin socket: {e}"))?,
     );
@@ -762,6 +804,7 @@ fn run_serve(args: &[String]) -> Result<()> {
         .multi("artifact", "serve a compiled .nnc artifact; repeat to serve several models")
         .opt("addr", "127.0.0.1:7878", "bind address")
         .opt("max-conns", "1024", "live-connection admission cap (beyond it, shed)")
+        .opt("request-timeout-ms", "0", "per-request deadline in ms (0 = no deadline)")
         .opt("workers", "2", "coordinator worker threads per model")
         .opt("width", "64", "bit-parallel plane width for logic engines (64|256|512)")
         .flag("verify-on-load", "run the static verifier on artifacts before serving")
@@ -774,6 +817,24 @@ fn run_serve(args: &[String]) -> Result<()> {
     };
     let registry = Arc::new(ModelRegistry::new(cfg, width));
     let artifacts = p.strs("artifact");
+    // Crash recovery, before anything loads: reclaim orphaned
+    // `.nnc.tmp` debris a crashed/fault-injected save left next to the
+    // artifacts we serve (the rename protocol keeps the finished
+    // artifacts themselves intact by construction).
+    let mut swept_dirs: Vec<std::path::PathBuf> = Vec::new();
+    for apath in artifacts {
+        let dir = match std::path::Path::new(apath).parent() {
+            Some(d) if !d.as_os_str().is_empty() => d.to_path_buf(),
+            _ => std::path::PathBuf::from("."),
+        };
+        if !swept_dirs.contains(&dir) {
+            let n = artifact::sweep_stale_tmp(&dir);
+            if n > 0 {
+                nullanet::info!("swept {n} stale .nnc.tmp file(s) from {}", dir.display());
+            }
+            swept_dirs.push(dir);
+        }
+    }
     if artifacts.is_empty() {
         // No artifacts: synthesize one engine (Algorithm 2) and serve it
         // as the sole (default) model.
@@ -793,10 +854,13 @@ fn run_serve(args: &[String]) -> Result<()> {
             nullanet::info!("loaded {apath} as model {name} in {:.1?}", t0.elapsed());
         }
     }
-    let server = nullanet::server::Server::start_with(
+    let timeout_ms = p.u64("request-timeout-ms");
+    let request_timeout = (timeout_ms > 0).then(|| std::time::Duration::from_millis(timeout_ms));
+    let server = nullanet::server::Server::start_with_timeout(
         p.str("addr"),
         Arc::clone(&registry),
         p.usize("max-conns").max(1),
+        request_timeout,
     )?;
     let (entries, default) = registry.list();
     println!(

@@ -242,6 +242,21 @@ pub fn shed_reply(id: Option<&Json>, msg: &str) -> Json {
     }
 }
 
+/// Deadline-exceeded line: an [`error_reply`] plus `"timeout":true`, so
+/// clients can tell an expired per-request budget (the request may still
+/// have executed) apart from request errors and shed load.  Only emitted
+/// when the server runs with `--request-timeout-ms`, so v1 byte
+/// compatibility is unaffected by default.
+pub fn timeout_reply(id: Option<&Json>, msg: &str) -> Json {
+    match error_reply(id, msg) {
+        Json::Obj(mut m) => {
+            m.insert("timeout".to_string(), Json::Bool(true));
+            Json::Obj(m)
+        }
+        other => other,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -369,6 +384,18 @@ mod tests {
         assert_eq!(
             error_reply(Some(&Json::Num(9.0)), "boom").to_string(),
             r#"{"error":"boom","id":9}"#
+        );
+    }
+
+    #[test]
+    fn timeout_reply_is_an_error_with_a_timeout_marker() {
+        assert_eq!(
+            timeout_reply(None, "deadline exceeded").to_string(),
+            r#"{"error":"deadline exceeded","timeout":true}"#
+        );
+        assert_eq!(
+            timeout_reply(Some(&Json::Num(4.0)), "deadline exceeded").to_string(),
+            r#"{"error":"deadline exceeded","id":4,"timeout":true}"#
         );
     }
 

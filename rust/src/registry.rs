@@ -30,8 +30,9 @@
 //! intermediate state where the name is missing.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 use std::sync::{Arc, RwLock};
+use std::time::Instant;
 
 use crate::artifact::{self, CompiledModel};
 use crate::coordinator::engine::{engine_from_artifact, InferenceEngine};
@@ -142,11 +143,216 @@ impl ModelMeta {
     }
 }
 
+const BREAKER_CLOSED: u8 = 0;
+const BREAKER_OPEN: u8 = 1;
+const BREAKER_HALF_OPEN: u8 = 2;
+
+/// Observations in the current window before the error rate can trip.
+pub const BREAKER_MIN_OBS: u64 = 8;
+/// Window horizon: at this many observations the counts halve, so the
+/// error rate tracks recent behavior instead of all-time totals.
+const BREAKER_WINDOW: u64 = 64;
+/// How long an open breaker fast-sheds before admitting probes.
+pub const BREAKER_COOLDOWN_MS: u64 = 250;
+/// Concurrent probe requests admitted while half-open.
+pub const BREAKER_PROBES: u64 = 2;
+/// Consecutive half-open successes that close the breaker.
+pub const BREAKER_CLOSE_AFTER: u64 = 3;
+
+/// Per-model circuit breaker: a windowed error/timeout-rate tracker
+/// with the classic three-state machine.
+///
+/// * **closed** — requests flow; completions feed the window.  When the
+///   window holds at least [`BREAKER_MIN_OBS`] observations and half or
+///   more are failures, the breaker trips open.
+/// * **open** — requests are fast-shed without touching the coordinator
+///   (`{"error":"model … quarantined: …","shed":true}`).  After
+///   [`BREAKER_COOLDOWN_MS`] the next admission becomes a probe and the
+///   breaker half-opens.
+/// * **half-open** — at most [`BREAKER_PROBES`] concurrent probes are
+///   admitted; [`BREAKER_CLOSE_AFTER`] successes close the breaker, any
+///   failure re-opens it (cooldown restarts).
+///
+/// Failures are whatever the server counts as one: error completions,
+/// worker panics, and deadline expiries.  Admin `load`/`swap` build a
+/// fresh [`ModelEntry`] (hence a fresh breaker), so swapping a fixed
+/// artifact in — the `distill` path — is the recovery story.
+///
+/// All state is atomics: admission and completion recording happen on
+/// the single event-loop thread, state reads (`info`/`metrics`) may
+/// come from anywhere.
+pub struct Breaker {
+    state: AtomicU8,
+    ok: AtomicU64,
+    err: AtomicU64,
+    /// Milliseconds since `epoch` when the breaker last opened.
+    opened_at_ms: AtomicU64,
+    /// In-flight probes while half-open.
+    probes: AtomicU64,
+    /// Successes since entering half-open.
+    half_ok: AtomicU64,
+    epoch: Instant,
+}
+
+impl Breaker {
+    pub fn new() -> Breaker {
+        Breaker {
+            state: AtomicU8::new(BREAKER_CLOSED),
+            ok: AtomicU64::new(0),
+            err: AtomicU64::new(0),
+            opened_at_ms: AtomicU64::new(0),
+            probes: AtomicU64::new(0),
+            half_ok: AtomicU64::new(0),
+            epoch: Instant::now(),
+        }
+    }
+
+    fn now_ms(&self) -> u64 {
+        self.epoch.elapsed().as_millis() as u64
+    }
+
+    /// Admission decision for one request: `true` admits it (possibly
+    /// as a half-open probe), `false` means fast-shed.
+    pub fn admit(&self) -> bool {
+        match self.state.load(Ordering::Relaxed) {
+            BREAKER_OPEN => {
+                let opened = self.opened_at_ms.load(Ordering::Relaxed);
+                if self.now_ms().saturating_sub(opened) < BREAKER_COOLDOWN_MS {
+                    return false;
+                }
+                // Cooldown over: this request is the first probe.
+                self.half_ok.store(0, Ordering::Relaxed);
+                self.probes.store(1, Ordering::Relaxed);
+                self.state.store(BREAKER_HALF_OPEN, Ordering::Relaxed);
+                true
+            }
+            BREAKER_HALF_OPEN => {
+                if self.probes.load(Ordering::Relaxed) < BREAKER_PROBES {
+                    self.probes.fetch_add(1, Ordering::Relaxed);
+                    true
+                } else {
+                    false
+                }
+            }
+            _ => true,
+        }
+    }
+
+    /// A request completed successfully.
+    pub fn record_success(&self) {
+        match self.state.load(Ordering::Relaxed) {
+            BREAKER_HALF_OPEN => {
+                self.probe_done();
+                if self.half_ok.fetch_add(1, Ordering::Relaxed) + 1 >= BREAKER_CLOSE_AFTER {
+                    self.reset(BREAKER_CLOSED);
+                }
+            }
+            BREAKER_CLOSED => {
+                self.ok.fetch_add(1, Ordering::Relaxed);
+                self.decay();
+            }
+            // A straggler completing after the trip: stale, ignore.
+            _ => {}
+        }
+    }
+
+    /// A request failed: error completion, worker panic, or deadline
+    /// expiry.
+    pub fn record_failure(&self) {
+        match self.state.load(Ordering::Relaxed) {
+            BREAKER_HALF_OPEN => {
+                self.probe_done();
+                self.trip();
+            }
+            BREAKER_CLOSED => {
+                let err = self.err.fetch_add(1, Ordering::Relaxed) + 1;
+                let total = err + self.ok.load(Ordering::Relaxed);
+                if total >= BREAKER_MIN_OBS && err * 2 >= total {
+                    self.trip();
+                } else {
+                    self.decay();
+                }
+            }
+            _ => {}
+        }
+    }
+
+    fn probe_done(&self) {
+        // Saturating decrement: a straggler from before a reset must
+        // not underflow the in-flight probe count.
+        let dec = |p: u64| p.checked_sub(1);
+        let _ = self.probes.fetch_update(Ordering::Relaxed, Ordering::Relaxed, dec);
+    }
+
+    fn trip(&self) {
+        self.opened_at_ms.store(self.now_ms(), Ordering::Relaxed);
+        self.reset(BREAKER_OPEN);
+    }
+
+    fn reset(&self, state: u8) {
+        self.ok.store(0, Ordering::Relaxed);
+        self.err.store(0, Ordering::Relaxed);
+        self.probes.store(0, Ordering::Relaxed);
+        self.half_ok.store(0, Ordering::Relaxed);
+        self.state.store(state, Ordering::Relaxed);
+    }
+
+    /// Halve the window counts at the horizon so old observations fade.
+    fn decay(&self) {
+        let (ok, err) = (self.ok.load(Ordering::Relaxed), self.err.load(Ordering::Relaxed));
+        if ok + err >= BREAKER_WINDOW {
+            self.ok.store(ok / 2, Ordering::Relaxed);
+            self.err.store(err / 2, Ordering::Relaxed);
+        }
+    }
+
+    /// `"closed"` / `"open"` / `"half-open"`, as reported by
+    /// `info`/`metrics`.
+    pub fn state_name(&self) -> &'static str {
+        match self.state.load(Ordering::Relaxed) {
+            BREAKER_OPEN => "open",
+            BREAKER_HALF_OPEN => "half-open",
+            _ => "closed",
+        }
+    }
+
+    /// True while the model is not serving normally (open or half-open).
+    pub fn quarantined(&self) -> bool {
+        self.state.load(Ordering::Relaxed) != BREAKER_CLOSED
+    }
+}
+
+impl Default for Breaker {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// One resident model: metadata plus its running coordinator (engine
-/// behind it).  Dropping the entry drains and joins the coordinator.
+/// behind it) and circuit breaker.  Dropping the entry drains and joins
+/// the coordinator.
 pub struct ModelEntry {
     pub meta: ModelMeta,
     pub coordinator: Coordinator,
+    pub breaker: Breaker,
+}
+
+impl ModelEntry {
+    /// The `{"cmd":"info"}` / `{"cmd":"list"}` shape: metadata plus the
+    /// live breaker state (a v1-superset addition, like `generation`).
+    pub fn info_json(&self, is_default: bool) -> Json {
+        match self.meta.to_json(is_default) {
+            Json::Obj(mut m) => {
+                m.insert(
+                    "breaker_state".to_string(),
+                    Json::Str(self.breaker.state_name().to_string()),
+                );
+                m.insert("quarantined".to_string(), Json::Bool(self.breaker.quarantined()));
+                Json::Obj(m)
+            }
+            other => other,
+        }
+    }
 }
 
 struct Inner {
@@ -186,8 +392,11 @@ impl ModelRegistry {
     pub fn register(&self, mut meta: ModelMeta, eng: Arc<dyn InferenceEngine>) -> Result<()> {
         meta.generation = self.next_generation();
         let name = meta.model.clone();
-        let entry =
-            Arc::new(ModelEntry { meta, coordinator: Coordinator::start(eng, self.cfg.clone()) });
+        let entry = Arc::new(ModelEntry {
+            meta,
+            coordinator: Coordinator::start(eng, self.cfg.clone()),
+            breaker: Breaker::new(),
+        });
         let mut inner = self.inner.write().unwrap();
         if inner.models.contains_key(&name) {
             // Release the lock first: bailing drops `entry`, which joins
@@ -230,8 +439,13 @@ impl ModelRegistry {
         // way.
         meta.generation = self.next_generation();
         let generation = meta.generation;
-        let entry =
-            Arc::new(ModelEntry { meta, coordinator: Coordinator::start(eng, self.cfg.clone()) });
+        // A fresh entry means a fresh (closed) breaker: swapping a fixed
+        // artifact in is how a quarantined model comes back.
+        let entry = Arc::new(ModelEntry {
+            meta,
+            coordinator: Coordinator::start(eng, self.cfg.clone()),
+            breaker: Breaker::new(),
+        });
         let displaced = {
             let mut inner = self.inner.write().unwrap();
             let current = inner.models.get(name).map(|e| e.meta.generation);
@@ -555,6 +769,74 @@ mod tests {
         let meta = ModelMeta::for_engine("c", &ConstEngine(0), 64);
         assert!(meta.simd.is_none());
         assert!(meta.to_json(false).get("simd").is_none());
+    }
+
+    #[test]
+    fn breaker_trips_on_error_rate_and_recovers_through_half_open() {
+        let b = Breaker::new();
+        assert_eq!(b.state_name(), "closed");
+        assert!(!b.quarantined());
+        // Mixed traffic below the trip rate stays closed.
+        for _ in 0..BREAKER_MIN_OBS {
+            b.record_success();
+            b.record_failure();
+            b.record_success();
+        }
+        assert_eq!(b.state_name(), "closed");
+        // A failure burst trips it open; admissions fast-shed.
+        for _ in 0..3 * BREAKER_MIN_OBS {
+            b.record_failure();
+        }
+        assert_eq!(b.state_name(), "open");
+        assert!(b.quarantined());
+        assert!(!b.admit(), "open breaker must shed");
+        // Late stragglers from before the trip don't disturb it.
+        b.record_success();
+        assert_eq!(b.state_name(), "open");
+        // After the cooldown the next admission is a probe (half-open),
+        // with a bounded number of concurrent probes.
+        std::thread::sleep(std::time::Duration::from_millis(BREAKER_COOLDOWN_MS + 50));
+        assert!(b.admit());
+        assert_eq!(b.state_name(), "half-open");
+        for _ in 1..BREAKER_PROBES {
+            assert!(b.admit());
+        }
+        assert!(!b.admit(), "probe budget exhausted");
+        // Enough probe successes close the breaker fully.
+        for _ in 0..BREAKER_CLOSE_AFTER {
+            b.record_success();
+        }
+        assert_eq!(b.state_name(), "closed");
+        assert!(b.admit());
+    }
+
+    #[test]
+    fn breaker_half_open_failure_reopens() {
+        let b = Breaker::new();
+        for _ in 0..2 * BREAKER_MIN_OBS {
+            b.record_failure();
+        }
+        assert_eq!(b.state_name(), "open");
+        std::thread::sleep(std::time::Duration::from_millis(BREAKER_COOLDOWN_MS + 50));
+        assert!(b.admit());
+        assert_eq!(b.state_name(), "half-open");
+        // One failing probe re-opens; the cooldown starts over.
+        b.record_failure();
+        assert_eq!(b.state_name(), "open");
+        assert!(!b.admit());
+    }
+
+    #[test]
+    fn entry_info_json_carries_breaker_state() {
+        let reg = registry();
+        add(&reg, "m", 1);
+        let entry = reg.get(Some("m")).unwrap();
+        let j = entry.info_json(true);
+        assert_eq!(j.get("breaker_state").and_then(Json::as_str), Some("closed"));
+        assert_eq!(j.get("quarantined").and_then(Json::as_bool), Some(false));
+        // The meta fields ride along untouched.
+        assert_eq!(j.get("model").and_then(Json::as_str), Some("m"));
+        assert_eq!(j.get("default").and_then(Json::as_bool), Some(true));
     }
 
     #[test]

@@ -38,7 +38,17 @@
 //!   of blocking the loop;
 //! * **write backpressure** — a connection whose reply bytes exceed
 //!   [`OUT_HIGH_WATER`] stops being read until the client drains it
-//!   below [`OUT_LOW_WATER`] (interest hysteresis, no thrash).
+//!   below [`OUT_LOW_WATER`] (interest hysteresis, no thrash);
+//! * **request deadlines** — with a per-request budget configured
+//!   ([`Server::start_with_timeout`]), the loop periodically sweeps
+//!   expired in-flight requests and answers them with
+//!   `{"error":"deadline exceeded","timeout":true}`, so a stuck model
+//!   can never wedge a connection's reply FIFO (the late completion,
+//!   if the work ever finishes, is dropped);
+//! * **circuit breakers** — a model whose recent traffic is mostly
+//!   failures or timeouts is quarantined by its
+//!   [`crate::registry::Breaker`]: requests fast-shed while the breaker
+//!   is open, then probe through half-open after a cooldown.
 //!
 //! Lifecycle: `shutdown()` rings the wake pipe (no self-connect), the
 //! loop stops accepting, finishes every in-flight request, flushes, and
@@ -55,7 +65,9 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::metrics::{percentile_from_hist, BUCKETS};
-use crate::coordinator::{Completion, CompletionHandle, Response, SubmitRejection};
+use crate::coordinator::{
+    Completion, CompletionHandle, Response, SubmitRejection, WORKER_PANIC_ERROR,
+};
 use crate::jsonio::{num, obj, Json};
 use crate::protocol::{self, Cmd, CmdRequest, InferRequest, WireRequest};
 use crate::registry::{ModelEntry, ModelRegistry};
@@ -101,6 +113,11 @@ const DRAIN_DEADLINE: Duration = Duration::from_secs(5);
 /// without a pause the loop would spin a core until an fd frees up).
 const ACCEPT_BACKOFF: Duration = Duration::from_millis(10);
 
+/// How often the loop wakes to sweep expired request deadlines when a
+/// per-request timeout is configured and work is in flight.  Bounds how
+/// late a deadline reply can be (budget + one tick).
+const DEADLINE_TICK: Duration = Duration::from_millis(25);
+
 const TOKEN_LISTENER: u64 = 0;
 const TOKEN_WAKE: u64 = 1;
 /// Connection tokens count up from here and are never reused, so a
@@ -114,6 +131,7 @@ pub struct ServerStats {
     open_conns: AtomicU64,
     shed_conns: AtomicU64,
     shed_requests: AtomicU64,
+    timeouts: AtomicU64,
 }
 
 impl ServerStats {
@@ -136,6 +154,12 @@ impl ServerStats {
     /// Everything shed at the server layer.
     pub fn shed_total(&self) -> u64 {
         self.shed_conns() + self.shed_requests()
+    }
+
+    /// Requests answered with a deadline-exceeded reply by the timeout
+    /// sweep, across all models.
+    pub fn timeout_total(&self) -> u64 {
+        self.timeouts.load(Ordering::Relaxed)
     }
 }
 
@@ -160,6 +184,20 @@ impl Server {
         registry: Arc<ModelRegistry>,
         max_conns: usize,
     ) -> Result<Server> {
+        Server::start_with_timeout(addr, registry, max_conns, None)
+    }
+
+    /// [`start_with`](Self::start_with) plus an optional per-request
+    /// deadline: an in-flight inference not answered within the budget
+    /// gets `{"error":"deadline exceeded","timeout":true}` and its late
+    /// completion is dropped.  `None` disables the sweep entirely (the
+    /// v1-compatible default).
+    pub fn start_with_timeout(
+        addr: &str,
+        registry: Arc<ModelRegistry>,
+        max_conns: usize,
+        request_timeout: Option<Duration>,
+    ) -> Result<Server> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
@@ -175,6 +213,7 @@ impl Server {
             Arc::clone(&stop),
             Arc::clone(&stats),
             max_conns,
+            request_timeout,
         )?;
         let waker = el.waker();
         let loop_thread = std::thread::Builder::new()
@@ -229,9 +268,13 @@ struct PendingReq {
     failed: Option<String>,
     /// The failure is a shed (reply carries `"shed":true`).
     shed: bool,
+    /// When the deadline sweep answers this request with a timeout
+    /// error (`None` when no `--request-timeout-ms` is configured).
+    deadline: Option<Instant>,
     /// Keeps the model incarnation alive until the reply is built
-    /// (hot-swap drain guarantee).
-    _entry: Arc<ModelEntry>,
+    /// (hot-swap drain guarantee) and carries the breaker that
+    /// completions and timeouts are recorded against.
+    entry: Arc<ModelEntry>,
 }
 
 /// Per-connection state machine.  All mutation happens on the loop
@@ -384,6 +427,8 @@ struct EventLoop {
     stop: Arc<AtomicBool>,
     stats: Arc<ServerStats>,
     max_conns: usize,
+    /// Per-request deadline budget; `None` disables the sweep.
+    request_timeout: Option<Duration>,
     conns: BTreeMap<u64, Conn>,
     next_token: u64,
     completions_tx: Sender<Completion>,
@@ -398,6 +443,7 @@ impl EventLoop {
         stop: Arc<AtomicBool>,
         stats: Arc<ServerStats>,
         max_conns: usize,
+        request_timeout: Option<Duration>,
     ) -> Result<EventLoop> {
         let mut poller = Poller::new()?;
         let wake = WakePipe::new()?;
@@ -412,6 +458,7 @@ impl EventLoop {
             stop,
             stats,
             max_conns,
+            request_timeout,
             conns: BTreeMap::new(),
             next_token: FIRST_CONN_TOKEN,
             completions_tx,
@@ -428,7 +475,15 @@ impl EventLoop {
         let mut events: Vec<Event> = Vec::new();
         loop {
             events.clear();
-            let timeout = self.draining_since.map(|_| Duration::from_millis(50));
+            let mut timeout = self.draining_since.map(|_| Duration::from_millis(50));
+            // With a request budget configured and work in flight, wake
+            // on a short tick so expired deadlines are answered even
+            // when no socket produces an event.
+            if self.request_timeout.is_some()
+                && self.conns.values().any(|c| !c.pending.is_empty())
+            {
+                timeout = Some(timeout.map_or(DEADLINE_TICK, |t| t.min(DEADLINE_TICK)));
+            }
             if self.poller.wait(&mut events, timeout).is_err() {
                 // A persistent poller error would otherwise spin; the
                 // pause keeps the process debuggable.
@@ -443,6 +498,7 @@ impl EventLoop {
                 }
             }
             self.drain_completions();
+            self.sweep_deadlines();
             if self.stop.load(Ordering::SeqCst) && self.draining_since.is_none() {
                 self.begin_drain();
             }
@@ -595,6 +651,19 @@ impl EventLoop {
                 return;
             }
         };
+        // Circuit breaker: a quarantined model fast-sheds instead of
+        // queueing work that will likely fail or time out (half-open
+        // probes are admitted by `admit` itself; `load`/`swap` replace
+        // the entry and so reset the breaker).
+        if !entry.breaker.admit() {
+            self.stats.shed_requests.fetch_add(1, Ordering::Relaxed);
+            let reply = protocol::shed_reply(
+                req.id.as_ref(),
+                &format!("model {} quarantined: circuit breaker open", entry.meta.model),
+            );
+            reply_now(conn, reply);
+            return;
+        }
         // Validate every dimension before submitting anything, so a bad
         // batch is rejected whole.
         if let Some(dim) = entry.meta.input_dim {
@@ -625,7 +694,8 @@ impl EventLoop {
             remaining: 0,
             failed: None,
             shed: false,
-            _entry: Arc::clone(&entry),
+            deadline: self.request_timeout.map(|budget| Instant::now() + budget),
+            entry: Arc::clone(&entry),
         };
         let mut submitted = 0usize;
         for (index, img) in images.into_iter().enumerate() {
@@ -704,11 +774,18 @@ impl EventLoop {
         let pend = conn.pending.get_mut(&c.req)?;
         match c.result {
             Ok(resp) => {
+                pend.entry.breaker.record_success();
                 if let Some(slot) = pend.responses.get_mut(c.index) {
                     *slot = Some(resp);
                 }
             }
             Err(msg) => {
+                pend.entry.breaker.record_failure();
+                if msg == WORKER_PANIC_ERROR {
+                    // A panicking worker sheds its whole batch: the
+                    // reply carries `"shed":true` like other sheds.
+                    pend.shed = true;
+                }
                 if pend.failed.is_none() {
                     pend.failed = Some(msg);
                 }
@@ -722,6 +799,50 @@ impl EventLoop {
         let reply = encode_reply(&pend);
         conn.finish_request(c.req, reply, pend.ordered);
         Some(c.conn)
+    }
+
+    /// Answer every in-flight request whose deadline has expired with a
+    /// structured timeout error, so a stuck or slow model can never
+    /// wedge a connection's reply FIFO.  The expired request is removed
+    /// from the pending table; its late completions (if the work ever
+    /// finishes) hit [`apply_completion`]'s missing-request path and
+    /// are dropped.
+    fn sweep_deadlines(&mut self) {
+        if self.request_timeout.is_none() {
+            return;
+        }
+        let now = Instant::now();
+        let tokens: Vec<u64> = self
+            .conns
+            .iter()
+            .filter(|(_, c)| !c.pending.is_empty())
+            .map(|(&t, _)| t)
+            .collect();
+        for token in tokens {
+            let Some(mut conn) = self.conns.remove(&token) else {
+                continue;
+            };
+            let expired: Vec<u64> = conn
+                .pending
+                .iter()
+                .filter(|(_, p)| p.deadline.is_some_and(|d| d <= now))
+                .map(|(&t, _)| t)
+                .collect();
+            for req_tok in expired {
+                let Some(pend) = conn.pending.remove(&req_tok) else {
+                    continue;
+                };
+                self.stats.timeouts.fetch_add(1, Ordering::Relaxed);
+                pend.entry.coordinator.metrics.record_timeout();
+                // A timeout is breaker evidence: a model that only ever
+                // blows its budget trips open exactly like one that
+                // errors.
+                pend.entry.breaker.record_failure();
+                let reply = protocol::timeout_reply(pend.id.as_ref(), "deadline exceeded");
+                conn.finish_request(req_tok, reply, pend.ordered);
+            }
+            self.finish_conn(conn);
+        }
     }
 
     /// Flush, decide close-vs-keep, recompute poller interest, and put
@@ -851,7 +972,7 @@ fn run_cmd(c: &CmdRequest, registry: &ModelRegistry, stats: &ServerStats) -> Res
         Cmd::Ping => obj(vec![("ok", Json::Bool(true))]),
         Cmd::Info => {
             let (entry, is_default) = registry.get_with_default(c.model.as_deref())?;
-            entry.meta.to_json(is_default)
+            entry.info_json(is_default)
         }
         Cmd::List => {
             let (entries, default) = registry.list();
@@ -859,7 +980,7 @@ fn run_cmd(c: &CmdRequest, registry: &ModelRegistry, stats: &ServerStats) -> Res
                 .iter()
                 .map(|e| {
                     let is_default = default.as_deref() == Some(e.meta.model.as_str());
-                    e.meta.to_json(is_default)
+                    e.info_json(is_default)
                 })
                 .collect();
             obj(vec![
@@ -920,8 +1041,10 @@ fn run_cmd(c: &CmdRequest, registry: &ModelRegistry, stats: &ServerStats) -> Res
 
 /// `{"cmd":"metrics"}`: aggregate counters + latency percentiles (p50 /
 /// p90 / p99 / p999 over the merged histograms), total inference
-/// microseconds, current queue depth, the server's overload gauges
-/// (`open_conns`, `shed_total`), and per-model request/shed counts plus
+/// microseconds, current queue depth, the server's overload and fault
+/// gauges (`open_conns`, `shed_total`, `timeout_total`,
+/// `worker_restarts`), and per-model request/shed/timeout/restart
+/// counts with breaker state (`breaker_state`, `quarantined`) plus
 /// — for logic engines — the tape-schedule gauges (`tape_ops`,
 /// `ops_stripped`, `max_live`, `scratch_planes`, `planes_unscheduled`).
 /// With `"model"`, scoped to that model alone.  Also reports the SIMD
@@ -943,6 +1066,7 @@ fn metrics_json(
     let mut items = 0f64;
     let mut infer_us = 0u64;
     let mut queue_depth = 0u64;
+    let mut worker_restarts = 0u64;
     let mut hist = [0u64; BUCKETS];
     let mut per_model = Vec::with_capacity(entries.len());
     for e in &entries {
@@ -952,6 +1076,7 @@ fn metrics_json(
         items += m.mean_batch_size() * m.batches() as f64;
         infer_us += m.total_infer_us();
         queue_depth += m.queue_depth();
+        worker_restarts += m.worker_restarts();
         for (h, v) in hist.iter_mut().zip(m.latency_histogram()) {
             *h += v;
         }
@@ -959,6 +1084,10 @@ fn metrics_json(
             ("requests", num(m.requests() as f64)),
             ("queue_depth", num(m.queue_depth() as f64)),
             ("shed", num(m.sheds() as f64)),
+            ("timeouts", num(m.timeouts() as f64)),
+            ("worker_restarts", num(m.worker_restarts() as f64)),
+            ("breaker_state", Json::Str(e.breaker.state_name().to_string())),
+            ("quarantined", Json::Bool(e.breaker.quarantined())),
         ];
         // Logic engines expose their tape-schedule gauges: how many ops
         // the dead-strip removed and how small the liveness-compacted
@@ -1005,6 +1134,8 @@ fn metrics_json(
         ("queue_depth", num(queue_depth as f64)),
         ("open_conns", num(stats.open_conns() as f64)),
         ("shed_total", num(stats.shed_total() as f64)),
+        ("timeout_total", num(stats.timeout_total() as f64)),
+        ("worker_restarts", num(worker_restarts as f64)),
         // Process-wide SIMD selection + detected CPU features, so an
         // operator can tell which kernels a deployment runs without
         // shell access to the host.
@@ -1321,6 +1452,109 @@ mod tests {
         assert_eq!(r2.read_line(&mut line).unwrap_or(0), 0);
         assert!(server.stats().shed_conns() >= 1);
         drop(c1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn slow_model_requests_time_out_with_a_structured_reply() {
+        struct Stuck;
+        impl InferenceEngine for Stuck {
+            fn infer_batch(&self, images: &[&[f32]]) -> Vec<Vec<f32>> {
+                std::thread::sleep(Duration::from_millis(400));
+                images.iter().map(|_| vec![1.0; 10]).collect()
+            }
+            fn name(&self) -> &str {
+                "stuck"
+            }
+        }
+        let reg = Arc::new(ModelRegistry::new(
+            CoordinatorConfig { workers: 1, ..Default::default() },
+            64,
+        ));
+        let eng = Arc::new(Stuck);
+        reg.register(ModelMeta::for_engine("stuck", eng.as_ref(), 64), eng).unwrap();
+        let server = Server::start_with_timeout(
+            "127.0.0.1:0",
+            Arc::clone(&reg),
+            DEFAULT_MAX_CONNS,
+            Some(Duration::from_millis(50)),
+        )
+        .unwrap();
+        let (mut conn, mut reader) = connect(server.addr);
+        conn.write_all(b"{\"image\": [1.0]}\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("deadline exceeded"), "{line}");
+        assert!(line.contains("\"timeout\":true"), "{line}");
+        // The FIFO is not wedged: the same connection keeps working
+        // while the stuck inference is still running, and the sweep is
+        // visible in the counters.
+        conn.write_all(b"{\"cmd\": \"metrics\"}\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(line.trim()).unwrap();
+        assert_eq!(j.get("timeout_total").and_then(Json::as_usize), Some(1));
+        assert_eq!(j.at(&["models", "stuck", "timeouts"]).and_then(Json::as_usize), Some(1));
+        drop(conn);
+        server.shutdown();
+    }
+
+    #[test]
+    fn repeated_worker_panics_trip_the_model_breaker() {
+        struct AlwaysPanics;
+        impl InferenceEngine for AlwaysPanics {
+            fn infer_batch(&self, _images: &[&[f32]]) -> Vec<Vec<f32>> {
+                panic!("injected: engine is broken");
+            }
+            fn name(&self) -> &str {
+                "broken"
+            }
+        }
+        let reg = Arc::new(ModelRegistry::new(
+            CoordinatorConfig { workers: 1, ..Default::default() },
+            64,
+        ));
+        let eng = Arc::new(AlwaysPanics);
+        reg.register(ModelMeta::for_engine("broken", eng.as_ref(), 64), eng).unwrap();
+        let server = Server::start("127.0.0.1:0", Arc::clone(&reg)).unwrap();
+        let (mut conn, mut reader) = connect(server.addr);
+        let mut line = String::new();
+        // Every request before the breaker's observation floor gets a
+        // structured worker-panic shed; once the failure rate trips the
+        // breaker, requests fast-shed as quarantined without touching
+        // the worker pool.
+        let mut quarantined = 0;
+        for _ in 0..(crate::registry::BREAKER_MIN_OBS + 4) {
+            conn.write_all(b"{\"image\": [1.0]}\n").unwrap();
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            assert!(line.contains("\"shed\":true"), "{line}");
+            if line.contains("quarantined") {
+                quarantined += 1;
+            } else {
+                assert!(line.contains("worker panic"), "{line}");
+            }
+        }
+        assert!(quarantined >= 1, "breaker never tripped");
+        // The breaker state is visible on the admin surface.
+        conn.write_all(b"{\"cmd\": \"info\"}\n{\"cmd\": \"metrics\"}\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(line.trim()).unwrap();
+        assert_eq!(j.get("breaker_state").and_then(Json::as_str), Some("open"));
+        assert_eq!(j.get("quarantined").and_then(Json::as_bool), Some(true));
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(line.trim()).unwrap();
+        assert_eq!(
+            j.at(&["models", "broken", "breaker_state"]).and_then(Json::as_str),
+            Some("open")
+        );
+        assert!(
+            j.get("worker_restarts").and_then(Json::as_usize).unwrap_or(0) >= 1,
+            "restart counter missing: {j:?}"
+        );
+        drop(conn);
         server.shutdown();
     }
 }

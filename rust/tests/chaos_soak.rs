@@ -1,0 +1,313 @@
+//! Chaos soak: the fault-tolerance acceptance test.  A seeded fault
+//! plan (worker panics, inference delays, artifact write failures)
+//! runs against the real server while client threads hammer it, and
+//! the test asserts the blast radius stays contained:
+//!
+//! * **artifacts** — injected ENOSPC-style write failures never
+//!   corrupt a destination `.nnc` (tmp + rename), leave sweepable
+//!   `.nnc.tmp` debris, and a later clean save lands and loads;
+//! * **soak** — under random worker panics and delays with a 25 ms
+//!   request deadline, every request gets exactly one structured reply
+//!   (class, shed, or timeout — never a hang, never a dropped
+//!   connection), and the server still answers `ping` afterwards;
+//! * **breaker** — a persistently panicking model trips its circuit
+//!   breaker open (observable over `info`/`metrics`), and once the
+//!   engine heals, cooldown → half-open probes → closed is observable
+//!   step by step.
+//!
+//! The plan comes from `NULLANET_FAULT` when set (CI pins
+//! `42:worker_panic=0.03,infer_delay=0.02:80,artifact_write@flaky=0.7`
+//! and runs the test under both poll backends); unset, the same spec
+//! is installed programmatically, so a bare `cargo test` exercises the
+//! identical schedule.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use nullanet::aig::Aig;
+use nullanet::artifact::{self, CompiledLayer, CompiledModel, LayerStats};
+use nullanet::coordinator::{engine::InferenceEngine, CoordinatorConfig};
+use nullanet::jsonio::Json;
+use nullanet::model::{Arch, Tensor};
+use nullanet::netlist::LogicTape;
+use nullanet::registry::{ModelMeta, ModelRegistry};
+use nullanet::server::Server;
+
+const DEFAULT_PLAN: &str = "42:worker_panic=0.03,infer_delay=0.02:80,artifact_write@flaky=0.7";
+
+/// Build (but do not save) the serve-smoke tiny model: threshold at
+/// 0.5, identity or bit-swap hidden tape, logit j = bit j.  Image
+/// (0.9, 0.1) ⇒ class 0 (identity) or class 1 (swap).
+fn tiny_model(name: &str, swap: bool) -> CompiledModel {
+    let mut g = Aig::new(2);
+    let (a, b) = (g.pi(0), g.pi(1));
+    if swap {
+        g.add_output(b);
+        g.add_output(a);
+    } else {
+        g.add_output(a);
+        g.add_output(b);
+    }
+    let tape = LogicTape::from_aig(&g);
+    let t = |shape: Vec<usize>, f32s: Vec<f32>| Tensor { shape, f32s };
+    let mut params = BTreeMap::new();
+    params.insert("w1".to_string(), t(vec![2, 2], vec![1.0, 0.0, 0.0, 1.0]));
+    params.insert("scale1".to_string(), t(vec![2], vec![1.0, 1.0]));
+    params.insert("bias1".to_string(), t(vec![2], vec![-0.5, -0.5]));
+    params.insert("w3".to_string(), t(vec![2, 2], vec![1.0, 0.0, 0.0, 1.0]));
+    params.insert("scale3".to_string(), t(vec![2], vec![1.0, 1.0]));
+    params.insert("bias3".to_string(), t(vec![2], vec![0.0, 0.0]));
+    CompiledModel {
+        name: name.to_string(),
+        arch: Arch::Mlp { sizes: vec![2, 2, 2, 2] },
+        accuracy_test: f64::NAN,
+        layers: vec![CompiledLayer {
+            name: "layer2".to_string(),
+            tape,
+            stats: LayerStats::default(),
+        }],
+        params,
+        provenance: None,
+    }
+}
+
+/// Save a tiny model, retrying through any injected write faults (the
+/// default plan only targets the model named `flaky`, but a custom
+/// `NULLANET_FAULT` may aim wider).
+fn tiny_artifact(dir: &Path, name: &str, swap: bool) -> PathBuf {
+    let cm = tiny_model(name, swap);
+    std::fs::create_dir_all(dir).unwrap();
+    let path = dir.join(format!("{name}.nnc"));
+    let mut last = None;
+    for _ in 0..60 {
+        match cm.save(&path) {
+            Ok(()) => return path,
+            Err(e) => last = Some(e),
+        }
+    }
+    panic!("could not save {name} in 60 attempts: {last:?}");
+}
+
+fn connect(addr: std::net::SocketAddr) -> (TcpStream, BufReader<TcpStream>) {
+    let conn = TcpStream::connect(addr).unwrap();
+    conn.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let reader = BufReader::new(conn.try_clone().unwrap());
+    (conn, reader)
+}
+
+/// One request, one reply.  The 10 s read timeout on the socket is the
+/// hang detector: a request the server never answers fails the test
+/// here instead of wedging it.
+fn request(conn: &mut TcpStream, reader: &mut BufReader<TcpStream>, line: &str) -> Json {
+    conn.write_all(line.as_bytes()).unwrap();
+    conn.write_all(b"\n").unwrap();
+    let mut reply = String::new();
+    reader.read_line(&mut reply).unwrap();
+    assert!(!reply.is_empty(), "connection closed instead of replying to {line:?}");
+    Json::parse(reply.trim()).unwrap_or_else(|e| panic!("bad reply {reply:?}: {e}"))
+}
+
+fn breaker_state(j: &Json) -> &str {
+    j.get("breaker_state").and_then(Json::as_str).unwrap_or_else(|| panic!("no breaker in {j:?}"))
+}
+
+/// A healing engine: panics while `broken`, classifies as
+/// `image[0] % 10` once fixed.  Drives the breaker state machine.
+struct FlakyEngine {
+    broken: AtomicBool,
+}
+
+impl InferenceEngine for FlakyEngine {
+    fn infer_batch(&self, images: &[&[f32]]) -> Vec<Vec<f32>> {
+        assert!(!self.broken.load(Ordering::SeqCst), "flaky engine is broken");
+        images
+            .iter()
+            .map(|img| {
+                let mut l = vec![0.0; 10];
+                l[img[0] as usize % 10] = 1.0;
+                l
+            })
+            .collect()
+    }
+    fn name(&self) -> &str {
+        "flaky-eng"
+    }
+}
+
+#[test]
+fn chaos_soak() {
+    let plan = std::env::var("NULLANET_FAULT").unwrap_or_else(|_| DEFAULT_PLAN.to_string());
+    nullanet::fault::install_str(&plan).unwrap();
+    let dir = std::env::temp_dir().join("nullanet_chaos_soak");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // ---- Phase 1: crash-safe artifact writes under injected ENOSPC.
+    let flaky = tiny_model("flaky", false);
+    let dest = dir.join("flaky.nnc");
+    if plan.contains("artifact_write@flaky") {
+        let mut failed = false;
+        for _ in 0..60 {
+            if flaky.save(&dest).is_err() {
+                failed = true;
+                break;
+            }
+        }
+        assert!(failed, "no injected write failure in 60 saves under {plan:?}");
+        // The failure aborted mid-write: the destination may or may not
+        // exist (earlier saves can have landed), but the orphaned tmp
+        // does, and the startup-style sweep clears exactly that debris.
+        let tmp = dir.join("flaky.nnc.tmp");
+        assert!(tmp.exists(), "failed save left no {}", tmp.display());
+        assert!(artifact::sweep_stale_tmp(&dir) >= 1);
+        assert!(!tmp.exists(), "sweep left {}", tmp.display());
+    }
+    let mut saved = false;
+    for _ in 0..60 {
+        if flaky.save(&dest).is_ok() {
+            saved = true;
+            break;
+        }
+    }
+    assert!(saved, "no clean save in 60 attempts under {plan:?}");
+    let loaded = CompiledModel::load(&dest).unwrap();
+    assert_eq!(loaded.name, "flaky", "artifact corrupted by injected faults");
+
+    // ---- Phase 2: hammer two live models through panics + delays.
+    let ident = tiny_artifact(&dir, "ident", false);
+    let swap = tiny_artifact(&dir, "swapm", true);
+    let reg = Arc::new(ModelRegistry::new(
+        CoordinatorConfig { workers: 2, max_wait: Duration::from_millis(1), ..Default::default() },
+        64,
+    ));
+    reg.load_artifact(None, ident.to_str().unwrap(), None).unwrap();
+    reg.load_artifact(None, swap.to_str().unwrap(), None).unwrap();
+    let server = Server::start_with_timeout(
+        "127.0.0.1:0",
+        Arc::clone(&reg),
+        64,
+        Some(Duration::from_millis(25)),
+    )
+    .unwrap();
+
+    let mut handles = vec![];
+    for t in 0..4usize {
+        let addr = server.addr;
+        handles.push(std::thread::spawn(move || {
+            let (mut conn, mut reader) = connect(addr);
+            let (mut classes, mut errors) = (0u32, 0u32);
+            for i in 0..300usize {
+                let model = if (t + i) % 2 == 0 { "ident" } else { "swapm" };
+                let j = request(
+                    &mut conn,
+                    &mut reader,
+                    &format!("{{\"model\": \"{model}\", \"image\": [0.9, 0.1]}}"),
+                );
+                match j.get("class").and_then(Json::as_usize) {
+                    // A correct answer: faults shed requests, they must
+                    // never corrupt one.
+                    Some(c) => {
+                        assert_eq!(c, if model == "ident" { 0 } else { 1 }, "{j:?}");
+                        classes += 1;
+                    }
+                    None => {
+                        assert!(j.get("error").is_some(), "reply neither class nor error: {j:?}");
+                        errors += 1;
+                    }
+                }
+            }
+            (classes, errors)
+        }));
+    }
+    let (mut classes, mut errors) = (0u32, 0u32);
+    for h in handles {
+        let (c, e) = h.join().expect("soak thread panicked");
+        classes += c;
+        errors += e;
+    }
+    assert_eq!(classes + errors, 1200);
+    assert!(classes > 0, "every soak request failed");
+    eprintln!("soak: {classes} answered, {errors} shed/timed out under {plan:?}");
+
+    // The server survived: still answering, and the supervisor counted
+    // the injected panics as worker restarts.
+    let (mut conn, mut reader) = connect(server.addr);
+    let j = request(&mut conn, &mut reader, "{\"cmd\": \"ping\"}");
+    assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true), "{j:?}");
+    let m = request(&mut conn, &mut reader, "{\"cmd\": \"metrics\"}");
+    if plan.contains("worker_panic=") {
+        assert!(m.get("worker_restarts").and_then(Json::as_usize).unwrap() >= 1, "{m:?}");
+    }
+    if plan.contains("infer_delay") {
+        assert!(m.get("timeout_total").and_then(Json::as_usize).unwrap() >= 1, "{m:?}");
+    }
+    drop(conn);
+    server.shutdown();
+
+    // ---- Phase 3: breaker trip and recovery, deterministically.  The
+    // fault plan goes quiet (empty spec) so only the engine's own
+    // behavior drives the state machine, on a server with no request
+    // deadline so worker-restart backoff cannot race the sweep.
+    nullanet::fault::install(42, "").unwrap();
+    let reg = Arc::new(ModelRegistry::new(
+        CoordinatorConfig { workers: 2, max_wait: Duration::from_millis(1), ..Default::default() },
+        64,
+    ));
+    let eng = Arc::new(FlakyEngine { broken: AtomicBool::new(true) });
+    let dyn_eng: Arc<dyn InferenceEngine> = Arc::clone(&eng);
+    reg.register(ModelMeta::for_engine("flakym", eng.as_ref(), 64), dyn_eng).unwrap();
+    let server = Server::start("127.0.0.1:0", Arc::clone(&reg)).unwrap();
+    let (mut conn, mut reader) = connect(server.addr);
+
+    // Sequential failures: worker panics feed the breaker until it
+    // trips, after which requests fast-shed with a quarantine reply.
+    let mut quarantined = 0;
+    for _ in 0..(nullanet::registry::BREAKER_MIN_OBS + 8) {
+        let j = request(&mut conn, &mut reader, "{\"model\": \"flakym\", \"image\": [4.0]}");
+        let msg = j.get("error").and_then(Json::as_str).unwrap_or_else(|| panic!("{j:?}"));
+        assert_eq!(j.get("shed").and_then(Json::as_bool), Some(true), "{j:?}");
+        if msg.contains("quarantined") {
+            quarantined += 1;
+        } else {
+            assert_eq!(msg, "worker panic", "{j:?}");
+        }
+    }
+    assert!(quarantined >= 1, "breaker never tripped after repeated panics");
+    let j = request(&mut conn, &mut reader, "{\"cmd\": \"info\", \"model\": \"flakym\"}");
+    assert_eq!(breaker_state(&j), "open", "{j:?}");
+    assert_eq!(j.get("quarantined").and_then(Json::as_bool), Some(true), "{j:?}");
+
+    // Heal the engine, wait out the cooldown, and walk the recovery:
+    // probe successes half-open the breaker, then close it.
+    eng.broken.store(false, Ordering::SeqCst);
+    std::thread::sleep(Duration::from_millis(nullanet::registry::BREAKER_COOLDOWN_MS + 60));
+    for probe in 1..=nullanet::registry::BREAKER_CLOSE_AFTER {
+        let j = request(&mut conn, &mut reader, "{\"model\": \"flakym\", \"image\": [4.0]}");
+        assert_eq!(j.get("class").and_then(Json::as_usize), Some(4), "probe {probe}: {j:?}");
+        if probe < nullanet::registry::BREAKER_CLOSE_AFTER {
+            let j = request(&mut conn, &mut reader, "{\"cmd\": \"info\", \"model\": \"flakym\"}");
+            assert_eq!(breaker_state(&j), "half-open", "probe {probe}: {j:?}");
+        }
+    }
+    let m = request(&mut conn, &mut reader, "{\"cmd\": \"metrics\"}");
+    assert_eq!(
+        m.at(&["models", "flakym", "breaker_state"]).and_then(Json::as_str),
+        Some("closed"),
+        "{m:?}"
+    );
+    assert_eq!(
+        m.at(&["models", "flakym", "quarantined"]).and_then(Json::as_bool),
+        Some(false),
+        "{m:?}"
+    );
+    assert!(m.at(&["models", "flakym", "worker_restarts"]).and_then(Json::as_usize).unwrap() >= 1);
+
+    drop(conn);
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}

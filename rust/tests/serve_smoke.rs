@@ -10,7 +10,11 @@
 //! * a structurally invalid artifact refused at swap time (stable
 //!   `NL021` code, zero dropped requests, live model untouched),
 //! * a pipelined connection whose replies complete out of order and
-//!   reassemble by `"id"`.
+//!   reassemble by `"id"`,
+//! * a worker panic (injected via the deterministic fault harness)
+//!   converting its in-flight requests to structured error replies,
+//!   with the supervisor restarting the worker and the very next
+//!   request succeeding.
 //!
 //! The artifacts are built in-process (tiny 2-2-2-2 MLPs whose one
 //! hidden tape either passes bits through or swaps them, so the two
@@ -528,6 +532,68 @@ fn pipelined_replies_complete_out_of_order_and_reassemble_by_id() {
     // Out-of-order completion: the slow request must not come first.
     assert_ne!(order[0], "slow", "replies arrived in submission order: {order:?}");
     assert_eq!(order[2], "slow", "slow reply should complete last: {order:?}");
+
+    drop(conn);
+    server.shutdown();
+}
+
+#[test]
+fn worker_panic_gets_error_replies_and_the_pool_recovers() {
+    /// Classifies as image[0]; the fault harness injects the panics.
+    struct ChaosEngine;
+    impl InferenceEngine for ChaosEngine {
+        fn infer_batch(&self, images: &[&[f32]]) -> Vec<Vec<f32>> {
+            images
+                .iter()
+                .map(|img| {
+                    let mut l = vec![0.0; 10];
+                    l[img[0] as usize % 10] = 1.0;
+                    l
+                })
+                .collect()
+        }
+        fn name(&self) -> &str {
+            "chaos-eng"
+        }
+    }
+
+    // Deterministic injected panics, scoped to this engine's name so
+    // the (process-global) plan cannot perturb the other smoke tests
+    // running concurrently in this binary.
+    nullanet::fault::install(7, "worker_panic@chaos-eng=1").unwrap();
+    let reg = registry(2);
+    let eng = Arc::new(ChaosEngine);
+    reg.register(ModelMeta::for_engine("chaosm", eng.as_ref(), 64), eng).unwrap();
+    let server = Server::start("127.0.0.1:0", Arc::clone(&reg)).unwrap();
+    let (mut conn, mut reader) = connect(server.addr);
+
+    // Two pipelined in-flight requests: both get structured worker-panic
+    // sheds — never a hang, never a dropped connection.
+    conn.write_all(
+        b"{\"id\": 1, \"model\": \"chaosm\", \"image\": [4.0]}\n\
+          {\"id\": 2, \"model\": \"chaosm\", \"image\": [5.0]}\n",
+    )
+    .unwrap();
+    for _ in 0..2 {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(line.trim()).unwrap();
+        assert_eq!(j.get("error").and_then(Json::as_str), Some("worker panic"), "{j:?}");
+        assert_eq!(j.get("shed").and_then(Json::as_bool), Some(true), "{j:?}");
+    }
+    // The supervisor restarted the worker loop and counted it, both
+    // per model and in the top-level aggregate.
+    let j = request(&mut conn, &mut reader, "{\"cmd\": \"metrics\"}");
+    assert!(j.get("worker_restarts").and_then(Json::as_usize).unwrap() >= 1, "{j:?}");
+    assert!(
+        j.at(&["models", "chaosm", "worker_restarts"]).and_then(Json::as_usize).unwrap() >= 1,
+        "{j:?}"
+    );
+    // Clear the plan: the exact same request now succeeds on the
+    // restarted pool.
+    nullanet::fault::install(7, "").unwrap();
+    let j = request(&mut conn, &mut reader, "{\"model\": \"chaosm\", \"image\": [4.0]}");
+    assert_eq!(class_of(&j), 4, "pool did not recover after injected panics: {j:?}");
 
     drop(conn);
     server.shutdown();
